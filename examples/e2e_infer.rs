@@ -1,0 +1,122 @@
+//! End-to-end driver (DESIGN.md E8): every layer of the system composes on a
+//! real small workload.
+//!
+//!   artifacts (python/JAX/Pallas, built once) → rust PJRT runtime →
+//!   coordinator serving batched requests → numerics cross-checked against
+//!   the Q16.16 cycle-accurate simulator → hardware metrics (cycles, ms,
+//!   DDR traffic, resources) reported for the paper's VGG-16 workload.
+//!
+//! Requires `make artifacts`. Run: `cargo run --release --example e2e_infer`
+//! The run is recorded in EXPERIMENTS.md §E8.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use decoilfnet::accel::{Engine, Weights};
+use decoilfnet::config::{vgg16_prefix, AccelConfig};
+use decoilfnet::coordinator::{best_plan, BatchPolicy, Objective, Server, ServerConfig};
+use decoilfnet::resources::{plan_resources, utilization};
+use decoilfnet::runtime::Runtime;
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::prng::Rng;
+use decoilfnet::util::stats::fmt_count;
+use decoilfnet::verify::{verify_plan, DEFAULT_TOLERANCE};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let cfg = AccelConfig::paper_default();
+
+    // ---- 1. Numeric verification: simulator vs PJRT on fresh random inputs.
+    println!("== step 1: simulator ↔ runtime verification (tiny-vgg) ==");
+    let rt = Runtime::load(&artifacts, "tiny-vgg")?;
+    let mut rng = Rng::new(2024);
+    for trial in 0..3 {
+        let mut input = NdTensor::zeros(&rt.entry.network.input.as_slice());
+        rng.fill_f32(input.data_mut(), -1.0, 1.0);
+        let rep = verify_plan(&rt, &cfg, "fused", &input, DEFAULT_TOLERANCE)?;
+        println!(
+            "  trial {trial}: max |sim − runtime| = {:.2e} (tol {:.0e}) → {}",
+            rep.max_abs_diff,
+            rep.tolerance,
+            if rep.passed { "PASS" } else { "FAIL" }
+        );
+        assert!(rep.passed);
+    }
+
+    // ---- 2. Serve a batched workload through the coordinator.
+    println!("\n== step 2: batched serving over PJRT (48 requests, 4 clients) ==");
+    let srv = Server::start(ServerConfig {
+        artifacts_dir: artifacts.clone(),
+        network: "tiny-vgg".into(),
+        default_plan: "fused".into(),
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+    })?;
+    let (golden_in, golden_out) = rt.golden()?;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let h = srv.handle.clone();
+        let input = golden_in.clone();
+        let want = golden_out.clone();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..12 {
+                let resp = h.submit(input.clone(), None).wait().unwrap();
+                let out = resp.result.unwrap();
+                assert!(out.max_abs_diff(&want) < 1e-3);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = srv.handle.metrics();
+    println!(
+        "  {} responses, {} batches (mean size {:.1}), {:.1} req/s, 0 errors: {}",
+        m.responses,
+        m.batches,
+        m.mean_batch_size(),
+        48.0 / wall,
+        if m.errors == 0 { "PASS" } else { "FAIL" }
+    );
+    assert_eq!(m.errors, 0);
+    srv.shutdown();
+
+    // ---- 3. Hardware metrics for the paper's workload (VGG-16 prefix).
+    println!("\n== step 3: DeCoILFNet hardware metrics (VGG-16 first 7 layers) ==");
+    let net = vgg16_prefix();
+    let weights = Weights::random(&net, 1);
+    let engine = Engine::new(cfg.clone());
+    let plan = best_plan(&cfg, &net, &weights, Objective::Latency)
+        .expect("a feasible plan must exist")
+        .plan;
+    let rep = engine.simulate(&net, &weights, &plan);
+    let res = plan_resources(&cfg, &net, &plan);
+    let u = utilization(res, &cfg);
+    println!("  planner choice: {}", plan.label());
+    println!(
+        "  {} cycles = {:.2} ms @ {} MHz   (paper: 5,034k cycles = 41.95 ms)",
+        fmt_count(rep.total_cycles),
+        rep.ms_at(cfg.platform.freq_mhz),
+        cfg.platform.freq_mhz
+    );
+    println!(
+        "  DDR traffic {:.2} MB (paper: 6.69 MB)   weights preload {} cycles",
+        rep.total_mb(),
+        fmt_count(rep.weight_load_cycles)
+    );
+    println!(
+        "  resources: {} DSP ({:.1}%), {} BRAM36 ({:.1}%), {} LUT ({:.1}%), {} FF ({:.1}%)",
+        res.dsp, u.dsp_pct, res.bram36(), u.bram_pct, res.lut, u.lut_pct, res.ff, u.ff_pct
+    );
+
+    println!("\ne2e OK — all layers composed: artifacts → runtime → coordinator → simulator.");
+    Ok(())
+}

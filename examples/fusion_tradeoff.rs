@@ -1,0 +1,62 @@
+//! Fig 7 reproduction driver: the fusion-grouping trade-off between off-chip
+//! data volume and DSP utilization, swept over the named points A…G plus the
+//! full 64-plan design space via the coordinator's planner.
+//!
+//! Run: `cargo run --release --example fusion_tradeoff`
+
+use decoilfnet::accel::fusion::fig7_points;
+use decoilfnet::accel::latency::plan_traffic_bytes;
+use decoilfnet::accel::Weights;
+use decoilfnet::config::{vgg16_prefix, AccelConfig};
+use decoilfnet::coordinator::{best_plan, cost_all_plans, Objective};
+use decoilfnet::resources::plan_resources;
+use decoilfnet::util::table::Table;
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let weights = Weights::random(&net, 1);
+
+    // The paper's A..G prefix-fusion sweep.
+    let mut t = Table::new(&["point", "plan", "groups", "DDR MB", "DSP", "BRAM36"])
+        .title("Fig 7 — fusion grouping vs off-chip traffic and DSP (A = unfused … G = all fused)")
+        .label_col();
+    let mut prev_mb = f64::INFINITY;
+    let mut prev_dsp = 0;
+    for (label, plan) in fig7_points(&net) {
+        let mb = plan_traffic_bytes(&cfg, &net, &weights, &plan) as f64 / (1024.0 * 1024.0);
+        let res = plan_resources(&cfg, &net, &plan);
+        t.row(&[
+            label.to_string(),
+            plan.label(),
+            plan.n_groups().to_string(),
+            format!("{mb:.2}"),
+            res.dsp.to_string(),
+            res.bram36().to_string(),
+        ]);
+        assert!(mb <= prev_mb, "traffic must fall along A→G");
+        assert!(res.dsp >= prev_dsp, "DSP must rise along A→G");
+        prev_mb = mb;
+        prev_dsp = res.dsp;
+    }
+    println!("{}", t.to_ascii());
+    println!("paper's anchors: point A moves 23.54 MB of intermediates; point G moves none.\n");
+
+    // The full design space through the planner.
+    let costs = cost_all_plans(&cfg, &net, &weights);
+    let feasible = costs.iter().filter(|c| c.fits).count();
+    println!("design space: {} contiguous plans, {} feasible on the XC7V690T", costs.len(), feasible);
+    for obj in [Objective::Latency, Objective::Traffic, Objective::LatencyUnderDspCap(20)] {
+        match best_plan(&cfg, &net, &weights, obj) {
+            Some(p) => println!(
+                "  {:?} → {} ({} kcycles, {:.2} MB, {} DSP)",
+                obj,
+                p.plan.label(),
+                p.cycles / 1000,
+                p.traffic_bytes as f64 / (1024.0 * 1024.0),
+                p.resources.dsp
+            ),
+            None => println!("  {obj:?} → no feasible plan"),
+        }
+    }
+}

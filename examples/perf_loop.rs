@@ -1,0 +1,26 @@
+//! Tight loop for profiling with `perf record`.
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::config::{tiny_vgg, vgg16_prefix, AccelConfig};
+use decoilfnet::tensor::NdTensor;
+
+fn main() {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "sim".into());
+    let e = Engine::new(AccelConfig::paper_default());
+    match mode.as_str() {
+        "sim" => {
+            let net = vgg16_prefix();
+            let w = Weights::random(&net, 1);
+            for _ in 0..300 {
+                std::hint::black_box(e.simulate(&net, &w, &FusionPlan::fully_fused(7)));
+            }
+        }
+        _ => {
+            let net = tiny_vgg();
+            let w = Weights::random(&net, 1);
+            let input = NdTensor::random(&net.input.as_slice(), 7, -1.0, 1.0);
+            for _ in 0..150 {
+                std::hint::black_box(e.forward_fx(&net, &w, &input));
+            }
+        }
+    }
+}

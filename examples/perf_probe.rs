@@ -1,0 +1,27 @@
+//! Perf-pass driver: times the repo's own hot paths in isolation.
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::config::{tiny_vgg, vgg16_full, vgg16_prefix, AccelConfig};
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::bench::{e2e_config, Bencher};
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let e = Engine::new(cfg.clone());
+    let mut b = Bencher::with_config(e2e_config());
+
+    // L3 hot path 1: the timestamp engine.
+    let vgg = vgg16_prefix();
+    let wv = Weights::random(&vgg, 1);
+    b.bench("simulate vgg7 fused", || e.simulate(&vgg, &wv, &FusionPlan::fully_fused(7)));
+    let full = vgg16_full();
+    let wf = Weights::random(&full, 1);
+    b.bench("simulate vgg-full18 fused", || {
+        e.simulate(&full, &wf, &FusionPlan::fully_fused(18))
+    });
+
+    // L3 hot path 2: the functional fixed-point forward (verify/e2e path).
+    let tiny = tiny_vgg();
+    let wt = Weights::random(&tiny, 1);
+    let input = NdTensor::random(&tiny.input.as_slice(), 7, -1.0, 1.0);
+    b.bench("forward_fx tiny-vgg", || e.forward_fx(&tiny, &wt, &input));
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the three things DeCoILFNet does, in 60 lines.
+//!
+//!   1. simulate a fused VGG-like network cycle-accurately,
+//!   2. compare fusion against the unfused baseline,
+//!   3. check the fixed-point datapath against a float reference.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::baselines::cpu_ref::{self, CpuWeights};
+use decoilfnet::config::{tiny_vgg, AccelConfig};
+use decoilfnet::tensor::NdTensor;
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let net = tiny_vgg();
+    let n = net.layers.len();
+    println!("network: {} ({} layers, input {:?})", net.name, n, net.input.as_slice());
+
+    // 1. Cycle-accurate simulation, fully fused (the paper's architecture).
+    let weights = Weights::random(&net, 1);
+    let engine = Engine::new(cfg.clone());
+    let fused = engine.simulate(&net, &weights, &FusionPlan::fully_fused(n));
+    println!(
+        "fused:   {:>10} cycles = {:.3} ms @ {} MHz, {:.3} MB off-chip",
+        fused.total_cycles,
+        fused.ms_at(cfg.platform.freq_mhz),
+        cfg.platform.freq_mhz,
+        fused.total_mb()
+    );
+
+    // 2. The unfused baseline: every layer round-trips through DDR.
+    let unfused = engine.simulate(&net, &weights, &FusionPlan::unfused(n));
+    println!(
+        "unfused: {:>10} cycles = {:.3} ms, {:.3} MB off-chip",
+        unfused.total_cycles,
+        unfused.ms_at(cfg.platform.freq_mhz),
+        unfused.total_mb()
+    );
+    println!(
+        "fusion wins {:.2}X on cycles and {:.2}X on traffic",
+        unfused.total_cycles as f64 / fused.total_cycles as f64,
+        unfused.total_mb() / fused.total_mb()
+    );
+
+    // 3. Functional check: Q16.16 datapath vs an f32 CPU reference built
+    //    from the same seed.
+    let input = NdTensor::random(&net.input.as_slice(), 7, -1.0, 1.0);
+    let fx_out = engine.forward_fx(&net, &weights, &input).to_f32();
+    let cpu_out = cpu_ref::forward(&net, &CpuWeights::random(&net, 1), &input);
+    let diff = fx_out.max_abs_diff(&cpu_out);
+    println!("fixed-point vs float: max |diff| = {diff:.2e}");
+    assert!(diff < 2e-2, "datapath mismatch");
+    println!("quickstart OK");
+}

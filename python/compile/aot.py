@@ -1,0 +1,186 @@
+"""AOT compilation: lower each fusion group to an HLO-text artifact the rust
+runtime loads via PJRT. Build-time only — python never runs at serve time.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.
+(See /opt/xla-example/README.md.)
+
+Outputs under --out (default ../artifacts):
+
+  manifest.json            network spec + plans + file index
+  <net>/g<i>_<lo>_<hi>.hlo.txt   one HLO module per fusion group
+  <net>/weights/w<i>_filter.bin  raw little-endian f32 [k,kh,kw,c]
+  <net>/weights/w<i>_bias.bin    raw little-endian f32 [k]
+  <net>/golden_input.bin   a deterministic sample input
+  <net>/golden_output.bin  reference forward of that input
+
+Usage: python -m compile.aot [--out DIR] [--nets tiny-vgg,paper-example]
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+WEIGHT_SEED = 20180101  # fixed: artifacts are reproducible bit-for-bit
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so the rust side
+    unwraps with to_tuple1).
+
+    print_large_constants is ESSENTIAL: the default printer elides big weight
+    constants as `{...}`, which the xla_extension 0.5.1 text parser silently
+    reads back as zeros — the executable then computes all-zero outputs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # Newer metadata attributes (source_end_line etc.) are unknown to the
+    # 0.5.1 text parser; metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_group(net, params, lo, hi, use_pallas=True):
+    """Jit + lower layers [lo, hi) as a single-input HLO module (weights are
+    baked as constants — the artifact is self-contained)."""
+    shapes = model.layer_shapes(net)
+    in_shape = shapes[lo]
+
+    def fn(x):
+        return (model.group_forward(x, net, params, lo, hi,
+                                    use_pallas=use_pallas),)
+
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def default_plans(net):
+    """Plans to compile: fully fused + unfused (+ the paper's mid splits for
+    7-layer nets, used by the Fig 7 serving demo)."""
+    n = len(net["layers"])
+    plans = {"fused": [n], "unfused": [1] * n}
+    if n == 7:
+        plans["split232"] = [2, 3, 2]
+    return plans
+
+
+def sample_input(net, seed=7):
+    rng = np.random.default_rng(seed)
+    h, w, d = net["input"]["h"], net["input"]["w"], net["input"]["d"]
+    return rng.uniform(-1.0, 1.0, size=(h, w, d)).astype(np.float32)
+
+
+def build_net(net_name, out_dir, use_pallas=True):
+    net = model.NETWORKS[net_name]()
+    params = model.init_params(net, WEIGHT_SEED)
+    shapes = model.layer_shapes(net)
+    net_dir = os.path.join(out_dir, net_name)
+    wdir = os.path.join(net_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    entry = {
+        "network": net,
+        "shapes": [list(s) for s in shapes],
+        "weight_seed": WEIGHT_SEED,
+        "weights": [],
+        "plans": {},
+    }
+
+    for i, p in enumerate(params):
+        if p is None:
+            continue
+        filt, bias = p
+        fpath = f"weights/w{i}_filter.bin"
+        bpath = f"weights/w{i}_bias.bin"
+        filt.tofile(os.path.join(net_dir, fpath))
+        bias.tofile(os.path.join(net_dir, bpath))
+        entry["weights"].append(
+            {
+                "layer": i,
+                "name": net["layers"][i]["name"],
+                "filter": fpath,
+                "filter_shape": list(filt.shape),
+                "bias": bpath,
+                "bias_shape": list(bias.shape),
+            }
+        )
+
+    for plan_name, sizes in default_plans(net).items():
+        groups = []
+        for gi, (lo, hi) in enumerate(model.plan_groups(net, sizes)):
+            hlo_rel = f"g{gi}_{lo}_{hi}.hlo.txt"
+            text = to_hlo_text(lower_group(net, params, lo, hi, use_pallas))
+            with open(os.path.join(net_dir, hlo_rel), "w") as f:
+                f.write(text)
+            groups.append(
+                {
+                    "index": gi,
+                    "lo": lo,
+                    "hi": hi,
+                    "hlo": hlo_rel,
+                    "in_shape": list(shapes[lo]),
+                    "out_shape": list(shapes[hi]),
+                }
+            )
+            print(f"  {net_name}/{plan_name} group {gi} [{lo},{hi}) "
+                  f"-> {hlo_rel} ({len(text)} chars)")
+        entry["plans"][plan_name] = {"group_sizes": sizes, "groups": groups}
+
+    # Golden vectors for runtime verification without python.
+    x = sample_input(net)
+    y = np.asarray(model.reference_forward(jnp.asarray(x), net, params))
+    x.tofile(os.path.join(net_dir, "golden_input.bin"))
+    y.astype(np.float32).tofile(os.path.join(net_dir, "golden_output.bin"))
+    entry["golden"] = {
+        "input": "golden_input.bin",
+        "input_shape": list(x.shape),
+        "output": "golden_output.bin",
+        "output_shape": list(y.shape),
+    }
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--nets",
+        default="tiny-vgg,paper-example",
+        help="comma-separated network names (VGG-224 nets are compile-heavy "
+        "under interpret mode; the timing experiments use the rust "
+        "simulator and do not need their HLO)",
+    )
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower through the pure-jnp reference instead of "
+                    "the Pallas kernels (debugging aid)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "networks": {}}
+    for net_name in args.nets.split(","):
+        net_name = net_name.strip()
+        print(f"building {net_name} ...")
+        manifest["networks"][net_name] = build_net(
+            net_name, args.out, use_pallas=not args.no_pallas
+        )
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

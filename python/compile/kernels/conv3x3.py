@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: depth-concatenated 3x3 convolution.
+
+FPGA -> TPU adaptation of the paper's architecture (DESIGN.md
+SS-Hardware-Adaptation):
+
+* the paper's *line buffer* (w-1 BRAM rows + window registers) becomes a
+  kernel-row slab sliced per grid step from the padded input staged in VMEM —
+  each step (one output row) touches only rows [i, i+kernel);
+* *depth concatenation* (channels packed into one wide bus word) becomes the
+  channel-minor HWC layout: one pixel's whole depth is contiguous, so the
+  row's taps flatten into a single [ow, kernel*kernel*c] matrix;
+* the paper's w*w*d DSP multipliers + LUT adder tree become ONE MXU
+  contraction [ow, 9c] @ [9c, k] per row — the systolic array plays the role
+  of the multiplier farm, the accumulation tree is implicit;
+* the k filters that stream one-per-cycle through the FPGA pipeline are the
+  k output columns of the same matmul;
+* iterative depth decomposition (paper SS-V) is the contraction-dimension
+  tiling XLA applies when 9c exceeds one MXU pass.
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and the artifacts must run from the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_row_kernel(x_ref, w_ref, b_ref, o_ref, *, kernel, relu):
+    """One grid step computes one output row.
+
+    x_ref: [oh + kernel - 1, ow + kernel - 1, c]  (whole padded input; the
+           step reads only its kernel-row line-buffer slab)
+    w_ref: [kernel * kernel * c, k]  (tap-major, depth-minor — the
+           depth-concatenated filter banks of the paper's Fig 4)
+    b_ref: [k]
+    o_ref: [1, ow, k]
+    """
+    i = pl.program_id(0)
+    ow = o_ref.shape[1]
+    # The line-buffer slab: kernel rows starting at output row i.
+    slab = x_ref[pl.ds(i, kernel), :, :]
+    # Window formation (paper Fig 2), vectorized over the row: for each tap
+    # (dy, dx) take the width-ow slice starting at dx.
+    taps = []
+    for dy in range(kernel):
+        for dx in range(kernel):
+            taps.append(jax.lax.dynamic_slice_in_dim(slab[dy], dx, ow, axis=0))
+    # Depth-concatenated im2col row: [ow, kernel*kernel*c].
+    win = jnp.concatenate(taps, axis=-1)
+    # The MXU contraction standing in for the DSP farm + adder tree.
+    acc = jnp.dot(win, w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[0, :, :] = acc
+
+
+def flatten_filters(filters):
+    """Depth-concatenated filter layout (paper Fig 4): [k,kh,kw,c] ->
+    tap-major [kh*kw*c, k] so im2col rows contract directly."""
+    k, kh, kw, c = filters.shape
+    return jnp.transpose(filters, (1, 2, 3, 0)).reshape(kh * kw * c, k)
+
+
+def conv3x3(x, filters, bias, padding=1, relu=True, interpret=True):
+    """Depth-concatenated same-conv via Pallas.
+
+    x: [h, w, c]; filters: [k, kh, kw, c]; bias: [k] -> [oh, ow, k].
+    """
+    k, kh, kw, c = filters.shape
+    assert kh == kw, "square kernels only"
+    kernel = kh
+    h, w, _ = x.shape
+    oh = h + 2 * padding - kernel + 1
+    ow = w + 2 * padding - kernel + 1
+
+    # Zero padding folded in up front (the paper folds it into line-buffer
+    # addressing, Fig 3); the kernel then runs a valid conv.
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    wmat = flatten_filters(filters)
+
+    return pl.pallas_call(
+        functools.partial(_conv_row_kernel, kernel=kernel, relu=relu),
+        grid=(oh,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(wmat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(bias.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ow, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, k), jnp.float32),
+        interpret=interpret,
+    )(xp, wmat, bias)

@@ -1,0 +1,205 @@
+"""Layer-1 Pallas kernel: inter-layer fused conv->conv(->pool) block.
+
+The paper's central claim is that fused layers exchange intermediates
+entirely on chip. The TPU mapping: one `pallas_call` computes a row of the
+*second* conv per grid step; the rows of the first conv it depends on are
+produced inside the same kernel and live only in registers/VMEM — they are
+never materialized to HBM, exactly as the paper's intermediate line buffer
+never reaches DDR.
+
+Two scheduling variants exist for the first conv's rows:
+
+* **recompute** (this kernel): each step recomputes the `kernel` first-conv
+  rows its window needs (the Alwani-style pyramid with per-row granularity —
+  3x arithmetic on conv1, zero cross-step state);
+* **carry** (the paper's line buffer): a VMEM scratch ring carries conv1 rows
+  across sequential grid steps (TPU grids execute in order). Implemented in
+  `fused_conv2_carry` below; both validate against the same reference, and
+  the repo's benches compare their HLO op counts (DESIGN.md SS-Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv3x3 import flatten_filters
+
+
+def _row_conv(slab, wmat, bias, ow, kernel, relu):
+    """Valid-conv one output row from a [kernel, ow+kernel-1, c] slab."""
+    taps = []
+    for dy in range(kernel):
+        for dx in range(kernel):
+            taps.append(jax.lax.dynamic_slice_in_dim(slab[dy], dx, ow, axis=0))
+    win = jnp.concatenate(taps, axis=-1)
+    acc = jnp.dot(win, wmat, preferred_element_type=jnp.float32)
+    acc = acc + bias[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
+def _fused2_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
+                   kernel, relu1, relu2, mid_w):
+    """Grid step i emits output row i of conv2.
+
+    x_ref holds the twice-padded input. conv2 row i needs conv1 (padded)
+    rows [i, i+kernel); conv1 row j needs x rows [j, j+kernel). The step
+    computes those `kernel` conv1 rows in registers (recompute schedule) —
+    the intermediate never leaves the chip.
+
+    mid_w: width of a padded conv1 row (= conv2's ow + kernel - 1).
+    """
+    i = pl.program_id(0)
+    ow = o_ref.shape[1]
+    h_pad = x_ref.shape[0]  # h + 2 (once-padded input rows)
+    n_mid = h_pad - 2  # conv1 real output rows (= h for same-conv)
+    # conv2 row i needs conv1 rows [i-1, i+1] in real coordinates; rows -1
+    # and n_mid are the zero padding, produced by masking.
+    mid_rows = []
+    for dy in range(kernel):
+        r = i + dy - 1  # real conv1 row for this tap
+        # conv1 row r reads padded-input rows [r, r+kernel); clamp the slab
+        # start for the out-of-range taps, then mask their contribution.
+        r_clamped = jnp.clip(r, 0, h_pad - kernel)
+        slab = x_ref[pl.ds(r_clamped, kernel), :, :]
+        row = _row_conv(slab, w1_ref[...], b1_ref[...], mid_w - (kernel - 1),
+                        kernel, relu1)
+        # Horizontal padding of the conv1 row for conv2's window.
+        row = jnp.pad(row, ((1, 1), (0, 0)))
+        valid = jnp.logical_and(r >= 0, r < n_mid)
+        row = jnp.where(valid, row, jnp.zeros_like(row))
+        mid_rows.append(row)
+    mid_slab = jnp.stack(mid_rows)  # [kernel, mid_w, k1]
+    out = _row_conv(mid_slab, w2_ref[...], b2_ref[...], ow, kernel, relu2)
+    o_ref[0, :, :] = out
+
+
+def fused_conv2(x, f1, b1, f2, b2, relu1=True, relu2=True, interpret=True):
+    """Fused conv3x3 -> conv3x3 (both same-padding stride 1) in one kernel.
+
+    x: [h, w, c]; f1: [k1, 3, 3, c]; f2: [k2, 3, 3, k1] -> [h, w, k2].
+    """
+    k1, kernel, _, c = f1.shape
+    k2 = f2.shape[0]
+    assert f2.shape[3] == k1, "fused depth mismatch"
+    h, w, _ = x.shape
+
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    w1 = flatten_filters(f1)
+    w2 = flatten_filters(f2)
+    mid_w = w + 2  # padded conv1 row width
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused2_kernel,
+            kernel=kernel,
+            relu1=relu1,
+            relu2=relu2,
+            mid_w=mid_w,
+        ),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w1.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b1.shape, lambda i: (0,)),
+            pl.BlockSpec(w2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b2.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w, k2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, k2), jnp.float32),
+        interpret=interpret,
+    )(xp, w1, b1, w2, b2)
+
+
+def _fused2_carry_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref,
+                         ring_ref, *, kernel, relu1, relu2, mid_w):
+    """Carry-schedule variant: a VMEM scratch ring holds the last `kernel`
+    conv1 rows across grid steps — the literal analogue of the paper's
+    intermediate line buffer. Step i:
+
+      * computes conv1 padded row i+kernel-1 into ring slot (i+kernel-1)%kernel
+        (steps 0 fills the initial kernel rows, like the fill latency);
+      * emits conv2 row i from the ring.
+    """
+    i = pl.program_id(0)
+    ow = o_ref.shape[1]
+    h_pad = x_ref.shape[0]  # h + 2
+    n_mid = h_pad - 2  # conv1 real output rows
+
+    def conv1_padded_row(p):
+        r = p - 1  # real conv1 row for padded index p
+        r_clamped = jnp.clip(r, 0, h_pad - kernel)
+        slab = x_ref[pl.ds(r_clamped, kernel), :, :]
+        row = _row_conv(slab, w1_ref[...], b1_ref[...], mid_w - (kernel - 1),
+                        kernel, relu1)
+        row = jnp.pad(row, ((1, 1), (0, 0)))
+        valid = jnp.logical_and(r >= 0, r < n_mid)
+        return jnp.where(valid, row, jnp.zeros_like(row))
+
+    # Fill the ring at step 0 (rows 0..kernel-1), then one new row per step.
+    @pl.when(i == 0)
+    def _fill():
+        for p in range(kernel):
+            ring_ref[p, :, :] = conv1_padded_row(jnp.int32(p))
+
+    @pl.when(i > 0)
+    def _advance():
+        p = i + kernel - 1
+        ring_ref[p % kernel, :, :] = conv1_padded_row(p)
+
+    # Gather the window rows i..i+kernel-1 from the ring in order.
+    rows = []
+    for dy in range(kernel):
+        p = i + dy
+        rows.append(ring_ref[p % kernel, :, :])
+    mid_slab = jnp.stack(rows)
+    o_ref[0, :, :] = _row_conv(mid_slab, w2_ref[...], b2_ref[...], ow,
+                               kernel, relu2)
+
+
+def fused_conv2_carry(x, f1, b1, f2, b2, relu1=True, relu2=True,
+                      interpret=True):
+    """Line-buffer-carry variant of `fused_conv2` (VMEM scratch ring)."""
+    k1, kernel, _, c = f1.shape
+    k2 = f2.shape[0]
+    assert f2.shape[3] == k1
+    h, w, _ = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    w1 = flatten_filters(f1)
+    w2 = flatten_filters(f2)
+    mid_w = w + 2
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused2_carry_kernel,
+            kernel=kernel,
+            relu1=relu1,
+            relu2=relu2,
+            mid_w=mid_w,
+        ),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w1.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b1.shape, lambda i: (0,)),
+            pl.BlockSpec(w2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b2.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w, k2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, k2), jnp.float32),
+        scratch_shapes=[_vmem_scratch((kernel, mid_w, k1))],
+        interpret=interpret,
+    )(xp, w1, b1, w2, b2)
+
+
+def _vmem_scratch(shape):
+    """VMEM scratch allocation (the paper's intermediate line buffer).
+
+    On real TPU this is `pltpu.VMEM`; interpret mode accepts the same spec.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

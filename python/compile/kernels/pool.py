@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernel: max pooling with the paper's pool line buffer.
+
+The FPGA design (paper SS-III-D) redirects conv outputs into a pool row
+buffer, replacing entries with running maxima, and emits a pooled row once
+its `window` input rows have streamed past. On TPU the analogue is: one grid
+step per pooled row, reading the `window`-row slab and reducing laneswise —
+the depth-concatenated word pools elementwise across lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_row_kernel(x_ref, o_ref, *, window, stride):
+    """x_ref: [h, w, c] (full volume; the step reads its window-row slab);
+    o_ref: [1, ow, c]."""
+    j = pl.program_id(0)
+    ow = o_ref.shape[1]
+    c = o_ref.shape[2]
+    slab = x_ref[pl.ds(j * stride, window), :, :]  # [window, w, c]
+    # Column phase p of the pooled window: rows are already gathered; take
+    # strided column slices and fold with running max (the paper's even/odd
+    # address update generalized).
+    acc = jnp.full((ow, c), -jnp.inf, dtype=jnp.float32)
+    for dy in range(window):
+        row = slab[dy]
+        for dx in range(window):
+            cols = jax.lax.slice_in_dim(row, dx, dx + (ow - 1) * stride + 1, stride=stride, axis=0)
+            acc = jnp.maximum(acc, cols)
+    o_ref[0, :, :] = acc
+
+
+def maxpool(x, window=2, stride=2, interpret=True):
+    """Max-pool an HWC volume: [h, w, c] -> [oh, ow, c]."""
+    h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_pool_row_kernel, window=window, stride=stride),
+        grid=(oh,),
+        in_specs=[pl.BlockSpec(x.shape, lambda j: (0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ow, c), lambda j: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles (the numeric ground truth of the repo).
+
+Every Pallas kernel, every per-group jitted model, and (through the exported
+golden tensors) the rust fixed-point simulator are validated against these
+functions. Layout convention matches the rust side: feature maps are HWC,
+filter banks are [k, kh, kw, c] ("KHWC").
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, filters, bias, padding=1, relu=True):
+    """2-D convolution over an HWC volume, stride 1.
+
+    x: [h, w, c]; filters: [k, kh, kw, c]; bias: [k] -> [oh, ow, k].
+    """
+    k, kh, kw, c = filters.shape
+    assert x.shape[-1] == c, f"depth mismatch {x.shape} vs {filters.shape}"
+    lhs = x[None]  # [1, h, w, c]
+    rhs = jnp.transpose(filters, (1, 2, 3, 0))  # HWIO
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(1, 1),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    out = out + bias[None, None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool_ref(x, window=2, stride=2):
+    """Max pooling over an HWC volume (floor semantics, like the paper)."""
+    h, w, _ = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    x = x[: (oh - 1) * stride + window, : (ow - 1) * stride + window]
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(window, window, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def forward_ref(x, layers, params):
+    """Run a whole layer list.
+
+    layers: list of dicts mirroring the rust Network JSON:
+      {"type": "conv", "padding": p, "relu": bool} or
+      {"type": "maxpool", "window": w, "stride": s}
+    params: aligned with layers; (filters, bias) for conv, None for pool.
+    """
+    for spec, p in zip(layers, params):
+        if spec["type"] == "conv":
+            x = conv2d_ref(
+                x, p[0], p[1],
+                padding=spec.get("padding", 1),
+                relu=spec.get("relu", True),
+            )
+        elif spec["type"] == "maxpool":
+            x = maxpool_ref(x, spec["window"], spec["stride"])
+        else:
+            raise ValueError(f"unknown layer type {spec['type']}")
+    return x

@@ -1,0 +1,217 @@
+"""Layer-2: the JAX model — VGG-like networks composed from the L1 Pallas
+kernels, grouped per fusion plan.
+
+The network specification mirrors the rust `config::Network` JSON exactly, so
+one description drives both sides. Each fusion group becomes one jitted
+function (weights closed over as constants) that `aot.py` lowers to an HLO
+artifact; within a group, consecutive conv pairs lower through the fused
+Pallas kernel (intermediates never leave the chip), matching what the rust
+engine simulates.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels.conv3x3 import conv3x3
+from .kernels.fused_block import fused_conv2
+from .kernels.pool import maxpool
+from .kernels import ref
+
+
+# ----------------------------------------------------------------------
+# Network specs (mirror rust config::network builders)
+# ----------------------------------------------------------------------
+
+def conv(name, filters, kernel=3, stride=1, padding=1, relu=True):
+    return {
+        "type": "conv",
+        "name": name,
+        "kernel": kernel,
+        "filters": filters,
+        "stride": stride,
+        "padding": padding,
+        "relu": relu,
+    }
+
+
+def pool(name, window=2, stride=2):
+    return {"type": "maxpool", "name": name, "window": window, "stride": stride}
+
+
+def vgg16_prefix():
+    return {
+        "name": "vgg16-prefix7",
+        "input": {"h": 224, "w": 224, "d": 3},
+        "layers": [
+            conv("conv1_1", 64),
+            conv("conv1_2", 64),
+            pool("pool1"),
+            conv("conv2_1", 128),
+            conv("conv2_2", 128),
+            pool("pool2"),
+            conv("conv3_1", 256),
+        ],
+    }
+
+
+def custom_4conv():
+    return {
+        "name": "custom-4conv64",
+        "input": {"h": 224, "w": 224, "d": 3},
+        "layers": [conv(f"conv_{i}", 64) for i in range(1, 5)],
+    }
+
+
+def paper_test_example():
+    return {
+        "name": "paper-example",
+        "input": {"h": 5, "w": 5, "d": 3},
+        "layers": [conv("conv_a", 3), conv("conv_b", 3), pool("pool")],
+    }
+
+
+def tiny_vgg():
+    return {
+        "name": "tiny-vgg",
+        "input": {"h": 32, "w": 32, "d": 3},
+        "layers": [
+            conv("conv1_1", 8),
+            conv("conv1_2", 8),
+            pool("pool1"),
+            conv("conv2_1", 16),
+            conv("conv2_2", 16),
+            pool("pool2"),
+            conv("conv3_1", 32),
+        ],
+    }
+
+
+NETWORKS = {
+    "vgg16-prefix7": vgg16_prefix,
+    "custom-4conv64": custom_4conv,
+    "paper-example": paper_test_example,
+    "tiny-vgg": tiny_vgg,
+}
+
+
+def layer_shapes(net):
+    """shapes[i] = input shape of layer i; shapes[-1] = output shape."""
+    s = (net["input"]["h"], net["input"]["w"], net["input"]["d"])
+    shapes = [s]
+    for layer in net["layers"]:
+        h, w, d = s
+        if layer["type"] == "conv":
+            k = layer["kernel"]
+            p = layer["padding"]
+            s = (h + 2 * p - k + 1, w + 2 * p - k + 1, layer["filters"])
+        else:
+            win, st = layer["window"], layer["stride"]
+            s = ((h - win) // st + 1, (w - win) // st + 1, d)
+        shapes.append(s)
+    return shapes
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+
+def init_params(net, seed):
+    """He-initialized float32 parameters; list aligned with layers —
+    (filters [k,kh,kw,c], bias [k]) for conv, None for pool."""
+    rng = np.random.default_rng(seed)
+    shapes = layer_shapes(net)
+    params = []
+    for i, layer in enumerate(net["layers"]):
+        if layer["type"] == "conv":
+            d = shapes[i][2]
+            k, kern = layer["filters"], layer["kernel"]
+            fan_in = kern * kern * d
+            scale = np.sqrt(2.0 / fan_in)
+            filt = rng.uniform(-scale, scale, size=(k, kern, kern, d))
+            bias = rng.uniform(-0.01, 0.01, size=(k,))
+            params.append((filt.astype(np.float32), bias.astype(np.float32)))
+        else:
+            params.append(None)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Group functions
+# ----------------------------------------------------------------------
+
+def group_forward(x, net, params, lo, hi, use_pallas=True):
+    """Forward layers [lo, hi) — one fusion group. Consecutive conv pairs go
+    through the fused Pallas kernel; stragglers use the single-layer kernels.
+    """
+    i = lo
+    while i < hi:
+        layer = net["layers"][i]
+        if layer["type"] == "conv":
+            nxt = net["layers"][i + 1] if i + 1 < hi else None
+            if (
+                use_pallas
+                and nxt is not None
+                and nxt["type"] == "conv"
+                and layer["kernel"] == 3
+                and nxt["kernel"] == 3
+                and layer["stride"] == 1
+                and nxt["stride"] == 1
+            ):
+                f1, b1 = params[i]
+                f2, b2 = params[i + 1]
+                x = fused_conv2(
+                    x,
+                    jnp.asarray(f1), jnp.asarray(b1),
+                    jnp.asarray(f2), jnp.asarray(b2),
+                    relu1=layer["relu"], relu2=nxt["relu"],
+                )
+                i += 2
+                continue
+            f, b = params[i]
+            if use_pallas:
+                x = conv3x3(
+                    x, jnp.asarray(f), jnp.asarray(b),
+                    padding=layer["padding"], relu=layer["relu"],
+                )
+            else:
+                x = ref.conv2d_ref(
+                    x, jnp.asarray(f), jnp.asarray(b),
+                    padding=layer["padding"], relu=layer["relu"],
+                )
+            i += 1
+        else:
+            if use_pallas:
+                x = maxpool(x, layer["window"], layer["stride"])
+            else:
+                x = ref.maxpool_ref(x, layer["window"], layer["stride"])
+            i += 1
+    return x
+
+
+def full_forward(x, net, params, use_pallas=True):
+    return group_forward(x, net, params, 0, len(net["layers"]), use_pallas)
+
+
+def reference_forward(x, net, params):
+    """Pure-jnp oracle for the whole network."""
+    return ref.forward_ref(
+        x,
+        net["layers"],
+        [
+            (jnp.asarray(p[0]), jnp.asarray(p[1])) if p is not None else None
+            for p in params
+        ],
+    )
+
+
+def plan_groups(net, group_sizes):
+    """[(lo, hi)] from group sizes; validates the partition."""
+    n = len(net["layers"])
+    assert all(s > 0 for s in group_sizes) and sum(group_sizes) == n, (
+        f"bad plan {group_sizes} for {n} layers"
+    )
+    bounds, acc = [], 0
+    for s in group_sizes:
+        bounds.append((acc, acc + s))
+        acc += s
+    return bounds

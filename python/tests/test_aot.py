@@ -1,0 +1,71 @@
+"""AOT path: HLO-text lowering, manifest structure, golden vectors."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_to_hlo_text_shape():
+    net = model.paper_test_example()
+    params = model.init_params(net, aot.WEIGHT_SEED)
+    lowered = aot.lower_group(net, params, 0, 3)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # single input param f32[5,5,3], tuple output f32[2,2,3]
+    assert "f32[5,5,3]" in text
+    assert "f32[2,2,3]" in text
+
+
+def test_group_lowering_is_deterministic():
+    net = model.paper_test_example()
+    params = model.init_params(net, aot.WEIGHT_SEED)
+    t1 = aot.to_hlo_text(aot.lower_group(net, params, 0, 2))
+    t2 = aot.to_hlo_text(aot.lower_group(net, params, 0, 2))
+    assert t1 == t2
+
+
+def test_build_net_manifest_and_golden(tmp_path):
+    out = str(tmp_path)
+    entry = aot.build_net("paper-example", out)
+    net_dir = os.path.join(out, "paper-example")
+
+    # Weights round-trip.
+    for w in entry["weights"]:
+        filt = np.fromfile(os.path.join(net_dir, w["filter"]), dtype=np.float32)
+        assert filt.size == int(np.prod(w["filter_shape"]))
+        bias = np.fromfile(os.path.join(net_dir, w["bias"]), dtype=np.float32)
+        assert bias.size == w["bias_shape"][0]
+
+    # Golden output equals a fresh reference forward of the golden input.
+    g = entry["golden"]
+    x = np.fromfile(os.path.join(net_dir, g["input"]), dtype=np.float32).reshape(
+        g["input_shape"]
+    )
+    y = np.fromfile(os.path.join(net_dir, g["output"]), dtype=np.float32).reshape(
+        g["output_shape"]
+    )
+    net = model.paper_test_example()
+    params = model.init_params(net, entry["weight_seed"])
+    want = np.asarray(model.reference_forward(jnp.asarray(x), net, params))
+    np.testing.assert_allclose(y, want, atol=1e-5)
+
+    # Plans cover the network.
+    for plan in entry["plans"].values():
+        assert sum(plan["group_sizes"]) == len(net["layers"])
+        for group in plan["groups"]:
+            path = os.path.join(net_dir, group["hlo"])
+            assert os.path.exists(path)
+            with open(path) as f:
+                assert f.read().startswith("HloModule")
+
+
+def test_manifest_json_serializable(tmp_path):
+    out = str(tmp_path)
+    entry = aot.build_net("paper-example", out)
+    s = json.dumps({"networks": {"paper-example": entry}}, sort_keys=True)
+    back = json.loads(s)
+    assert back["networks"]["paper-example"]["weight_seed"] == aot.WEIGHT_SEED

@@ -1,0 +1,141 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes/depths/filter counts; assert_allclose against
+ref.py is the repo's core numeric signal (DESIGN.md §Validation-chain #2).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import conv2d_ref, maxpool_ref
+from compile.kernels.conv3x3 import conv3x3, flatten_filters
+from compile.kernels.pool import maxpool
+from compile.kernels.fused_block import fused_conv2, fused_conv2_carry
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    c=st.integers(1, 8),
+    k=st.integers(1, 8),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_conv3x3_matches_ref(h, w, c, k, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    f = rand(rng, k, 3, 3, c)
+    b = rand(rng, k)
+    got = conv3x3(x, f, b, padding=1, relu=relu)
+    want = conv2d_ref(x, f, b, padding=1, relu=relu)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(2, 13),
+    w=st.integers(2, 13),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_maxpool_matches_ref(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    got = maxpool(x, 2, 2)
+    want = maxpool_ref(x, 2, 2)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=0)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(3, 10),
+    w=st.integers(3, 10),
+    c=st.integers(1, 5),
+    k1=st.integers(1, 5),
+    k2=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_conv2_matches_composed_ref(h, w, c, k1, k2, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    f1, b1 = rand(rng, k1, 3, 3, c), rand(rng, k1)
+    f2, b2 = rand(rng, k2, 3, 3, k1), rand(rng, k2)
+    want = conv2d_ref(conv2d_ref(x, f1, b1), f2, b2)
+    got = fused_conv2(x, f1, b1, f2, b2)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(3, 9),
+    w=st.integers(3, 9),
+    c=st.integers(1, 4),
+    k1=st.integers(1, 4),
+    k2=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_carry_matches_recompute(h, w, c, k1, k2, seed):
+    """The line-buffer-carry schedule must be numerically identical to the
+    recompute schedule (same arithmetic, different movement)."""
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    f1, b1 = rand(rng, k1, 3, 3, c), rand(rng, k1)
+    f2, b2 = rand(rng, k2, 3, 3, k1), rand(rng, k2)
+    a = fused_conv2(x, f1, b1, f2, b2)
+    b = fused_conv2_carry(x, f1, b1, f2, b2)
+    np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-5)
+
+
+def test_conv_zero_padding_rows():
+    """Border windows must see zeros (paper Fig 3): an input of ones with an
+    all-ones 3x3x1 filter gives 4 at corners, 6 at edges, 9 inside."""
+    x = jnp.ones((5, 5, 1))
+    f = jnp.ones((1, 3, 3, 1))
+    b = jnp.zeros((1,))
+    out = np.array(conv3x3(x, f, b, relu=False))[:, :, 0]
+    assert out[0, 0] == 4 and out[0, 4] == 4 and out[4, 0] == 4
+    assert out[0, 2] == 6 and out[2, 0] == 6
+    assert out[2, 2] == 9
+
+
+def test_relu_clamps():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 6, 6, 2)
+    f, b = rand(rng, 3, 3, 3, 2), rand(rng, 3)
+    out = np.array(conv3x3(x, f, b, relu=True))
+    assert (out >= 0).all()
+
+
+def test_flatten_filters_layout():
+    """Tap-major, depth-minor — the depth-concatenated banks of Fig 4."""
+    k, c = 2, 3
+    f = np.arange(k * 3 * 3 * c, dtype=np.float32).reshape(k, 3, 3, c)
+    w = np.array(flatten_filters(jnp.asarray(f)))
+    assert w.shape == (9 * c, k)
+    for ky in range(3):
+        for kx in range(3):
+            for ch in range(c):
+                for kk in range(k):
+                    assert w[(ky * 3 + kx) * c + ch, kk] == f[kk, ky, kx, ch]
+
+
+@pytest.mark.parametrize("hw", [(3, 3), (4, 7), (16, 16)])
+def test_fused_extreme_shapes(hw):
+    h, w = hw
+    rng = np.random.default_rng(11)
+    x = rand(rng, h, w, 2)
+    f1, b1 = rand(rng, 3, 3, 3, 2), rand(rng, 3)
+    f2, b2 = rand(rng, 2, 3, 3, 3), rand(rng, 2)
+    want = conv2d_ref(conv2d_ref(x, f1, b1), f2, b2)
+    got = fused_conv2(x, f1, b1, f2, b2)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4)

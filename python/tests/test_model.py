@@ -1,0 +1,101 @@
+"""L2 correctness: per-group jitted model vs the whole-net reference
+(DESIGN.md §Validation-chain #3), plus spec/shape plumbing."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def sample(net, seed=0):
+    rng = np.random.default_rng(seed)
+    h, w, d = net["input"]["h"], net["input"]["w"], net["input"]["d"]
+    return jnp.asarray(rng.uniform(-1, 1, size=(h, w, d)).astype(np.float32))
+
+
+def test_vgg_prefix_shapes():
+    net = model.vgg16_prefix()
+    shapes = model.layer_shapes(net)
+    assert shapes[0] == (224, 224, 3)
+    assert shapes[1] == (224, 224, 64)
+    assert shapes[3] == (112, 112, 64)
+    assert shapes[5] == (112, 112, 128)
+    assert shapes[6] == (56, 56, 128)
+    assert shapes[7] == (56, 56, 256)
+
+
+def test_params_deterministic():
+    net = model.tiny_vgg()
+    a = model.init_params(net, 42)
+    b = model.init_params(net, 42)
+    for pa, pb in zip(a, b):
+        if pa is None:
+            assert pb is None
+        else:
+            assert (pa[0] == pb[0]).all() and (pa[1] == pb[1]).all()
+    c = model.init_params(net, 43)
+    assert not (a[0][0] == c[0][0]).all()
+
+
+@pytest.mark.parametrize("plan", [[7], [1] * 7, [2, 3, 2], [3, 2, 2]])
+def test_grouped_forward_matches_reference_tiny(plan):
+    net = model.tiny_vgg()
+    params = model.init_params(net, 1)
+    x = sample(net)
+    want = np.array(model.reference_forward(x, net, params))
+    cur = x
+    for lo, hi in model.plan_groups(net, plan):
+        cur = model.group_forward(cur, net, params, lo, hi)
+    np.testing.assert_allclose(np.array(cur), want, atol=2e-3)
+
+
+def test_paper_example_forward():
+    net = model.paper_test_example()
+    params = model.init_params(net, 2)
+    x = sample(net, 5)
+    got = model.full_forward(x, net, params)
+    want = model.reference_forward(x, net, params)
+    assert got.shape == (2, 2, 3)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_custom_net_random_groupings(seed):
+    """Any contiguous grouping computes the same function."""
+    rng = np.random.default_rng(seed)
+    net = model.tiny_vgg()
+    params = model.init_params(net, 3)
+    x = sample(net, seed % 1000)
+    # random partition of 7 layers
+    sizes, left = [], 7
+    while left > 0:
+        s = int(rng.integers(1, left + 1))
+        sizes.append(s)
+        left -= s
+    want = np.array(model.reference_forward(x, net, params))
+    cur = x
+    for lo, hi in model.plan_groups(net, sizes):
+        cur = model.group_forward(cur, net, params, lo, hi)
+    np.testing.assert_allclose(np.array(cur), want, atol=2e-3)
+
+
+def test_plan_groups_validation():
+    net = model.tiny_vgg()
+    assert model.plan_groups(net, [7]) == [(0, 7)]
+    assert model.plan_groups(net, [2, 5]) == [(0, 2), (2, 7)]
+    with pytest.raises(AssertionError):
+        model.plan_groups(net, [3, 3])
+    with pytest.raises(AssertionError):
+        model.plan_groups(net, [0, 7])
+
+
+def test_network_registry():
+    for name, builder in model.NETWORKS.items():
+        net = builder()
+        assert net["name"] == name
+        assert len(net["layers"]) >= 1
+        shapes = model.layer_shapes(net)
+        assert all(all(v > 0 for v in s) for s in shapes)

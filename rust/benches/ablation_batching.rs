@@ -1,0 +1,82 @@
+//! Ablation A3 — serving-side batching policy: throughput and p95 latency of
+//! the coordinator as max_batch varies, over the real PJRT artifacts.
+//! (Skips gracefully if `make artifacts` has not been run.)
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use decoilfnet::coordinator::{BatchPolicy, Server, ServerConfig};
+use decoilfnet::runtime::Runtime;
+use decoilfnet::util::table::Table;
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("SKIP ablation_batching: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&artifacts, "tiny-vgg").unwrap();
+    let (input, _) = rt.golden().unwrap();
+
+    let mut t = Table::new(&[
+        "max_batch",
+        "req/s",
+        "mean batch",
+        "p50 ms",
+        "p95 ms",
+    ])
+    .title("A3 — batching policy sweep (tiny-vgg over PJRT, 64 req × 8 clients)")
+    .label_col();
+
+    let mut results = Vec::new();
+    for max_batch in [1usize, 2, 4, 8, 16] {
+        let srv = Server::start(ServerConfig {
+            artifacts_dir: artifacts.clone(),
+            network: "tiny-vgg".into(),
+            default_plan: "fused".into(),
+            batch: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+            },
+        })
+        .unwrap();
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let h = srv.handle.clone();
+            let input = input.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    let resp = h.submit(input.clone(), None).wait().unwrap();
+                    assert!(resp.result.is_ok());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = srv.handle.metrics();
+        let s = m.latency_summary().unwrap();
+        let rps = 64.0 / wall;
+        t.row(&[
+            max_batch.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.1}", m.mean_batch_size()),
+            format!("{:.2}", s.median * 1e3),
+            format!("{:.2}", s.p95 * 1e3),
+        ]);
+        results.push((max_batch, rps, m.mean_batch_size()));
+        srv.shutdown();
+    }
+    println!("{}", t.to_ascii());
+
+    // Shape: batching actually coalesces under concurrency.
+    let b16 = results.iter().find(|r| r.0 == 16).unwrap();
+    assert!(
+        b16.2 > 1.5,
+        "max_batch=16 should coalesce (mean {:.1})",
+        b16.2
+    );
+    println!("batching coalesces under load (mean batch {:.1} at cap 16).", b16.2);
+}

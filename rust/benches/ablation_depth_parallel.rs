@@ -1,0 +1,146 @@
+//! Ablation A1 — §V iterative decomposition and the fusion-vs-depth-
+//! parallelism trade-off:
+//!
+//! 1. sweep the depth-parallelism cap d_par on the paper's 7-layer prefix —
+//!    the optimum is d_par = 64 with full fusion; pushing to 128 costs BRAM,
+//!    forces the planner to break the fusion ([7] → [5|2]) and slows down;
+//! 2. on deep blocks (depths 128–256) raising d_par pays more than on the
+//!    shallow prefix — the paper's "allocate compute to depth parallelism
+//!    for later layers";
+//! 3. feasibility scan of full VGG-16: the paper's fully-weight-resident
+//!    architecture stops fitting the XC7V690T once conv4_x's 512-deep
+//!    filter banks appear (9.4 MB of weights vs 6.46 MB of BRAM) — a §V
+//!    limitation the paper concedes but never quantifies.
+
+use decoilfnet::accel::{Engine, Weights};
+use decoilfnet::config::{vgg16_full, vgg16_prefix, AccelConfig, Layer, Network, VolShape};
+use decoilfnet::coordinator::{best_plan, Objective};
+use decoilfnet::resources::plan_resources;
+use decoilfnet::util::stats::fmt_count;
+use decoilfnet::util::table::Table;
+
+/// The conv3 block of VGG-16 as a standalone deep workload (input is pool2's
+/// output): depths 128→256, where iterative decomposition is active.
+fn conv3_block() -> Network {
+    Network {
+        name: "vgg16-conv3-block".into(),
+        input: VolShape::new(56, 56, 128),
+        layers: vec![
+            Layer::conv3x3("conv3_1", 256),
+            Layer::conv3x3("conv3_2", 256),
+            Layer::conv3x3("conv3_3", 256),
+            Layer::pool2x2("pool3"),
+        ],
+    }
+}
+
+fn sweep(net: &Network, label: &str) -> Vec<(usize, Option<u64>)> {
+    let weights = Weights::random(net, 1);
+    let mut t = Table::new(&[
+        "d_par cap",
+        "plan (latency winner)",
+        "kcycles",
+        "ms@120MHz",
+        "DSP",
+        "BRAM36",
+    ])
+    .title(&format!("A1 — depth-parallelism cap sweep, {label}"))
+    .label_col();
+    let mut out = Vec::new();
+    for cap in [8usize, 16, 32, 64, 128] {
+        let mut cfg = AccelConfig::paper_default();
+        cfg.max_depth_parallel = cap;
+        match best_plan(&cfg, net, &weights, Objective::Latency) {
+            None => {
+                t.row(&[
+                    cap.to_string(),
+                    "(infeasible)".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                out.push((cap, None));
+            }
+            Some(pc) => {
+                let rep = Engine::new(cfg.clone()).simulate(net, &weights, &pc.plan);
+                let res = plan_resources(&cfg, net, &pc.plan);
+                t.row(&[
+                    cap.to_string(),
+                    pc.plan.label(),
+                    fmt_count(rep.total_cycles / 1000),
+                    format!("{:.2}", rep.ms_at(120.0)),
+                    res.dsp.to_string(),
+                    res.bram36().to_string(),
+                ]);
+                out.push((cap, Some(rep.total_cycles)));
+            }
+        }
+    }
+    println!("{}", t.to_ascii());
+    out
+}
+
+fn at(sweep: &[(usize, Option<u64>)], cap: usize) -> Option<u64> {
+    sweep.iter().find(|s| s.0 == cap).and_then(|s| s.1)
+}
+
+fn main() {
+    // 1. Prefix: U-shaped sweep — full fusion wins at 64, breaks at 128.
+    let prefix = vgg16_prefix();
+    let s_prefix = sweep(&prefix, "vgg16-prefix7");
+    let p64 = at(&s_prefix, 64).expect("cap 64 feasible");
+    let p128 = at(&s_prefix, 128).expect("cap 128 feasible (as a split plan)");
+    let best = s_prefix.iter().filter_map(|s| s.1).min().unwrap();
+    assert_eq!(best, p64, "prefix optimum must sit at cap 64 with full fusion");
+    assert!(
+        p128 > p64,
+        "cap 128 must break the fusion and slow down ({p128} vs {p64})"
+    );
+    println!(
+        "prefix: optimum d_par=64 fully fused; 128 forces a split (+{:.0}% cycles)\n",
+        100.0 * (p128 as f64 / p64 as f64 - 1.0)
+    );
+
+    // 2. Deep block: depth parallelism pays more.
+    let deep = conv3_block();
+    let s_deep = sweep(&deep, "vgg16-conv3-block (depths 128→256)");
+    // The S-V signal is at the top of the range: pushing d_par from 64 to
+    // 128 still pays on the deep block (every layer has d >= 128) but
+    // *hurts* the prefix (it must give up fusion to afford the width).
+    let gain_64_128 =
+        |s: &[(usize, Option<u64>)]| at(s, 64).unwrap() as f64 / at(s, 128).unwrap() as f64;
+    let g_prefix = gain_64_128(&s_prefix);
+    let g_deep = gain_64_128(&s_deep);
+    println!("speedup from d_par 64->128: prefix {g_prefix:.2}X vs deep block {g_deep:.2}X");
+    assert!(g_deep > 1.5, "deep block must keep gaining past 64 ({g_deep:.2}X)");
+    assert!(g_prefix < 1.0, "prefix must regress past 64 ({g_prefix:.2}X)");
+
+    // 3. Feasibility frontier of full VGG-16 under full weight residency.
+    let full = vgg16_full();
+    let cfg = AccelConfig::paper_default();
+    let mut frontier = 0;
+    for n in 1..=full.layers.len() {
+        let sub = Network {
+            name: format!("full[..{n}]"),
+            input: full.input,
+            layers: full.layers[..n].to_vec(),
+        };
+        let w = Weights::random(&sub, 1);
+        if best_plan(&cfg, &sub, &w, Objective::Latency).is_some() {
+            frontier = n;
+        } else {
+            break;
+        }
+    }
+    println!(
+        "\nfull VGG-16 feasibility frontier: first {frontier} layers (up to {}) fit the\n\
+         XC7V690T with resident weights; beyond that conv4_x's 512-deep filter banks\n\
+         (9.4 MB) exceed the 6.46 MB of BRAM — §V's 'weights dominate' limit, quantified.",
+        full.layers[frontier.saturating_sub(1)].name()
+    );
+    assert!(
+        (7..=13).contains(&frontier),
+        "frontier {frontier} should fall inside the conv3/conv4 region"
+    );
+}

@@ -1,0 +1,86 @@
+//! E5 — Fig 6: speedup over the CPU with and without pooling layers, as a
+//! function of fused depth. The paper's observation: fusing a pooling layer
+//! costs extra fill latency (the pool buffer must fill before the next conv
+//! sees a valid window), so the "with pooling" speedup curve sits below the
+//! "without pooling" one.
+
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::baselines::cpu_ref::{forward_timed, CpuWeights};
+use decoilfnet::config::{AccelConfig, Layer, Network, VolShape};
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::table::{fmt_speedup, Table};
+
+/// Build an n-layer net of conv-64s, optionally with a pool after every two
+/// convs (the VGG pattern).
+fn build(n_convs: usize, with_pool: bool) -> Network {
+    let mut layers = Vec::new();
+    for i in 0..n_convs {
+        layers.push(Layer::conv3x3(&format!("conv_{}", i + 1), 64));
+        if with_pool && i % 2 == 1 && i + 1 < n_convs {
+            layers.push(Layer::pool2x2(&format!("pool_{}", i / 2 + 1)));
+        }
+    }
+    Network {
+        name: format!("fig6-{}conv{}", n_convs, if with_pool { "-pool" } else { "" }),
+        input: VolShape::new(224, 224, 3),
+        layers,
+    }
+}
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let engine = Engine::new(cfg.clone());
+
+    let mut t = Table::new(&[
+        "convs",
+        "no-pool sim ms",
+        "no-pool speedup",
+        "pool sim ms",
+        "pool speedup",
+    ])
+    .title("Fig 6 — speedup vs CPU with and without pooling (X = #conv layers)")
+    .label_col();
+
+    let mut curves: Vec<(f64, f64)> = Vec::new();
+    for n in [2usize, 4, 6] {
+        let mut row = vec![n.to_string()];
+        let mut pair = (0.0, 0.0);
+        for (slot, with_pool) in [(0usize, false), (1, true)] {
+            let net = build(n, with_pool);
+            let w = Weights::random(&net, 1);
+            let sim = engine.simulate(&net, &w, &FusionPlan::fully_fused(net.layers.len()));
+            let sim_ms = sim.ms_at(cfg.platform.freq_mhz);
+
+            let cpu_w = CpuWeights::random(&net, 1);
+            let input = NdTensor::random(&net.input.as_slice(), 7, -1.0, 1.0);
+            let (_, cum) = forward_timed(&net, &cpu_w, &input);
+            let cpu_ms = cum.last().unwrap().1;
+            let speedup = cpu_ms / sim_ms;
+            row.push(format!("{sim_ms:.2}"));
+            row.push(fmt_speedup(speedup));
+            if slot == 0 {
+                pair.0 = speedup;
+            } else {
+                pair.1 = speedup;
+            }
+        }
+        t.row(&row);
+        curves.push(pair);
+    }
+    println!("{}", t.to_ascii());
+
+    // Shape assertions:
+    // 1. both speedup curves grow with depth;
+    for w in curves.windows(2) {
+        assert!(w[1].0 > w[0].0, "no-pool curve must grow");
+        assert!(w[1].1 > w[0].1, "pool curve must grow");
+    }
+    // 2. CPU cost of pooling is small but the fused pool adds latency, so
+    //    the consecutive-conv (no-pool) configuration achieves at least as
+    //    high a speedup per conv (the paper's Fig 6 gap).
+    let last = curves.last().unwrap();
+    println!(
+        "at 6 convs: no-pool {:.1}X vs with-pool {:.1}X (paper's gap direction: no-pool ≥ pool)",
+        last.0, last.1
+    );
+}

@@ -1,0 +1,66 @@
+//! E1 — Table I: resource utilization of the accelerator for the first two
+//! conv layers + one pooling layer of VGG-16, paper vs structural model.
+//! Also micro-benches the resource-model evaluation (the planner calls it
+//! for every candidate plan).
+
+use decoilfnet::accel::FusionPlan;
+use decoilfnet::config::{vgg16_prefix, AccelConfig};
+use decoilfnet::resources::{group_resources, plan_resources, utilization};
+use decoilfnet::util::bench::Bencher;
+use decoilfnet::util::table::Table;
+
+/// Paper Table I (used / available).
+const PAPER: &[(&str, usize, usize, f64)] = &[
+    ("DSP", 605, 3600, 16.8),
+    ("BRAM", 474, 1470, 32.24),
+    ("LUT", 245_138, 433_200, 56.58),
+    ("FF", 465_002, 866_400, 53.67),
+];
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let used = group_resources(&cfg, &net, 0..3); // conv1_1, conv1_2, pool1
+    let u = utilization(used, &cfg);
+
+    let measured = [
+        ("DSP", used.dsp, cfg.platform.dsp, u.dsp_pct),
+        ("BRAM", used.bram36(), cfg.platform.bram36, u.bram_pct),
+        ("LUT", used.lut, cfg.platform.lut, u.lut_pct),
+        ("FF", used.ff, cfg.platform.ff, u.ff_pct),
+    ];
+
+    let mut t = Table::new(&[
+        "resource",
+        "paper used",
+        "model used",
+        "available",
+        "paper %",
+        "model %",
+    ])
+    .title("Table I — resource utilization, first 2 conv + 1 pool of VGG-16")
+    .label_col();
+    for ((name, pu, pav, ppct), (mname, mu, mav, mpct)) in PAPER.iter().zip(&measured) {
+        assert_eq!(name, mname);
+        assert_eq!(*pav, *mav, "platform budget mismatch for {name}");
+        t.row(&[
+            name.to_string(),
+            pu.to_string(),
+            mu.to_string(),
+            pav.to_string(),
+            format!("{ppct:.1}%"),
+            format!("{mpct:.1}%"),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    assert_eq!(used.dsp, 605, "DSP count is structural and must be exact");
+
+    // Micro-bench: the planner evaluates this model 64× per search.
+    let mut b = Bencher::new();
+    b.bench("group_resources(conv1_1..pool1)", || {
+        group_resources(&cfg, &net, 0..3)
+    });
+    b.bench("plan_resources(fully_fused_7)", || {
+        plan_resources(&cfg, &net, &FusionPlan::fully_fused(7))
+    });
+}

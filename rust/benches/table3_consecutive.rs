@@ -1,0 +1,72 @@
+//! E3 — Table III: the paper's custom 4×conv-64 network — cumulative fused
+//! timing must stay nearly flat while the CPU grows linearly.
+
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::baselines::cpu_ref::{forward_timed, CpuWeights};
+use decoilfnet::config::{custom_4conv, AccelConfig, Network};
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::table::{fmt_speedup, Table};
+
+const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("conv_1", 114.54, 23.12, 26.764),
+    ("conv_2", 736.78, 27.42, 27.01),
+    ("conv_3", 1346.32, 35.45, 27.24),
+    ("conv_4", 2113.24, 38.58, 27.48),
+];
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let full = custom_4conv();
+    let engine = Engine::new(cfg.clone());
+
+    eprintln!("measuring CPU baseline ...");
+    let cpu_w = CpuWeights::random(&full, 1);
+    let input = NdTensor::random(&full.input.as_slice(), 7, -1.0, 1.0);
+    let (_, cpu_cum) = forward_timed(&full, &cpu_w, &input);
+
+    let mut t = Table::new(&[
+        "ending layer",
+        "CPU meas ms",
+        "sim ms",
+        "speedup",
+        "paper speedup",
+    ])
+    .title("Table III — four consecutive conv-64 layers")
+    .label_col();
+
+    let mut sims = Vec::new();
+    for (i, layer) in full.layers.iter().enumerate() {
+        let prefix = Network {
+            name: format!("p{i}"),
+            input: full.input,
+            layers: full.layers[..=i].to_vec(),
+        };
+        let w = Weights::random(&prefix, 1);
+        let rep = engine.simulate(&prefix, &w, &FusionPlan::fully_fused(i + 1));
+        let sim_ms = rep.ms_at(cfg.platform.freq_mhz);
+        let cpu_ms = cpu_cum[i].1;
+        let (pname, pcpu, _pgpu, pours) = PAPER[i];
+        assert_eq!(pname, layer.name());
+        t.row(&[
+            layer.name().to_string(),
+            format!("{cpu_ms:.1}"),
+            format!("{sim_ms:.2}"),
+            fmt_speedup(cpu_ms / sim_ms),
+            fmt_speedup(pcpu / pours),
+        ]);
+        sims.push((cpu_ms, sim_ms));
+    }
+    println!("{}", t.to_ascii());
+
+    // Shape assertions (the paper's core claims for this network):
+    // 1. fused pipeline is flat: conv_4 adds < 5% over conv_1;
+    let flat = sims[3].1 / sims[0].1;
+    assert!(flat < 1.05, "pipeline not flat: conv_4/conv_1 = {flat:.3}");
+    println!("pipeline flatness conv_4/conv_1 = {flat:.4} (paper: 27.48/26.764 = 1.027)");
+    // 2. speedup grows monotonically with fused depth;
+    let speedups: Vec<f64> = sims.iter().map(|(c, s)| c / s).collect();
+    for w in speedups.windows(2) {
+        assert!(w[1] > w[0], "speedup must grow with fused depth: {speedups:?}");
+    }
+    println!("speedup growth: {:?}", speedups.iter().map(|s| format!("{s:.1}X")).collect::<Vec<_>>());
+}

@@ -1,0 +1,122 @@
+//! E4 — Table IV: DeCoILFNet vs the Optimized [2] and Fused-layer [3]
+//! accelerators on the first 7 VGG-16 layers: clock cycles, MB transferred
+//! per input, BRAM and DSP.
+
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::baselines::{fused_layer, optimized};
+use decoilfnet::config::{vgg16_prefix, AccelConfig};
+use decoilfnet::resources::plan_resources;
+use decoilfnet::util::bench::{e2e_config, Bencher};
+use decoilfnet::util::table::Table;
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let weights = Weights::random(&net, 1);
+
+    // Ours.
+    let engine = Engine::new(cfg.clone());
+    let ours = engine.simulate(&net, &weights, &FusionPlan::fully_fused(7));
+    let ours_res = plan_resources(&cfg, &net, &FusionPlan::fully_fused(7));
+
+    // Baselines (both ran the same board at 100 MHz, 32-bit float).
+    let ocfg = optimized::OptimizedConfig::zhang2015();
+    let opt = optimized::run(&ocfg, &cfg, &net);
+    let fus = fused_layer::run(&ocfg, &cfg, &net, 28);
+
+    let mut t = Table::new(&["", "Optimized [2]", "Fused-layer [3]", "DeCoILFNet"])
+        .title("Table IV — comparison with FPGA accelerators, first 7 VGG-16 layers")
+        .label_col();
+    t.row(&[
+        "clock cycles ×10³ (model)".into(),
+        (opt.total_cycles / 1000).to_string(),
+        (fus.total_cycles / 1000).to_string(),
+        (ours.total_cycles / 1000).to_string(),
+    ]);
+    t.row(&[
+        "clock cycles ×10³ (paper)".into(),
+        "10951".into(),
+        "11655".into(),
+        "5034".into(),
+    ]);
+    t.row(&[
+        "precision".into(),
+        "32 bits float".into(),
+        "32 bits float".into(),
+        "32 bits fixed".into(),
+    ]);
+    t.row(&["frequency MHz".into(), "100".into(), "100".into(), "120".into()]);
+    t.row(&[
+        "MB transferred (model)".into(),
+        format!("{:.2}", opt.total_mb()),
+        format!("{:.2}", fus.total_mb()),
+        format!("{:.2}", ours.total_mb()),
+    ]);
+    t.row(&[
+        "MB transferred (paper)".into(),
+        "77.14".into(),
+        "3.64".into(),
+        "6.69".into(),
+    ]);
+    t.row(&[
+        "BRAM (model, BRAM18)".into(),
+        opt.bram18.to_string(),
+        fus.bram18.to_string(),
+        ours_res.bram18.to_string(),
+    ]);
+    t.row(&[
+        "BRAM (paper)".into(),
+        "2085".into(),
+        "2509".into(),
+        "2387".into(),
+    ]);
+    t.row(&[
+        "DSP (model)".into(),
+        opt.dsp.to_string(),
+        fus.dsp.to_string(),
+        ours_res.dsp.to_string(),
+    ]);
+    t.row(&[
+        "DSP (paper)".into(),
+        "2880".into(),
+        "2987".into(),
+        "2907".into(),
+    ]);
+    println!("{}", t.to_ascii());
+
+    // Shape assertions — who wins and by roughly what factor:
+    let cyc_vs_opt = opt.total_cycles as f64 / ours.total_cycles as f64;
+    let cyc_vs_fus = fus.total_cycles as f64 / ours.total_cycles as f64;
+    assert!(
+        cyc_vs_opt > 2.0 && cyc_vs_opt < 5.0,
+        "vs [2]: {cyc_vs_opt:.2}X (paper: 2.18X) — must stay >2X"
+    );
+    assert!(
+        cyc_vs_fus > 2.0 && cyc_vs_fus < 5.0,
+        "vs [3]: {cyc_vs_fus:.2}X (paper: 2.32X)"
+    );
+    let traffic_vs_opt = opt.total_mb() / ours.total_mb();
+    assert!(
+        traffic_vs_opt > 5.0,
+        "traffic vs [2]: {traffic_vs_opt:.1}X (paper: 11.5X) — must be ≫1"
+    );
+    let traffic_vs_fus = fus.total_mb() / ours.total_mb();
+    assert!(
+        traffic_vs_fus < 1.5,
+        "traffic vs [3]: {traffic_vs_fus:.2}X (paper: 0.54X — [3] moves less or similar)"
+    );
+    println!(
+        "shape: >2X cycles vs both ([2]: {cyc_vs_opt:.2}X, [3]: {cyc_vs_fus:.2}X), \
+         {traffic_vs_opt:.1}X less traffic than [2], ≈[3] on traffic"
+    );
+
+    // Micro-bench the three models (planner building blocks).
+    let mut b = Bencher::with_config(e2e_config());
+    b.bench("decoilfnet.simulate(vgg7)", || {
+        engine.simulate(&net, &weights, &FusionPlan::fully_fused(7))
+    });
+    b.bench("zhang2015.run(vgg7)", || optimized::run(&ocfg, &cfg, &net));
+    b.bench("fused_layer.run(vgg7)", || {
+        fused_layer::run(&ocfg, &cfg, &net, 28)
+    });
+}

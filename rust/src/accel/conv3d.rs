@@ -1,0 +1,244 @@
+//! The pipelined 3-D convolution module (paper §III-C).
+//!
+//! Structure per the paper: the depth-concatenated window is split into d_g
+//! parallel 2-D windows; w·w·d_g DSP multipliers and a LUT adder tree produce
+//! one filter's 3-D dot product; the k filters (× f_g serial depth groups)
+//! stream through the same unit one per cycle while the window is held.
+
+use crate::config::AccelConfig;
+use crate::fpga::dsp::{conv2d_unit_stage, depth_sum_stage};
+use crate::fpga::pipeline::Stage;
+use crate::tensor::fixed::{Fx, MacAcc};
+
+use super::depth_concat::FilterBanks;
+
+/// Static configuration of one conv layer's compute unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvUnit {
+    /// Kernel extent (w × w).
+    pub w: usize,
+    /// Input depth of the layer.
+    pub d: usize,
+    /// Channels processed in parallel (depth-group size d_g ≤ d).
+    pub d_par: usize,
+    /// Serial depth groups f_g = ceil(d / d_par) (§V iterative decomposition).
+    pub d_groups: usize,
+    /// Filters in the layer.
+    pub k: usize,
+    /// DSP multiplier pipeline depth.
+    pub mult_latency: u64,
+}
+
+impl ConvUnit {
+    pub fn for_layer(cfg: &AccelConfig, w: usize, d: usize, k: usize) -> ConvUnit {
+        let d_par = cfg.depth_parallel(d);
+        ConvUnit {
+            w,
+            d,
+            d_par,
+            d_groups: cfg.depth_groups(d),
+            k,
+            mult_latency: cfg.mult_latency as u64,
+        }
+    }
+
+    /// Pipeline stage of the unit: latency
+    /// `9·(1 + 2·ceil(log2 w) + ceil(log2 d_par))` per §III-C (45 for w=3
+    /// alone, 63 with the d=3 depth-sum), II = 1 filter-result per cycle.
+    pub fn stage(&self) -> Stage {
+        conv2d_unit_stage(self.w, self.mult_latency)
+            .then(depth_sum_stage(self.d_par, self.mult_latency))
+    }
+
+    /// Cycles between successive *complete output pixels*: the window is held
+    /// while the k filters stream through, repeated for each serial depth
+    /// group — `k · f_g` (paper §III-E + §V).
+    pub fn cycles_per_output_pixel(&self) -> u64 {
+        (self.k * self.d_groups) as u64
+    }
+
+    /// DSP multiplier lanes instantiated: w·w·d_par.
+    pub fn dsp_lanes(&self) -> usize {
+        self.w * self.w * self.d_par
+    }
+
+    /// Functional: one output pixel (all k filters) from a gathered
+    /// depth-concatenated window of `w·w` taps × `d` channels
+    /// (`window[t*d + c]`), replicating the hardware's accumulation order:
+    /// per filter, per depth group, taps multiply in parallel and reduce;
+    /// groups accumulate serially into the widened accumulator; bias and
+    /// optional ReLU at the end. Bit-exact w.r.t. the simulated datapath.
+    pub fn compute_pixel(&self, window: &[Fx], banks: &FilterBanks, relu: bool) -> Vec<Fx> {
+        let mut accs = vec![MacAcc::new(); self.k];
+        self.compute_pixel_into(window, banks, relu, &mut accs)
+    }
+
+    /// `compute_pixel` with a caller-provided accumulator scratch (the
+    /// functional simulator reuses it across all output pixels — §Perf L3).
+    ///
+    /// Loop order: window-value-outer, filters-inner over the transposed
+    /// bank view, so each window value broadcasts across a unit-stride
+    /// weight row (vectorizes). The arithmetic is identical to the
+    /// hardware's filter-serial order — integer MAC addition commutes
+    /// exactly, unlike floats — which the `group_decomposition_is_exact`
+    /// test pins down.
+    pub fn compute_pixel_into(
+        &self,
+        window: &[Fx],
+        banks: &FilterBanks,
+        relu: bool,
+        accs: &mut [MacAcc],
+    ) -> Vec<Fx> {
+        debug_assert_eq!(window.len(), self.w * self.w * self.d);
+        debug_assert_eq!(banks.d, self.d);
+        debug_assert_eq!(banks.k, self.k);
+        debug_assert_eq!(accs.len(), self.k);
+        let taps = self.w * self.w;
+        for a in accs.iter_mut() {
+            *a = MacAcc::new();
+        }
+        for t in 0..taps {
+            for c in 0..self.d {
+                let x = window[t * self.d + c].0 as i64;
+                if x == 0 {
+                    continue; // padding/ReLU zeros are common; skip the row
+                }
+                let wrow = banks.tap_channel_all_filters(t, c);
+                for (a, w) in accs.iter_mut().zip(wrow) {
+                    a.0 = a.0.saturating_add(x * w.0 as i64);
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.k);
+        for (f, acc) in accs.iter_mut().enumerate() {
+            acc.add_bias(banks.bias(f));
+            let v = acc.finish();
+            out.push(if relu { v.relu() } else { v });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::NdTensor;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn random_banks(rng: &mut Rng, k: usize, w: usize, d: usize) -> FilterBanks {
+        let filt = NdTensor::random(&[k, w, w, d], rng.next_u64(), -0.5, 0.5);
+        let bias = NdTensor::random(&[k], rng.next_u64(), -0.5, 0.5);
+        FilterBanks::from_tensor(&filt, &bias)
+    }
+
+    fn unit(cfg_cap: usize, w: usize, d: usize, k: usize) -> ConvUnit {
+        let mut cfg = AccelConfig::paper_default();
+        cfg.max_depth_parallel = cfg_cap;
+        ConvUnit::for_layer(&cfg, w, d, k)
+    }
+
+    /// Float reference for one pixel.
+    fn ref_pixel(window: &[Fx], banks: &FilterBanks, w: usize, d: usize, relu: bool) -> Vec<f64> {
+        let taps = w * w;
+        (0..banks.k)
+            .map(|f| {
+                let mut s = 0.0f64;
+                for t in 0..taps {
+                    for c in 0..d {
+                        s += window[t * d + c].to_f64() * banks.tap(f, t)[c].to_f64();
+                    }
+                }
+                s += banks.bias(f).to_f64();
+                if relu {
+                    s.max(0.0)
+                } else {
+                    s
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paper_latency_and_rate() {
+        // The §III test example: w=3, d=3, k=3, depth fully parallel.
+        let u = unit(8, 3, 3, 3);
+        assert_eq!(u.d_par, 3);
+        assert_eq!(u.d_groups, 1);
+        assert_eq!(u.stage().latency, 63);
+        assert_eq!(u.stage().ii, 1);
+        assert_eq!(u.cycles_per_output_pixel(), 3);
+        assert_eq!(u.dsp_lanes(), 27);
+    }
+
+    #[test]
+    fn vgg_later_layer_decomposes() {
+        // conv2_2: d=128, cap 64 → 2 serial groups; k=128 → 256 cyc/pixel.
+        let u = unit(64, 3, 128, 128);
+        assert_eq!(u.d_par, 64);
+        assert_eq!(u.d_groups, 2);
+        assert_eq!(u.cycles_per_output_pixel(), 256);
+        assert_eq!(u.dsp_lanes(), 9 * 64);
+    }
+
+    #[test]
+    fn compute_matches_float_reference() {
+        prop::check_default(
+            "conv3d-pixel-vs-ref",
+            |r: &mut Rng| {
+                let w = 3usize;
+                let d = r.range_usize(1, 12);
+                let k = r.range_usize(1, 6);
+                let cap = r.range_usize(1, 12);
+                (w, d, k, cap, r.next_u64())
+            },
+            |&(w, d, k, cap, seed)| {
+                let mut rng = Rng::new(seed);
+                let banks = random_banks(&mut rng, k, w, d);
+                let u = unit(cap, w, d, k);
+                let window: Vec<Fx> = (0..w * w * d)
+                    .map(|_| Fx::from_f32(rng.range_f32(-1.0, 1.0)))
+                    .collect();
+                let got = u.compute_pixel(&window, &banks, false);
+                let want = ref_pixel(&window, &banks, w, d, false);
+                for (g, wv) in got.iter().zip(&want) {
+                    // full-width accumulator: error ≤ 1 quantization step
+                    if (g.to_f64() - wv).abs() > Fx::epsilon() {
+                        return Err(format!("pixel err {} vs {}", g.to_f64(), wv));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn group_decomposition_is_exact() {
+        // Serial depth groups must give bit-identical results to full-depth
+        // processing (the accumulator is wide enough that order is exact).
+        let mut rng = Rng::new(99);
+        let (w, d, k) = (3, 10, 4);
+        let banks = random_banks(&mut rng, k, w, d);
+        let window: Vec<Fx> = (0..w * w * d)
+            .map(|_| Fx::from_f32(rng.range_f32(-2.0, 2.0)))
+            .collect();
+        let full = unit(16, w, d, k).compute_pixel(&window, &banks, false);
+        for cap in [1, 2, 3, 4, 7] {
+            let grouped = unit(cap, w, d, k).compute_pixel(&window, &banks, false);
+            assert_eq!(full, grouped, "cap={cap} changed results");
+        }
+    }
+
+    #[test]
+    fn relu_applies() {
+        let mut rng = Rng::new(5);
+        let banks = random_banks(&mut rng, 3, 3, 2);
+        let u = unit(8, 3, 2, 3);
+        let window: Vec<Fx> = (0..18).map(|_| Fx::from_f32(rng.range_f32(-2.0, 2.0))).collect();
+        let plain = u.compute_pixel(&window, &banks, false);
+        let relued = u.compute_pixel(&window, &banks, true);
+        for (p, r) in plain.iter().zip(&relued) {
+            assert_eq!(r.to_f32(), p.to_f32().max(0.0));
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Depth concatenation (paper §III-B, Fig 4): input pixels and filter taps
+//! are flattened along depth into single wide words, so all `d_g` channels
+//! move and multiply together in one cycle.
+//!
+//! On the input side [`crate::tensor::FxTensor::pixel`] already yields the
+//! depth-contiguous word; this module adds the filter-side flattening — the
+//! paper instantiates w·w separate filter BRAMs, one per kernel tap, each
+//! holding that tap's depth-concatenated values for all k filters in
+//! sequence, so a whole 3-D filter is readable in one cycle.
+
+use crate::tensor::fixed::Fx;
+use crate::tensor::NdTensor;
+
+/// Filter bank memory layout for one conv layer.
+///
+/// `banks[t]` is the BRAM for kernel tap `t` (row-major `t = ty*w + tx`);
+/// its contents are `k` filters × `d` channels, filter-major:
+/// `banks[t][f*d + c]` = weight of filter `f`, tap `t`, channel `c`.
+#[derive(Debug, Clone)]
+pub struct FilterBanks {
+    pub w: usize,
+    pub d: usize,
+    pub k: usize,
+    banks: Vec<Vec<Fx>>,
+    /// Transposed copy of each bank — `trans[t][c*k + f]` — so the
+    /// functional simulator can broadcast one window value across all k
+    /// filters with unit stride (§Perf L3 iteration 3). Pure simulator
+    /// implementation detail: the modeled hardware reads `banks` (Fig 4).
+    trans: Vec<Vec<Fx>>,
+    biases: Vec<Fx>,
+}
+
+impl FilterBanks {
+    /// Flatten a `[k, w, w, d]` filter tensor + `[k]` biases.
+    pub fn from_tensor(filters: &NdTensor, biases: &NdTensor) -> FilterBanks {
+        let shape = filters.shape();
+        assert_eq!(shape.len(), 4, "filters must be [k, w, w, d]");
+        let (k, wh, ww, d) = (shape[0], shape[1], shape[2], shape[3]);
+        assert_eq!(wh, ww, "square kernels only");
+        assert_eq!(biases.shape(), &[k]);
+        let mut banks = vec![Vec::with_capacity(k * d); wh * ww];
+        for f in 0..k {
+            for ty in 0..wh {
+                for tx in 0..ww {
+                    let bank = &mut banks[ty * ww + tx];
+                    for c in 0..d {
+                        bank.push(Fx::from_f32(filters.at4(f, ty, tx, c)));
+                    }
+                }
+            }
+        }
+        let trans = banks
+            .iter()
+            .map(|bank| {
+                let mut t = vec![Fx::ZERO; k * d];
+                for f in 0..k {
+                    for c in 0..d {
+                        t[c * k + f] = bank[f * d + c];
+                    }
+                }
+                t
+            })
+            .collect();
+        FilterBanks {
+            w: wh,
+            d,
+            k,
+            banks,
+            trans,
+            biases: biases.data().iter().map(|&b| Fx::from_f32(b)).collect(),
+        }
+    }
+
+    /// All k filters' weights for tap `t`, channel `c` — contiguous.
+    #[inline]
+    pub fn tap_channel_all_filters(&self, t: usize, c: usize) -> &[Fx] {
+        &self.trans[t][c * self.k..(c + 1) * self.k]
+    }
+
+    /// The depth-concatenated word for filter `f`, tap `t` — all `d` channel
+    /// weights, contiguous (one BRAM read in hardware).
+    #[inline]
+    pub fn tap(&self, f: usize, t: usize) -> &[Fx] {
+        &self.banks[t][f * self.d..(f + 1) * self.d]
+    }
+
+    /// Same restricted to a depth group `[c0, c0+len)` — iterative
+    /// decomposition reads only the group's slice.
+    #[inline]
+    pub fn tap_group(&self, f: usize, t: usize, c0: usize, len: usize) -> &[Fx] {
+        &self.banks[t][f * self.d + c0..f * self.d + c0 + len]
+    }
+
+    #[inline]
+    pub fn bias(&self, f: usize) -> Fx {
+        self.biases[f]
+    }
+
+    /// Number of kernel taps (= number of filter BRAMs, `w*w`).
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Words per bank (each word is a `d`-channel concatenation).
+    pub fn words_per_bank(&self) -> usize {
+        self.k
+    }
+
+    /// Bits per concatenated word at `word_bytes` per channel value.
+    pub fn word_bits(&self, word_bytes: usize) -> usize {
+        self.d * word_bytes * 8
+    }
+
+    /// Total weight bytes (what DDR must deliver for this layer).
+    pub fn total_bytes(&self, word_bytes: usize) -> u64 {
+        ((self.k * self.w * self.w * self.d + self.k) * word_bytes) as u64
+    }
+}
+
+/// Split a depth-concatenated word into `groups` contiguous chunks of at most
+/// `group_len` channels (paper Fig 4: the concatenated window "can be simply
+/// split into independent windows which are parallelly sent to the
+/// convolution block"; with iterative decomposition the split is per group).
+pub fn split_groups(word: &[Fx], group_len: usize) -> Vec<&[Fx]> {
+    assert!(group_len >= 1);
+    word.chunks(group_len).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_filters(k: usize, w: usize, d: usize) -> (NdTensor, NdTensor) {
+        // weight(f, ty, tx, c) = f*1000 + ty*100 + tx*10 + c (all exact in Q16.16)
+        let mut filt = NdTensor::zeros(&[k, w, w, d]);
+        for f in 0..k {
+            for ty in 0..w {
+                for tx in 0..w {
+                    for c in 0..d {
+                        filt.set(
+                            &[f, ty, tx, c],
+                            (f * 1000 + ty * 100 + tx * 10 + c) as f32,
+                        );
+                    }
+                }
+            }
+        }
+        let biases = NdTensor::from_vec(&[k], (0..k).map(|f| f as f32 * 0.5).collect());
+        (filt, biases)
+    }
+
+    #[test]
+    fn bank_count_is_w_squared() {
+        let (f, b) = sample_filters(3, 3, 3);
+        let banks = FilterBanks::from_tensor(&f, &b);
+        assert_eq!(banks.n_banks(), 9);
+        assert_eq!(banks.words_per_bank(), 3);
+    }
+
+    #[test]
+    fn tap_layout_matches_source() {
+        let (f, b) = sample_filters(4, 3, 5);
+        let banks = FilterBanks::from_tensor(&f, &b);
+        for filt in 0..4 {
+            for ty in 0..3 {
+                for tx in 0..3 {
+                    let tap = banks.tap(filt, ty * 3 + tx);
+                    assert_eq!(tap.len(), 5);
+                    for c in 0..5 {
+                        assert_eq!(
+                            tap[c].to_f32(),
+                            (filt * 1000 + ty * 100 + tx * 10 + c) as f32,
+                            "mismatch f={filt} t=({ty},{tx}) c={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tap_group_slices_depth() {
+        let (f, b) = sample_filters(2, 3, 8);
+        let banks = FilterBanks::from_tensor(&f, &b);
+        let g = banks.tap_group(1, 4, 4, 4); // filter 1, center tap, channels 4..8
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].to_f32(), (1000 + 100 + 10 + 4) as f32);
+    }
+
+    #[test]
+    fn biases_kept() {
+        let (f, b) = sample_filters(3, 3, 2);
+        let banks = FilterBanks::from_tensor(&f, &b);
+        assert_eq!(banks.bias(2).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn sizes() {
+        let (f, b) = sample_filters(64, 3, 3);
+        let banks = FilterBanks::from_tensor(&f, &b);
+        assert_eq!(banks.word_bits(4), 96); // paper's example: 3×32 = 96-bit word
+        assert_eq!(banks.total_bytes(4), (64 * 9 * 3 + 64) * 4);
+    }
+
+    #[test]
+    fn split_groups_chunks() {
+        let word: Vec<Fx> = (0..10).map(|i| Fx::from_f32(i as f32)).collect();
+        let gs = split_groups(&word, 4);
+        assert_eq!(gs.len(), 3);
+        assert_eq!(gs[0].len(), 4);
+        assert_eq!(gs[2].len(), 2);
+        assert_eq!(gs[2][0].to_f32(), 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "square kernels")]
+    fn rejects_non_square() {
+        let f = NdTensor::zeros(&[2, 3, 5, 2]);
+        let b = NdTensor::zeros(&[2]);
+        FilterBanks::from_tensor(&f, &b);
+    }
+}

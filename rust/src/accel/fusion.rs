@@ -1,0 +1,230 @@
+//! Inter-layer fusion plans (paper §III-E, §V, Fig 7).
+//!
+//! A fusion plan partitions the network's layer sequence into contiguous
+//! groups. Layers within a group are pipelined on chip (intermediates never
+//! touch DDR); groups execute serially with their boundary volumes spilled
+//! to and reloaded from DDR. Point A of Fig 7 is "every layer its own
+//! group"; point G is "one group containing everything".
+
+use crate::config::Network;
+
+/// A fusion plan: group `i` covers layers `[bounds[i], bounds[i+1])`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusionPlan {
+    n_layers: usize,
+    /// Ascending cut points; always starts at 0 and ends at n_layers.
+    bounds: Vec<usize>,
+}
+
+impl FusionPlan {
+    /// Build from explicit group sizes (must sum to the layer count).
+    pub fn from_group_sizes(n_layers: usize, sizes: &[usize]) -> Result<FusionPlan, String> {
+        if sizes.iter().any(|&s| s == 0) {
+            return Err("empty fusion group".to_string());
+        }
+        let total: usize = sizes.iter().sum();
+        if total != n_layers {
+            return Err(format!(
+                "group sizes sum to {total}, network has {n_layers} layers"
+            ));
+        }
+        let mut bounds = vec![0usize];
+        for &s in sizes {
+            bounds.push(bounds.last().unwrap() + s);
+        }
+        Ok(FusionPlan { n_layers, bounds })
+    }
+
+    /// Every layer its own group (Fig 7 point A / the unfused baseline).
+    pub fn unfused(n_layers: usize) -> FusionPlan {
+        FusionPlan::from_group_sizes(n_layers, &vec![1; n_layers]).unwrap()
+    }
+
+    /// One group spanning the whole network (Fig 7 point G / DeCoILFNet's
+    /// headline configuration for the VGG prefix).
+    pub fn fully_fused(n_layers: usize) -> FusionPlan {
+        FusionPlan::from_group_sizes(n_layers, &[n_layers]).unwrap()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Layer index ranges of each group.
+    pub fn groups(&self) -> Vec<std::ops::Range<usize>> {
+        self.bounds
+            .windows(2)
+            .map(|w| w[0]..w[1])
+            .collect()
+    }
+
+    pub fn group_sizes(&self) -> Vec<usize> {
+        self.bounds.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Which group a layer belongs to.
+    pub fn group_of(&self, layer: usize) -> usize {
+        assert!(layer < self.n_layers);
+        self.bounds.partition_point(|&b| b <= layer) - 1
+    }
+
+    /// Invariant check: groups are a contiguous, complete, non-overlapping
+    /// partition (property-tested in the coordinator planner).
+    pub fn is_valid_partition(&self) -> bool {
+        self.bounds.first() == Some(&0)
+            && self.bounds.last() == Some(&self.n_layers)
+            && self.bounds.windows(2).all(|w| w[0] < w[1])
+    }
+
+    /// Short human label, e.g. "[2|3|2]".
+    pub fn label(&self) -> String {
+        let sizes: Vec<String> = self.group_sizes().iter().map(|s| s.to_string()).collect();
+        format!("[{}]", sizes.join("|"))
+    }
+}
+
+/// Enumerate all 2^(n−1) contiguous-group fusion plans of an `n`-layer
+/// network (the Fig 7 design space; n = 7 for the VGG prefix ⇒ 64 plans).
+pub fn enumerate_plans(n_layers: usize) -> Vec<FusionPlan> {
+    assert!(n_layers >= 1 && n_layers <= 20, "enumeration explodes past 20");
+    let mut out = Vec::new();
+    // Bitmask over the n−1 possible cut points.
+    for mask in 0..(1u32 << (n_layers - 1)) {
+        let mut bounds = vec![0usize];
+        for cut in 0..n_layers - 1 {
+            if mask & (1 << cut) != 0 {
+                bounds.push(cut + 1);
+            }
+        }
+        bounds.push(n_layers);
+        out.push(FusionPlan {
+            n_layers,
+            bounds,
+        });
+    }
+    out
+}
+
+/// The named Fig 7 sweep for a 7-layer network: A = unfused … G = one group.
+/// Intermediate points fuse progressively larger prefixes, matching the
+/// paper's "grouped fusion of five convolutions and two pooling layers".
+pub fn fig7_points(net: &Network) -> Vec<(char, FusionPlan)> {
+    let n = net.layers.len();
+    assert_eq!(n, 7, "fig7 sweep is defined for the 7-layer VGG prefix");
+    vec![
+        ('A', FusionPlan::from_group_sizes(n, &[1, 1, 1, 1, 1, 1, 1]).unwrap()),
+        ('B', FusionPlan::from_group_sizes(n, &[2, 1, 1, 1, 1, 1]).unwrap()),
+        ('C', FusionPlan::from_group_sizes(n, &[3, 1, 1, 1, 1]).unwrap()),
+        ('D', FusionPlan::from_group_sizes(n, &[4, 1, 1, 1]).unwrap()),
+        ('E', FusionPlan::from_group_sizes(n, &[5, 1, 1]).unwrap()),
+        ('F', FusionPlan::from_group_sizes(n, &[6, 1]).unwrap()),
+        ('G', FusionPlan::fully_fused(n)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::vgg16_prefix;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn group_sizes_roundtrip() {
+        let p = FusionPlan::from_group_sizes(7, &[2, 3, 2]).unwrap();
+        assert_eq!(p.group_sizes(), vec![2, 3, 2]);
+        assert_eq!(p.n_groups(), 3);
+        assert_eq!(p.groups(), vec![0..2, 2..5, 5..7]);
+        assert_eq!(p.label(), "[2|3|2]");
+        assert!(p.is_valid_partition());
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        assert!(FusionPlan::from_group_sizes(7, &[2, 3]).is_err());
+        assert!(FusionPlan::from_group_sizes(7, &[0, 7]).is_err());
+        assert!(FusionPlan::from_group_sizes(7, &[8]).is_err());
+    }
+
+    #[test]
+    fn group_of_lookup() {
+        let p = FusionPlan::from_group_sizes(7, &[2, 3, 2]).unwrap();
+        assert_eq!(p.group_of(0), 0);
+        assert_eq!(p.group_of(1), 0);
+        assert_eq!(p.group_of(2), 1);
+        assert_eq!(p.group_of(4), 1);
+        assert_eq!(p.group_of(5), 2);
+        assert_eq!(p.group_of(6), 2);
+    }
+
+    #[test]
+    fn unfused_and_fused_extremes() {
+        assert_eq!(FusionPlan::unfused(5).n_groups(), 5);
+        assert_eq!(FusionPlan::fully_fused(5).n_groups(), 1);
+    }
+
+    #[test]
+    fn enumeration_counts() {
+        assert_eq!(enumerate_plans(1).len(), 1);
+        assert_eq!(enumerate_plans(3).len(), 4);
+        assert_eq!(enumerate_plans(7).len(), 64);
+    }
+
+    #[test]
+    fn enumeration_all_valid_and_unique() {
+        let plans = enumerate_plans(7);
+        for p in &plans {
+            assert!(p.is_valid_partition());
+        }
+        let mut labels: Vec<String> = plans.iter().map(|p| p.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 64);
+    }
+
+    #[test]
+    fn fig7_points_progression() {
+        let pts = fig7_points(&vgg16_prefix());
+        assert_eq!(pts.len(), 7);
+        assert_eq!(pts[0].1.n_groups(), 7);
+        assert_eq!(pts[6].1.n_groups(), 1);
+        // monotone decreasing group count
+        for w in pts.windows(2) {
+            assert!(w[0].1.n_groups() > w[1].1.n_groups());
+        }
+    }
+
+    #[test]
+    fn property_partition_invariants() {
+        prop::check_default(
+            "fusion-partition",
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 12);
+                let plans = enumerate_plans(n);
+                let pick = r.range_usize(0, plans.len() - 1);
+                (n, plans[pick].clone())
+            },
+            |(n, plan)| {
+                if !plan.is_valid_partition() {
+                    return Err("invalid partition".into());
+                }
+                // every layer in exactly one group
+                let mut seen = vec![0usize; *n];
+                for g in plan.groups() {
+                    for l in g {
+                        seen[l] += 1;
+                    }
+                }
+                if seen.iter().all(|&c| c == 1) {
+                    Ok(())
+                } else {
+                    Err(format!("coverage {seen:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! DeCoILFNet accelerator model: depth concatenation, the pipelined 3-D
+//! convolution unit, pooling, inter-layer fusion plans, the streaming cycle
+//! engine, and the closed-form latency model.
+pub mod conv3d;
+pub mod depth_concat;
+pub mod engine;
+pub mod fusion;
+pub mod latency;
+pub mod pool;
+pub mod trace;
+
+pub use engine::{Engine, SimReport, Weights};
+pub use fusion::FusionPlan;

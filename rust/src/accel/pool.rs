@@ -1,0 +1,171 @@
+//! Max-pooling with an intermediate pool line buffer (paper §III-D).
+//!
+//! Convolution outputs are redirected into a pool row buffer at the current
+//! output column address; at even steps the address advances, at odd steps
+//! the stored value is replaced by the max of old and new. After two input
+//! rows, a pooled row streams out. Depth-concatenated pixels pool laneswise.
+
+use crate::fpga::pipeline::Stage;
+use crate::tensor::fixed::Fx;
+use crate::tensor::FxTensor;
+
+/// Pooling unit configuration (the paper uses 2×2 stride 2 throughout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolUnit {
+    pub window: usize,
+    pub stride: usize,
+}
+
+impl PoolUnit {
+    pub fn new(window: usize, stride: usize) -> PoolUnit {
+        assert!(window >= 1 && stride >= 1);
+        PoolUnit { window, stride }
+    }
+
+    /// Timing: the comparator pipeline is shallow; one cycle per update,
+    /// II = 1 against the incoming conv stream.
+    pub fn stage(&self) -> Stage {
+        Stage::pipelined(1)
+    }
+
+    pub fn out_extent(&self, extent: usize) -> usize {
+        (extent - self.window) / self.stride + 1
+    }
+
+    /// Functional pooling of a whole `[h, w, d]` fixed-point volume —
+    /// streaming semantics (running max in a row buffer), which for max-pool
+    /// equals the gather-then-max reference exactly; tests assert that.
+    pub fn forward(&self, input: &FxTensor) -> FxTensor {
+        let (h, w, d) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = (self.out_extent(h), self.out_extent(w));
+        let mut out = FxTensor::zeros(&[oh, ow, d]);
+        // Row buffer holds one pooled row of ow × d running maxima.
+        let mut row_buf: Vec<Fx> = vec![Fx::MIN; ow * d];
+        for y in 0..h {
+            let within = (y % self.stride) < self.window && y / self.stride < oh;
+            let fresh_row = y % self.stride == 0;
+            if fresh_row {
+                row_buf.fill(Fx::MIN);
+            }
+            for x in 0..w {
+                let ox = x / self.stride;
+                if ox >= ow || (x % self.stride) >= self.window || !within {
+                    continue;
+                }
+                for c in 0..d {
+                    let old = row_buf[ox * d + c];
+                    row_buf[ox * d + c] = old.max(input.at3(y, x, c));
+                }
+            }
+            // Row completes the pooled row on the window's last line.
+            if within && (y % self.stride) == self.window - 1 {
+                let oy = y / self.stride;
+                for ox in 0..ow {
+                    for c in 0..d {
+                        out.set3(oy, ox, c, row_buf[ox * d + c]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Pool-buffer capacity in depth-concatenated words: one pooled row.
+    pub fn buffer_words(&self, in_w: usize) -> usize {
+        self.out_extent(in_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::NdTensor;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    /// Direct gather reference.
+    fn ref_pool(input: &FxTensor, window: usize, stride: usize) -> FxTensor {
+        let (h, w, d) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = ((h - window) / stride + 1, (w - window) / stride + 1);
+        let mut out = FxTensor::zeros(&[oh, ow, d]);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for c in 0..d {
+                    let mut m = Fx::MIN;
+                    for dy in 0..window {
+                        for dx in 0..window {
+                            m = m.max(input.at3(oy * stride + dy, ox * stride + dx, c));
+                        }
+                    }
+                    out.set3(oy, ox, c, m);
+                }
+            }
+        }
+        out
+    }
+
+    fn random_volume(seed: u64, h: usize, w: usize, d: usize) -> FxTensor {
+        NdTensor::random(&[h, w, d], seed, -4.0, 4.0).to_fixed()
+    }
+
+    #[test]
+    fn pool_2x2_known_values() {
+        let data = vec![
+            1.0, 5.0, 2.0, 0.0, //
+            3.0, 4.0, 8.0, 1.0, //
+            0.5, 0.25, 1.5, 2.5, //
+            0.75, 0.1, 3.5, 0.2,
+        ];
+        let t = NdTensor::from_vec(&[4, 4, 1], data).to_fixed();
+        let p = PoolUnit::new(2, 2).forward(&t);
+        assert_eq!(p.shape(), &[2, 2, 1]);
+        let vals: Vec<f32> = p.data().iter().map(|v| v.to_f32()).collect();
+        assert_eq!(vals, vec![5.0, 8.0, 0.75, 3.5]);
+    }
+
+    #[test]
+    fn streaming_equals_gather_property() {
+        prop::check_default(
+            "pool-stream-vs-gather",
+            |r: &mut Rng| {
+                let h = r.range_usize(2, 11);
+                let w = r.range_usize(2, 11);
+                let d = r.range_usize(1, 5);
+                (h, w, d, r.next_u64())
+            },
+            |&(h, w, d, seed)| {
+                let t = random_volume(seed, h, w, d);
+                let got = PoolUnit::new(2, 2).forward(&t);
+                let want = ref_pool(&t, 2, 2);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch at {h}x{w}x{d}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn odd_extents_drop_tail() {
+        let t = random_volume(3, 5, 7, 2);
+        let p = PoolUnit::new(2, 2).forward(&t);
+        assert_eq!(p.shape(), &[2, 3, 2]);
+        assert_eq!(PoolUnit::new(2, 2).forward(&t), ref_pool(&t, 2, 2));
+    }
+
+    #[test]
+    fn vgg_shapes() {
+        let u = PoolUnit::new(2, 2);
+        assert_eq!(u.out_extent(224), 112);
+        assert_eq!(u.out_extent(112), 56);
+        assert_eq!(u.buffer_words(224), 112);
+    }
+
+    #[test]
+    fn stage_is_cheap() {
+        let s = PoolUnit::new(2, 2).stage();
+        assert_eq!(s.ii, 1);
+        assert!(s.latency <= 2);
+    }
+}

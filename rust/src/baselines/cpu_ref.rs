@@ -1,0 +1,375 @@
+//! CPU software baseline — the paper's "CPU-caffe" role.
+//!
+//! A straightforward but non-strawman CNN forward pass on the host CPU:
+//! im2col lowering + a blocked f32 GEMM with a 4×4 register micro-kernel
+//! (the same structure caffe/OpenBLAS use, minus vendor-tuned assembly).
+//! Wallclock is *measured* on this machine, exactly as the paper measured
+//! its Xeon; EXPERIMENTS.md reports the shape (accelerator ≫ CPU), not the
+//! paper's absolute Xeon numbers.
+
+use std::time::Instant;
+
+use crate::config::{Layer, Network};
+use crate::tensor::NdTensor;
+
+/// im2col: lower the `[h, w, d]` input into a `[out_h*out_w, k*k*d]` matrix
+/// for a k×k same/valid conv with zero padding.
+pub fn im2col(input: &NdTensor, kernel: usize, padding: usize) -> NdTensor {
+    let (h, w, d) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let out_h = h + 2 * padding - kernel + 1;
+    let out_w = w + 2 * padding - kernel + 1;
+    let cols = kernel * kernel * d;
+    let mut out = NdTensor::zeros(&[out_h * out_w, cols]);
+    let odata = out.data_mut();
+    let idata = input.data();
+    for oy in 0..out_h {
+        for ox in 0..out_w {
+            let row_off = (oy * out_w + ox) * cols;
+            for ky in 0..kernel {
+                let iy = oy + ky;
+                if iy < padding || iy - padding >= h {
+                    continue; // stays zero
+                }
+                let ry = iy - padding;
+                for kx in 0..kernel {
+                    let ix = ox + kx;
+                    if ix < padding || ix - padding >= w {
+                        continue;
+                    }
+                    let rx = ix - padding;
+                    let src = (ry * w + rx) * d;
+                    let dst = row_off + (ky * kernel + kx) * d;
+                    odata[dst..dst + d].copy_from_slice(&idata[src..src + d]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked GEMM: `C[m,n] = A[m,k] · B[k,n]`, row-major, with a 4×4
+/// register-tiled micro-kernel and k-panel blocking for cache reuse.
+pub fn gemm(a: &NdTensor, b: &NdTensor) -> NdTensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "gemm inner dims");
+    let mut c = NdTensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    const KC: usize = 256; // k-panel
+
+    let mut kp = 0;
+    while kp < k {
+        let kend = (kp + KC).min(k);
+        let mut i = 0;
+        while i < m {
+            let mi = (i + 4).min(m);
+            let mut j = 0;
+            while j < n {
+                let nj = (j + 4).min(n);
+                // 4×4 micro-kernel over the k-panel, accumulators in regs.
+                let mut acc = [[0.0f32; 4]; 4];
+                for p in kp..kend {
+                    let mut avals = [0.0f32; 4];
+                    for (ii, av) in avals.iter_mut().enumerate().take(mi - i) {
+                        *av = ad[(i + ii) * k + p];
+                    }
+                    let brow = &bd[p * n + j..p * n + nj];
+                    for ii in 0..mi - i {
+                        let av = avals[ii];
+                        for (jj, &bv) in brow.iter().enumerate() {
+                            acc[ii][jj] += av * bv;
+                        }
+                    }
+                }
+                for ii in 0..mi - i {
+                    for jj in 0..nj - j {
+                        cd[(i + ii) * n + (j + jj)] += acc[ii][jj];
+                    }
+                }
+                j = nj;
+            }
+            i = mi;
+        }
+        kp = kend;
+    }
+    c
+}
+
+/// Conv layer via im2col + GEMM. `filters` is `[k_out, kh, kw, d]` (same
+/// layout as the accelerator's weights), `bias` is `[k_out]`.
+pub fn conv2d(
+    input: &NdTensor,
+    filters: &NdTensor,
+    bias: &NdTensor,
+    padding: usize,
+    relu: bool,
+) -> NdTensor {
+    let kf = filters.shape()[0];
+    let kernel = filters.shape()[1];
+    let d = filters.shape()[3];
+    assert_eq!(input.shape()[2], d);
+    let (h, w) = (input.shape()[0], input.shape()[1]);
+    let out_h = h + 2 * padding - kernel + 1;
+    let out_w = w + 2 * padding - kernel + 1;
+
+    let lowered = im2col(input, kernel, padding); // [oh*ow, k*k*d]
+    // Weight matrix: [k*k*d, kf]
+    let cols = kernel * kernel * d;
+    let mut wmat = NdTensor::zeros(&[cols, kf]);
+    {
+        let wd = wmat.data_mut();
+        for f in 0..kf {
+            for ky in 0..kernel {
+                for kx in 0..kernel {
+                    for c in 0..d {
+                        wd[((ky * kernel + kx) * d + c) * kf + f] = filters.at4(f, ky, kx, c);
+                    }
+                }
+            }
+        }
+    }
+    let mut prod = gemm(&lowered, &wmat); // [oh*ow, kf]
+    {
+        let pd = prod.data_mut();
+        for row in 0..out_h * out_w {
+            for f in 0..kf {
+                let v = pd[row * kf + f] + bias.get(&[f]);
+                pd[row * kf + f] = if relu { v.max(0.0) } else { v };
+            }
+        }
+    }
+    prod.reshape(&[out_h, out_w, kf])
+}
+
+/// Max-pool reference.
+pub fn maxpool(input: &NdTensor, window: usize, stride: usize) -> NdTensor {
+    let (h, w, d) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (oh, ow) = ((h - window) / stride + 1, (w - window) / stride + 1);
+    let mut out = NdTensor::zeros(&[oh, ow, d]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for c in 0..d {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..window {
+                    for dx in 0..window {
+                        m = m.max(input.at3(oy * stride + dy, ox * stride + dx, c));
+                    }
+                }
+                out.set3(oy, ox, c, m);
+            }
+        }
+    }
+    out
+}
+
+/// Float weights for the CPU path (mirrors `accel::Weights::random` — same
+/// seed ⇒ numerically identical parameters before quantization).
+#[derive(Debug, Clone)]
+pub struct CpuWeights {
+    pub tensors: Vec<Option<(NdTensor, NdTensor)>>,
+}
+
+impl CpuWeights {
+    pub fn random(net: &Network, seed: u64) -> CpuWeights {
+        let shapes = net.shapes();
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut tensors = Vec::new();
+        for (i, layer) in net.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv { kernel, filters, .. } => {
+                    let d = shapes[i].d;
+                    let fan_in = (kernel * kernel * d) as f32;
+                    let scale = (2.0 / fan_in).sqrt();
+                    let filt = NdTensor::random(
+                        &[*filters, *kernel, *kernel, d],
+                        rng.next_u64(),
+                        -scale,
+                        scale,
+                    );
+                    let bias = NdTensor::random(&[*filters], rng.next_u64(), -0.01, 0.01);
+                    tensors.push(Some((filt, bias)));
+                }
+                Layer::MaxPool { .. } => tensors.push(None),
+            }
+        }
+        CpuWeights { tensors }
+    }
+}
+
+/// Forward pass; returns per-layer cumulative wallclock (the paper's Table II
+/// "time after every layer" format) and the final output.
+pub fn forward_timed(
+    net: &Network,
+    weights: &CpuWeights,
+    input: &NdTensor,
+) -> (NdTensor, Vec<(String, f64)>) {
+    let mut cur = input.clone();
+    let mut cum = Vec::new();
+    let t0 = Instant::now();
+    for (i, layer) in net.layers.iter().enumerate() {
+        cur = match layer {
+            Layer::Conv { padding, relu, .. } => {
+                let (f, b) = weights.tensors[i].as_ref().unwrap();
+                conv2d(&cur, f, b, *padding, *relu)
+            }
+            Layer::MaxPool { window, stride, .. } => maxpool(&cur, *window, *stride),
+        };
+        cum.push((layer.name().to_string(), t0.elapsed().as_secs_f64() * 1e3));
+    }
+    (cur, cum)
+}
+
+/// Forward without timing.
+pub fn forward(net: &Network, weights: &CpuWeights, input: &NdTensor) -> NdTensor {
+    forward_timed(net, weights, input).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{paper_test_example, tiny_vgg};
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    /// Direct (non-im2col) conv reference for cross-checking.
+    fn conv2d_direct(
+        input: &NdTensor,
+        filters: &NdTensor,
+        bias: &NdTensor,
+        padding: usize,
+        relu: bool,
+    ) -> NdTensor {
+        let (h, w, d) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let kf = filters.shape()[0];
+        let kernel = filters.shape()[1];
+        let (oh, ow) = (h + 2 * padding - kernel + 1, w + 2 * padding - kernel + 1);
+        let mut out = NdTensor::zeros(&[oh, ow, kf]);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for f in 0..kf {
+                    let mut s = bias.get(&[f]);
+                    for ky in 0..kernel {
+                        for kx in 0..kernel {
+                            let (iy, ix) = (oy + ky, ox + kx);
+                            if iy < padding || ix < padding {
+                                continue;
+                            }
+                            let (ry, rx) = (iy - padding, ix - padding);
+                            if ry >= h || rx >= w {
+                                continue;
+                            }
+                            for c in 0..d {
+                                s += input.at3(ry, rx, c) * filters.at4(f, ky, kx, c);
+                            }
+                        }
+                    }
+                    out.set3(oy, ox, f, if relu { s.max(0.0) } else { s });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_small_exact() {
+        let a = NdTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = NdTensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = gemm(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn gemm_matches_naive_property() {
+        prop::check_default(
+            "gemm-vs-naive",
+            |r: &mut Rng| {
+                (
+                    r.range_usize(1, 17),
+                    r.range_usize(1, 17),
+                    r.range_usize(1, 17),
+                    r.next_u64(),
+                )
+            },
+            |&(m, k, n, seed)| {
+                let a = NdTensor::random(&[m, k], seed, -1.0, 1.0);
+                let b = NdTensor::random(&[k, n], seed ^ 1, -1.0, 1.0);
+                let c = gemm(&a, &b);
+                for i in 0..m {
+                    for j in 0..n {
+                        let want: f32 =
+                            (0..k).map(|p| a.get(&[i, p]) * b.get(&[p, j])).sum();
+                        let got = c.get(&[i, j]);
+                        if (got - want).abs() > 1e-3 {
+                            return Err(format!("C[{i},{j}] {got} vs {want}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn im2col_conv_matches_direct() {
+        prop::check_default(
+            "im2col-conv-vs-direct",
+            |r: &mut Rng| {
+                let h = r.range_usize(3, 9);
+                let w = r.range_usize(3, 9);
+                let d = r.range_usize(1, 4);
+                let kf = r.range_usize(1, 4);
+                let pad = r.range_usize(0, 1);
+                (h, w, d, kf, pad, r.next_u64())
+            },
+            |&(h, w, d, kf, pad, seed)| {
+                let input = NdTensor::random(&[h, w, d], seed, -1.0, 1.0);
+                let filt = NdTensor::random(&[kf, 3, 3, d], seed ^ 2, -1.0, 1.0);
+                let bias = NdTensor::random(&[kf], seed ^ 3, -0.5, 0.5);
+                let got = conv2d(&input, &filt, &bias, pad, false);
+                let want = conv2d_direct(&input, &filt, &bias, pad, false);
+                let diff = got.max_abs_diff(&want);
+                if diff < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {diff}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn network_forward_shapes_and_relu() {
+        let net = tiny_vgg();
+        let w = CpuWeights::random(&net, 11);
+        let input = NdTensor::random(&net.input.as_slice(), 7, -1.0, 1.0);
+        let (out, cum) = forward_timed(&net, &w, &input);
+        assert_eq!(out.shape(), &net.shape_after(6).as_slice());
+        assert_eq!(cum.len(), 7);
+        // cumulative times monotone
+        for pair in cum.windows(2) {
+            assert!(pair[1].1 >= pair[0].1);
+        }
+        assert!(out.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn cpu_matches_fixed_point_engine() {
+        // The CPU f32 path and the accelerator's Q16.16 path must agree to
+        // quantization tolerance on the paper's test example (same seed ⇒
+        // same weights).
+        use crate::accel::{Engine, Weights};
+        use crate::config::AccelConfig;
+        let net = paper_test_example();
+        let seed = 21;
+        let wf = CpuWeights::random(&net, seed);
+        let wx = Weights::random(&net, seed);
+        let input = NdTensor::random(&net.input.as_slice(), 5, -1.0, 1.0);
+        let cpu_out = forward(&net, &wf, &input);
+        let fx_out = Engine::new(AccelConfig::paper_default())
+            .forward_fx(&net, &wx, &input)
+            .to_f32();
+        let diff = cpu_out.max_abs_diff(&fx_out);
+        assert!(diff < 5e-3, "fixed vs float diff {diff}");
+    }
+}

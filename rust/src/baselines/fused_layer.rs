@@ -1,0 +1,210 @@
+//! Baseline [3]: Alwani et al., "Fused-Layer CNN Accelerators" (MICRO 2016).
+//!
+//! Fused-layer keeps Zhang'15's tiled compute engine but evaluates a fused
+//! *pyramid* of early layers: a tile of the final fused output is traced back
+//! through the stack, and all intermediate values inside the pyramid stay on
+//! chip. Costs: traffic collapses to input + weights + output of the fused
+//! stack; compute gains a recomputation overhead on the pyramid's overlapping
+//! halos (their Table 3 reports single-digit-% for early VGG layers); BRAM
+//! grows to hold the pyramid's intermediate tiles.
+
+use crate::config::{AccelConfig, Layer, Network};
+use crate::fpga::bram::bram18_for;
+
+use super::optimized::{run as run_optimized, OptimizedConfig, OptimizedResult};
+
+/// Result of the fused-layer model.
+#[derive(Debug, Clone)]
+pub struct FusedLayerResult {
+    pub total_cycles: u64,
+    pub total_traffic_bytes: u64,
+    pub recompute_overhead: f64,
+    pub dsp: usize,
+    pub bram18: usize,
+}
+
+impl FusedLayerResult {
+    pub fn total_mb(&self) -> f64 {
+        self.total_traffic_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Recomputation factor of fusing the network into one pyramid with an
+/// output tile of `tile × tile`: each conv layer's halo of (K−1)/2 per side
+/// widens toward the input and overlapping halo regions between adjacent
+/// tiles are recomputed (their alternative caches them; the paper's VGG
+/// evaluation recomputes). Regions clip at image borders, so a single tile
+/// covering the whole output has zero overhead.
+pub fn pyramid_overhead(net: &Network, tile: usize) -> f64 {
+    let shapes = net.shapes();
+    let final_sh = shapes[net.layers.len()];
+    // Per-dimension tile intervals in final-output coordinates.
+    let mut ys: Vec<(i64, i64)> = (0..final_sh.h.div_ceil(tile))
+        .map(|t| ((t * tile) as i64, (((t + 1) * tile).min(final_sh.h)) as i64))
+        .collect();
+    let mut xs: Vec<(i64, i64)> = (0..final_sh.w.div_ceil(tile))
+        .map(|t| ((t * tile) as i64, (((t + 1) * tile).min(final_sh.w)) as i64))
+        .collect();
+
+    let mut extra_work = 0.0f64;
+    let mut total_work = 0.0f64;
+    for (i, layer) in net.layers.iter().enumerate().rev() {
+        match layer {
+            Layer::Conv { kernel, .. } => {
+                // Back-propagate intervals: a conv output range [a,b) needs
+                // input [a-pad, b-pad+k-1) → length grows by k-1; clip to
+                // the layer's input extent.
+                let in_sh = shapes[i];
+                let grow = (kernel - 1) as i64;
+                for (a, b) in ys.iter_mut() {
+                    *b += grow;
+                    *a = (*a).max(0);
+                    *b = (*b).min(in_sh.h as i64 + grow); // clipped at output level below
+                }
+                for (a, b) in xs.iter_mut() {
+                    *b += grow;
+                    *a = (*a).max(0);
+                    *b = (*b).min(in_sh.w as i64 + grow);
+                }
+                // Work of this conv layer: traced output positions per tile
+                // (the conv's own output extent is shapes[i+1]).
+                let out = shapes[i + 1];
+                let sum_y: i64 = ys.iter().map(|(a, b)| (b - a).clamp(0, out.h as i64)).sum();
+                let sum_x: i64 = xs.iter().map(|(a, b)| (b - a).clamp(0, out.w as i64)).sum();
+                let traced = (sum_y * sum_x) as f64;
+                let exact = (out.h * out.w) as f64;
+                let work_scale = (out.d * kernel * kernel * shapes[i].d) as f64;
+                extra_work += (traced - exact).max(0.0) * work_scale;
+                total_work += exact * work_scale;
+            }
+            Layer::MaxPool { stride, window, .. } => {
+                let s = *stride as i64;
+                let g = (*window as i64) - s;
+                for (a, b) in ys.iter_mut() {
+                    *a *= s;
+                    *b = *b * s + g;
+                }
+                for (a, b) in xs.iter_mut() {
+                    *a *= s;
+                    *b = *b * s + g;
+                }
+            }
+        }
+    }
+    if total_work == 0.0 {
+        0.0
+    } else {
+        extra_work / total_work
+    }
+}
+
+/// Run the fused-layer model: compute from the Zhang engine scaled by the
+/// pyramid recompute overhead; traffic = stack input + all weights + stack
+/// output; BRAM = engine tiles + pyramid intermediate storage.
+pub fn run(
+    cfg: &OptimizedConfig,
+    accel: &AccelConfig,
+    net: &Network,
+    tile: usize,
+) -> FusedLayerResult {
+    let base: OptimizedResult = run_optimized(cfg, accel, net);
+    let overhead = pyramid_overhead(net, tile);
+    let cycles = (base.total_cycles as f64 * (1.0 + overhead)).round() as u64;
+
+    let shapes = net.shapes();
+    let wb = cfg.word_bytes;
+    let in_bytes = (shapes[0].elems() * wb) as u64;
+    let out_bytes = (shapes[net.layers.len()].elems() * wb) as u64;
+    let weight_bytes: u64 = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| match l {
+            Layer::Conv { kernel, filters, .. } => {
+                ((kernel * kernel * shapes[i].d * filters + filters) * wb) as u64
+            }
+            _ => 0,
+        })
+        .sum();
+    let traffic = in_bytes + weight_bytes + out_bytes;
+
+    // Pyramid intermediate tiles: per layer, a (field × field × d) halo tile.
+    let mut bram = base.bram18;
+    let mut field = tile;
+    for (i, layer) in net.layers.iter().enumerate().rev() {
+        if let Layer::Conv { kernel, .. } = layer {
+            field += kernel - 1;
+            bram += bram18_for(field * field, shapes[i].d * wb * 8) / 4;
+        }
+    }
+
+    FusedLayerResult {
+        total_cycles: cycles,
+        total_traffic_bytes: traffic,
+        recompute_overhead: overhead,
+        dsp: base.dsp,
+        bram18: bram,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{vgg16_prefix, AccelConfig};
+
+    fn setup() -> (OptimizedConfig, AccelConfig, crate::config::Network) {
+        (
+            OptimizedConfig::zhang2015(),
+            AccelConfig::paper_default(),
+            vgg16_prefix(),
+        )
+    }
+
+    #[test]
+    fn traffic_collapses_vs_optimized() {
+        // Paper Table IV: Fused 3.64 MB vs Optimized 77.14 MB for VGG-7.
+        let (cfg, accel, net) = setup();
+        let fused = run(&cfg, &accel, &net, 32);
+        let opt = run_optimized(&cfg, &accel, &net);
+        assert!(
+            fused.total_mb() < opt.total_mb() / 5.0,
+            "fused {} MB vs optimized {} MB",
+            fused.total_mb(),
+            opt.total_mb()
+        );
+        // input 0.57 + weights 2.2 + output 3.06 ≈ 5.9 MB (the paper's 3.64
+        // excludes the final output write; same band).
+        assert!((3.0..8.0).contains(&fused.total_mb()));
+    }
+
+    #[test]
+    fn cycles_in_table4_band() {
+        // Paper Table IV: Fused = 11,655k cycles (≈ 6% over Optimized).
+        let (cfg, accel, net) = setup();
+        let fused = run(&cfg, &accel, &net, 32);
+        let opt = run_optimized(&cfg, &accel, &net);
+        assert!(fused.total_cycles >= opt.total_cycles);
+        let ratio = fused.total_cycles as f64 / opt.total_cycles as f64;
+        assert!(
+            ratio < 1.35,
+            "recompute overhead {ratio} too large for tile=32"
+        );
+    }
+
+    #[test]
+    fn overhead_shrinks_with_tile_size() {
+        let (_, _, net) = setup();
+        let small = pyramid_overhead(&net, 8);
+        let mid = pyramid_overhead(&net, 32);
+        let large = pyramid_overhead(&net, 112);
+        assert!(small > mid && mid > large, "{small} {mid} {large}");
+        assert!(large < 0.2);
+    }
+
+    #[test]
+    fn bram_grows_vs_optimized() {
+        let (cfg, accel, net) = setup();
+        let fused = run(&cfg, &accel, &net, 32);
+        assert!(fused.bram18 > cfg.bram18_budget);
+    }
+}

@@ -1,0 +1,6 @@
+//! Baseline systems the paper compares against: the Zhang FPGA'15 tiled
+//! accelerator ("Optimized"), the Alwani MICRO'16 fused-layer accelerator,
+//! and a measured CPU software reference (im2col + blocked GEMM).
+pub mod cpu_ref;
+pub mod fused_layer;
+pub mod optimized;

@@ -1,0 +1,316 @@
+//! Baseline [2]: Zhang et al., "Optimizing FPGA-based Accelerator Design for
+//! Deep Convolutional Neural Networks" (FPGA 2015) — the paper's "Optimized"
+//! comparison column in Table IV.
+//!
+//! Their accelerator processes the network layer by layer with a tiled
+//! compute engine (unroll factors ⟨Tm, Tn⟩ over output/input feature maps,
+//! tile sizes ⟨Tr, Tc⟩ over rows/cols), all intermediate volumes spilled to
+//! DDR, and per-layer tiling chosen by a roofline search. We implement that
+//! cost model faithfully: compute cycles, external traffic (with their
+//! local-memory-promotion trip counts), BRAM for double-buffered tiles, and
+//! DSPs for the ⟨Tm, Tn⟩ MAC array.
+
+use crate::config::{AccelConfig, Layer, Network};
+use crate::fpga::bram::bram18_for;
+
+/// One layer's chosen tiling and its costs.
+#[derive(Debug, Clone)]
+pub struct LayerTiling {
+    pub name: String,
+    pub tm: usize,
+    pub tn: usize,
+    pub tr: usize,
+    pub tc: usize,
+    pub cycles: u64,
+    pub traffic_bytes: u64,
+}
+
+/// Whole-network result of the baseline model.
+#[derive(Debug, Clone)]
+pub struct OptimizedResult {
+    pub per_layer: Vec<LayerTiling>,
+    pub total_cycles: u64,
+    pub total_traffic_bytes: u64,
+    pub dsp: usize,
+    pub bram18: usize,
+}
+
+impl OptimizedResult {
+    pub fn total_mb(&self) -> f64 {
+        self.total_traffic_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Configuration of the baseline engine.
+#[derive(Debug, Clone)]
+pub struct OptimizedConfig {
+    /// DSPs available to the MAC array. Zhang'15 used 32-bit float MACs at
+    /// 5 DSPs each on the same XC7V690T (their reported 2880 DSP usage).
+    pub dsp_budget: usize,
+    pub dsps_per_mac: usize,
+    /// BRAM18 budget for tile buffers (double-buffered).
+    pub bram18_budget: usize,
+    pub word_bytes: usize,
+}
+
+impl OptimizedConfig {
+    pub fn zhang2015() -> OptimizedConfig {
+        OptimizedConfig {
+            dsp_budget: 2880,
+            dsps_per_mac: 5,
+            bram18_budget: 2 * 2085, // their Table: 2085 BRAM36
+            word_bytes: 4,
+        }
+    }
+}
+
+/// Evaluate one candidate tiling for a conv layer; returns (cycles, traffic,
+/// bram18) or None if the tile buffers do not fit.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_tiling(
+    cfg: &OptimizedConfig,
+    m: usize, // output channels
+    n: usize, // input channels
+    r: usize, // output rows
+    c: usize, // output cols
+    k: usize, // kernel
+    tm: usize,
+    tn: usize,
+    tr: usize,
+    tc: usize,
+) -> Option<(u64, u64, usize)> {
+    let (tm, tn, tr, tc) = (tm.min(m), tn.min(n), tr.min(r), tc.min(c));
+    // On-chip tile buffers (double-buffered, as in the paper):
+    // input  : Tn × (Tr+K−1) × (Tc+K−1)
+    // weights: Tm × Tn × K × K
+    // output : Tm × Tr × Tc
+    let wbits = cfg.word_bytes * 8;
+    let in_words = (tr + k - 1) * (tc + k - 1);
+    let bram = 2
+        * (tn * bram18_for(in_words, wbits)
+            + tm * tn * bram18_for(k * k, wbits)
+            + tm * bram18_for(tr * tc, wbits));
+    if bram > cfg.bram18_budget {
+        return None;
+    }
+
+    let trips_m = m.div_ceil(tm) as u64;
+    let trips_n = n.div_ceil(tn) as u64;
+    let trips_r = r.div_ceil(tr) as u64;
+    let trips_c = c.div_ceil(tc) as u64;
+
+    // Compute: the ⟨Tm,Tn⟩ array performs Tm·Tn MACs/cycle over the tile's
+    // Tr·Tc·K·K positions (their eq. for execution cycles).
+    let cycles = trips_m * trips_n * trips_r * trips_c * (tr * tc * k * k) as u64;
+
+    // Traffic (local memory promotion, their §4.2): with output stationary
+    // across the n loop, outputs move once; inputs and weights move once per
+    // (m, n, r, c) trip.
+    let b_in = trips_m * trips_n * trips_r * trips_c * (tn * (tr + k - 1) * (tc + k - 1)) as u64;
+    let b_w = trips_m * trips_n * trips_r * trips_c * (tm * tn * k * k) as u64;
+    // Output written once (the next layer's read-back is counted as *its*
+    // input traffic).
+    let b_out = (m * r * c) as u64;
+    let traffic = (b_in + b_w + b_out) * cfg.word_bytes as u64;
+    Some((cycles, traffic, bram))
+}
+
+/// Roofline tiling search for one conv layer: minimize cycles, tie-break on
+/// traffic (their "lowest bandwidth among highest-throughput designs").
+fn search_layer(
+    cfg: &OptimizedConfig,
+    name: &str,
+    m: usize,
+    n: usize,
+    r: usize,
+    c: usize,
+    k: usize,
+) -> LayerTiling {
+    let max_macs = cfg.dsp_budget / cfg.dsps_per_mac;
+    // Pass 1: best cycle count. Pass 2 (below): among tilings within 5% of
+    // it, minimum traffic — Zhang's "highest throughput, then lowest
+    // bandwidth requirement" roofline selection.
+    let mut candidates: Vec<(u64, u64, LayerTiling)> = Vec::new();
+    // Tm/Tn over divisor-ish candidates; Tr/Tc over a coarse grid (the cost
+    // model is smooth in Tr/Tc — full enumeration is unnecessary).
+    let tm_cands: Vec<usize> = (1..=m.min(max_macs)).filter(|t| m % t == 0 || *t == m).collect();
+    for &tm in &tm_cands {
+        let tn_max = (max_macs / tm).min(n);
+        if tn_max == 0 {
+            continue;
+        }
+        let tn_cands: Vec<usize> =
+            (1..=tn_max).filter(|t| n % t == 0 || *t == tn_max).collect();
+        for &tn in &tn_cands {
+            for &tr in &[4usize, 8, 14, 16, 28, 32, 56, 64, 112, 224] {
+                if tr > r {
+                    continue;
+                }
+                for &tc in &[14usize, 28, 32, 56, 64, 112, 224] {
+                    if tc > c {
+                        continue;
+                    }
+                    if let Some((cycles, traffic, _)) =
+                        evaluate_tiling(cfg, m, n, r, c, k, tm, tn, tr, tc)
+                    {
+                        candidates.push((
+                            cycles,
+                            traffic,
+                            LayerTiling {
+                                name: name.to_string(),
+                                tm,
+                                tn,
+                                tr,
+                                tc,
+                                cycles,
+                                traffic_bytes: traffic,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let best_cycles = candidates
+        .iter()
+        .map(|(c, _, _)| *c)
+        .min()
+        .expect("no feasible tiling");
+    let threshold = best_cycles + best_cycles / 20; // within 5%
+    candidates
+        .into_iter()
+        .filter(|(c, _, _)| *c <= threshold)
+        .min_by_key(|(_, t, _)| *t)
+        .map(|(_, _, tiling)| tiling)
+        .unwrap()
+}
+
+/// Run the Zhang'15 model over a network.
+pub fn run(cfg: &OptimizedConfig, accel: &AccelConfig, net: &Network) -> OptimizedResult {
+    let shapes = net.shapes();
+    let mut per_layer = Vec::new();
+    let mut total_cycles = 0u64;
+    let mut traffic = 0u64;
+    let mut max_tm_tn = (1usize, 1usize);
+    for (i, layer) in net.layers.iter().enumerate() {
+        match layer {
+            Layer::Conv { name, kernel, filters, .. } => {
+                let in_sh = shapes[i];
+                let out_sh = shapes[i + 1];
+                let t = search_layer(
+                    cfg,
+                    name,
+                    *filters,
+                    in_sh.d,
+                    out_sh.h,
+                    out_sh.w,
+                    *kernel,
+                );
+                total_cycles += t.cycles;
+                traffic += t.traffic_bytes;
+                if t.tm * t.tn > max_tm_tn.0 * max_tm_tn.1 {
+                    max_tm_tn = (t.tm, t.tn);
+                }
+                per_layer.push(t);
+            }
+            Layer::MaxPool { name, window, stride } => {
+                // Pooling on their engine: one pass over the input volume,
+                // one MAC-array lane per comparison; traffic = in + out.
+                let in_sh = shapes[i];
+                let out_sh = shapes[i + 1];
+                let cycles = (out_sh.elems() * window * window) as u64 / 16;
+                let bytes =
+                    ((in_sh.elems() + out_sh.elems()) * cfg.word_bytes) as u64;
+                total_cycles += cycles;
+                traffic += bytes;
+                per_layer.push(LayerTiling {
+                    name: name.clone(),
+                    tm: 1,
+                    tn: 1,
+                    tr: *stride,
+                    tc: *stride,
+                    cycles,
+                    traffic_bytes: bytes,
+                });
+            }
+        }
+    }
+    // The first layer's input arrives once; last output leaves once — both
+    // already counted in the per-layer traffic above (b_out counts write +
+    // read-back; the final layer's read-back never happens, subtract it).
+    if let Some(last) = net.layers.len().checked_sub(1) {
+        let out_sh = shapes[last + 1];
+        traffic -= (out_sh.elems() * cfg.word_bytes) as u64;
+    }
+    let _ = accel;
+    OptimizedResult {
+        per_layer,
+        total_cycles,
+        total_traffic_bytes: traffic,
+        dsp: max_tm_tn.0 * max_tm_tn.1 * cfg.dsps_per_mac,
+        bram18: cfg.bram18_budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{vgg16_prefix, AccelConfig};
+
+    #[test]
+    fn vgg7_cycles_in_table4_band() {
+        // Paper Table IV: "Optimized" = 10,951k cycles at 100 MHz for the
+        // first 7 VGG-16 layers. Our re-derivation of their roofline model
+        // must land in the same band (their exact tile choices differ).
+        let r = run(
+            &OptimizedConfig::zhang2015(),
+            &AccelConfig::paper_default(),
+            &vgg16_prefix(),
+        );
+        let kcycles = r.total_cycles / 1000;
+        assert!(
+            (8_000..16_000).contains(&kcycles),
+            "got {kcycles}k cycles, paper: 10,951k"
+        );
+    }
+
+    #[test]
+    fn vgg7_traffic_tens_of_mb() {
+        // Paper Table IV: 77.14 MB per input for [2].
+        let r = run(
+            &OptimizedConfig::zhang2015(),
+            &AccelConfig::paper_default(),
+            &vgg16_prefix(),
+        );
+        let mb = r.total_mb();
+        assert!((30.0..120.0).contains(&mb), "got {mb} MB, paper: 77.14");
+    }
+
+    #[test]
+    fn dsp_within_budget() {
+        let cfg = OptimizedConfig::zhang2015();
+        let r = run(&cfg, &AccelConfig::paper_default(), &vgg16_prefix());
+        assert!(r.dsp <= cfg.dsp_budget);
+        assert!(r.dsp >= cfg.dsp_budget / 2, "search should use the array");
+    }
+
+    #[test]
+    fn compute_bound_lower_limit() {
+        // Cycles can never beat total MACs / MAC-array size.
+        let cfg = OptimizedConfig::zhang2015();
+        let net = vgg16_prefix();
+        let r = run(&cfg, &AccelConfig::paper_default(), &net);
+        let min_cycles = net.total_macs() / (cfg.dsp_budget / cfg.dsps_per_mac) as u64;
+        assert!(r.total_cycles >= min_cycles);
+    }
+
+    #[test]
+    fn tilings_are_feasible() {
+        let cfg = OptimizedConfig::zhang2015();
+        let r = run(&cfg, &AccelConfig::paper_default(), &vgg16_prefix());
+        for t in &r.per_layer {
+            assert!(t.tm * t.tn * cfg.dsps_per_mac <= cfg.dsp_budget, "{}", t.name);
+            assert!(t.cycles > 0);
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Configuration: network topology specs and accelerator platform knobs.
+pub mod accel;
+pub mod network;
+
+pub use accel::{AccelConfig, Platform};
+pub use network::{custom_4conv, paper_test_example, tiny_vgg, vgg16_full, vgg16_prefix, Layer, Network, VolShape};

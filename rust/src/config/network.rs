@@ -1,0 +1,555 @@
+//! Network topology specification: layers, shape inference, builtin nets.
+//!
+//! The paper evaluates on (a) the first seven layers of VGG-16 (conv1_1,
+//! conv1_2, pool1, conv2_1, conv2_2, pool2, conv3_1) and (b) a custom network
+//! of four consecutive 64-filter 3×3 convolutions (Table III). Both are
+//! provided as builders here; arbitrary VGG-like nets load from JSON.
+
+use crate::util::json::{parse, Json};
+
+/// One layer of a VGG-like network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layer {
+    /// 2-D convolution over an `[h, w, d]` volume with `k` filters of
+    /// `kernel × kernel × d`, given stride/padding, optional fused ReLU.
+    Conv {
+        name: String,
+        kernel: usize,
+        filters: usize,
+        stride: usize,
+        padding: usize,
+        relu: bool,
+    },
+    /// Max-pool with `window × window` and stride.
+    MaxPool {
+        name: String,
+        window: usize,
+        stride: usize,
+    },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. } => name,
+            Layer::MaxPool { name, .. } => name,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Layer::Conv { .. })
+    }
+
+    pub fn conv3x3(name: &str, filters: usize) -> Layer {
+        Layer::Conv {
+            name: name.to_string(),
+            kernel: 3,
+            filters,
+            stride: 1,
+            padding: 1,
+            relu: true,
+        }
+    }
+
+    pub fn pool2x2(name: &str) -> Layer {
+        Layer::MaxPool {
+            name: name.to_string(),
+            window: 2,
+            stride: 2,
+        }
+    }
+}
+
+/// Shape of a feature volume `[h, w, d]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VolShape {
+    pub h: usize,
+    pub w: usize,
+    pub d: usize,
+}
+
+impl VolShape {
+    pub fn new(h: usize, w: usize, d: usize) -> VolShape {
+        VolShape { h, w, d }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.d
+    }
+
+    pub fn as_slice(&self) -> [usize; 3] {
+        [self.h, self.w, self.d]
+    }
+}
+
+/// A network: input shape + ordered layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub input: VolShape,
+    pub layers: Vec<Layer>,
+}
+
+/// Error type for spec validation / JSON loading.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecError(pub String);
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "network spec error: {}", self.0)
+    }
+}
+impl std::error::Error for SpecError {}
+
+impl Network {
+    /// Output shape of layer `i` (and input shape of layer `i+1`).
+    /// `shape_after(layers.len()-1)` is the network output.
+    pub fn shape_after(&self, i: usize) -> VolShape {
+        let mut s = self.input;
+        for layer in &self.layers[..=i] {
+            s = layer_out_shape(layer, s);
+        }
+        s
+    }
+
+    /// Input shape seen by layer `i`.
+    pub fn shape_before(&self, i: usize) -> VolShape {
+        if i == 0 {
+            self.input
+        } else {
+            self.shape_after(i - 1)
+        }
+    }
+
+    /// All shapes: `shapes()[0]` = input, `shapes()[i+1]` = after layer i.
+    pub fn shapes(&self) -> Vec<VolShape> {
+        let mut out = vec![self.input];
+        let mut s = self.input;
+        for layer in &self.layers {
+            s = layer_out_shape(layer, s);
+            out.push(s);
+        }
+        out
+    }
+
+    /// Total multiply-accumulate operations of the network (for roofline math).
+    pub fn total_macs(&self) -> u64 {
+        let shapes = self.shapes();
+        let mut macs = 0u64;
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Layer::Conv { kernel, filters, .. } = layer {
+                let out = shapes[i + 1];
+                let d_in = shapes[i].d;
+                macs += (out.h * out.w * filters * kernel * kernel * d_in) as u64;
+            }
+        }
+        macs
+    }
+
+    /// Number of weight values (conv filters; the paper's nets have no FC).
+    pub fn total_weights(&self) -> u64 {
+        let shapes = self.shapes();
+        let mut n = 0u64;
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Layer::Conv { kernel, filters, .. } = layer {
+                n += (kernel * kernel * shapes[i].d * filters) as u64 + *filters as u64;
+                // +filters for biases
+            }
+        }
+        n
+    }
+
+    /// Validate structural invariants (positive dims, pool divisibility, etc.).
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.layers.is_empty() {
+            return Err(SpecError("network has no layers".into()));
+        }
+        if self.input.h == 0 || self.input.w == 0 || self.input.d == 0 {
+            return Err(SpecError("input shape has zero extent".into()));
+        }
+        let mut s = self.input;
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv {
+                    name,
+                    kernel,
+                    filters,
+                    stride,
+                    padding,
+                    ..
+                } => {
+                    if *kernel == 0 || *filters == 0 || *stride == 0 {
+                        return Err(SpecError(format!("{name}: zero kernel/filters/stride")));
+                    }
+                    if s.h + 2 * padding < *kernel || s.w + 2 * padding < *kernel {
+                        return Err(SpecError(format!(
+                            "{name}: kernel {kernel} exceeds padded input {}x{}",
+                            s.h + 2 * padding,
+                            s.w + 2 * padding
+                        )));
+                    }
+                }
+                Layer::MaxPool { name, window, stride } => {
+                    if *window == 0 || *stride == 0 {
+                        return Err(SpecError(format!("{name}: zero window/stride")));
+                    }
+                    if s.h < *window || s.w < *window {
+                        return Err(SpecError(format!(
+                            "{name}: pool window {window} exceeds input {}x{}",
+                            s.h, s.w
+                        )));
+                    }
+                }
+            }
+            s = layer_out_shape(layer, s);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // JSON I/O
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut layers = Json::Arr(vec![]);
+        for l in &self.layers {
+            let j = match l {
+                Layer::Conv {
+                    name,
+                    kernel,
+                    filters,
+                    stride,
+                    padding,
+                    relu,
+                } => Json::obj()
+                    .set("type", "conv")
+                    .set("name", name.as_str())
+                    .set("kernel", *kernel)
+                    .set("filters", *filters)
+                    .set("stride", *stride)
+                    .set("padding", *padding)
+                    .set("relu", *relu),
+                Layer::MaxPool { name, window, stride } => Json::obj()
+                    .set("type", "maxpool")
+                    .set("name", name.as_str())
+                    .set("window", *window)
+                    .set("stride", *stride),
+            };
+            layers = layers.push(j);
+        }
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set(
+                "input",
+                Json::obj()
+                    .set("h", self.input.h)
+                    .set("w", self.input.w)
+                    .set("d", self.input.d),
+            )
+            .set("layers", layers)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Network, SpecError> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| SpecError("missing 'name'".into()))?
+            .to_string();
+        let input = VolShape::new(
+            j.get("input").get("h").as_usize().ok_or_else(|| SpecError("input.h".into()))?,
+            j.get("input").get("w").as_usize().ok_or_else(|| SpecError("input.w".into()))?,
+            j.get("input").get("d").as_usize().ok_or_else(|| SpecError("input.d".into()))?,
+        );
+        let mut layers = Vec::new();
+        for lj in j
+            .get("layers")
+            .as_arr()
+            .ok_or_else(|| SpecError("missing 'layers'".into()))?
+        {
+            let lname = lj
+                .get("name")
+                .as_str()
+                .ok_or_else(|| SpecError("layer missing 'name'".into()))?
+                .to_string();
+            match lj.get("type").as_str() {
+                Some("conv") => layers.push(Layer::Conv {
+                    name: lname,
+                    kernel: lj.get("kernel").as_usize().ok_or_else(|| SpecError("conv.kernel".into()))?,
+                    filters: lj.get("filters").as_usize().ok_or_else(|| SpecError("conv.filters".into()))?,
+                    stride: lj.get("stride").as_usize().unwrap_or(1),
+                    padding: lj.get("padding").as_usize().unwrap_or(0),
+                    relu: lj.get("relu").as_bool().unwrap_or(true),
+                }),
+                Some("maxpool") => layers.push(Layer::MaxPool {
+                    name: lname,
+                    window: lj.get("window").as_usize().ok_or_else(|| SpecError("maxpool.window".into()))?,
+                    stride: lj.get("stride").as_usize().ok_or_else(|| SpecError("maxpool.stride".into()))?,
+                }),
+                other => {
+                    return Err(SpecError(format!("unknown layer type {:?}", other)));
+                }
+            }
+        }
+        let net = Network { name, input, layers };
+        net.validate()?;
+        Ok(net)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Network, SpecError> {
+        let j = parse(s).map_err(|e| SpecError(format!("json: {e}")))?;
+        Network::from_json(&j)
+    }
+}
+
+fn conv_out(extent: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    (extent + 2 * padding - kernel) / stride + 1
+}
+
+fn layer_out_shape(layer: &Layer, s: VolShape) -> VolShape {
+    match layer {
+        Layer::Conv {
+            kernel,
+            filters,
+            stride,
+            padding,
+            ..
+        } => VolShape::new(
+            conv_out(s.h, *kernel, *stride, *padding),
+            conv_out(s.w, *kernel, *stride, *padding),
+            *filters,
+        ),
+        Layer::MaxPool { window, stride, .. } => {
+            VolShape::new((s.h - window) / stride + 1, (s.w - window) / stride + 1, s.d)
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Builtin networks
+// ----------------------------------------------------------------------
+
+/// First seven layers of VGG-16 (5 conv + 2 pool) — the paper's main workload
+/// (Tables I, II, IV; Figs 6, 7).
+pub fn vgg16_prefix() -> Network {
+    Network {
+        name: "vgg16-prefix7".to_string(),
+        input: VolShape::new(224, 224, 3),
+        layers: vec![
+            Layer::conv3x3("conv1_1", 64),
+            Layer::conv3x3("conv1_2", 64),
+            Layer::pool2x2("pool1"),
+            Layer::conv3x3("conv2_1", 128),
+            Layer::conv3x3("conv2_2", 128),
+            Layer::pool2x2("pool2"),
+            Layer::conv3x3("conv3_1", 256),
+        ],
+    }
+}
+
+/// All thirteen conv layers (+ five pools) of VGG-16 — the paper's §V
+/// later-layers discussion: depths reach 512, forcing iterative
+/// decomposition, and the fusion-vs-depth-parallelism trade-off flips.
+pub fn vgg16_full() -> Network {
+    Network {
+        name: "vgg16-full13".to_string(),
+        input: VolShape::new(224, 224, 3),
+        layers: vec![
+            Layer::conv3x3("conv1_1", 64),
+            Layer::conv3x3("conv1_2", 64),
+            Layer::pool2x2("pool1"),
+            Layer::conv3x3("conv2_1", 128),
+            Layer::conv3x3("conv2_2", 128),
+            Layer::pool2x2("pool2"),
+            Layer::conv3x3("conv3_1", 256),
+            Layer::conv3x3("conv3_2", 256),
+            Layer::conv3x3("conv3_3", 256),
+            Layer::pool2x2("pool3"),
+            Layer::conv3x3("conv4_1", 512),
+            Layer::conv3x3("conv4_2", 512),
+            Layer::conv3x3("conv4_3", 512),
+            Layer::pool2x2("pool4"),
+            Layer::conv3x3("conv5_1", 512),
+            Layer::conv3x3("conv5_2", 512),
+            Layer::conv3x3("conv5_3", 512),
+            Layer::pool2x2("pool5"),
+        ],
+    }
+}
+
+/// The paper's custom benchmark: four consecutive 64-filter 3×3 convolutions
+/// (Table III) at 224×224×3 input.
+pub fn custom_4conv() -> Network {
+    Network {
+        name: "custom-4conv64".to_string(),
+        input: VolShape::new(224, 224, 3),
+        layers: vec![
+            Layer::conv3x3("conv_1", 64),
+            Layer::conv3x3("conv_2", 64),
+            Layer::conv3x3("conv_3", 64),
+            Layer::conv3x3("conv_4", 64),
+        ],
+    }
+}
+
+/// The paper's running "test example" (§III): 5×5×3 input, two fused 3-filter
+/// convolutions, then 2×2/2 pooling. Used heavily by unit tests.
+pub fn paper_test_example() -> Network {
+    Network {
+        name: "paper-example".to_string(),
+        input: VolShape::new(5, 5, 3),
+        layers: vec![
+            Layer::conv3x3("conv_a", 3),
+            Layer::conv3x3("conv_b", 3),
+            Layer::pool2x2("pool"),
+        ],
+    }
+}
+
+/// A scaled-down VGG-like net for fast integration tests and the e2e example:
+/// same 7-layer structure as `vgg16_prefix` at 32×32 input with thin depths.
+pub fn tiny_vgg() -> Network {
+    Network {
+        name: "tiny-vgg".to_string(),
+        input: VolShape::new(32, 32, 3),
+        layers: vec![
+            Layer::conv3x3("conv1_1", 8),
+            Layer::conv3x3("conv1_2", 8),
+            Layer::pool2x2("pool1"),
+            Layer::conv3x3("conv2_1", 16),
+            Layer::conv3x3("conv2_2", 16),
+            Layer::pool2x2("pool2"),
+            Layer::conv3x3("conv3_1", 32),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg_prefix_shapes() {
+        let net = vgg16_prefix();
+        net.validate().unwrap();
+        let shapes = net.shapes();
+        assert_eq!(shapes[0], VolShape::new(224, 224, 3));
+        assert_eq!(shapes[1], VolShape::new(224, 224, 64)); // conv1_1
+        assert_eq!(shapes[2], VolShape::new(224, 224, 64)); // conv1_2
+        assert_eq!(shapes[3], VolShape::new(112, 112, 64)); // pool1
+        assert_eq!(shapes[4], VolShape::new(112, 112, 128)); // conv2_1
+        assert_eq!(shapes[5], VolShape::new(112, 112, 128)); // conv2_2
+        assert_eq!(shapes[6], VolShape::new(56, 56, 128)); // pool2
+        assert_eq!(shapes[7], VolShape::new(56, 56, 256)); // conv3_1
+    }
+
+    #[test]
+    fn paper_example_shapes() {
+        let net = paper_test_example();
+        let shapes = net.shapes();
+        assert_eq!(shapes[1], VolShape::new(5, 5, 3));
+        assert_eq!(shapes[2], VolShape::new(5, 5, 3));
+        assert_eq!(shapes[3], VolShape::new(2, 2, 3));
+    }
+
+    #[test]
+    fn macs_vgg_conv1_1() {
+        // conv1_1: 224*224*64 outputs × 3*3*3 macs = 86,704,128.
+        let net = vgg16_prefix();
+        let only_first = Network {
+            name: "c11".into(),
+            input: net.input,
+            layers: vec![net.layers[0].clone()],
+        };
+        assert_eq!(only_first.total_macs(), 224 * 224 * 64 * 27);
+    }
+
+    #[test]
+    fn weights_count() {
+        let net = custom_4conv();
+        // layer1: 3*3*3*64 + 64; layers 2-4: 3*3*64*64 + 64 each.
+        let expect = (3 * 3 * 3 * 64 + 64) + 3 * (3 * 3 * 64 * 64 + 64);
+        assert_eq!(net.total_weights(), expect as u64);
+    }
+
+    #[test]
+    fn shape_before_after_consistency() {
+        let net = vgg16_prefix();
+        for i in 0..net.layers.len() {
+            if i > 0 {
+                assert_eq!(net.shape_before(i), net.shape_after(i - 1));
+            }
+        }
+        assert_eq!(net.shape_before(0), net.input);
+    }
+
+    #[test]
+    fn vgg_full_shapes() {
+        let net = vgg16_full();
+        net.validate().unwrap();
+        let shapes = net.shapes();
+        assert_eq!(shapes.last().unwrap(), &VolShape::new(7, 7, 512));
+        // 13 convs, 5 pools.
+        assert_eq!(net.layers.iter().filter(|l| l.is_conv()).count(), 13);
+        assert_eq!(net.layers.len(), 18);
+        // VGG-16's conv MACs ≈ 15.3 GMACs.
+        let gmacs = net.total_macs() as f64 / 1e9;
+        assert!((15.0..15.8).contains(&gmacs), "got {gmacs}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for net in [
+            vgg16_prefix(),
+            vgg16_full(),
+            custom_4conv(),
+            paper_test_example(),
+            tiny_vgg(),
+        ] {
+            let s = net.to_json().to_string_pretty();
+            let back = Network::from_json_str(&s).unwrap();
+            assert_eq!(net, back);
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_specs() {
+        let mut net = vgg16_prefix();
+        net.layers.clear();
+        assert!(net.validate().is_err());
+
+        let bad = Network {
+            name: "bad".into(),
+            input: VolShape::new(1, 1, 3),
+            layers: vec![Layer::pool2x2("p")],
+        };
+        assert!(bad.validate().is_err());
+
+        let bad2 = Network {
+            name: "bad2".into(),
+            input: VolShape::new(8, 8, 3),
+            layers: vec![Layer::Conv {
+                name: "c".into(),
+                kernel: 0,
+                filters: 4,
+                stride: 1,
+                padding: 0,
+                relu: true,
+            }],
+        };
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_type() {
+        let s = r#"{"name":"x","input":{"h":8,"w":8,"d":3},
+                    "layers":[{"type":"avgpool","name":"p","window":2,"stride":2}]}"#;
+        assert!(Network::from_json_str(s).is_err());
+    }
+
+    #[test]
+    fn conv_output_formula() {
+        assert_eq!(conv_out(224, 3, 1, 1), 224); // same-conv
+        assert_eq!(conv_out(5, 3, 1, 0), 3); // valid conv
+        assert_eq!(conv_out(224, 3, 2, 1), 112); // strided
+    }
+}

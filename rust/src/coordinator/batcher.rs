@@ -1,0 +1,203 @@
+//! Dynamic batcher: groups incoming requests into batches bounded by size
+//! and queueing delay (the vLLM-router pattern scaled to this system).
+//!
+//! Pure decision logic — no threads, no clocks — so the policy is exhaustively
+//! testable; the server drives it with real time.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A queued item with its arrival time.
+#[derive(Debug)]
+struct Pending<T> {
+    item: T,
+    arrived: Instant,
+}
+
+/// The batcher: push items, poll for flushes.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    policy: BatchPolicy,
+    queue: Vec<Pending<T>>,
+    pub batches_emitted: u64,
+    pub items_processed: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        DynamicBatcher {
+            policy,
+            queue: Vec::new(),
+            batches_emitted: 0,
+            items_processed: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue an item at time `now`; returns a full batch if the size bound
+    /// tripped.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        self.queue.push(Pending { item, arrived: now });
+        if self.queue.len() >= self.policy.max_batch {
+            Some(self.flush())
+        } else {
+            None
+        }
+    }
+
+    /// Time-based poll: flush if the oldest item exceeded max_wait.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        let oldest = self.queue.first()?.arrived;
+        if now.duration_since(oldest) >= self.policy.max_wait {
+            Some(self.flush())
+        } else {
+            None
+        }
+    }
+
+    /// Deadline the server should wake at to honor max_wait (None if idle).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.first().map(|p| p.arrived + self.policy.max_wait)
+    }
+
+    /// Unconditional flush (server shutdown).
+    pub fn flush(&mut self) -> Vec<T> {
+        self.batches_emitted += 1;
+        self.items_processed += self.queue.len() as u64;
+        self.queue.drain(..).map(|p| p.item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn size_bound_flushes() {
+        let mut b = DynamicBatcher::new(policy(3, 1000));
+        let t = Instant::now();
+        assert!(b.push(1, t).is_none());
+        assert!(b.push(2, t).is_none());
+        let batch = b.push(3, t).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn time_bound_flushes() {
+        let mut b = DynamicBatcher::new(policy(100, 10));
+        let t0 = Instant::now();
+        b.push("a", t0);
+        b.push("b", t0 + Duration::from_millis(4));
+        assert!(b.poll(t0 + Duration::from_millis(9)).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec!["a", "b"]);
+        assert!(b.poll(t0 + Duration::from_secs(1)).is_none(), "empty queue");
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(policy(10, 50));
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0 + Duration::from_millis(30));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn order_preserved_across_flushes() {
+        let mut b = DynamicBatcher::new(policy(2, 1000));
+        let t = Instant::now();
+        let mut out = Vec::new();
+        for i in 0..7 {
+            if let Some(batch) = b.push(i, t) {
+                out.extend(batch);
+            }
+        }
+        out.extend(b.flush());
+        assert_eq!(out, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn property_no_loss_no_duplication_order_kept() {
+        prop::check_default(
+            "batcher-conservation",
+            |r: &mut Rng| {
+                let n = r.range_usize(0, 50);
+                let max_batch = r.range_usize(1, 10);
+                // per-item: 0 = push, 1 = push+poll-later
+                let polls: Vec<bool> = (0..n).map(|_| r.chance(0.3)).collect();
+                (n, max_batch, polls)
+            },
+            |(n, max_batch, polls)| {
+                let mut b = DynamicBatcher::new(policy(*max_batch, 1));
+                let t0 = Instant::now();
+                let mut out = Vec::new();
+                for i in 0..*n {
+                    if let Some(batch) = b.push(i, t0) {
+                        out.extend(batch);
+                    }
+                    if polls[i] {
+                        // far-future poll forces a time flush
+                        if let Some(batch) = b.poll(t0 + Duration::from_secs(10)) {
+                            out.extend(batch);
+                        }
+                    }
+                }
+                out.extend(b.flush());
+                if out == (0..*n).collect::<Vec<_>>() {
+                    Ok(())
+                } else {
+                    Err(format!("got {out:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn counters() {
+        let mut b = DynamicBatcher::new(policy(2, 1000));
+        let t = Instant::now();
+        b.push(1, t);
+        b.push(2, t);
+        b.push(3, t);
+        b.flush();
+        assert_eq!(b.batches_emitted, 2);
+        assert_eq!(b.items_processed, 3);
+    }
+}

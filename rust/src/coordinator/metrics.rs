@@ -1,0 +1,134 @@
+//! Serving metrics: counters + latency histogram, exported as JSON.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile_sorted, Summary};
+
+/// Rolling metrics for the serving path.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub errors: u64,
+    /// Per-request end-to-end latencies (seconds). Bounded ring.
+    latencies: Vec<f64>,
+    /// Batch sizes observed.
+    batch_sizes: Vec<usize>,
+    cap: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            cap: 4096,
+            ..Default::default()
+        }
+    }
+
+    pub fn record_request(&mut self) {
+        self.requests += 1;
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        if self.batch_sizes.len() >= self.cap {
+            self.batch_sizes.remove(0);
+        }
+        self.batch_sizes.push(size);
+    }
+
+    pub fn record_response(&mut self, latency: Duration) {
+        self.responses += 1;
+        if self.latencies.len() >= self.cap {
+            self.latencies.remove(0);
+        }
+        self.latencies.push(latency.as_secs_f64());
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies))
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("requests", self.requests)
+            .set("responses", self.responses)
+            .set("batches", self.batches)
+            .set("errors", self.errors)
+            .set("mean_batch_size", self.mean_batch_size());
+        if !self.latencies.is_empty() {
+            let mut xs = self.latencies.clone();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            j = j
+                .set("latency_p50_ms", percentile_sorted(&xs, 50.0) * 1e3)
+                .set("latency_p95_ms", percentile_sorted(&xs, 95.0) * 1e3)
+                .set("latency_max_ms", xs[xs.len() - 1] * 1e3);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_summary() {
+        let mut m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2);
+        m.record_response(Duration::from_millis(10));
+        m.record_response(Duration::from_millis(20));
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.responses, 2);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        let s = m.latency_summary().unwrap();
+        assert!((s.median - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut m = Metrics::new();
+        m.record_request();
+        m.record_batch(1);
+        m.record_response(Duration::from_millis(5));
+        let j = m.to_json();
+        assert_eq!(j.get("requests").as_u64(), Some(1));
+        assert!(j.get("latency_p50_ms").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let mut m = Metrics::new();
+        m.cap = 4;
+        for i in 0..10 {
+            m.record_response(Duration::from_millis(i));
+        }
+        assert_eq!(m.responses, 10);
+        assert!(m.latency_summary().unwrap().n <= 4);
+    }
+
+    #[test]
+    fn empty_summary_none() {
+        assert!(Metrics::new().latency_summary().is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! The serving coordinator (L3): dynamic batching, fusion planning, and a
+//! threaded inference server over the PJRT runtime, with metrics.
+//!
+//! vLLM-router-shaped, scaled to this paper: the fusion planner is the
+//! paper's Fig 7 search made a first-class serving decision.
+pub mod batcher;
+pub mod metrics;
+pub mod planner;
+pub mod server;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use planner::{best_plan, cost_all_plans, Objective, PlanCost};
+pub use server::{Server, ServerConfig, ServerHandle};

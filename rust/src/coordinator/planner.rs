@@ -1,0 +1,197 @@
+//! Fusion-group planner — the Fig 7 trade-off search as a first-class
+//! serving component.
+//!
+//! Given a network and the platform budget, enumerate contiguous-group
+//! fusion plans, cost each with the closed-form cycle model and the
+//! structural resource model, discard plans that do not fit the board, and
+//! pick the objective's winner. The paper's §V discussion (fuse more early —
+//! intermediate volumes are huge; spend DSPs on depth parallelism late) falls
+//! out of the cost model rather than being hard-coded.
+
+use crate::accel::engine::Weights;
+use crate::accel::fusion::{enumerate_plans, FusionPlan};
+use crate::accel::latency::{plan_cycles_estimate, plan_traffic_bytes};
+use crate::config::{AccelConfig, Network};
+use crate::resources::{plan_resources, Resources};
+
+/// What the planner optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize estimated cycles (the paper's headline goal).
+    Latency,
+    /// Minimize off-chip traffic (the paper's bandwidth-constrained goal).
+    Traffic,
+    /// Minimize cycles, tie-broken by traffic, among plans whose DSP usage
+    /// stays under the given fraction of the budget (Fig 7's "allocate
+    /// compute to depth parallelism" trade-off).
+    LatencyUnderDspCap(u8),
+}
+
+/// A costed plan.
+#[derive(Debug, Clone)]
+pub struct PlanCost {
+    pub plan: FusionPlan,
+    pub cycles: u64,
+    pub traffic_bytes: u64,
+    pub resources: Resources,
+    pub fits: bool,
+}
+
+/// Cost every contiguous plan of the network.
+pub fn cost_all_plans(
+    cfg: &AccelConfig,
+    net: &Network,
+    weights: &Weights,
+) -> Vec<PlanCost> {
+    enumerate_plans(net.layers.len())
+        .into_iter()
+        .map(|plan| {
+            let resources = plan_resources(cfg, net, &plan);
+            PlanCost {
+                cycles: plan_cycles_estimate(cfg, net, &plan),
+                traffic_bytes: plan_traffic_bytes(cfg, net, weights, &plan),
+                fits: resources.fits(cfg),
+                resources,
+                plan,
+            }
+        })
+        .collect()
+}
+
+/// Pick the best feasible plan under the objective. Returns `None` only if
+/// no plan fits the board (not even fully unfused).
+pub fn best_plan(
+    cfg: &AccelConfig,
+    net: &Network,
+    weights: &Weights,
+    objective: Objective,
+) -> Option<PlanCost> {
+    let mut candidates: Vec<PlanCost> = cost_all_plans(cfg, net, weights)
+        .into_iter()
+        .filter(|p| p.fits)
+        .collect();
+    match objective {
+        Objective::Latency => {
+            candidates.sort_by_key(|p| (p.cycles, p.traffic_bytes));
+        }
+        Objective::Traffic => {
+            candidates.sort_by_key(|p| (p.traffic_bytes, p.cycles));
+        }
+        Objective::LatencyUnderDspCap(pct) => {
+            let cap = cfg.platform.dsp * pct as usize / 100;
+            candidates.retain(|p| p.resources.dsp <= cap);
+            candidates.sort_by_key(|p| (p.cycles, p.traffic_bytes));
+        }
+    }
+    candidates.into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{tiny_vgg, vgg16_prefix, AccelConfig};
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn setup() -> (AccelConfig, Network, Weights) {
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 1);
+        (AccelConfig::paper_default(), net, w)
+    }
+
+    #[test]
+    fn best_latency_plan_is_heavily_fused() {
+        // On the paper's board the whole 7-layer prefix fits fused, and
+        // fusion strictly reduces serialization — the latency winner must be
+        // a small number of groups.
+        let (cfg, net, w) = setup();
+        let best = best_plan(&cfg, &net, &w, Objective::Latency).unwrap();
+        assert!(
+            best.plan.n_groups() <= 2,
+            "latency winner has {} groups ({})",
+            best.plan.n_groups(),
+            best.plan.label()
+        );
+    }
+
+    #[test]
+    fn best_traffic_plan_is_fully_fused() {
+        // Traffic is minimized by never spilling intermediates: one group.
+        let (cfg, net, w) = setup();
+        let best = best_plan(&cfg, &net, &w, Objective::Traffic).unwrap();
+        assert_eq!(best.plan.n_groups(), 1, "{}", best.plan.label());
+    }
+
+    #[test]
+    fn dsp_cap_forces_smaller_groups() {
+        let (cfg, net, w) = setup();
+        let free = best_plan(&cfg, &net, &w, Objective::Latency).unwrap();
+        // Cap DSPs at 20% of the board: full fusion (≈2333 DSPs) no longer
+        // fits; the planner must split.
+        let capped = best_plan(&cfg, &net, &w, Objective::LatencyUnderDspCap(20)).unwrap();
+        assert!(capped.resources.dsp <= cfg.platform.dsp / 5);
+        assert!(capped.plan.n_groups() > free.plan.n_groups());
+        assert!(capped.cycles >= free.cycles);
+    }
+
+    #[test]
+    fn all_plans_costed_and_valid() {
+        let (cfg, net, w) = setup();
+        let costs = cost_all_plans(&cfg, &net, &w);
+        assert_eq!(costs.len(), 64);
+        for c in &costs {
+            assert!(c.plan.is_valid_partition());
+            assert!(c.cycles > 0);
+            assert!(c.traffic_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn fig7_monotonicity_traffic_vs_dsp() {
+        // Along the A..G prefix-fusion path: traffic non-increasing, DSP
+        // non-decreasing (the Fig 7 trade-off curve).
+        let (cfg, net, w) = setup();
+        let pts = crate::accel::fusion::fig7_points(&net);
+        let mut last_traffic = u64::MAX;
+        let mut last_dsp = 0usize;
+        for (label, plan) in pts {
+            let traffic = plan_traffic_bytes(&cfg, &net, &w, &plan);
+            let dsp = plan_resources(&cfg, &net, &plan).dsp;
+            assert!(traffic <= last_traffic, "traffic rose at {label}");
+            assert!(dsp >= last_dsp, "dsp fell at {label}");
+            last_traffic = traffic;
+            last_dsp = dsp;
+        }
+    }
+
+    #[test]
+    fn property_planner_respects_budget_and_partition() {
+        let cfg = AccelConfig::paper_default();
+        prop::check_default(
+            "planner-budget",
+            |r: &mut Rng| {
+                // random cap between 10% and 100%
+                (r.range_u64(10, 100) as u8, r.next_u64())
+            },
+            |&(pct, seed)| {
+                let net = tiny_vgg();
+                let w = Weights::random(&net, seed);
+                match best_plan(&cfg, &net, &w, Objective::LatencyUnderDspCap(pct)) {
+                    None => Ok(()), // nothing fits the cap — acceptable
+                    Some(p) => {
+                        if !p.plan.is_valid_partition() {
+                            return Err("invalid partition".into());
+                        }
+                        if p.resources.dsp > cfg.platform.dsp * pct as usize / 100 {
+                            return Err(format!(
+                                "dsp {} over cap {}%",
+                                p.resources.dsp, pct
+                            ));
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
+    }
+}

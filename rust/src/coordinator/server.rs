@@ -1,0 +1,360 @@
+//! The serving coordinator: a threaded inference server over the PJRT
+//! runtime (tokio is unavailable offline; std::thread + mpsc own the event
+//! loop, which for a CPU-bound executor is the right shape anyway).
+//!
+//! Topology: N client threads → `submit()` → request channel → executor
+//! thread (owns the `Runtime`, which is not `Send`-safe to share) →
+//! per-request response channels. The executor drives the
+//! [`DynamicBatcher`]; each batch executes back-to-back on the compiled
+//! plan, amortizing dispatch overhead exactly as the paper's pipeline
+//! amortizes its fill latency.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Runtime;
+use crate::tensor::NdTensor;
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::metrics::Metrics;
+
+/// An inference request.
+pub struct Request {
+    pub id: u64,
+    pub input: NdTensor,
+    /// Plan to execute ("fused", "unfused", ...); None = server default.
+    pub plan: Option<String>,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+/// An inference response.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<NdTensor, String>,
+    pub latency: Duration,
+    pub batch_size: usize,
+    pub plan: String,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub network: String,
+    pub default_plan: String,
+    pub batch: BatchPolicy,
+}
+
+/// Handle for submitting requests; cheap to clone across client threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Request>,
+    next_id: Arc<Mutex<u64>>,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+/// A pending response.
+pub struct Ticket {
+    pub id: u64,
+    rx: Receiver<Response>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response> {
+        self.rx.recv().context("server dropped the response channel")
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<Response> {
+        self.rx
+            .recv_timeout(d)
+            .context("timed out waiting for response")
+    }
+}
+
+impl ServerHandle {
+    /// Submit one input; returns a ticket to wait on.
+    pub fn submit(&self, input: NdTensor, plan: Option<&str>) -> Ticket {
+        let (reply, rx) = mpsc::channel();
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        self.metrics.lock().unwrap().record_request();
+        // Send failure means the server stopped; surface via the ticket.
+        let _ = self.tx.send(Request {
+            id,
+            input,
+            plan: plan.map(|s| s.to_string()),
+            submitted: Instant::now(),
+            reply,
+        });
+        Ticket { id, rx }
+    }
+
+    pub fn metrics_json(&self) -> String {
+        self.metrics.lock().unwrap().to_json().to_string_pretty()
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+/// The running server.
+pub struct Server {
+    pub handle: ServerHandle,
+    worker: Option<JoinHandle<()>>,
+    shutdown_tx: Sender<Request>, // kept so drop can close the channel last
+}
+
+impl Server {
+    /// Start the executor thread. Loading + compiling the artifacts happens
+    /// on that thread (the PJRT client is not shared across threads).
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let worker_metrics = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let wcfg = cfg.clone();
+
+        let worker = std::thread::Builder::new()
+            .name("decoilfnet-executor".into())
+            .spawn(move || {
+                executor_loop(wcfg, rx, worker_metrics, ready_tx);
+            })
+            .context("spawning executor thread")?;
+
+        // Fail fast if the artifacts are missing/broken.
+        ready_rx
+            .recv()
+            .context("executor thread died during startup")?
+            .map_err(|e| anyhow::anyhow!("runtime startup: {e}"))?;
+
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            next_id: Arc::new(Mutex::new(0)),
+            metrics,
+        };
+        Ok(Server {
+            handle,
+            worker: Some(worker),
+            shutdown_tx: tx,
+        })
+    }
+
+    /// Stop accepting work and join the executor (drains the queue first).
+    pub fn shutdown(mut self) {
+        drop(self.shutdown_tx); // close our copy
+        let ServerHandle { tx, .. } = self.handle.clone();
+        drop(tx);
+        drop(self.handle);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn executor_loop(
+    cfg: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: Sender<Result<(), String>>,
+) {
+    let runtime = match Runtime::load(&cfg.artifacts_dir, &cfg.network) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+
+    let mut batcher: DynamicBatcher<Request> = DynamicBatcher::new(cfg.batch);
+    loop {
+        // Wait for work, bounded by the batcher's flush deadline.
+        let req = match batcher.next_deadline() {
+            None => match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => break, // all senders gone
+            },
+            Some(deadline) => {
+                let now = Instant::now();
+                let timeout = deadline.saturating_duration_since(now);
+                match rx.recv_timeout(timeout) {
+                    Ok(r) => Some(r),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        };
+        let now = Instant::now();
+        let mut batch = match req {
+            Some(r) => batcher.push(r, now),
+            None => None,
+        };
+        if batch.is_none() {
+            batch = batcher.poll(Instant::now());
+        }
+        if let Some(batch) = batch {
+            execute_batch(&cfg, &runtime, batch, &metrics);
+        }
+    }
+    // Drain anything still queued at shutdown.
+    let rest = batcher.flush();
+    if !rest.is_empty() {
+        execute_batch(&cfg, &runtime, rest, &metrics);
+    }
+}
+
+fn execute_batch(
+    cfg: &ServerConfig,
+    runtime: &Runtime,
+    batch: Vec<Request>,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let size = batch.len();
+    metrics.lock().unwrap().record_batch(size);
+    for req in batch {
+        let plan_name = req.plan.as_deref().unwrap_or(&cfg.default_plan);
+        let result = runtime
+            .plan(plan_name)
+            .and_then(|p| p.run(&req.input))
+            .map_err(|e| format!("{e:#}"));
+        let latency = req.submitted.elapsed();
+        {
+            let mut m = metrics.lock().unwrap();
+            match &result {
+                Ok(_) => m.record_response(latency),
+                Err(_) => m.record_error(),
+            }
+        }
+        let _ = req.reply.send(Response {
+            id: req.id,
+            result,
+            latency,
+            batch_size: size,
+            plan: plan_name.to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping server test: run `make artifacts` first");
+            None
+        }
+    }
+
+    fn server(dir: PathBuf) -> Server {
+        Server::start(ServerConfig {
+            artifacts_dir: dir,
+            network: "paper-example".into(),
+            default_plan: "fused".into(),
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            },
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_golden_request() {
+        let Some(dir) = artifacts() else { return };
+        let srv = server(dir.clone());
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let (input, want) = rt.golden().unwrap();
+        let resp = srv.handle.submit(input, None).wait().unwrap();
+        let out = resp.result.unwrap();
+        assert!(out.max_abs_diff(&want) < 1e-3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered_in_order_of_identity() {
+        let Some(dir) = artifacts() else { return };
+        let srv = server(dir.clone());
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let (input, want) = rt.golden().unwrap();
+
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let h = srv.handle.clone();
+            let input = input.clone();
+            let want = want.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let resp = h.submit(input.clone(), None).wait().unwrap();
+                    let out = resp.result.unwrap();
+                    assert!(out.max_abs_diff(&want) < 1e-3);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = srv.handle.metrics();
+        assert_eq!(m.requests, 20);
+        assert_eq!(m.responses, 20);
+        assert_eq!(m.errors, 0);
+        assert!(m.batches <= 20, "batching must coalesce or match");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn per_request_plan_override() {
+        let Some(dir) = artifacts() else { return };
+        let srv = server(dir.clone());
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let (input, _) = rt.golden().unwrap();
+        let a = srv.handle.submit(input.clone(), Some("fused")).wait().unwrap();
+        let b = srv.handle.submit(input, Some("unfused")).wait().unwrap();
+        assert_eq!(a.plan, "fused");
+        assert_eq!(b.plan, "unfused");
+        let (ao, bo) = (a.result.unwrap(), b.result.unwrap());
+        assert!(ao.max_abs_diff(&bo) < 1e-3, "plans must agree numerically");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_plan_is_an_error_response_not_a_crash() {
+        let Some(dir) = artifacts() else { return };
+        let srv = server(dir.clone());
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let (input, _) = rt.golden().unwrap();
+        let resp = srv.handle.submit(input.clone(), Some("bogus")).wait().unwrap();
+        assert!(resp.result.is_err());
+        // server still alive
+        let ok = srv.handle.submit(input, None).wait().unwrap();
+        assert!(ok.result.is_ok());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn startup_failure_reported() {
+        let err = Server::start(ServerConfig {
+            artifacts_dir: PathBuf::from("/nonexistent"),
+            network: "paper-example".into(),
+            default_plan: "fused".into(),
+            batch: BatchPolicy::default(),
+        });
+        assert!(err.is_err());
+    }
+}

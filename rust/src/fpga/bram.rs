@@ -1,0 +1,199 @@
+//! Block-RAM model: structural capacity accounting + a functional banked
+//! memory with port-conflict checking.
+//!
+//! Virtex-7 BRAMs come as 18 Kb blocks (pairable into 36 Kb). A BRAM18
+//! configures as 16K×1, 8K×2, 4K×4, 2K×9, 1K×18 or 512×36; wider words
+//! cascade multiple blocks in parallel. The paper's Table I/IV resource
+//! numbers count these blocks, so the resource model needs the same mapping
+//! Vivado's inference uses.
+
+/// Capacity of one BRAM18 in data bits (18 Kb including parity; we count the
+/// full 18 Kb because the 9/18/36-wide configs use parity bits as data).
+pub const BRAM18_BITS: usize = 18 * 1024;
+
+/// Number of BRAM18 blocks needed for a memory of `words` entries of
+/// `width_bits` each, mirroring Vivado's width-splitting inference:
+/// the word is split across ceil(width/36) physical 36-bit-wide columns
+/// (each column as deep as needed), except narrow/shallow cases that fit a
+/// single block.
+pub fn bram18_for(words: usize, width_bits: usize) -> usize {
+    if words == 0 || width_bits == 0 {
+        return 0;
+    }
+    // A single block covers it if total bits fit and width ≤ 36 (a BRAM18's
+    // widest port).
+    if width_bits <= 36 && words * width_bits <= BRAM18_BITS {
+        return 1;
+    }
+    // Wide words: parallel columns of ≤36 bits.
+    let columns = width_bits.div_ceil(36);
+    let col_width = width_bits.div_ceil(columns);
+    let blocks_per_column = words.div_ceil(bram18_depth_for_width(col_width));
+    columns * blocks_per_column
+}
+
+/// Depth of one BRAM18 at a given port width, using the discrete Xilinx
+/// configs: 16K×1, 8K×2, 4K×4, 2K×9, 1K×18, 512×36.
+fn bram18_depth_for_width(width_bits: usize) -> usize {
+    match width_bits {
+        0 => usize::MAX,
+        1 => 16 * 1024,
+        2 => 8 * 1024,
+        3..=4 => 4 * 1024,
+        5..=9 => 2 * 1024,
+        10..=18 => 1024,
+        _ => 512,
+    }
+}
+
+/// BRAM36 count (what the paper's tables report) for the same memory.
+pub fn bram36_for(words: usize, width_bits: usize) -> usize {
+    bram18_for(words, width_bits).div_ceil(2)
+}
+
+/// A functional single-bank BRAM with bounded capacity and dual ports:
+/// at most one write and one read per cycle (true dual-port simple model).
+/// Used by fine-grained component tests; the streaming engine uses the
+/// structural accounting only.
+#[derive(Debug, Clone)]
+pub struct Bram<T: Copy + Default> {
+    data: Vec<T>,
+    /// Last cycle a write/read port was used (for conflict assertions).
+    last_write_cycle: Option<u64>,
+    last_read_cycle: Option<u64>,
+    pub write_conflicts: u64,
+    pub read_conflicts: u64,
+}
+
+impl<T: Copy + Default> Bram<T> {
+    pub fn new(words: usize) -> Bram<T> {
+        Bram {
+            data: vec![T::default(); words],
+            last_write_cycle: None,
+            last_read_cycle: None,
+            write_conflicts: 0,
+            read_conflicts: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Write port: one write per cycle; extra writes in the same cycle are
+    /// counted as conflicts (a real design would have lost data).
+    pub fn write(&mut self, cycle: u64, addr: usize, value: T) {
+        if self.last_write_cycle == Some(cycle) {
+            self.write_conflicts += 1;
+        }
+        self.last_write_cycle = Some(cycle);
+        self.data[addr] = value;
+    }
+
+    /// Read port: one read per cycle, data returned same-cycle (the paper's
+    /// line buffers use registered outputs — the extra cycle is part of the
+    /// module latency constants, not modeled per-access).
+    pub fn read(&mut self, cycle: u64, addr: usize) -> T {
+        if self.last_read_cycle == Some(cycle) {
+            self.read_conflicts += 1;
+        }
+        self.last_read_cycle = Some(cycle);
+        self.data[addr]
+    }
+
+    pub fn conflict_free(&self) -> bool {
+        self.write_conflicts == 0 && self.read_conflicts == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn single_block_cases() {
+        assert_eq!(bram18_for(512, 36), 1);
+        assert_eq!(bram18_for(1024, 18), 1);
+        assert_eq!(bram18_for(2048, 9), 1);
+        assert_eq!(bram18_for(16 * 1024, 1), 1);
+    }
+
+    #[test]
+    fn zero_cases() {
+        assert_eq!(bram18_for(0, 32), 0);
+        assert_eq!(bram18_for(100, 0), 0);
+    }
+
+    #[test]
+    fn wide_word_uses_parallel_columns() {
+        // 96-bit depth-concatenated word (3 × 32-bit channels): 3 columns.
+        let n = bram18_for(512, 96);
+        assert_eq!(n, 3);
+        // 64 channels × 32 bits = 2048-bit word: 57 columns of ≤36 bits.
+        let n = bram18_for(224, 2048);
+        assert_eq!(n, 57);
+    }
+
+    #[test]
+    fn deep_memory_cascades() {
+        // 32-bit × 8192 words = 256 Kb ≥ 15 blocks.
+        let n = bram18_for(8192, 32);
+        assert!(n >= 15 && n <= 16, "got {n}");
+    }
+
+    #[test]
+    fn bram36_is_half_rounded_up() {
+        assert_eq!(bram36_for(512, 36), 1);
+        assert_eq!(bram36_for(512, 96), 2); // 3 BRAM18 → 2 BRAM36
+    }
+
+    #[test]
+    fn monotone_in_words_and_width() {
+        prop::check_default(
+            "bram-monotone",
+            |r: &mut Rng| {
+                (
+                    r.range_usize(1, 4096),
+                    r.range_usize(1, 256),
+                )
+            },
+            |&(words, width)| {
+                let base = bram18_for(words, width);
+                if bram18_for(words + 64, width) < base {
+                    return Err("more words needed fewer blocks".into());
+                }
+                if bram18_for(words, width + 8) < base {
+                    return Err("wider word needed fewer blocks".into());
+                }
+                // capacity sanity: blocks must cover the raw bits
+                if base * BRAM18_BITS < words * width / 2 {
+                    return Err(format!("blocks {base} can't hold {words}x{width}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn functional_bram_rw() {
+        let mut b: Bram<u32> = Bram::new(16);
+        b.write(0, 3, 99);
+        assert_eq!(b.read(1, 3), 99);
+        assert_eq!(b.read(2, 0), 0);
+        assert!(b.conflict_free());
+    }
+
+    #[test]
+    fn port_conflicts_detected() {
+        let mut b: Bram<u32> = Bram::new(4);
+        b.write(5, 0, 1);
+        b.write(5, 1, 2); // same-cycle second write
+        assert_eq!(b.write_conflicts, 1);
+        b.read(6, 0);
+        b.read(6, 1);
+        assert_eq!(b.read_conflicts, 1);
+        assert!(!b.conflict_free());
+    }
+}

@@ -1,0 +1,212 @@
+//! DSP multiplier and LUT adder-tree models (paper §III-C).
+//!
+//! The paper instantiates DSP48 slices only for multipliers and builds adders
+//! out of LUTs "so that more computations can be performed in parallel". Both
+//! are deeply pipelined: the multiplier has a 9-cycle latency; an n-input
+//! adder tree has ceil(log2 n) levels, and the paper charges 9 cycles per
+//! level pair — its constant `9*(1 + 2*ceil(log2 w))` for a w×w window
+//! breaks down as 9 (multiplier) + 9*2*ceil(log2 3) (the 9-input adder tree
+//! folded as two levels of ternary adds of 9-deep pipelines).
+//!
+//! Functionally both operate on Q16.16 with widened accumulators
+//! (`tensor::fixed::MacAcc`).
+
+use crate::fpga::pipeline::Stage;
+use crate::tensor::fixed::{Fx, MacAcc};
+
+/// Pipelined multiplier bank: `lanes` parallel DSP multipliers, each with
+/// `latency` stages, II = 1.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiplierBank {
+    pub lanes: usize,
+    pub latency: u64,
+}
+
+impl MultiplierBank {
+    pub fn new(lanes: usize, latency: u64) -> MultiplierBank {
+        MultiplierBank { lanes, latency }
+    }
+
+    /// Timing stage of the bank (parallel lanes share the same latency).
+    pub fn stage(&self) -> Stage {
+        Stage::pipelined(self.latency)
+    }
+
+    /// DSP slices consumed. One 32×32 fixed-point multiplier consumes 4
+    /// DSP48E1s when fully hardened (25×18 base multipliers composed);
+    /// the paper's Table I count (605 DSPs for two 3-filter... see
+    /// resources.rs) is consistent with partially LUT-assisted multipliers —
+    /// the resource model owns that policy; here we only report lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Functional: elementwise products of two equal-length slices
+    /// (one per lane; callers tile longer inputs over lanes).
+    pub fn multiply(&self, a: &[Fx], b: &[Fx]) -> Vec<Fx> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| x.mul(*y)).collect()
+    }
+}
+
+/// LUT adder tree reducing `fan_in` values, pipelined. The paper's latency
+/// accounting charges `stage_latency` cycles per reduction *level-pair* —
+/// see the module docs; we expose the generic `levels()` and keep the paper's
+/// constant via `paper_latency()`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdderTree {
+    pub fan_in: usize,
+    /// Cycles charged per ceil(log2) level (paper: 9·2 per level ⇒ use 18
+    /// with `levels = ceil(log2 w)` for a w×w window — matching its
+    /// `9*(1+2*ceil(log2 w))` total with the multiplier's 9).
+    pub cycles_per_level: u64,
+}
+
+impl AdderTree {
+    pub fn new(fan_in: usize, cycles_per_level: u64) -> AdderTree {
+        assert!(fan_in >= 1);
+        AdderTree {
+            fan_in,
+            cycles_per_level,
+        }
+    }
+
+    /// Reduction levels: ceil(log2(fan_in)).
+    pub fn levels(&self) -> u64 {
+        (self.fan_in as f64).log2().ceil() as u64
+    }
+
+    pub fn stage(&self) -> Stage {
+        Stage::pipelined(self.levels() * self.cycles_per_level)
+    }
+
+    /// Functional: reduce lanes of widened accumulators into one.
+    pub fn reduce(&self, accs: &[MacAcc]) -> MacAcc {
+        let mut total = MacAcc::new();
+        for a in accs {
+            total.add_acc(*a);
+        }
+        total
+    }
+
+    /// Functional over raw products (tests convenience).
+    pub fn reduce_fx(&self, vals: &[Fx]) -> Fx {
+        let mut acc = MacAcc::new();
+        for v in vals {
+            acc.mac(*v, Fx::ONE);
+        }
+        acc.finish()
+    }
+
+    /// LUT cost estimate: a W-bit carry-chain adder is ~W LUTs; a tree over
+    /// `fan_in` inputs has `fan_in - 1` adders. Accumulator width grows with
+    /// depth; we charge the full guard width (48 bits, DSP-accumulator
+    /// class) for every node, which upper-bounds Vivado's packing.
+    pub fn lut_cost(&self, word_bits: usize) -> usize {
+        let adder_bits = word_bits + 16; // guard bits
+        (self.fan_in.saturating_sub(1)) * adder_bits
+    }
+
+    /// FF cost: each pipeline level registers its partial sums.
+    pub fn ff_cost(&self, word_bits: usize) -> usize {
+        let adder_bits = word_bits + 16;
+        let mut ffs = 0usize;
+        let mut nodes = self.fan_in;
+        for _ in 0..self.levels() {
+            nodes = nodes.div_ceil(2);
+            ffs += nodes * adder_bits;
+        }
+        ffs
+    }
+}
+
+/// The paper's 2-D convolution arithmetic unit for a w×w window:
+/// w² multipliers + a w²-input adder tree. Latency constant per §III-C:
+/// `9 * (1 + 2*ceil(log2 w))` — 45 cycles for w = 3.
+pub fn conv2d_unit_stage(w: usize, mult_latency: u64) -> Stage {
+    let mult = Stage::pipelined(mult_latency);
+    let levels = (w as f64).log2().ceil() as u64;
+    let adder = Stage::pipelined(mult_latency * 2 * levels);
+    mult.then(adder)
+}
+
+/// Depth-combination adder stage: summing `d` 2-D conv results costs
+/// `9 * ceil(log2 d)` more cycles (paper: 63 total for w=3, d=3).
+pub fn depth_sum_stage(d: usize, mult_latency: u64) -> Stage {
+    let levels = (d as f64).log2().ceil() as u64;
+    Stage::pipelined(mult_latency * levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_latency_constants() {
+        // §III-C: 2-D conv unit for w=3 primes in 45 cycles…
+        assert_eq!(conv2d_unit_stage(3, 9).latency, 45);
+        // …and the full 3-D conv with d=3 in 45 + 18 = 63.
+        let total = conv2d_unit_stage(3, 9).then(depth_sum_stage(3, 9));
+        assert_eq!(total.latency, 63);
+        assert_eq!(total.ii, 1);
+    }
+
+    #[test]
+    fn latency_scales_with_window_and_depth() {
+        assert_eq!(conv2d_unit_stage(1, 9).latency, 9); // 1×1 conv: mult only
+        assert_eq!(conv2d_unit_stage(5, 9).latency, 9 + 18 * 3); // ceil(log2 5)=3
+        assert_eq!(depth_sum_stage(64, 9).latency, 54); // log2 64 = 6
+        assert_eq!(depth_sum_stage(1, 9).latency, 0);
+    }
+
+    #[test]
+    fn multiplier_functional() {
+        let bank = MultiplierBank::new(9, 9);
+        let a: Vec<Fx> = [1.0f32, -2.0, 0.5].iter().map(|&v| Fx::from_f32(v)).collect();
+        let b: Vec<Fx> = [3.0f32, 4.0, -8.0].iter().map(|&v| Fx::from_f32(v)).collect();
+        let p = bank.multiply(&a, &b);
+        let got: Vec<f32> = p.iter().map(|v| v.to_f32()).collect();
+        assert_eq!(got, vec![3.0, -8.0, -4.0]);
+    }
+
+    #[test]
+    fn adder_tree_levels() {
+        assert_eq!(AdderTree::new(9, 18).levels(), 4);
+        assert_eq!(AdderTree::new(8, 18).levels(), 3);
+        assert_eq!(AdderTree::new(2, 18).levels(), 1);
+        assert_eq!(AdderTree::new(1, 18).levels(), 0);
+    }
+
+    #[test]
+    fn adder_tree_reduce_matches_scalar_sum() {
+        prop::check_default(
+            "adder-tree-sum",
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 32);
+                (0..n).map(|_| r.range_f32(-10.0, 10.0)).collect::<Vec<f32>>()
+            },
+            |vals| {
+                let tree = AdderTree::new(vals.len(), 18);
+                let fx: Vec<Fx> = vals.iter().map(|&v| Fx::from_f32(v)).collect();
+                let got = tree.reduce_fx(&fx) .to_f64();
+                let want: f64 = fx.iter().map(|v| v.to_f64()).sum();
+                if (got - want).abs() <= Fx::epsilon() {
+                    Ok(())
+                } else {
+                    Err(format!("sum {got} vs {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn costs_positive_and_scale() {
+        let small = AdderTree::new(9, 18);
+        let big = AdderTree::new(81, 18);
+        assert!(small.lut_cost(32) > 0);
+        assert!(big.lut_cost(32) > small.lut_cost(32));
+        assert!(big.ff_cost(32) > small.ff_cost(32));
+    }
+}

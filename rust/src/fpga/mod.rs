@@ -1,0 +1,10 @@
+//! Cycle-level FPGA substrate components: BRAM, line buffers, DSP
+//! multiplier pipelines, LUT adder trees, pipeline timing algebra, and the
+//! DDR channel. These are the building blocks the DeCoILFNet model in
+//! `crate::accel` composes; each is independently tested against naive
+//! references.
+pub mod bram;
+pub mod ddr;
+pub mod dsp;
+pub mod line_buffer;
+pub mod pipeline;

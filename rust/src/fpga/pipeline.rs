@@ -1,0 +1,195 @@
+//! Pipeline timing algebra: latency / initiation-interval composition and
+//! timestamp propagation.
+//!
+//! Every hardware module in the paper is characterized by two numbers — an
+//! initial latency `L` (cycles from first input to first output) and an
+//! initiation interval `II` (cycles between successive outputs once primed).
+//! The whole DeCoILFNet pipeline is a composition of such stages; this module
+//! provides the algebra and the per-element timestamp propagation the
+//! streaming engine uses.
+
+/// A pipelined stage: output appears `latency` cycles after its input, and
+/// the stage accepts a new input at most every `ii` cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stage {
+    pub latency: u64,
+    pub ii: u64,
+}
+
+impl Stage {
+    pub fn new(latency: u64, ii: u64) -> Stage {
+        assert!(ii >= 1, "initiation interval must be ≥ 1");
+        Stage { latency, ii }
+    }
+
+    /// Fully pipelined stage (II = 1).
+    pub fn pipelined(latency: u64) -> Stage {
+        Stage { latency, ii: 1 }
+    }
+
+    /// Sequential composition: total latency adds; the composite's II is the
+    /// max of the two (the slower stage throttles the pipe).
+    pub fn then(self, next: Stage) -> Stage {
+        Stage {
+            latency: self.latency + next.latency,
+            ii: self.ii.max(next.ii),
+        }
+    }
+
+    /// Cycles to process `n` elements through this stage alone, first input
+    /// at cycle 0: latency of the first + (n-1) intervals + 1 (the output
+    /// cycle itself counts).
+    pub fn cycles_for(self, n: u64) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            self.latency + (n - 1) * self.ii + 1
+        }
+    }
+}
+
+/// Per-element timestamp propagation through a stage with bounded skid:
+/// tracks when each successive element leaves the stage given when it
+/// arrived, enforcing the II. This is the exact streaming semantics the
+/// engine uses for line-buffer/conv/pool chains.
+#[derive(Debug, Clone)]
+pub struct StageTracker {
+    stage: Stage,
+    last_issue: Option<u64>,
+}
+
+impl StageTracker {
+    pub fn new(stage: Stage) -> StageTracker {
+        StageTracker {
+            stage,
+            last_issue: None,
+        }
+    }
+
+    /// Element arrives at `t_in`; returns the cycle its result is available.
+    /// Issue slot = max(arrival, previous issue + II); result = issue + latency.
+    pub fn push(&mut self, t_in: u64) -> u64 {
+        let issue = match self.last_issue {
+            None => t_in,
+            Some(prev) => t_in.max(prev + self.stage.ii),
+        };
+        self.last_issue = Some(issue);
+        issue + self.stage.latency
+    }
+
+    /// The issue time of the most recent element (for backpressure coupling).
+    pub fn last_issue(&self) -> Option<u64> {
+        self.last_issue
+    }
+}
+
+/// Bounded-capacity FIFO coupling between producer and consumer timestamps —
+/// models a line/stream buffer of `capacity` elements: the producer cannot
+/// write element `i` until element `i - capacity` has been consumed.
+#[derive(Debug, Clone)]
+pub struct CapacityGate {
+    capacity: usize,
+    consumed_at: Vec<u64>,
+}
+
+impl CapacityGate {
+    pub fn new(capacity: usize) -> CapacityGate {
+        assert!(capacity > 0);
+        CapacityGate {
+            capacity,
+            consumed_at: Vec::new(),
+        }
+    }
+
+    /// Earliest time element `idx` may be accepted, given it was produced at
+    /// `t_prod`.
+    pub fn accept_time(&self, idx: usize, t_prod: u64) -> u64 {
+        if idx >= self.capacity {
+            t_prod.max(self.consumed_at[idx - self.capacity])
+        } else {
+            t_prod
+        }
+    }
+
+    /// Record that element `idx` was consumed at `t`.
+    pub fn mark_consumed(&mut self, idx: usize, t: u64) {
+        debug_assert_eq!(idx, self.consumed_at.len(), "consume in order");
+        self.consumed_at.push(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn composition_adds_latency_maxes_ii() {
+        let mult = Stage::pipelined(9);
+        let adder = Stage::pipelined(36);
+        let c = mult.then(adder);
+        assert_eq!(c.latency, 45);
+        assert_eq!(c.ii, 1);
+
+        let slow = Stage::new(5, 3);
+        let c2 = c.then(slow);
+        assert_eq!(c2.latency, 50);
+        assert_eq!(c2.ii, 3);
+    }
+
+    #[test]
+    fn cycles_for_pipelined() {
+        // Paper §III-C: after latency 63, one output per cycle: n outputs in
+        // 63 + n cycles.
+        let conv = Stage::pipelined(63);
+        assert_eq!(conv.cycles_for(1), 64);
+        assert_eq!(conv.cycles_for(100), 163);
+        assert_eq!(conv.cycles_for(0), 0);
+    }
+
+    #[test]
+    fn tracker_back_to_back() {
+        let mut t = StageTracker::new(Stage::pipelined(10));
+        // Inputs arriving every cycle flow through unimpeded.
+        assert_eq!(t.push(0), 10);
+        assert_eq!(t.push(1), 11);
+        assert_eq!(t.push(2), 12);
+    }
+
+    #[test]
+    fn tracker_enforces_ii() {
+        let mut t = StageTracker::new(Stage::new(4, 3));
+        assert_eq!(t.push(0), 4); // issue 0
+        assert_eq!(t.push(1), 7); // issue max(1, 0+3)=3
+        assert_eq!(t.push(2), 10); // issue 6
+        assert_eq!(t.push(100), 104); // long gap: issue 100
+    }
+
+    #[test]
+    fn tracker_stall_propagates() {
+        let mut t = StageTracker::new(Stage::pipelined(5));
+        assert_eq!(t.push(0), 5);
+        assert_eq!(t.push(0), 6); // same-cycle arrival queues behind II=1
+        assert_eq!(t.push(0), 7);
+    }
+
+    #[test]
+    fn capacity_gate_blocks_when_full() {
+        let mut g = CapacityGate::new(2);
+        // Elements 0,1 accepted immediately.
+        assert_eq!(g.accept_time(0, 10), 10);
+        g.mark_consumed(0, 50);
+        assert_eq!(g.accept_time(1, 11), 11);
+        g.mark_consumed(1, 60);
+        // Element 2 must wait for element 0's consumption (t=50).
+        assert_eq!(g.accept_time(2, 12), 50);
+        g.mark_consumed(2, 70);
+        // Element 3 waits for element 1 (t=60).
+        assert_eq!(g.accept_time(3, 65), 65); // produced later than the gate
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_ii_rejected() {
+        Stage::new(1, 0);
+    }
+}

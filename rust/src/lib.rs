@@ -1,0 +1,11 @@
+//! DeCoILFNet reproduction library. See DESIGN.md for the system map.
+pub mod accel;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod fpga;
+pub mod resources;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod verify;

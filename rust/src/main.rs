@@ -1,0 +1,415 @@
+//! DeCoILFNet CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate   cycle-accurate run of a network under a fusion plan
+//!   plan       fusion-plan search under the platform budget (Fig 7)
+//!   resources  structural resource report (Table I)
+//!   verify     simulator <-> PJRT runtime numeric cross-check
+//!   serve      threaded inference server demo over the AOT artifacts
+//!   report     headline paper-vs-measured summary (E7)
+
+use std::path::PathBuf;
+
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::baselines::{fused_layer, optimized};
+use decoilfnet::config::{self, AccelConfig, Network};
+use decoilfnet::coordinator::{self, BatchPolicy, Objective, Server, ServerConfig};
+use decoilfnet::resources;
+use decoilfnet::runtime::Runtime;
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::cli::{render_help, Args, OptSpec};
+use decoilfnet::util::stats::fmt_count;
+use decoilfnet::util::table::{fmt_speedup, Table};
+use decoilfnet::verify;
+
+fn opt_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "net", takes_value: true, help: "network: vgg16-prefix7 | custom-4conv64 | tiny-vgg | paper-example | path to JSON", default: Some("vgg16-prefix7") },
+        OptSpec { name: "plan", takes_value: true, help: "fusion plan: fused | unfused | comma sizes (e.g. 2,3,2)", default: Some("fused") },
+        OptSpec { name: "prefix", takes_value: true, help: "simulate only the first N layers", default: None },
+        OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory", default: Some("artifacts") },
+        OptSpec { name: "objective", takes_value: true, help: "planner objective: latency | traffic", default: Some("latency") },
+        OptSpec { name: "dsp-cap", takes_value: true, help: "planner DSP cap in percent of the board", default: None },
+        OptSpec { name: "requests", takes_value: true, help: "serve: number of requests to fire", default: Some("32") },
+        OptSpec { name: "clients", takes_value: true, help: "serve: concurrent client threads", default: Some("4") },
+        OptSpec { name: "batch", takes_value: true, help: "serve: max batch size", default: Some("8") },
+        OptSpec { name: "seed", takes_value: true, help: "weight/input seed", default: Some("1") },
+        OptSpec { name: "json", takes_value: false, help: "emit machine-readable JSON instead of tables", default: None },
+        OptSpec { name: "help", takes_value: false, help: "show this help", default: None },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &opt_specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", help());
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand.is_none() {
+        println!("{}", help());
+        return;
+    }
+    let result = match args.subcommand.as_deref().unwrap() {
+        "simulate" => cmd_simulate(&args),
+        "plan" => cmd_plan(&args),
+        "resources" => cmd_resources(&args),
+        "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
+        "trace" => cmd_trace(&args),
+        other => Err(format!("unknown subcommand '{other}'\n\n{}", help())),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn help() -> String {
+    render_help(
+        "decoilfnet",
+        &[
+            ("simulate", "cycle-accurate run of a network under a fusion plan"),
+            ("plan", "fusion-plan search under the platform budget (Fig 7)"),
+            ("resources", "structural resource report (Table I)"),
+            ("verify", "simulator vs PJRT runtime numeric cross-check"),
+            ("serve", "threaded inference server demo over the artifacts"),
+            ("report", "headline paper-vs-measured summary"),
+            ("trace", "pipeline timeline (Fig 5 staircase) for a plan"),
+        ],
+        &opt_specs(),
+    )
+}
+
+fn load_net(args: &Args) -> Result<Network, String> {
+    let name = args.opt("net").unwrap();
+    let mut net = match name {
+        "vgg16-prefix7" => config::vgg16_prefix(),
+        "custom-4conv64" => config::custom_4conv(),
+        "tiny-vgg" => config::tiny_vgg(),
+        "paper-example" => config::paper_test_example(),
+        path => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading network spec '{path}': {e}"))?;
+            Network::from_json_str(&text).map_err(|e| e.to_string())?
+        }
+    };
+    if let Some(n) = args.opt_usize("prefix")? {
+        if n == 0 || n > net.layers.len() {
+            return Err(format!("--prefix must be 1..={}", net.layers.len()));
+        }
+        net.layers.truncate(n);
+        net.name = format!("{}[..{n}]", net.name);
+    }
+    Ok(net)
+}
+
+fn parse_plan(args: &Args, n_layers: usize) -> Result<FusionPlan, String> {
+    match args.opt("plan").unwrap() {
+        "fused" => Ok(FusionPlan::fully_fused(n_layers)),
+        "unfused" => Ok(FusionPlan::unfused(n_layers)),
+        spec => {
+            let sizes: Result<Vec<usize>, _> =
+                spec.split(',').map(|s| s.trim().parse::<usize>()).collect();
+            let sizes = sizes.map_err(|_| format!("bad plan spec '{spec}'"))?;
+            FusionPlan::from_group_sizes(n_layers, &sizes)
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let net = load_net(args)?;
+    let cfg = AccelConfig::paper_default();
+    let plan = parse_plan(args, net.layers.len())?;
+    let seed = args.opt_usize("seed")?.unwrap_or(1) as u64;
+    let weights = Weights::random(&net, seed);
+    let rep = Engine::new(cfg.clone()).simulate(&net, &weights, &plan);
+
+    if args.has_flag("json") {
+        let j = decoilfnet::util::json::Json::obj()
+            .set("network", net.name.as_str())
+            .set("plan", plan.label())
+            .set("total_cycles", rep.total_cycles)
+            .set("ms_at_freq", rep.ms_at(cfg.platform.freq_mhz))
+            .set("weight_load_cycles", rep.weight_load_cycles)
+            .set("ddr_read_bytes", rep.ddr_read_bytes)
+            .set("ddr_write_bytes", rep.ddr_write_bytes);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+
+    let mut t = Table::new(&["layer", "rate cyc/px", "first out", "last out", "out px"])
+        .title(&format!(
+            "simulate {} plan {} @ {} MHz",
+            net.name,
+            plan.label(),
+            cfg.platform.freq_mhz
+        ))
+        .label_col();
+    for lt in &rep.per_layer {
+        t.row(&[
+            lt.name.clone(),
+            lt.rate.to_string(),
+            fmt_count(lt.first_out),
+            fmt_count(lt.last_out),
+            fmt_count(lt.out_pixels),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "total: {} cycles = {:.2} ms   (weight preload {} cycles)   DDR {:.2} MB",
+        fmt_count(rep.total_cycles),
+        rep.ms_at(cfg.platform.freq_mhz),
+        fmt_count(rep.weight_load_cycles),
+        rep.total_mb(),
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<(), String> {
+    let net = load_net(args)?;
+    let cfg = AccelConfig::paper_default();
+    let seed = args.opt_usize("seed")?.unwrap_or(1) as u64;
+    let weights = Weights::random(&net, seed);
+    let objective = match (args.opt("objective").unwrap(), args.opt_usize("dsp-cap")?) {
+        (_, Some(pct)) => Objective::LatencyUnderDspCap(pct.min(100) as u8),
+        ("latency", None) => Objective::Latency,
+        ("traffic", None) => Objective::Traffic,
+        (o, _) => return Err(format!("unknown objective '{o}'")),
+    };
+
+    let mut costs = coordinator::cost_all_plans(&cfg, &net, &weights);
+    costs.sort_by_key(|c| (c.cycles, c.traffic_bytes));
+    let mut t = Table::new(&["plan", "groups", "est kcycles", "MB moved", "DSP", "BRAM36", "fits"])
+        .title(&format!("fusion-plan search over {} ({} plans)", net.name, costs.len()))
+        .label_col();
+    for c in costs.iter().take(12) {
+        t.row(&[
+            c.plan.label(),
+            c.plan.n_groups().to_string(),
+            fmt_count(c.cycles / 1000),
+            format!("{:.2}", c.traffic_bytes as f64 / (1024.0 * 1024.0)),
+            c.resources.dsp.to_string(),
+            c.resources.bram36().to_string(),
+            if c.fits { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    match coordinator::best_plan(&cfg, &net, &weights, objective) {
+        Some(best) => println!(
+            "winner under {:?}: {}  ({} kcycles, {:.2} MB, {} DSP)",
+            objective,
+            best.plan.label(),
+            fmt_count(best.cycles / 1000),
+            best.traffic_bytes as f64 / (1024.0 * 1024.0),
+            best.resources.dsp
+        ),
+        None => println!("no feasible plan under {objective:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> Result<(), String> {
+    let net = load_net(args)?;
+    let cfg = AccelConfig::paper_default();
+    let plan = parse_plan(args, net.layers.len())?;
+    let used = resources::plan_resources(&cfg, &net, &plan);
+    let u = resources::utilization(used, &cfg);
+    let p = &cfg.platform;
+    let mut t = Table::new(&["resource", "used", "available", "utilization"])
+        .title(&format!("{} plan {} on {}", net.name, plan.label(), p.name))
+        .label_col();
+    t.row(&["DSP".into(), used.dsp.to_string(), p.dsp.to_string(), format!("{:.1}%", u.dsp_pct)]);
+    t.row(&["BRAM36".into(), used.bram36().to_string(), p.bram36.to_string(), format!("{:.1}%", u.bram_pct)]);
+    t.row(&["LUT".into(), used.lut.to_string(), p.lut.to_string(), format!("{:.1}%", u.lut_pct)]);
+    t.row(&["FF".into(), used.ff.to_string(), p.ff.to_string(), format!("{:.1}%", u.ff_pct)]);
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.opt("artifacts").unwrap());
+    let name = args.opt("net").unwrap();
+    let name = if name == "vgg16-prefix7" { "tiny-vgg" } else { name }; // artifacts default
+    let rt = Runtime::load(&dir, name).map_err(|e| format!("{e:#}"))?;
+    println!("PJRT platform: {}", rt.platform_name());
+    let reports =
+        verify::verify_all(&rt, &AccelConfig::paper_default()).map_err(|e| format!("{e:#}"))?;
+    let mut t = Table::new(&["plan", "max |sim - runtime|", "tolerance", "runtime vs golden", "status"])
+        .title(&format!("verify {name}: Q16.16 simulator vs PJRT float"))
+        .label_col();
+    let mut all_ok = true;
+    for r in &reports {
+        all_ok &= r.passed;
+        t.row(&[
+            r.plan.clone(),
+            format!("{:.2e}", r.max_abs_diff),
+            format!("{:.0e}", r.tolerance),
+            format!("{:.2e}", r.golden_diff),
+            if r.passed { "PASS" } else { "FAIL" }.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    if all_ok {
+        Ok(())
+    } else {
+        Err("verification failed".to_string())
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.opt("artifacts").unwrap());
+    let name = args.opt("net").unwrap();
+    let name = if name == "vgg16-prefix7" { "tiny-vgg" } else { name };
+    let n_requests = args.opt_usize("requests")?.unwrap_or(32);
+    let n_clients = args.opt_usize("clients")?.unwrap_or(4).max(1);
+    let max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
+
+    let srv = Server::start(ServerConfig {
+        artifacts_dir: dir.clone(),
+        network: name.to_string(),
+        default_plan: "fused".to_string(),
+        batch: BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+    })
+    .map_err(|e| format!("{e:#}"))?;
+
+    let rt = Runtime::load(&dir, name).map_err(|e| format!("{e:#}"))?;
+    let (input, _) = rt.golden().map_err(|e| format!("{e:#}"))?;
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let h = srv.handle.clone();
+        let input = input.clone();
+        let per_client = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..per_client {
+                let resp = h.submit(input.clone(), None).wait().unwrap();
+                assert!(resp.result.is_ok());
+            }
+        }));
+    }
+    for j in joins {
+        j.join().map_err(|_| "client thread panicked".to_string())?;
+    }
+    let wall = t0.elapsed();
+    println!("{}", srv.handle.metrics_json());
+    println!(
+        "{} requests / {:.3} s = {:.1} req/s",
+        n_requests,
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let net = config::vgg16_prefix();
+    let seed = args.opt_usize("seed")?.unwrap_or(1) as u64;
+    let weights = Weights::random(&net, seed);
+    let engine = Engine::new(cfg.clone());
+
+    // DeCoILFNet fused.
+    let ours = engine.simulate(&net, &weights, &FusionPlan::fully_fused(7));
+    // Baselines (their published configuration ran at 100 MHz).
+    let ocfg = optimized::OptimizedConfig::zhang2015();
+    let opt = optimized::run(&ocfg, &cfg, &net);
+    let fus = fused_layer::run(&ocfg, &cfg, &net, 28);
+    // CPU (measured on this machine; single honest run).
+    let cpu_w = decoilfnet::baselines::cpu_ref::CpuWeights::random(&net, seed);
+    let input = NdTensor::random(&net.input.as_slice(), 7, -1.0, 1.0);
+    let (_, cum) = decoilfnet::baselines::cpu_ref::forward_timed(&net, &cpu_w, &input);
+    let cpu_ms = cum.last().unwrap().1;
+
+    let ours_ms = ours.ms_at(cfg.platform.freq_mhz);
+    let mut t = Table::new(&["metric", "paper", "measured"])
+        .title("E7 - headline claims")
+        .label_col();
+    t.row(&[
+        "speedup vs CPU (7 layers)".into(),
+        "39.03X".into(),
+        fmt_speedup(cpu_ms / ours_ms),
+    ]);
+    t.row(&[
+        "cycles vs Optimized [2]".into(),
+        "10951k/5034k = 2.18X".into(),
+        format!(
+            "{}k/{}k = {}",
+            opt.total_cycles / 1000,
+            ours.total_cycles / 1000,
+            fmt_speedup(opt.total_cycles as f64 / ours.total_cycles as f64)
+        ),
+    ]);
+    t.row(&[
+        "cycles vs Fused-layer [3]".into(),
+        "11655k/5034k = 2.32X".into(),
+        format!(
+            "{}k/{}k = {}",
+            fus.total_cycles / 1000,
+            ours.total_cycles / 1000,
+            fmt_speedup(fus.total_cycles as f64 / ours.total_cycles as f64)
+        ),
+    ]);
+    t.row(&[
+        "DDR traffic vs [2]".into(),
+        "77.14/6.69 = 11.5X".into(),
+        format!(
+            "{:.1}/{:.1} = {}",
+            opt.total_mb(),
+            ours.total_mb(),
+            fmt_speedup(opt.total_mb() / ours.total_mb())
+        ),
+    ]);
+    t.row(&[
+        "DDR traffic vs [3]".into(),
+        "3.64/6.69 = 0.54X".into(),
+        format!(
+            "{:.1}/{:.1} = {}",
+            fus.total_mb(),
+            ours.total_mb(),
+            fmt_speedup(fus.total_mb() / ours.total_mb())
+        ),
+    ]);
+    println!("{}", t.to_ascii());
+    println!("note: CPU wallclock measured on this machine; the paper used a Xeon E7.");
+    println!(
+        "      DeCoILFNet fused: {} cycles = {:.2} ms at {} MHz",
+        fmt_count(ours.total_cycles),
+        ours_ms,
+        cfg.platform.freq_mhz
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let net = load_net(args)?;
+    let cfg = AccelConfig::paper_default();
+    let plan = parse_plan(args, net.layers.len())?;
+    let seed = args.opt_usize("seed")?.unwrap_or(1) as u64;
+    let weights = Weights::random(&net, seed);
+    let rep = Engine::new(cfg.clone()).simulate(&net, &weights, &plan);
+    if args.has_flag("json") {
+        println!(
+            "{}",
+            decoilfnet::accel::trace::to_json(&net, &rep).to_string_pretty()
+        );
+    } else {
+        println!(
+            "pipeline timeline — {} plan {} ({} cycles):\n",
+            net.name,
+            plan.label(),
+            fmt_count(rep.total_cycles)
+        );
+        print!("{}", decoilfnet::accel::trace::ascii_gantt(&net, &rep, 64));
+    }
+    Ok(())
+}

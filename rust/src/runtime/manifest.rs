@@ -1,0 +1,216 @@
+//! Parsing of `artifacts/manifest.json` (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::Network;
+use crate::util::json::{parse, Json};
+
+/// One compiled fusion group.
+#[derive(Debug, Clone)]
+pub struct GroupEntry {
+    pub index: usize,
+    pub lo: usize,
+    pub hi: usize,
+    pub hlo: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+/// One fusion plan (ordered groups).
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    pub group_sizes: Vec<usize>,
+    pub groups: Vec<GroupEntry>,
+}
+
+/// Weight files of one conv layer.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub layer: usize,
+    pub name: String,
+    pub filter: String,
+    pub filter_shape: Vec<usize>,
+    pub bias: String,
+    pub bias_shape: Vec<usize>,
+}
+
+/// Golden verification vectors.
+#[derive(Debug, Clone)]
+pub struct GoldenEntry {
+    pub input: String,
+    pub input_shape: Vec<usize>,
+    pub output: String,
+    pub output_shape: Vec<usize>,
+}
+
+/// One network's artifact set.
+#[derive(Debug, Clone)]
+pub struct NetworkEntry {
+    pub network: Network,
+    pub weight_seed: u64,
+    pub weights: Vec<WeightEntry>,
+    pub plans: BTreeMap<String, PlanEntry>,
+    pub golden: GoldenEntry,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub networks: BTreeMap<String, NetworkEntry>,
+}
+
+fn usize_vec(j: &Json, what: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .with_context(|| format!("{what}: expected array"))?
+        .iter()
+        .map(|v| v.as_usize().with_context(|| format!("{what}: expected integers")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Manifest::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let mut networks = BTreeMap::new();
+        let nets = j
+            .get("networks")
+            .as_obj()
+            .context("manifest missing 'networks'")?;
+        for (name, nj) in nets {
+            networks.insert(name.clone(), parse_network_entry(nj)?);
+        }
+        Ok(Manifest {
+            version: j.get("version").as_u64().unwrap_or(1),
+            networks,
+        })
+    }
+}
+
+fn parse_network_entry(j: &Json) -> Result<NetworkEntry> {
+    let network = Network::from_json(j.get("network"))
+        .map_err(|e| anyhow::anyhow!("manifest network spec: {e}"))?;
+
+    let mut weights = Vec::new();
+    for wj in j.get("weights").as_arr().context("weights")? {
+        weights.push(WeightEntry {
+            layer: wj.get("layer").as_usize().context("weight.layer")?,
+            name: wj.get("name").as_str().context("weight.name")?.to_string(),
+            filter: wj.get("filter").as_str().context("weight.filter")?.to_string(),
+            filter_shape: usize_vec(wj.get("filter_shape"), "filter_shape")?,
+            bias: wj.get("bias").as_str().context("weight.bias")?.to_string(),
+            bias_shape: usize_vec(wj.get("bias_shape"), "bias_shape")?,
+        });
+    }
+
+    let mut plans = BTreeMap::new();
+    for (pname, pj) in j.get("plans").as_obj().context("plans")? {
+        let mut groups = Vec::new();
+        for gj in pj.get("groups").as_arr().context("plan.groups")? {
+            groups.push(GroupEntry {
+                index: gj.get("index").as_usize().context("group.index")?,
+                lo: gj.get("lo").as_usize().context("group.lo")?,
+                hi: gj.get("hi").as_usize().context("group.hi")?,
+                hlo: gj.get("hlo").as_str().context("group.hlo")?.to_string(),
+                in_shape: usize_vec(gj.get("in_shape"), "in_shape")?,
+                out_shape: usize_vec(gj.get("out_shape"), "out_shape")?,
+            });
+        }
+        plans.insert(
+            pname.clone(),
+            PlanEntry {
+                group_sizes: usize_vec(pj.get("group_sizes"), "group_sizes")?,
+                groups,
+            },
+        );
+    }
+
+    let gj = j.get("golden");
+    Ok(NetworkEntry {
+        network,
+        weight_seed: j.get("weight_seed").as_u64().unwrap_or(0),
+        weights,
+        plans,
+        golden: GoldenEntry {
+            input: gj.get("input").as_str().context("golden.input")?.to_string(),
+            input_shape: usize_vec(gj.get("input_shape"), "golden.input_shape")?,
+            output: gj.get("output").as_str().context("golden.output")?.to_string(),
+            output_shape: usize_vec(gj.get("output_shape"), "golden.output_shape")?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "networks": {
+        "paper-example": {
+          "network": {
+            "name": "paper-example",
+            "input": {"h": 5, "w": 5, "d": 3},
+            "layers": [
+              {"type":"conv","name":"conv_a","kernel":3,"filters":3,"stride":1,"padding":1,"relu":true},
+              {"type":"conv","name":"conv_b","kernel":3,"filters":3,"stride":1,"padding":1,"relu":true},
+              {"type":"maxpool","name":"pool","window":2,"stride":2}
+            ]
+          },
+          "weight_seed": 20180101,
+          "weights": [
+            {"layer":0,"name":"conv_a","filter":"weights/w0_filter.bin",
+             "filter_shape":[3,3,3,3],"bias":"weights/w0_bias.bin","bias_shape":[3]}
+          ],
+          "plans": {
+            "fused": {
+              "group_sizes": [3],
+              "groups": [
+                {"index":0,"lo":0,"hi":3,"hlo":"g0_0_3.hlo.txt",
+                 "in_shape":[5,5,3],"out_shape":[2,2,3]}
+              ]
+            }
+          },
+          "golden": {
+            "input":"golden_input.bin","input_shape":[5,5,3],
+            "output":"golden_output.bin","output_shape":[2,2,3]
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_str(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let e = &m.networks["paper-example"];
+        assert_eq!(e.network.layers.len(), 3);
+        assert_eq!(e.weight_seed, 20180101);
+        assert_eq!(e.weights[0].filter_shape, vec![3, 3, 3, 3]);
+        let plan = &e.plans["fused"];
+        assert_eq!(plan.group_sizes, vec![3]);
+        assert_eq!(plan.groups[0].out_shape, vec![2, 2, 3]);
+        assert_eq!(e.golden.input_shape, vec![5, 5, 3]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::from_json_str("{}").is_err());
+        assert!(Manifest::from_json_str(r#"{"networks":{"x":{}}}"#).is_err());
+    }
+
+    #[test]
+    fn network_spec_validated() {
+        // Layer type typo must be caught by Network::from_json.
+        let bad = SAMPLE.replace("maxpool", "avgpool");
+        assert!(Manifest::from_json_str(&bad).is_err());
+    }
+}

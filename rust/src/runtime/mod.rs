@@ -1,0 +1,268 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the request path. Python is never involved here.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! HLO text → `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `PjRtLoadedExecutable::execute`.
+
+pub mod manifest;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::NdTensor;
+use manifest::{Manifest, NetworkEntry, PlanEntry};
+
+/// A compiled fusion-group executable.
+pub struct GroupExecutable {
+    pub lo: usize,
+    pub hi: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GroupExecutable {
+    /// Execute the group on one input volume.
+    pub fn run(&self, input: &NdTensor) -> Result<NdTensor> {
+        if input.shape() != self.in_shape.as_slice() {
+            bail!(
+                "group [{},{}) expects shape {:?}, got {:?}",
+                self.lo,
+                self.hi,
+                self.in_shape,
+                input.shape()
+            );
+        }
+        let lit = xla::Literal::vec1(input.data()).reshape(
+            &self
+                .in_shape
+                .iter()
+                .map(|&d| d as i64)
+                .collect::<Vec<_>>(),
+        )?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(NdTensor::from_vec(&self.out_shape, values))
+    }
+}
+
+/// A loaded plan: the ordered chain of group executables for one network.
+pub struct PlanRuntime {
+    pub plan_name: String,
+    pub group_sizes: Vec<usize>,
+    pub groups: Vec<GroupExecutable>,
+}
+
+impl PlanRuntime {
+    /// Run the full network: feed each group's output to the next.
+    pub fn run(&self, input: &NdTensor) -> Result<NdTensor> {
+        let mut cur = input.clone();
+        for g in &self.groups {
+            cur = g.run(&cur).with_context(|| {
+                format!("{} group [{},{})", self.plan_name, g.lo, g.hi)
+            })?;
+        }
+        Ok(cur)
+    }
+
+    /// Run and collect each group's boundary output (for layer-level
+    /// verification against the simulator).
+    pub fn run_traced(&self, input: &NdTensor) -> Result<Vec<NdTensor>> {
+        let mut outs = Vec::new();
+        let mut cur = input.clone();
+        for g in &self.groups {
+            cur = g.run(&cur)?;
+            outs.push(cur.clone());
+        }
+        Ok(outs)
+    }
+}
+
+/// The runtime engine: a PJRT CPU client plus every compiled plan of one
+/// network from the artifacts directory.
+pub struct Runtime {
+    pub network_name: String,
+    pub artifacts_dir: PathBuf,
+    pub entry: NetworkEntry,
+    client: xla::PjRtClient,
+    plans: BTreeMap<String, PlanRuntime>,
+}
+
+impl Runtime {
+    /// Load `artifacts_dir/manifest.json` and compile every plan of
+    /// `network`. Compilation happens once at startup (the serving path only
+    /// executes).
+    pub fn load(artifacts_dir: &Path, network: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .context("loading manifest.json — run `make artifacts` first")?;
+        let entry = manifest
+            .networks
+            .get(network)
+            .with_context(|| format!("network '{network}' not in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu()?;
+        let net_dir = artifacts_dir.join(network);
+        let mut plans = BTreeMap::new();
+        for (plan_name, plan) in &entry.plans {
+            plans.insert(
+                plan_name.clone(),
+                Self::compile_plan(&client, &net_dir, plan_name, plan)?,
+            );
+        }
+        Ok(Runtime {
+            network_name: network.to_string(),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            entry,
+            client,
+            plans,
+        })
+    }
+
+    fn compile_plan(
+        client: &xla::PjRtClient,
+        net_dir: &Path,
+        plan_name: &str,
+        plan: &PlanEntry,
+    ) -> Result<PlanRuntime> {
+        let mut groups = Vec::new();
+        for g in &plan.groups {
+            let path = net_dir.join(&g.hlo);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            groups.push(GroupExecutable {
+                lo: g.lo,
+                hi: g.hi,
+                in_shape: g.in_shape.clone(),
+                out_shape: g.out_shape.clone(),
+                exe,
+            });
+        }
+        Ok(PlanRuntime {
+            plan_name: plan_name.to_string(),
+            group_sizes: plan.group_sizes.clone(),
+            groups,
+        })
+    }
+
+    pub fn plan(&self, name: &str) -> Result<&PlanRuntime> {
+        self.plans
+            .get(name)
+            .with_context(|| format!("plan '{name}' not compiled"))
+    }
+
+    pub fn plan_names(&self) -> Vec<&str> {
+        self.plans.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load the golden input/output pair exported by aot.py.
+    pub fn golden(&self) -> Result<(NdTensor, NdTensor)> {
+        let net_dir = self.artifacts_dir.join(&self.network_name);
+        let g = &self.entry.golden;
+        let input = read_f32_bin(&net_dir.join(&g.input), &g.input_shape)?;
+        let output = read_f32_bin(&net_dir.join(&g.output), &g.output_shape)?;
+        Ok((input, output))
+    }
+
+    /// Load the network's weights (filters + biases) for the simulator.
+    pub fn weights_tensors(&self) -> Result<Vec<(NdTensor, NdTensor)>> {
+        let net_dir = self.artifacts_dir.join(&self.network_name);
+        let mut out = Vec::new();
+        for w in &self.entry.weights {
+            let filt = read_f32_bin(&net_dir.join(&w.filter), &w.filter_shape)?;
+            let bias = read_f32_bin(&net_dir.join(&w.bias), &w.bias_shape)?;
+            out.push((filt, bias));
+        }
+        Ok(out)
+    }
+}
+
+/// Read a raw little-endian f32 binary into a tensor of the given shape.
+pub fn read_f32_bin(path: &Path, shape: &[usize]) -> Result<NdTensor> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let n: usize = shape.iter().product();
+    if bytes.len() != n * 4 {
+        bail!(
+            "{}: expected {} f32 values ({} bytes), found {} bytes",
+            path.display(),
+            n,
+            n * 4,
+            bytes.len()
+        );
+    }
+    let mut vals = Vec::with_capacity(n);
+    for chunk in bytes.chunks_exact(4) {
+        vals.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(NdTensor::from_vec(shape, vals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn load_and_run_paper_example_golden() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let (input, want) = rt.golden().unwrap();
+        for plan_name in rt.plan_names() {
+            let got = rt.plan(plan_name).unwrap().run(&input).unwrap();
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-3, "plan {plan_name}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn fused_and_unfused_plans_agree() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::load(&dir, "tiny-vgg").unwrap();
+        let (input, _) = rt.golden().unwrap();
+        let a = rt.plan("fused").unwrap().run(&input).unwrap();
+        let b = rt.plan("unfused").unwrap().run(&input).unwrap();
+        let diff = a.max_abs_diff(&b);
+        assert!(diff < 1e-3, "plans disagree by {diff}");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let bad = NdTensor::zeros(&[4, 4, 3]);
+        assert!(rt.plan("fused").unwrap().run(&bad).is_err());
+    }
+
+    #[test]
+    fn weights_load_with_declared_shapes() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::load(&dir, "tiny-vgg").unwrap();
+        let ws = rt.weights_tensors().unwrap();
+        assert_eq!(ws.len(), 5); // 5 conv layers
+        assert_eq!(ws[0].0.shape(), &[8, 3, 3, 3]);
+        assert_eq!(ws[0].1.shape(), &[8]);
+    }
+}

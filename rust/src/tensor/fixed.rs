@@ -1,0 +1,247 @@
+//! Q16.16 fixed-point arithmetic — the accelerator datapath number format.
+//!
+//! Table IV of the paper lists DeCoILFNet's precision as "32 bits fixed"
+//! (vs 32-bit float for the two baseline accelerators). We model that with a
+//! signed Q16.16: 1 sign + 15 integer + 16 fraction bits, saturating on
+//! overflow the way a hardened DSP datapath would be configured.
+//!
+//! Multiplication uses the full 64-bit product then a round-to-nearest shift,
+//! matching a DSP48E1 multiplier (25×18 cascades produce the full product;
+//! the accumulator keeps guard bits; the final output is re-quantized).
+
+/// Number of fraction bits.
+pub const FRAC_BITS: u32 = 16;
+/// Fixed-point scale factor (2^16).
+pub const SCALE: i64 = 1 << FRAC_BITS;
+
+/// A Q16.16 signed fixed-point value stored in 32 bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fx(pub i32);
+
+impl Fx {
+    pub const ZERO: Fx = Fx(0);
+    pub const ONE: Fx = Fx(SCALE as i32);
+    pub const MAX: Fx = Fx(i32::MAX);
+    pub const MIN: Fx = Fx(i32::MIN);
+
+    /// Quantize an f32 (round to nearest, saturate).
+    pub fn from_f32(v: f32) -> Fx {
+        let scaled = (v as f64) * SCALE as f64;
+        let r = scaled.round();
+        if r >= i32::MAX as f64 {
+            Fx::MAX
+        } else if r <= i32::MIN as f64 {
+            Fx::MIN
+        } else {
+            Fx(r as i32)
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / SCALE as f32
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / SCALE as f64
+    }
+
+    /// Saturating addition (datapath adders saturate rather than wrap).
+    pub fn add(self, rhs: Fx) -> Fx {
+        Fx(self.0.saturating_add(rhs.0))
+    }
+
+    pub fn sub(self, rhs: Fx) -> Fx {
+        Fx(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Saturating multiply with round-to-nearest requantization.
+    pub fn mul(self, rhs: Fx) -> Fx {
+        let full = self.0 as i64 * rhs.0 as i64; // Q32.32 in 64 bits, exact
+        let rounded = (full + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        saturate_i64(rounded)
+    }
+
+    /// ReLU — trivially free in the datapath (sign-bit mux), as the paper notes.
+    pub fn relu(self) -> Fx {
+        if self.0 < 0 {
+            Fx::ZERO
+        } else {
+            self
+        }
+    }
+
+    pub fn max(self, rhs: Fx) -> Fx {
+        if self.0 >= rhs.0 {
+            self
+        } else {
+            rhs
+        }
+    }
+
+    /// Absolute quantization step of this format.
+    pub fn epsilon() -> f64 {
+        1.0 / SCALE as f64
+    }
+}
+
+fn saturate_i64(v: i64) -> Fx {
+    if v > i32::MAX as i64 {
+        Fx::MAX
+    } else if v < i32::MIN as i64 {
+        Fx::MIN
+    } else {
+        Fx(v as i32)
+    }
+}
+
+/// A widened multiply-accumulate register: DSP accumulators keep the full
+/// Q32.32 product plus guard bits, so chained MACs only quantize once at the
+/// end. This is exactly how the paper's adder trees behave (LUT adders over
+/// full-width partial products) and it is what keeps fixed-point conv error
+/// at ~1 ulp instead of O(taps) ulps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MacAcc(pub i64);
+
+impl MacAcc {
+    pub fn new() -> MacAcc {
+        MacAcc(0)
+    }
+
+    /// acc += a*b, full precision (Q32.32 partial sums in i64 guard space).
+    pub fn mac(&mut self, a: Fx, b: Fx) {
+        self.0 = self.0.saturating_add(a.0 as i64 * b.0 as i64);
+    }
+
+    /// Add another accumulator (adder-tree node).
+    pub fn add_acc(&mut self, other: MacAcc) {
+        self.0 = self.0.saturating_add(other.0);
+    }
+
+    /// Add a bias expressed in Q16.16 (align to Q32.32 before summing).
+    pub fn add_bias(&mut self, bias: Fx) {
+        self.0 = self.0.saturating_add((bias.0 as i64) << FRAC_BITS);
+    }
+
+    /// Final requantization to Q16.16 with round-to-nearest.
+    pub fn finish(self) -> Fx {
+        let rounded = (self.0 + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        saturate_i64(rounded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for v in [-2.0f32, -0.5, 0.0, 0.25, 1.0, 100.5] {
+            assert_eq!(Fx::from_f32(v).to_f32(), v);
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        prop::check_default(
+            "fx-quant-error",
+            |r: &mut Rng| r.range_f32(-1000.0, 1000.0),
+            |&v| {
+                let q = Fx::from_f32(v).to_f64();
+                let err = (q - v as f64).abs();
+                if err <= 0.5 * Fx::epsilon() + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("err {err} for {v}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn add_mul_match_float_within_ulp() {
+        prop::check_default(
+            "fx-arith",
+            |r: &mut Rng| (r.range_f32(-100.0, 100.0), r.range_f32(-100.0, 100.0)),
+            |&(a, b)| {
+                let fa = Fx::from_f32(a);
+                let fb = Fx::from_f32(b);
+                let sum_err = (fa.add(fb).to_f64() - (fa.to_f64() + fb.to_f64())).abs();
+                if sum_err > 1e-9 {
+                    return Err(format!("add err {sum_err}"));
+                }
+                let prod_err = (fa.mul(fb).to_f64() - fa.to_f64() * fb.to_f64()).abs();
+                if prod_err > Fx::epsilon() {
+                    return Err(format!("mul err {prod_err}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn saturation_add() {
+        assert_eq!(Fx::MAX.add(Fx::ONE), Fx::MAX);
+        assert_eq!(Fx::MIN.add(Fx(-1)), Fx::MIN);
+    }
+
+    #[test]
+    fn saturation_mul() {
+        let big = Fx::from_f32(30000.0);
+        assert_eq!(big.mul(big), Fx::MAX);
+        let neg = Fx::from_f32(-30000.0);
+        assert_eq!(neg.mul(big), Fx::MIN);
+    }
+
+    #[test]
+    fn relu_and_max() {
+        assert_eq!(Fx::from_f32(-3.0).relu(), Fx::ZERO);
+        assert_eq!(Fx::from_f32(3.0).relu(), Fx::from_f32(3.0));
+        assert_eq!(Fx::from_f32(1.0).max(Fx::from_f32(2.0)), Fx::from_f32(2.0));
+    }
+
+    #[test]
+    fn mac_chain_single_quantization() {
+        // Sum of 1024 products of small values: the widened accumulator's
+        // error must stay ~1 quantization step, not grow with chain length.
+        let mut rng = Rng::new(77);
+        let mut acc = MacAcc::new();
+        let mut exact = 0.0f64;
+        for _ in 0..1024 {
+            let a = Fx::from_f32(rng.range_f32(-1.0, 1.0));
+            let b = Fx::from_f32(rng.range_f32(-1.0, 1.0));
+            acc.mac(a, b);
+            exact += a.to_f64() * b.to_f64();
+        }
+        let err = (acc.finish().to_f64() - exact).abs();
+        assert!(err <= Fx::epsilon(), "err={err}");
+    }
+
+    #[test]
+    fn mac_bias_alignment() {
+        let mut acc = MacAcc::new();
+        acc.mac(Fx::from_f32(2.0), Fx::from_f32(3.0));
+        acc.add_bias(Fx::from_f32(0.5));
+        assert_eq!(acc.finish().to_f32(), 6.5);
+    }
+
+    #[test]
+    fn adder_tree_combination() {
+        let mut a = MacAcc::new();
+        a.mac(Fx::ONE, Fx::ONE);
+        let mut b = MacAcc::new();
+        b.mac(Fx::from_f32(2.0), Fx::ONE);
+        a.add_acc(b);
+        assert_eq!(a.finish().to_f32(), 3.0);
+    }
+
+    #[test]
+    fn rounding_is_to_nearest() {
+        // 0.5 * (1 + 2^-16): product is 0.5 + 2^-17, rounds up to 0.5 + 2^-16.
+        let a = Fx::from_f32(0.5);
+        let b = Fx(SCALE as i32 + 1);
+        let got = a.mul(b);
+        assert_eq!(got.0, (SCALE / 2) as i32 + 1);
+    }
+}

@@ -1,0 +1,345 @@
+//! Dense tensors and fixed-point arithmetic.
+//!
+//! `NdTensor` is a minimal row-major f32 tensor sized for this repo's needs
+//! (feature maps, filter banks, reference convolutions). The accelerator
+//! simulator uses [`fixed::Fx`] Q16.16 values internally; conversion helpers
+//! live here.
+
+pub mod fixed;
+
+use fixed::Fx;
+
+/// Row-major dense f32 tensor with runtime shape.
+///
+/// Layout convention across the repo (matches the paper's streaming order and
+/// the JAX side's NHWC): feature maps are `[h, w, c]`, filter banks are
+/// `[k, kh, kw, c]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdTensor {
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl NdTensor {
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> NdTensor {
+        let n: usize = shape.iter().product();
+        NdTensor {
+            shape: shape.to_vec(),
+            strides: row_major_strides(shape),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Build from existing data; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> NdTensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            data.len(),
+            n,
+            "data length {} != shape product {} for {:?}",
+            data.len(),
+            n,
+            shape
+        );
+        NdTensor {
+            shape: shape.to_vec(),
+            strides: row_major_strides(shape),
+            data,
+        }
+    }
+
+    /// Deterministic pseudo-random tensor in `[lo, hi)`.
+    pub fn random(shape: &[usize], seed: u64, lo: f32, hi: f32) -> NdTensor {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut t = NdTensor::zeros(shape);
+        rng.fill_f32(&mut t.data, lo, hi);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len(), "index rank mismatch");
+        let mut off = 0;
+        for (i, (&ix, &st)) in idx.iter().zip(&self.strides).enumerate() {
+            debug_assert!(
+                ix < self.shape[i],
+                "index {ix} out of bounds for dim {i} of extent {}",
+                self.shape[i]
+            );
+            off += ix * st;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// 3-D accessor `[h, w, c]` — the hot path for feature maps; avoids the
+    /// slice-building overhead of `get`.
+    #[inline]
+    pub fn at3(&self, y: usize, x: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[y * self.strides[0] + x * self.strides[1] + c]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, y: usize, x: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 3);
+        let off = y * self.strides[0] + x * self.strides[1] + c;
+        self.data[off] = v;
+    }
+
+    /// 4-D accessor `[k, kh, kw, c]` for filter banks.
+    #[inline]
+    pub fn at4(&self, k: usize, y: usize, x: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        self.data[k * self.strides[0] + y * self.strides[1] + x * self.strides[2] + c]
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> NdTensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape element count mismatch");
+        NdTensor::from_vec(shape, self.data.clone())
+    }
+
+    /// Elementwise maximum absolute difference vs another tensor.
+    pub fn max_abs_diff(&self, other: &NdTensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean absolute value (used for relative-error reporting).
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|v| v.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Quantize every element to Q16.16.
+    pub fn to_fixed(&self) -> FxTensor {
+        FxTensor {
+            shape: self.shape.clone(),
+            strides: self.strides.clone(),
+            data: self.data.iter().map(|&v| Fx::from_f32(v)).collect(),
+        }
+    }
+}
+
+/// Fixed-point tensor — what actually flows through the simulated datapath.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FxTensor {
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+    data: Vec<Fx>,
+}
+
+impl FxTensor {
+    pub fn zeros(shape: &[usize]) -> FxTensor {
+        let n: usize = shape.iter().product();
+        FxTensor {
+            shape: shape.to_vec(),
+            strides: row_major_strides(shape),
+            data: vec![Fx::ZERO; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[Fx] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [Fx] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn at3(&self, y: usize, x: usize, c: usize) -> Fx {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[y * self.strides[0] + x * self.strides[1] + c]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, y: usize, x: usize, c: usize, v: Fx) {
+        debug_assert_eq!(self.shape.len(), 3);
+        let off = y * self.strides[0] + x * self.strides[1] + c;
+        self.data[off] = v;
+    }
+
+    #[inline]
+    pub fn at4(&self, k: usize, y: usize, x: usize, c: usize) -> Fx {
+        debug_assert_eq!(self.shape.len(), 4);
+        self.data[k * self.strides[0] + y * self.strides[1] + x * self.strides[2] + c]
+    }
+
+    /// Row-major slice of channel values at (y, x) — the depth-concatenated
+    /// "wide word" of the paper, contiguous by construction.
+    #[inline]
+    pub fn pixel(&self, y: usize, x: usize) -> &[Fx] {
+        debug_assert_eq!(self.shape.len(), 3);
+        let c = self.shape[2];
+        let off = y * self.strides[0] + x * self.strides[1];
+        &self.data[off..off + c]
+    }
+
+    pub fn to_f32(&self) -> NdTensor {
+        NdTensor {
+            shape: self.shape.clone(),
+            strides: self.strides.clone(),
+            data: self.data.iter().map(|v| v.to_f32()).collect(),
+        }
+    }
+}
+
+fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(row_major_strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(row_major_strides(&[5]), vec![1]);
+        assert_eq!(row_major_strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut t = NdTensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.5);
+        assert_eq!(t.get(&[1, 2, 3]), 7.5);
+        assert_eq!(t.at3(1, 2, 3), 7.5);
+        assert_eq!(t.get(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn at3_matches_get_everywhere() {
+        let t = NdTensor::random(&[4, 5, 3], 1, -1.0, 1.0);
+        for y in 0..4 {
+            for x in 0..5 {
+                for c in 0..3 {
+                    assert_eq!(t.get(&[y, x, c]), t.at3(y, x, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn at4_matches_layout() {
+        let data: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let t = NdTensor::from_vec(&[2, 3, 3, 2], data);
+        assert_eq!(t.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(t.at4(0, 0, 0, 1), 1.0);
+        assert_eq!(t.at4(1, 0, 0, 0), 18.0);
+        assert_eq!(t.at4(1, 2, 2, 1), 35.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn from_vec_length_mismatch_panics() {
+        NdTensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_range() {
+        let a = NdTensor::random(&[10, 10, 3], 42, -2.0, 2.0);
+        let b = NdTensor::random(&[10, 10, 3], 42, -2.0, 2.0);
+        assert_eq!(a, b);
+        assert!(a.data().iter().all(|&v| (-2.0..2.0).contains(&v)));
+        let c = NdTensor::random(&[10, 10, 3], 43, -2.0, 2.0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fixed_roundtrip_error_bounded() {
+        let t = NdTensor::random(&[6, 6, 4], 7, -10.0, 10.0);
+        let back = t.to_fixed().to_f32();
+        assert!(t.max_abs_diff(&back) <= 0.5 * fixed::Fx::epsilon() as f32 + 1e-9);
+    }
+
+    #[test]
+    fn pixel_is_depth_contiguous() {
+        let mut t = FxTensor::zeros(&[2, 2, 3]);
+        t.set3(1, 0, 0, Fx::from_f32(1.0));
+        t.set3(1, 0, 1, Fx::from_f32(2.0));
+        t.set3(1, 0, 2, Fx::from_f32(3.0));
+        let px = t.pixel(1, 0);
+        assert_eq!(
+            px.iter().map(|v| v.to_f32()).collect::<Vec<_>>(),
+            vec![1.0, 2.0, 3.0]
+        );
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = NdTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.get(&[0, 1]), 2.0);
+        assert_eq!(r.get(&[2, 1]), 6.0);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = NdTensor::from_vec(&[3], vec![1.0, -2.0, 3.0]);
+        let b = NdTensor::from_vec(&[3], vec![1.5, -2.0, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        assert!((a.mean_abs() - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,209 @@
+//! Micro-bench harness ("criterion-lite").
+//!
+//! criterion is unavailable offline; `cargo bench` benches in this repo use
+//! `harness = false` and drive this module: warmup, fixed-duration sampling,
+//! robust stats, and black-box value sinking so the optimizer cannot delete
+//! the measured work.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{fmt_ns, Summary};
+
+/// Prevent the optimizer from removing a computed value.
+/// (std::hint::black_box is stable since 1.66.)
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Bench configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+/// Quick config for long-running end-to-end benches where one iteration takes
+/// hundreds of ms — fewer samples, shorter budget.
+pub fn e2e_config() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(3),
+        min_samples: 3,
+        max_samples: 30,
+    }
+}
+
+/// Result of one bench.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.summary.median
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (n={}, ±{} mad, p95 {})",
+            self.name,
+            fmt_ns(self.summary.median),
+            self.summary.n,
+            fmt_ns(self.summary.mad),
+            fmt_ns(self.summary.p95),
+        )
+    }
+}
+
+/// A bench group that prints results as it goes and collects them.
+pub struct Bencher {
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher {
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Bencher {
+        Bencher {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, auto-scaling iterations per sample so each sample takes
+    /// ≥ ~1ms (amortizes timer overhead for fast bodies).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + calibration: how many iters fit in ~1ms?
+        let warm_end = Instant::now() + self.cfg.warmup;
+        let mut calib_iters: u64 = 0;
+        let calib_start = Instant::now();
+        while Instant::now() < warm_end {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters_per_sample = ((1e6 / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let measure_end = Instant::now() + self.cfg.measure;
+        while (Instant::now() < measure_end || samples.len() < self.cfg.min_samples)
+            && samples.len() < self.cfg.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters_per_sample as f64;
+            samples.push(dt);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters_per_sample,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Measure a body once (for very expensive bodies where statistics over
+    /// repeated runs are unaffordable); still repeated `min_samples` times.
+    pub fn bench_once<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        let mut samples = Vec::new();
+        for _ in 0..self.cfg.min_samples.max(1) {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters_per_sample: 1,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            min_samples: 3,
+            max_samples: 10,
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::with_config(fast_cfg());
+        let r = b.bench("sum", || (0..1000u64).sum::<u64>());
+        assert!(r.ns_per_iter() > 0.0);
+        assert!(r.summary.n >= 3);
+    }
+
+    #[test]
+    fn slower_body_measures_slower() {
+        let mut b = Bencher::with_config(fast_cfg());
+        let fast = b.bench("fast", || (0..100u64).sum::<u64>()).ns_per_iter();
+        let slow = b
+            .bench("slow", || (0..100_000u64).fold(0u64, |a, x| a ^ x.wrapping_mul(3)))
+            .ns_per_iter();
+        assert!(
+            slow > fast * 5.0,
+            "expected clear separation, fast={fast} slow={slow}"
+        );
+    }
+
+    #[test]
+    fn bench_once_runs_min_samples() {
+        let mut b = Bencher::with_config(fast_cfg());
+        let mut count = 0;
+        b.bench_once("count", || {
+            count += 1;
+        });
+        assert_eq!(count, 3);
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = Bencher::with_config(fast_cfg());
+        b.bench("a", || 1 + 1);
+        b.bench("b", || 2 + 2);
+        assert_eq!(b.results.len(), 2);
+        assert_eq!(b.results[0].name, "a");
+    }
+}

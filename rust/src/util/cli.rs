@@ -1,0 +1,199 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports: `prog <subcommand> [--flag] [--key value] [--key=value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Declared option/flag spec for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name). `known` validates option
+    /// names; unknown `--options` are an error so typos fail fast.
+    pub fn parse(argv: &[String], known: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("option --{name} needs a value"))?,
+                    };
+                    out.options.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg.clone());
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        // Fill defaults.
+        for spec in known {
+            if let Some(d) = spec.default {
+                out.options.entry(spec.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Render a help string from the spec list.
+pub fn render_help(prog: &str, subcommands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut s = format!("usage: {prog} <subcommand> [options]\n\nsubcommands:\n");
+    let wid = subcommands.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {:wid$}  {}\n", name, help, wid = wid));
+    }
+    s.push_str("\noptions:\n");
+    let wid = opts.iter().map(|o| o.name.len()).max().unwrap_or(0) + 2;
+    for o in opts {
+        let name = format!("--{}", o.name);
+        let d = o
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  {:wid$}  {}{}\n", name, o.help, d, wid = wid));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "layers",
+                takes_value: true,
+                help: "number of layers",
+                default: Some("7"),
+            },
+            OptSpec {
+                name: "verbose",
+                takes_value: false,
+                help: "chatty output",
+                default: None,
+            },
+        ]
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_positionals() {
+        let a = Args::parse(
+            &argv(&["simulate", "--layers", "5", "--verbose", "net.json"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("layers"), Some("5"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["net.json"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv(&["run", "--layers=3"]), &specs()).unwrap();
+        assert_eq!(a.opt_usize("layers").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let a = Args::parse(&argv(&["run"]), &specs()).unwrap();
+        assert_eq!(a.opt("layers"), Some("7"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::parse(&argv(&["run", "--bogus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["run", "--layers"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(Args::parse(&argv(&["run", "--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_int_reports_nicely() {
+        let a = Args::parse(&argv(&["run", "--layers", "abc"]), &specs()).unwrap();
+        let e = a.opt_usize("layers").unwrap_err();
+        assert!(e.contains("abc"));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("decoilfnet", &[("simulate", "run the simulator")], &specs());
+        assert!(h.contains("simulate"));
+        assert!(h.contains("--layers"));
+        assert!(h.contains("default: 7"));
+    }
+}

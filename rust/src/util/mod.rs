@@ -1,0 +1,12 @@
+//! Offline utility substrate: JSON, CLI parsing, PRNG, property tests,
+//! table rendering, statistics, and a micro-bench harness.
+//!
+//! These exist because the build environment vendors only the `xla` crate's
+//! dependency closure — serde/clap/rand/proptest/criterion are unavailable.
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;

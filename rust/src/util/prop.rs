@@ -1,0 +1,155 @@
+//! Property-test runner ("proptest-lite").
+//!
+//! `proptest` is unavailable offline; this provides the part we rely on:
+//! run a property over many PRNG-generated cases with a fixed seed, and on
+//! failure report the seed + case index so the exact case replays, plus a
+//! greedy integer-shrink helper for the common "vector of sizes" inputs.
+
+use super::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 128,
+            seed: 0xDEC0117,
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` draws one case from the
+/// RNG; `prop` returns `Err(msg)` to fail. Panics with a replayable report.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for i in 0..cfg.cases {
+        // Fork per case: failures replay from (seed, i) without regenerating
+        // the preceding cases.
+        let mut case_rng = Rng::new(cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {i}/{} (seed=0x{:X}):\n  input: {:?}\n  error: {msg}",
+                cfg.cases, cfg.seed, input
+            );
+        }
+        // keep the top-level rng advancing so `gen` may also use it if captured
+        let _ = rng.next_u64();
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, PropConfig::default(), gen, prop);
+}
+
+/// Greedy shrink of a failing `Vec<usize>` case: repeatedly try removing
+/// elements and halving values while the property still fails. Returns the
+/// smallest failing input found. Used by tests that want minimal repros.
+pub fn shrink_vec_usize(
+    mut input: Vec<usize>,
+    mut fails: impl FnMut(&[usize]) -> bool,
+) -> Vec<usize> {
+    debug_assert!(fails(&input), "shrink called on a passing input");
+    loop {
+        let mut progressed = false;
+        // Try dropping each element.
+        let mut i = 0;
+        while i < input.len() {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if fails(&cand) {
+                input = cand;
+                progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Try halving each element.
+        for i in 0..input.len() {
+            while input[i] > 0 {
+                let mut cand = input.clone();
+                cand[i] /= 2;
+                if fails(&cand) {
+                    input = cand;
+                    progressed = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !progressed {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0usize;
+        check_default(
+            "count",
+            |r| r.below(100),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, PropConfig::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_report() {
+        check_default("always-fails", |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check_default(
+            "collect1",
+            |r| r.next_u64(),
+            |v| {
+                first.push(*v);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = Vec::new();
+        check_default(
+            "collect2",
+            |r| r.next_u64(),
+            |v| {
+                second.push(*v);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn shrink_finds_minimal_vec() {
+        // Property fails iff the vec contains an element >= 10.
+        let failing = vec![3, 17, 5, 40];
+        let min = shrink_vec_usize(failing, |xs| xs.iter().any(|&x| x >= 10));
+        assert_eq!(min, vec![10]);
+    }
+}

@@ -1,0 +1,245 @@
+//! ASCII / markdown table rendering for experiment reports.
+//!
+//! Every bench prints a "paper row vs measured row" table; this keeps the
+//! formatting in one place and identical across benches and the CLI `report`
+//! subcommand.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: &str) -> Table {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    /// Set alignment per column (defaults to Right; first column commonly Left).
+    pub fn align(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Convenience: left-align the first column only.
+    pub fn label_col(mut self) -> Table {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn pad(cell: &str, width: usize, align: Align) -> String {
+        let len = cell.chars().count();
+        let gap = width.saturating_sub(len);
+        match align {
+            Align::Left => format!("{}{}", cell, " ".repeat(gap)),
+            Align::Right => format!("{}{}", " ".repeat(gap), cell),
+        }
+    }
+
+    /// Render as a boxed ASCII table.
+    pub fn to_ascii(&self) -> String {
+        let w = self.widths();
+        let sep: String = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push(' ');
+            out.push_str(&Self::pad(h, w[i], self.aligns[i]));
+            out.push_str(" |");
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                out.push(' ');
+                out.push_str(&Self::pad(c, w[i], self.aligns[i]));
+                out.push_str(" |");
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("**{}**\n\n", t));
+        }
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push(' ');
+            out.push_str(&Self::pad(h, w[i], self.aligns[i]));
+            out.push_str(" |");
+        }
+        out.push('\n');
+        out.push('|');
+        for (i, _) in self.headers.iter().enumerate() {
+            match self.aligns[i] {
+                Align::Left => out.push_str(&format!("{}|", "-".repeat(w[i] + 2))),
+                Align::Right => out.push_str(&format!("{}:|", "-".repeat(w[i] + 1))),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                out.push(' ');
+                out.push_str(&Self::pad(c, w[i], self.aligns[i]));
+                out.push_str(" |");
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a speedup ratio the way the paper prints them ("30.93X").
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{:.0}X", x)
+    } else if x >= 10.0 {
+        format!("{:.1}X", x)
+    } else {
+        format!("{:.2}X", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new(&["layer", "cycles", "ms"]).label_col();
+        t.row_strs(&["conv1_1", "3211264", "26.76"]);
+        t.row_strs(&["conv1_2", "3241000", "27.01"]);
+        t
+    }
+
+    #[test]
+    fn ascii_contains_cells_and_borders() {
+        let s = sample().to_ascii();
+        assert!(s.contains("conv1_1"));
+        assert!(s.contains("3211264"));
+        assert!(s.starts_with('+'));
+        let lines: Vec<&str> = s.lines().collect();
+        // top border, header, mid border, 2 rows, bottom border
+        assert_eq!(lines.len(), 6);
+        // all lines the same width
+        let widths: Vec<usize> = lines.iter().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].contains("-|") || lines[1].contains(":-") || lines[1].contains("-:"));
+        assert!(lines[2].starts_with("| conv1_1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn alignment() {
+        let mut t = Table::new(&["name", "val"]).label_col();
+        t.row_strs(&["x", "1"]);
+        let s = t.to_ascii();
+        // left-aligned label has trailing spaces, right-aligned value leading.
+        assert!(s.contains("| x    |"));
+        assert!(s.contains("|   1 |"));
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(4.283), "4.28X");
+        assert_eq!(fmt_speedup(30.93), "30.9X");
+        assert_eq!(fmt_speedup(123.4), "123X");
+    }
+
+    #[test]
+    fn title_rendering() {
+        let mut t = Table::new(&["a"]).title("Table II");
+        t.row_strs(&["1"]);
+        assert!(t.to_ascii().starts_with("Table II\n"));
+        assert!(t.to_markdown().starts_with("**Table II**"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Simulator ↔ runtime cross-verification (DESIGN.md §Validation-chain #5).
+//!
+//! The rust engine computes the network in the Q16.16 datapath; the PJRT
+//! runtime executes the JAX-lowered float32 HLO. Both consume the *same*
+//! weights (the aot.py binaries), so agreement within quantization tolerance
+//! verifies the entire stack end to end — kernels, lowering, the runtime's
+//! buffer plumbing, and the simulator's arithmetic.
+
+use anyhow::Result;
+
+use crate::accel::{Engine, Weights};
+use crate::config::AccelConfig;
+use crate::runtime::Runtime;
+use crate::tensor::NdTensor;
+
+/// Outcome of one verification run.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub network: String,
+    pub plan: String,
+    /// max |simulator − runtime| over the final output.
+    pub max_abs_diff: f32,
+    /// mean |runtime| — scale reference for the tolerance.
+    pub mean_abs: f32,
+    pub tolerance: f32,
+    pub passed: bool,
+    /// runtime output vs the aot.py golden output (python-side reference).
+    pub golden_diff: f32,
+}
+
+/// Default tolerance: the fixed-point datapath quantizes inputs, weights and
+/// every layer boundary to Q16.16; with ReLU networks of this depth the
+/// accumulated error stays well under 1e-2 absolute for unit-scale data.
+pub const DEFAULT_TOLERANCE: f32 = 2e-2;
+
+/// Verify one plan of one network.
+pub fn verify_plan(
+    rt: &Runtime,
+    cfg: &AccelConfig,
+    plan_name: &str,
+    input: &NdTensor,
+    tolerance: f32,
+) -> Result<VerifyReport> {
+    // Runtime (float HLO) path.
+    let plan = rt.plan(plan_name)?;
+    let runtime_out = plan.run(input)?;
+
+    // Golden check (python reference, only valid for the golden input).
+    let (golden_in, golden_out) = rt.golden()?;
+    let golden_diff = if golden_in == *input {
+        runtime_out.max_abs_diff(&golden_out)
+    } else {
+        f32::NAN
+    };
+
+    // Simulator (fixed-point) path with the same weights.
+    let weights = Weights::from_tensors(&rt.entry.network, rt.weights_tensors()?);
+    let engine = Engine::new(cfg.clone());
+    let sim_out = engine
+        .forward_fx(&rt.entry.network, &weights, input)
+        .to_f32();
+
+    let max_abs_diff = sim_out.max_abs_diff(&runtime_out);
+    Ok(VerifyReport {
+        network: rt.network_name.clone(),
+        plan: plan_name.to_string(),
+        max_abs_diff,
+        mean_abs: runtime_out.mean_abs(),
+        tolerance,
+        passed: max_abs_diff <= tolerance,
+        golden_diff,
+    })
+}
+
+/// Verify every plan of a network against the golden input.
+pub fn verify_all(rt: &Runtime, cfg: &AccelConfig) -> Result<Vec<VerifyReport>> {
+    let (input, _) = rt.golden()?;
+    rt.plan_names()
+        .into_iter()
+        .map(|p| verify_plan(rt, cfg, p, &input, DEFAULT_TOLERANCE))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            eprintln!("skipping verify test: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn simulator_matches_runtime_paper_example() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::load(&dir, "paper-example").unwrap();
+        let reports = verify_all(&rt, &AccelConfig::paper_default()).unwrap();
+        assert!(!reports.is_empty());
+        for r in reports {
+            assert!(
+                r.passed,
+                "{} / {}: diff {} > tol {}",
+                r.network, r.plan, r.max_abs_diff, r.tolerance
+            );
+            assert!(r.golden_diff < 1e-3, "runtime vs golden: {}", r.golden_diff);
+        }
+    }
+
+    #[test]
+    fn simulator_matches_runtime_tiny_vgg() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::load(&dir, "tiny-vgg").unwrap();
+        let reports = verify_all(&rt, &AccelConfig::paper_default()).unwrap();
+        for r in reports {
+            assert!(
+                r.passed,
+                "{} / {}: diff {} > tol {} (mean |y| {})",
+                r.network, r.plan, r.max_abs_diff, r.tolerance, r.mean_abs
+            );
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Cross-module integration: functional datapath ↔ CPU reference ↔ timing
+//! engine ↔ baselines, on multiple networks and seeds (no artifacts needed).
+
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::baselines::cpu_ref::{self, CpuWeights};
+use decoilfnet::baselines::{fused_layer, optimized};
+use decoilfnet::config::{
+    custom_4conv, paper_test_example, tiny_vgg, vgg16_prefix, AccelConfig, Network,
+};
+use decoilfnet::resources::plan_resources;
+use decoilfnet::tensor::NdTensor;
+
+fn engine() -> Engine {
+    Engine::new(AccelConfig::paper_default())
+}
+
+/// The Q16.16 datapath must track the f32 CPU reference on every builtin
+/// small network, across seeds.
+#[test]
+fn fixed_point_tracks_float_across_networks_and_seeds() {
+    for net in [paper_test_example(), tiny_vgg()] {
+        for seed in [1u64, 7, 42] {
+            let wx = Weights::random(&net, seed);
+            let wf = CpuWeights::random(&net, seed);
+            let input = NdTensor::random(&net.input.as_slice(), seed ^ 0xABC, -1.0, 1.0);
+            let fx = engine().forward_fx(&net, &wx, &input).to_f32();
+            let cpu = cpu_ref::forward(&net, &wf, &input);
+            let diff = fx.max_abs_diff(&cpu);
+            assert!(
+                diff < 2e-2,
+                "{} seed {seed}: fixed vs float diff {diff}",
+                net.name
+            );
+        }
+    }
+}
+
+/// Random weights generated for the simulator and the CPU baseline from the
+/// same seed must be numerically identical (they share the PRNG protocol).
+#[test]
+fn weight_generation_protocols_agree() {
+    let net = tiny_vgg();
+    let wx = Weights::random(&net, 33);
+    let wf = CpuWeights::random(&net, 33);
+    for (i, t) in wf.tensors.iter().enumerate() {
+        match (t, &wx.banks[i]) {
+            (None, None) => {}
+            (Some((filt, bias)), Some(banks)) => {
+                // Spot-check through the banked layout.
+                let k = filt.shape()[0];
+                let d = filt.shape()[3];
+                for f in (0..k).step_by(3) {
+                    for c in (0..d).step_by(2) {
+                        let got = banks.tap(f, 4)[c].to_f32();
+                        let want = filt.at4(f, 1, 1, c);
+                        assert!(
+                            (got - want).abs() < 2e-5,
+                            "layer {i} filter {f} ch {c}: {got} vs {want}"
+                        );
+                    }
+                    let b = banks.bias(f).to_f32();
+                    assert!((b - bias.get(&[f])).abs() < 2e-5);
+                }
+            }
+            _ => panic!("layer {i}: weight presence mismatch"),
+        }
+    }
+}
+
+/// Cycle counts must be invariant to the weight seed (timing is data-
+/// independent) and deterministic across runs.
+#[test]
+fn timing_is_data_independent_and_deterministic() {
+    let net = tiny_vgg();
+    let e = engine();
+    let plan = FusionPlan::fully_fused(7);
+    let a = e.simulate(&net, &Weights::random(&net, 1), &plan);
+    let b = e.simulate(&net, &Weights::random(&net, 999), &plan);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.ddr_read_bytes, b.ddr_read_bytes);
+    let c = e.simulate(&net, &Weights::random(&net, 1), &plan);
+    assert_eq!(a.total_cycles, c.total_cycles);
+}
+
+/// Every contiguous fusion plan computes the same function (movement, not
+/// math) — checked end to end through the fixed-point forward.
+#[test]
+fn all_plans_same_function() {
+    let net = paper_test_example();
+    let w = Weights::random(&net, 5);
+    let input = NdTensor::random(&net.input.as_slice(), 6, -1.0, 1.0);
+    let e = engine();
+    let reference = e.forward_fx(&net, &w, &input);
+    // forward_fx is plan-independent by construction; simulate timing per
+    // plan and confirm traffic ordering instead.
+    let fused = e.simulate(&net, &w, &FusionPlan::fully_fused(3));
+    let split = e.simulate(&net, &w, &FusionPlan::from_group_sizes(3, &[2, 1]).unwrap());
+    let unfused = e.simulate(&net, &w, &FusionPlan::unfused(3));
+    assert!(fused.total_mb() <= split.total_mb());
+    assert!(split.total_mb() <= unfused.total_mb());
+    assert!(fused.total_cycles <= split.total_cycles);
+    assert!(split.total_cycles <= unfused.total_cycles);
+    assert_eq!(reference.shape(), &net.shape_after(2).as_slice());
+}
+
+/// The headline comparison shape (E7): DeCoILFNet beats both baseline
+/// accelerators by >2X cycles and [2] by ≫1X traffic on the VGG prefix.
+#[test]
+fn headline_shape_holds() {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let w = Weights::random(&net, 1);
+    let ours = engine().simulate(&net, &w, &FusionPlan::fully_fused(7));
+    let ocfg = optimized::OptimizedConfig::zhang2015();
+    let opt = optimized::run(&ocfg, &cfg, &net);
+    let fus = fused_layer::run(&ocfg, &cfg, &net, 28);
+
+    assert!(opt.total_cycles as f64 / ours.total_cycles as f64 > 2.0);
+    assert!(fus.total_cycles as f64 / ours.total_cycles as f64 > 2.0);
+    assert!(opt.total_mb() / ours.total_mb() > 5.0);
+    // [3] moves no more than ~the same order as us (paper: 3.64 vs 6.69).
+    assert!(fus.total_mb() / ours.total_mb() < 1.5);
+}
+
+/// The paper's "speedup grows with fused depth" trend (Table II narrative).
+#[test]
+fn speedup_grows_with_depth_custom4() {
+    let cfg = AccelConfig::paper_default();
+    let full = custom_4conv();
+    let e = engine();
+    let mut per_prefix = Vec::new();
+    for i in 0..4 {
+        let prefix = Network {
+            name: format!("p{i}"),
+            input: full.input,
+            layers: full.layers[..=i].to_vec(),
+        };
+        let w = Weights::random(&prefix, 1);
+        let rep = e.simulate(&prefix, &w, &FusionPlan::fully_fused(i + 1));
+        // CPU work grows ~linearly in conv count; sim time stays ~flat, so
+        // work/sim-cycles must grow.
+        let macs = prefix.total_macs() as f64;
+        per_prefix.push(macs / rep.total_cycles as f64);
+    }
+    for w in per_prefix.windows(2) {
+        assert!(w[1] > w[0], "throughput must grow with fusion: {per_prefix:?}");
+    }
+    let _ = cfg;
+}
+
+/// Resource model consistency: a plan's resources dominate each of its
+/// groups' layers; unfused uses the max single layer.
+#[test]
+fn resource_composition() {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let fused = plan_resources(&cfg, &net, &FusionPlan::fully_fused(7));
+    let unfused = plan_resources(&cfg, &net, &FusionPlan::unfused(7));
+    assert!(fused.dsp > unfused.dsp);
+    assert!(fused.fits(&cfg) && unfused.fits(&cfg));
+}
+
+/// Failure injection: malformed network specs are rejected everywhere.
+#[test]
+fn malformed_specs_rejected() {
+    let bad = r#"{"name":"x","input":{"h":0,"w":8,"d":3},"layers":[
+        {"type":"conv","name":"c","kernel":3,"filters":4,"stride":1,"padding":1,"relu":true}]}"#;
+    assert!(Network::from_json_str(bad).is_err());
+    let bad2 = r#"{"name":"x","input":{"h":8,"w":8,"d":3},"layers":[]}"#;
+    assert!(Network::from_json_str(bad2).is_err());
+    assert!(FusionPlan::from_group_sizes(7, &[4, 4]).is_err());
+}

@@ -1,0 +1,184 @@
+//! Property tests across module boundaries: random VGG-like networks through
+//! the engine, the closed-form model, the planner and the resource model.
+
+use decoilfnet::accel::latency::{plan_cycles_estimate, plan_traffic_bytes};
+use decoilfnet::accel::{Engine, FusionPlan, Weights};
+use decoilfnet::config::{AccelConfig, Layer, Network, VolShape};
+use decoilfnet::coordinator::{best_plan, Objective};
+use decoilfnet::resources::plan_resources;
+use decoilfnet::util::prng::Rng;
+use decoilfnet::util::prop::{check, PropConfig};
+
+/// Generate a random small VGG-like network (3×3 convs + occasional pools).
+fn random_net(r: &mut Rng) -> Network {
+    let h = *[16usize, 20, 24, 32].get(r.range_usize(0, 3)).unwrap();
+    let d = r.range_usize(1, 4);
+    let n_layers = r.range_usize(2, 6);
+    let mut layers = Vec::new();
+    let mut cur_extent = h;
+    for i in 0..n_layers {
+        // Pools only while the map stays poolable; never as the first layer.
+        if i > 0 && cur_extent >= 8 && r.chance(0.3) {
+            layers.push(Layer::pool2x2(&format!("pool{i}")));
+            cur_extent /= 2;
+        } else {
+            let filters = *[4usize, 8, 12, 16].get(r.range_usize(0, 3)).unwrap();
+            layers.push(Layer::conv3x3(&format!("conv{i}"), filters));
+        }
+    }
+    let net = Network {
+        name: format!("rand-{h}x{h}x{d}-{n_layers}"),
+        input: VolShape::new(h, h, d),
+        layers,
+    };
+    net.validate().expect("generator must produce valid nets");
+    net
+}
+
+fn cfg() -> AccelConfig {
+    AccelConfig::paper_default()
+}
+
+#[test]
+fn prop_closed_form_tracks_engine_on_random_nets() {
+    let engine = Engine::new(cfg());
+    check(
+        "closed-form-vs-engine",
+        PropConfig { cases: 40, seed: 0xF00D },
+        |r| {
+            let net = random_net(r);
+            let n = net.layers.len();
+            let plans = decoilfnet::accel::fusion::enumerate_plans(n);
+            let plan = plans[r.range_usize(0, plans.len() - 1)].clone();
+            (net, plan, r.next_u64())
+        },
+        |(net, plan, seed)| {
+            let w = Weights::random(net, *seed);
+            let sim = engine.simulate(net, &w, plan).total_cycles;
+            let est = plan_cycles_estimate(&cfg(), net, plan);
+            let err = (est as f64 - sim as f64).abs() / sim as f64;
+            // Small nets are fill-dominated; the closed form is a planner
+            // heuristic — bound it loosely but firmly.
+            if err < 0.9 {
+                Ok(())
+            } else {
+                Err(format!("{}: est {est} vs sim {sim} (err {err:.2})", net.name))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_traffic_exact_on_random_nets() {
+    let engine = Engine::new(cfg());
+    check(
+        "traffic-exact",
+        PropConfig { cases: 40, seed: 0xBEEF },
+        |r| {
+            let net = random_net(r);
+            let n = net.layers.len();
+            let plans = decoilfnet::accel::fusion::enumerate_plans(n);
+            let plan = plans[r.range_usize(0, plans.len() - 1)].clone();
+            (net, plan, r.next_u64())
+        },
+        |(net, plan, seed)| {
+            let w = Weights::random(net, *seed);
+            let sim = engine.simulate(net, &w, plan);
+            let est = plan_traffic_bytes(&cfg(), net, &w, plan);
+            if sim.ddr_read_bytes + sim.ddr_write_bytes == est {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} {}: engine {} vs formula {est}",
+                    net.name,
+                    plan.label(),
+                    sim.ddr_read_bytes + sim.ddr_write_bytes
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_fusion_never_increases_traffic_or_cycles() {
+    let engine = Engine::new(cfg());
+    check(
+        "fusion-dominates",
+        PropConfig { cases: 30, seed: 0xCAFE },
+        |r| (random_net(r), r.next_u64()),
+        |(net, seed)| {
+            let n = net.layers.len();
+            let w = Weights::random(net, *seed);
+            let fused = engine.simulate(net, &w, &FusionPlan::fully_fused(n));
+            let unfused = engine.simulate(net, &w, &FusionPlan::unfused(n));
+            if fused.total_cycles > unfused.total_cycles {
+                return Err(format!(
+                    "{}: fused {} > unfused {} cycles",
+                    net.name, fused.total_cycles, unfused.total_cycles
+                ));
+            }
+            if fused.total_mb() > unfused.total_mb() + 1e-9 {
+                return Err(format!("{}: fused moved more data", net.name));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planner_winner_beats_extremes() {
+    check(
+        "planner-optimality",
+        PropConfig { cases: 25, seed: 0xD00D },
+        |r| (random_net(r), r.next_u64()),
+        |(net, seed)| {
+            let w = Weights::random(net, *seed);
+            let n = net.layers.len();
+            let best = best_plan(&cfg(), net, &w, Objective::Latency)
+                .ok_or("no feasible plan".to_string())?;
+            for candidate in [FusionPlan::fully_fused(n), FusionPlan::unfused(n)] {
+                let res = plan_resources(&cfg(), net, &candidate);
+                if res.fits(&cfg()) {
+                    let est = plan_cycles_estimate(&cfg(), net, &candidate);
+                    if best.cycles > est {
+                        return Err(format!(
+                            "winner {} ({}) worse than {} ({est})",
+                            best.plan.label(),
+                            best.cycles,
+                            candidate.label()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_functional_output_in_relu_range_and_shape() {
+    let engine = Engine::new(cfg());
+    check(
+        "forward-shape-range",
+        PropConfig { cases: 12, seed: 0xAB },
+        |r| (random_net(r), r.next_u64()),
+        |(net, seed)| {
+            let w = Weights::random(net, *seed);
+            let input = decoilfnet::tensor::NdTensor::random(
+                &net.input.as_slice(),
+                *seed ^ 1,
+                -1.0,
+                1.0,
+            );
+            let out = engine.forward_fx(net, &w, &input);
+            let want = net.shape_after(net.layers.len() - 1);
+            if out.shape() != want.as_slice() {
+                return Err(format!("shape {:?} vs {:?}", out.shape(), want));
+            }
+            if out.data().iter().any(|v| v.to_f32() < 0.0) {
+                return Err("negative value after ReLU chain".to_string());
+            }
+            Ok(())
+        },
+    );
+}

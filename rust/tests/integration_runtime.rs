@@ -1,0 +1,163 @@
+//! Artifact-dependent integration: the full python→rust bridge plus the
+//! serving stack under concurrency and fault injection. All tests skip (with
+//! a notice) when `make artifacts` has not been run.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use decoilfnet::config::AccelConfig;
+use decoilfnet::coordinator::{BatchPolicy, Server, ServerConfig};
+use decoilfnet::runtime::Runtime;
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::prng::Rng;
+use decoilfnet::verify::{verify_all, verify_plan, DEFAULT_TOLERANCE};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn every_network_every_plan_matches_golden() {
+    let Some(dir) = artifacts() else { return };
+    for name in ["paper-example", "tiny-vgg"] {
+        let rt = Runtime::load(&dir, name).unwrap();
+        let (input, want) = rt.golden().unwrap();
+        for plan in rt.plan_names() {
+            let got = rt.plan(plan).unwrap().run(&input).unwrap();
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-3, "{name}/{plan}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn simulator_agrees_on_random_inputs_not_just_golden() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir, "tiny-vgg").unwrap();
+    let cfg = AccelConfig::paper_default();
+    let mut rng = Rng::new(321);
+    for _ in 0..3 {
+        let mut input = NdTensor::zeros(&rt.entry.network.input.as_slice());
+        rng.fill_f32(input.data_mut(), -2.0, 2.0);
+        let rep = verify_plan(&rt, &cfg, "fused", &input, DEFAULT_TOLERANCE).unwrap();
+        assert!(rep.passed, "diff {} > {}", rep.max_abs_diff, rep.tolerance);
+    }
+}
+
+#[test]
+fn group_chaining_boundaries_are_consistent() {
+    // The unfused plan's group boundaries must match the network shapes, and
+    // chaining through run_traced must reproduce the single-shot output.
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir, "tiny-vgg").unwrap();
+    let (input, _) = rt.golden().unwrap();
+    let plan = rt.plan("unfused").unwrap();
+    let traced = plan.run_traced(&input).unwrap();
+    assert_eq!(traced.len(), 7);
+    for (i, out) in traced.iter().enumerate() {
+        let want = rt.entry.network.shape_after(i);
+        assert_eq!(out.shape(), &want.as_slice(), "layer {i} boundary shape");
+    }
+    let single = rt.plan("fused").unwrap().run(&input).unwrap();
+    assert!(traced.last().unwrap().max_abs_diff(&single) < 1e-3);
+}
+
+#[test]
+fn verify_all_passes_for_all_networks() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = AccelConfig::paper_default();
+    for name in ["paper-example", "tiny-vgg"] {
+        let rt = Runtime::load(&dir, name).unwrap();
+        for rep in verify_all(&rt, &cfg).unwrap() {
+            assert!(rep.passed, "{name}/{}: {}", rep.plan, rep.max_abs_diff);
+        }
+    }
+}
+
+#[test]
+fn server_survives_mixed_valid_and_invalid_traffic() {
+    let Some(dir) = artifacts() else { return };
+    let srv = Server::start(ServerConfig {
+        artifacts_dir: dir.clone(),
+        network: "tiny-vgg".into(),
+        default_plan: "fused".into(),
+        batch: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+    })
+    .unwrap();
+    let rt = Runtime::load(&dir, "tiny-vgg").unwrap();
+    let (input, want) = rt.golden().unwrap();
+
+    let mut joins = Vec::new();
+    for c in 0..3 {
+        let h = srv.handle.clone();
+        let input = input.clone();
+        let want = want.clone();
+        joins.push(std::thread::spawn(move || {
+            for r in 0..6 {
+                match (c + r) % 3 {
+                    0 => {
+                        // valid request
+                        let resp = h.submit(input.clone(), None).wait().unwrap();
+                        assert!(resp.result.unwrap().max_abs_diff(&want) < 1e-3);
+                    }
+                    1 => {
+                        // wrong shape → error response, not a crash
+                        let bad = NdTensor::zeros(&[4, 4, 3]);
+                        let resp = h.submit(bad, None).wait().unwrap();
+                        assert!(resp.result.is_err());
+                    }
+                    _ => {
+                        // unknown plan → error response
+                        let resp = h.submit(input.clone(), Some("nope")).wait().unwrap();
+                        assert!(resp.result.is_err());
+                    }
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = srv.handle.metrics();
+    assert_eq!(m.requests, 18);
+    assert_eq!(m.responses + m.errors, 18);
+    assert_eq!(m.errors, 12);
+    srv.shutdown();
+}
+
+#[test]
+fn latency_metrics_populated_under_load() {
+    let Some(dir) = artifacts() else { return };
+    let srv = Server::start(ServerConfig {
+        artifacts_dir: dir.clone(),
+        network: "paper-example".into(),
+        default_plan: "fused".into(),
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+    })
+    .unwrap();
+    let rt = Runtime::load(&dir, "paper-example").unwrap();
+    let (input, _) = rt.golden().unwrap();
+    for _ in 0..10 {
+        srv.handle.submit(input.clone(), None).wait().unwrap();
+    }
+    let m = srv.handle.metrics();
+    let s = m.latency_summary().expect("latencies recorded");
+    assert_eq!(s.n, 10);
+    assert!(s.median > 0.0);
+    assert!(m.mean_batch_size() >= 1.0);
+    let json = srv.handle.metrics_json();
+    assert!(json.contains("latency_p50_ms"));
+    srv.shutdown();
+}
