@@ -1,20 +1,56 @@
-//! Serving demo: the coordinator batching concurrent clients over the PJRT
-//! artifacts, with per-request plan routing and live metrics.
+//! Serving demo, two tiers:
 //!
-//! Requires `make artifacts` (tiny-vgg artifacts).
+//! 1. **Fleet simulation** (always runs): the cluster subsystem plans a
+//!    multi-board shard of the VGG prefix, drives it with open-loop traffic,
+//!    and reports throughput / latency / utilization under shared-DDR
+//!    contention — replicated vs pipelined side by side.
+//! 2. **Live threaded server** (needs `make artifacts`): the coordinator
+//!    batching concurrent clients over the PJRT artifacts, with per-request
+//!    plan routing and live metrics.
+//!
 //! Run: `cargo run --release --example serve_demo`
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use decoilfnet::coordinator::{BatchPolicy, Server, ServerConfig};
+use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig, ShardMode};
+use decoilfnet::coordinator::{simulate_cluster, BatchPolicy, Server, ServerConfig};
 use decoilfnet::runtime::Runtime;
 
+fn fleet_demo() -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    println!("== fleet simulation: {} on 4 boards ==", net.name);
+    for mode in [ShardMode::Replicated, ShardMode::Pipelined] {
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.mode = mode;
+        ccfg.requests = 128;
+        let r = simulate_cluster(&cfg, &net, &ccfg)?;
+        let avg_util = r.per_board.iter().map(|b| b.utilization).sum::<f64>()
+            / r.per_board.len() as f64;
+        println!(
+            "{:>10}: {:7.1} req/s  p50 {:7.2} ms  p99 {:7.2} ms  util {:3.0}%  \
+             ddr slowdown {:.2}x  link {:.2} MB",
+            mode.as_str(),
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms,
+            100.0 * avg_util,
+            r.ddr_slowdown,
+            r.link_bytes_total as f64 / (1024.0 * 1024.0),
+        );
+    }
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    fleet_demo().map_err(anyhow::Error::msg)?;
+
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
+        println!("(skipping live-server demo: run `make artifacts` to enable it)");
+        return Ok(());
     }
 
     let srv = Server::start(ServerConfig {

@@ -1,0 +1,196 @@
+//! Cluster scaling sweep — the fleet-level analogue of the paper's Fig 7
+//! trade-off: 1→16 boards, replicated vs pipelined, fused vs unfused plans,
+//! with and without the shared-DDR contention model. Emits a table plus a
+//! machine-readable JSON array of {boards, mode, plan, contention,
+//! throughput_rps, p99_ms, utilization[]} rows, and asserts the headline
+//! shapes:
+//!
+//! * idealized (contention off) replicated throughput never decreases with
+//!   boards (the pipelined analogue, which needs ideal links, is pinned in
+//!   tests/integration_cluster.rs);
+//! * contention never helps;
+//! * the shared pool flattens the *unfused* fleet hard while the fused
+//!   fleet keeps scaling — inter-layer fusion pays off again at fleet scale,
+//!   because the bandwidth a board does not spend on intermediates is
+//!   bandwidth its neighbors get to keep.
+
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{simulate_fleet, ShardPlan};
+use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig, ShardMode};
+use decoilfnet::coordinator::{best_plan, Objective};
+use decoilfnet::util::json::Json;
+use decoilfnet::util::table::Table;
+
+struct Row {
+    boards: usize,
+    mode: ShardMode,
+    plan: &'static str,
+    contention: bool,
+    throughput_rps: f64,
+    p99_ms: f64,
+    utilization: Vec<f64>,
+}
+
+fn sweep_cfg(boards: usize, mode: ShardMode, aggregate: Option<f64>) -> ClusterConfig {
+    ClusterConfig {
+        boards,
+        mode,
+        link_bytes_per_cycle: 16.0,
+        link_latency_cycles: 64,
+        aggregate_ddr_bytes_per_cycle: aggregate,
+        arrival_rps: f64::INFINITY, // saturating burst → measures capacity
+        requests: 192,
+        seed: 1,
+        max_batch: 8,
+        max_wait_us: 200.0,
+    }
+}
+
+fn main() {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let weights = Weights::random(&net, 1);
+    // Shared pool worth two boards of off-chip bandwidth: from the third
+    // co-located board on, DDR phases stretch.
+    let pool = Some(2.0 * cfg.platform.ddr_bytes_per_cycle);
+
+    let fused = best_plan(&cfg, &net, &weights, Objective::Latency)
+        .expect("a plan fits the board")
+        .plan;
+    let plans: [(&'static str, FusionPlan); 2] =
+        [("fused-best", fused), ("unfused", FusionPlan::unfused(7))];
+
+    let mut rows = Vec::new();
+    for (plan_name, plan) in plans.iter().map(|(n, p)| (*n, p)) {
+        for mode in [ShardMode::Replicated, ShardMode::Pipelined] {
+            for contention in [false, true] {
+                for boards in 1..=16 {
+                    let ccfg = sweep_cfg(boards, mode, if contention { pool } else { None });
+                    let shard = match mode {
+                        ShardMode::Replicated => {
+                            ShardPlan::replicated(&cfg, &net, &weights, plan, boards)
+                        }
+                        ShardMode::Pipelined => {
+                            ShardPlan::pipelined(&cfg, &net, &weights, plan, boards)
+                        }
+                    };
+                    assert!(shard.fits(), "shard must fit the per-board budget");
+                    let r = simulate_fleet(&cfg, &shard, &ccfg);
+                    rows.push(Row {
+                        boards,
+                        mode,
+                        plan: plan_name,
+                        contention,
+                        throughput_rps: r.throughput_rps,
+                        p99_ms: r.p99_ms,
+                        utilization: r.per_board.iter().map(|b| b.utilization).collect(),
+                    });
+                }
+            }
+        }
+    }
+
+    let find = |plan: &str, mode: ShardMode, boards: usize, cont: bool| {
+        rows.iter()
+            .find(|r| {
+                r.plan == plan && r.mode == mode && r.boards == boards && r.contention == cont
+            })
+            .unwrap()
+    };
+
+    // Table: one line per (plan, mode, boards), idealized vs contended.
+    let mut t = Table::new(&[
+        "plan", "mode", "boards", "ideal req/s", "contended req/s", "ideal p99 ms",
+        "contended p99 ms",
+    ])
+    .title("cluster scaling 1→16 boards (saturating load, pool = 2 boards of DDR)")
+    .label_col();
+    for (plan_name, _) in plans.iter().map(|(n, p)| (*n, p)) {
+        for mode in [ShardMode::Replicated, ShardMode::Pipelined] {
+            for boards in 1..=16 {
+                let (ideal, cont) = (
+                    find(plan_name, mode, boards, false),
+                    find(plan_name, mode, boards, true),
+                );
+                t.row(&[
+                    plan_name.to_string(),
+                    mode.as_str().to_string(),
+                    boards.to_string(),
+                    format!("{:.1}", ideal.throughput_rps),
+                    format!("{:.1}", cont.throughput_rps),
+                    format!("{:.2}", ideal.p99_ms),
+                    format!("{:.2}", cont.p99_ms),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.to_ascii());
+
+    // Machine-readable dump.
+    let mut arr = Json::Arr(vec![]);
+    for r in &rows {
+        let mut util = Json::Arr(vec![]);
+        for &u in &r.utilization {
+            util = util.push(u);
+        }
+        arr = arr.push(
+            Json::obj()
+                .set("boards", r.boards)
+                .set("mode", r.mode.as_str())
+                .set("plan", r.plan)
+                .set("contention", r.contention)
+                .set("throughput_rps", r.throughput_rps)
+                .set("p99_ms", r.p99_ms)
+                .set("utilization", util),
+        );
+    }
+    println!("{}", arr.to_string_pretty());
+
+    // Shape assertions.
+    for (plan_name, _) in plans.iter().map(|(n, p)| (*n, p)) {
+        // Idealized replicated throughput is monotone in board count.
+        let ideal: Vec<f64> = (1..=16)
+            .map(|b| find(plan_name, ShardMode::Replicated, b, false).throughput_rps)
+            .collect();
+        for w in ideal.windows(2) {
+            assert!(
+                w[1] >= w[0] * (1.0 - 1e-9),
+                "{plan_name}: idealized replicated throughput fell {} → {}",
+                w[0],
+                w[1]
+            );
+        }
+        // Contention never helps, in any mode.
+        for mode in [ShardMode::Replicated, ShardMode::Pipelined] {
+            for b in 1..=16usize {
+                let (i, c) = (
+                    find(plan_name, mode, b, false).throughput_rps,
+                    find(plan_name, mode, b, true).throughput_rps,
+                );
+                assert!(c <= i * (1.0 + 1e-9), "{plan_name} {mode:?} {b}: contention helped?!");
+            }
+        }
+    }
+    // Flattening: on a 2-board pool at 16 replicated boards, the
+    // traffic-heavy unfused fleet loses ≳40% of its idealized capacity;
+    // the fused fleet, whose intermediates never leave the chip, keeps most
+    // of its scaling. (Closed-form prediction: ratios ≈ 0.56 vs 0.83.)
+    let ratio = |plan: &str| {
+        find(plan, ShardMode::Replicated, 16, true).throughput_rps
+            / find(plan, ShardMode::Replicated, 16, false).throughput_rps
+    };
+    let (r_fused, r_unfused) = (ratio("fused-best"), ratio("unfused"));
+    assert!(
+        r_unfused < 0.7,
+        "unfused fleet should flatten on a shared pool: ratio {r_unfused:.3}"
+    );
+    assert!(
+        r_fused > 0.75,
+        "fused fleet should keep scaling: ratio {r_fused:.3}"
+    );
+    assert!(r_unfused < r_fused);
+    println!(
+        "scaling shapes verified: monotone ideal; contended/ideal at 16 boards: \
+         fused {r_fused:.3} vs unfused {r_unfused:.3} — fusion defends fleet scaling"
+    );
+}

@@ -19,13 +19,38 @@ use super::conv3d::ConvUnit;
 use super::engine::Weights;
 use super::fusion::FusionPlan;
 
-/// Closed-form estimate for one fused group. `shapes` are the network's
-/// volume shapes (`shapes[i]` = input of layer i).
-pub fn group_cycles_estimate(
+/// Additive decomposition of one fused group's closed-form estimate.
+///
+/// `fill` and `drain` are per-activation overheads (line-buffer priming and
+/// the last-row DDR writeback); `steady` is the per-inference bottleneck
+/// work. A batch of `B` back-to-back inferences through a resident group
+/// pays the overheads once: `fill + B·steady + drain` — the same
+/// amortization the serving batcher exploits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupCost {
+    pub fill: u64,
+    pub steady: u64,
+    pub drain: u64,
+}
+
+impl GroupCost {
+    /// Single-inference cycles (the classic estimate).
+    pub fn total(&self) -> u64 {
+        self.fill + self.steady + self.drain
+    }
+
+    /// Cycles for `batch` back-to-back inferences with the group resident.
+    pub fn batched(&self, batch: u64) -> u64 {
+        self.fill + self.steady.saturating_mul(batch) + self.drain
+    }
+}
+
+/// Closed-form cost decomposition for one fused group.
+pub fn group_cost_estimate(
     cfg: &AccelConfig,
     net: &Network,
     group: std::ops::Range<usize>,
-) -> u64 {
+) -> GroupCost {
     let shapes = net.shapes();
     let mut fill_total = 0u64;
     let mut bottleneck = 0u64;
@@ -82,7 +107,35 @@ pub fn group_cycles_estimate(
         / cfg.platform.ddr_bytes_per_cycle)
         .ceil() as u64;
 
-    fill_total + bottleneck + drain
+    GroupCost {
+        fill: fill_total,
+        steady: bottleneck,
+        drain,
+    }
+}
+
+/// Closed-form estimate for one fused group. `shapes` are the network's
+/// volume shapes (`shapes[i]` = input of layer i).
+pub fn group_cycles_estimate(
+    cfg: &AccelConfig,
+    net: &Network,
+    group: std::ops::Range<usize>,
+) -> u64 {
+    group_cost_estimate(cfg, net, group).total()
+}
+
+/// Closed-form estimate for `batch` back-to-back inferences of a whole plan:
+/// per group, fill/drain are paid once and steady-state work `batch` times.
+pub fn plan_batch_cycles_estimate(
+    cfg: &AccelConfig,
+    net: &Network,
+    plan: &FusionPlan,
+    batch: u64,
+) -> u64 {
+    plan.groups()
+        .into_iter()
+        .map(|g| group_cost_estimate(cfg, net, g).batched(batch))
+        .sum()
 }
 
 /// Closed-form estimate for a whole plan (groups serialize).
@@ -93,8 +146,26 @@ pub fn plan_cycles_estimate(cfg: &AccelConfig, net: &Network, plan: &FusionPlan)
         .sum()
 }
 
+/// DDR traffic of one fused group in bytes (exact): input volume in +
+/// weights in + output volume out.
+pub fn group_traffic_bytes(
+    cfg: &AccelConfig,
+    net: &Network,
+    weights: &Weights,
+    group: std::ops::Range<usize>,
+) -> u64 {
+    let shapes = net.shapes();
+    let wb = cfg.platform.word_bytes;
+    let in_sh = shapes[group.start];
+    let out_sh = shapes[group.end];
+    (in_sh.elems() * wb) as u64
+        + (out_sh.elems() * wb) as u64
+        + weights.bytes_for_layers(group, wb)
+}
+
 /// DDR traffic of a plan in bytes (exact, not an estimate): per group, the
-/// input volume in + weights in + output volume out.
+/// input volume in + weights in + output volume out. (Single shape-inference
+/// pass; `group_traffic_bytes` is the one-off per-group entry point.)
 pub fn plan_traffic_bytes(
     cfg: &AccelConfig,
     net: &Network,
@@ -105,10 +176,8 @@ pub fn plan_traffic_bytes(
     let wb = cfg.platform.word_bytes;
     let mut bytes = 0u64;
     for g in plan.groups() {
-        let in_sh = shapes[g.start];
-        let out_sh = shapes[g.end];
-        bytes += (in_sh.elems() * wb) as u64;
-        bytes += (out_sh.elems() * wb) as u64;
+        bytes += (shapes[g.start].elems() * wb) as u64;
+        bytes += (shapes[g.end].elems() * wb) as u64;
         bytes += weights.bytes_for_layers(g, wb);
     }
     bytes
@@ -147,6 +216,31 @@ mod tests {
                     plan.label()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn batched_cost_decomposition_is_consistent() {
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let n = net.layers.len();
+        for plan in [FusionPlan::fully_fused(n), FusionPlan::unfused(n)] {
+            // batch=1 reduces to the single-inference estimate.
+            assert_eq!(
+                plan_batch_cycles_estimate(&cfg, &net, &plan, 1),
+                plan_cycles_estimate(&cfg, &net, &plan)
+            );
+            // Amortization: a batch of 8 is strictly cheaper than 8 singles
+            // (fill/drain paid once), but no cheaper than 8× steady work.
+            let b8 = plan_batch_cycles_estimate(&cfg, &net, &plan, 8);
+            let single = plan_cycles_estimate(&cfg, &net, &plan);
+            assert!(b8 < 8 * single, "{}: {b8} vs {single}", plan.label());
+            let steady: u64 = plan
+                .groups()
+                .into_iter()
+                .map(|g| group_cost_estimate(&cfg, &net, g).steady)
+                .sum();
+            assert!(b8 >= 8 * steady);
         }
     }
 

@@ -1,0 +1,60 @@
+//! Inter-board link model.
+//!
+//! Pipelined shards move fusion-group boundary volumes between boards over a
+//! point-to-point link (PCIe/Aurora-class on multi-FPGA hosts). The model is
+//! the same shape as the DDR channel: fixed sustained bandwidth plus a fixed
+//! per-transfer latency (serialization + switch hop). Bandwidth is expressed
+//! in bytes per *accelerator* cycle so link time composes directly with the
+//! cycle estimates.
+
+/// A point-to-point inter-board link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterBoardLink {
+    pub bytes_per_cycle: f64,
+    pub latency_cycles: u64,
+}
+
+impl InterBoardLink {
+    pub fn new(bytes_per_cycle: f64, latency_cycles: u64) -> InterBoardLink {
+        assert!(bytes_per_cycle > 0.0);
+        InterBoardLink {
+            bytes_per_cycle,
+            latency_cycles,
+        }
+    }
+
+    /// A link so fast it is free — for idealized-scaling experiments.
+    pub fn ideal() -> InterBoardLink {
+        InterBoardLink {
+            bytes_per_cycle: f64::INFINITY,
+            latency_cycles: 0,
+        }
+    }
+
+    /// Cycles to move `bytes` across the link (latency + serialization).
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.latency_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_adds_latency_and_serialization() {
+        let l = InterBoardLink::new(16.0, 100);
+        assert_eq!(l.transfer_cycles(1600), 100 + 100);
+        assert_eq!(l.transfer_cycles(1), 100 + 1);
+        assert_eq!(l.transfer_cycles(0), 0, "empty transfer is free");
+    }
+
+    #[test]
+    fn ideal_link_is_free() {
+        let l = InterBoardLink::ideal();
+        assert_eq!(l.transfer_cycles(u64::MAX / 2), 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Multi-accelerator sharded serving simulation (L4).
+//!
+//! The paper's engine saturates one board; this subsystem asks what happens
+//! when a fleet of boards serves production traffic. It composes the models
+//! the repo already trusts — the closed-form cycle/traffic estimates
+//! (`accel::latency`), the fusion planner (`coordinator::planner`), the
+//! structural resource model (`resources`) — into:
+//!
+//! * a **shard planner** ([`ShardPlan`]): replicated (data-parallel) or
+//!   pipelined (model-parallel, min-max balanced contiguous group ranges
+//!   with inter-board link transfers of boundary volumes);
+//! * a **shared-DDR contention model** ([`crate::fpga::ddr::SharedDdr`]):
+//!   co-located boards drawing from one off-chip bandwidth pool stretch
+//!   their DDR phases once oversubscribed — the fleet-level analogue of the
+//!   paper's bandwidth-constrained argument;
+//! * a **request scheduler** ([`simulate_fleet`]): open-loop Poisson
+//!   arrivals, per-board queues batched by the coordinator's
+//!   [`crate::coordinator::batcher::DynamicBatcher`], reporting throughput,
+//!   p50/p99 latency and per-board utilization.
+//!
+//! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes and shows
+//! where the shared bandwidth pool flattens the scaling curve.
+
+pub mod link;
+pub mod shard;
+pub mod sim;
+
+pub use link::InterBoardLink;
+pub use shard::{BoardShard, ShardPlan};
+pub use sim::{poisson_arrivals, simulate_fleet, BoardStats, FleetReport};
+
+use crate::accel::engine::Weights;
+use crate::config::{AccelConfig, ClusterConfig, Network, ShardMode};
+use crate::coordinator::planner::{best_plan, Objective};
+
+/// Plan a fleet for `net`: pick the best single-board fusion plan under the
+/// latency objective, then shard it according to the cluster config.
+pub fn plan_fleet(
+    cfg: &AccelConfig,
+    net: &Network,
+    weights: &Weights,
+    ccfg: &ClusterConfig,
+) -> Result<ShardPlan, String> {
+    ccfg.validate()?;
+    let best = best_plan(cfg, net, weights, Objective::Latency)
+        .ok_or("no fusion plan fits the board")?;
+    let shard = match ccfg.mode {
+        ShardMode::Replicated => {
+            ShardPlan::replicated(cfg, net, weights, &best.plan, ccfg.boards)
+        }
+        ShardMode::Pipelined => {
+            // Pipelining partitions *groups*; a latency-optimal plan is often
+            // one big group, which cannot spread over boards. Re-plan under
+            // progressively tighter DSP caps until the plan has enough groups
+            // to occupy the fleet (or no tighter cap helps — a network can
+            // simply run out of split points). Any residual shortfall is
+            // visible to callers as `used_boards() < boards`.
+            let mut plan = best.plan;
+            if plan.n_groups() < ccfg.boards {
+                for cap in [50u8, 25, 10] {
+                    if let Some(p) =
+                        best_plan(cfg, net, weights, Objective::LatencyUnderDspCap(cap))
+                    {
+                        if p.plan.n_groups() > plan.n_groups() {
+                            plan = p.plan;
+                        }
+                    }
+                    if plan.n_groups() >= ccfg.boards {
+                        break;
+                    }
+                }
+            }
+            ShardPlan::pipelined(cfg, net, weights, &plan, ccfg.boards)
+        }
+    };
+    if !shard.fits() {
+        return Err("shard does not fit the per-board resource budget".into());
+    }
+    Ok(shard)
+}
+
+/// Convenience: plan the fleet and run the scheduler simulation in one call.
+pub fn run_fleet(
+    cfg: &AccelConfig,
+    net: &Network,
+    ccfg: &ClusterConfig,
+) -> Result<FleetReport, String> {
+    let weights = Weights::random(net, ccfg.seed);
+    let shard = plan_fleet(cfg, net, &weights, ccfg)?;
+    Ok(simulate_fleet(cfg, &shard, ccfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::vgg16_prefix;
+
+    #[test]
+    fn plan_fleet_replicated_uses_best_plan() {
+        let cfg = AccelConfig::paper_default();
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 1);
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.boards = 3;
+        let shard = plan_fleet(&cfg, &net, &w, &ccfg).unwrap();
+        assert_eq!(shard.mode, ShardMode::Replicated);
+        assert_eq!(shard.used_boards(), 3);
+        assert!(shard.fits());
+    }
+
+    #[test]
+    fn plan_fleet_pipelined_spreads_over_boards() {
+        let cfg = AccelConfig::paper_default();
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 1);
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.mode = ShardMode::Pipelined;
+        ccfg.boards = 4;
+        let shard = plan_fleet(&cfg, &net, &w, &ccfg).unwrap();
+        assert_eq!(shard.mode, ShardMode::Pipelined);
+        assert!(shard.used_boards() > 1, "fleet must actually pipeline");
+        assert!(shard.fits());
+    }
+
+    #[test]
+    fn run_fleet_end_to_end() {
+        let cfg = AccelConfig::paper_default();
+        let net = vgg16_prefix();
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.requests = 64;
+        let r = run_fleet(&cfg, &net, &ccfg).unwrap();
+        assert_eq!(r.completed, 64);
+        assert!(r.throughput_rps > 0.0);
+    }
+}

@@ -1,0 +1,419 @@
+//! Shard planner: partition a network's fusion groups across N boards.
+//!
+//! Two strategies, mirroring the two classic scale-out shapes:
+//!
+//! * **Replicated** (data parallel): every board hosts the whole fusion
+//!   plan; the fleet load-balances requests. Capacity scales with boards,
+//!   per-request latency does not improve.
+//! * **Pipelined** (model parallel): each board hosts a contiguous range of
+//!   fusion groups; activation volumes cross inter-board links at the cuts.
+//!   Throughput is set by the slowest stage, so the planner balances stages
+//!   with a min-max DP over per-item group costs.
+//!
+//! Costing reuses the closed-form models the single-board planner already
+//! trusts: [`group_cost_estimate`] for cycles, [`group_traffic_bytes`] for
+//! local DDR traffic, [`group_resources`] (max over resident groups — units
+//! are reused across serialized groups, paper §V) for per-board feasibility.
+
+use std::ops::Range;
+
+use crate::accel::engine::Weights;
+use crate::accel::fusion::FusionPlan;
+use crate::accel::latency::{group_cost_estimate, GroupCost};
+use crate::config::{AccelConfig, Network, ShardMode, VolShape};
+use crate::resources::{group_resources, Resources};
+
+/// One board's slice of the work, fully costed.
+#[derive(Debug, Clone)]
+pub struct BoardShard {
+    pub board: usize,
+    /// Indices into `plan.groups()` hosted by this board.
+    pub groups: Range<usize>,
+    /// Layer range covered (groups are contiguous, so this is too).
+    pub layers: Range<usize>,
+    /// Per-batch overhead cycles: Σ fill+drain of resident groups.
+    pub overhead_cycles: u64,
+    /// Per-item steady-state cycles: Σ steady of resident groups.
+    pub steady_cycles: u64,
+    /// Per-inference local DDR traffic (bytes) of the resident groups.
+    pub traffic_bytes: u64,
+    /// Peak resources over resident groups (units reused across groups).
+    pub resources: Resources,
+    pub fits: bool,
+    /// Bytes this board forwards to the next stage per inference
+    /// (0 for the last stage and for replicated shards).
+    pub egress_bytes: u64,
+}
+
+impl BoardShard {
+    /// Cycles this board spends on a batch of `batch` inferences
+    /// (excluding contention stall, which depends on fleet state).
+    pub fn batch_cycles(&self, batch: u64) -> u64 {
+        self.overhead_cycles + self.steady_cycles.saturating_mul(batch)
+    }
+
+    /// Single-inference cycles on this board.
+    pub fn item_cycles(&self) -> u64 {
+        self.batch_cycles(1)
+    }
+}
+
+/// A fusion plan distributed across a fleet.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub mode: ShardMode,
+    /// Boards provisioned (pipelined mode may use fewer than provisioned
+    /// when the plan has fewer groups).
+    pub boards: usize,
+    pub plan: FusionPlan,
+    /// One entry per *used* board.
+    pub shards: Vec<BoardShard>,
+}
+
+impl ShardPlan {
+    /// Data-parallel sharding: the whole plan on every board.
+    pub fn replicated(
+        cfg: &AccelConfig,
+        net: &Network,
+        weights: &Weights,
+        plan: &FusionPlan,
+        boards: usize,
+    ) -> ShardPlan {
+        assert!(boards >= 1);
+        let ctx = PlanCtx::new(cfg, net, weights, plan);
+        let proto = ctx.cost_range(0..plan.n_groups(), 0);
+        let shards = (0..boards)
+            .map(|b| BoardShard {
+                board: b,
+                ..proto.clone()
+            })
+            .collect();
+        ShardPlan {
+            mode: ShardMode::Replicated,
+            boards,
+            plan: plan.clone(),
+            shards,
+        }
+    }
+
+    /// Model-parallel sharding: balance contiguous group ranges over at most
+    /// `boards` stages, minimizing the slowest stage's per-item cycles.
+    pub fn pipelined(
+        cfg: &AccelConfig,
+        net: &Network,
+        weights: &Weights,
+        plan: &FusionPlan,
+        boards: usize,
+    ) -> ShardPlan {
+        assert!(boards >= 1);
+        let ctx = PlanCtx::new(cfg, net, weights, plan);
+        let totals: Vec<u64> = ctx.costs.iter().map(|c| c.total()).collect();
+        let cuts = balance_min_max(&totals, boards.min(totals.len()));
+        let shards: Vec<BoardShard> = cuts
+            .windows(2)
+            .enumerate()
+            .map(|(b, w)| ctx.cost_range(w[0]..w[1], b))
+            .collect();
+        ShardPlan {
+            mode: ShardMode::Pipelined,
+            boards,
+            plan: plan.clone(),
+            shards,
+        }
+    }
+
+    /// Boards actually hosting work.
+    pub fn used_boards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Bytes one inference moves across inter-board links (Σ egress of all
+    /// non-final stages). 0 in replicated mode.
+    pub fn link_bytes_per_item(&self) -> u64 {
+        self.shards.iter().map(|s| s.egress_bytes).sum()
+    }
+
+    /// Every used board fits its platform budget.
+    pub fn fits(&self) -> bool {
+        self.shards.iter().all(|s| s.fits)
+    }
+
+    /// Per-item cycles of the slowest stage (pipeline bottleneck). For
+    /// replicated shards this is simply one board's per-item cycles.
+    pub fn bottleneck_cycles(&self) -> u64 {
+        self.shards.iter().map(|s| s.item_cycles()).max().unwrap_or(0)
+    }
+}
+
+/// Per-plan costing context: shapes and group costs computed once, shared by
+/// every shard the planner carves out of the plan.
+struct PlanCtx<'a> {
+    cfg: &'a AccelConfig,
+    net: &'a Network,
+    weights: &'a Weights,
+    groups: Vec<Range<usize>>,
+    shapes: Vec<VolShape>,
+    costs: Vec<GroupCost>,
+}
+
+impl<'a> PlanCtx<'a> {
+    fn new(
+        cfg: &'a AccelConfig,
+        net: &'a Network,
+        weights: &'a Weights,
+        plan: &FusionPlan,
+    ) -> PlanCtx<'a> {
+        let groups = plan.groups();
+        let costs = groups
+            .iter()
+            .map(|g| group_cost_estimate(cfg, net, g.clone()))
+            .collect();
+        PlanCtx {
+            cfg,
+            net,
+            weights,
+            groups,
+            shapes: net.shapes(),
+            costs,
+        }
+    }
+
+    /// Cost one contiguous range of fusion groups as a board shard.
+    fn cost_range(&self, group_range: Range<usize>, board: usize) -> BoardShard {
+        assert!(!group_range.is_empty());
+        let wb = self.cfg.platform.word_bytes;
+        let layer_lo = self.groups[group_range.start].start;
+        let layer_hi = self.groups[group_range.end - 1].end;
+        let mut overhead = 0u64;
+        let mut steady = 0u64;
+        let mut traffic = 0u64;
+        let mut res = Resources::default();
+        for (g, c) in self.groups[group_range.clone()]
+            .iter()
+            .zip(&self.costs[group_range.clone()])
+        {
+            overhead += c.fill + c.drain;
+            steady += c.steady;
+            traffic += (self.shapes[g.start].elems() * wb) as u64
+                + (self.shapes[g.end].elems() * wb) as u64
+                + self.weights.bytes_for_layers(g.clone(), wb);
+            res = res.max(group_resources(self.cfg, self.net, g.clone()));
+        }
+        // Egress: the output volume of the shard's last group, unless it is
+        // the network's final output (which returns to the client, not a
+        // peer board).
+        let egress_bytes = if layer_hi == self.net.layers.len() {
+            0
+        } else {
+            (self.shapes[layer_hi].elems() * wb) as u64
+        };
+        let fits = res.fits(self.cfg);
+        BoardShard {
+            board,
+            groups: group_range,
+            layers: layer_lo..layer_hi,
+            overhead_cycles: overhead,
+            steady_cycles: steady,
+            traffic_bytes: traffic,
+            resources: res,
+            fits,
+            egress_bytes,
+        }
+    }
+}
+
+/// Partition `costs` into at most `k` contiguous non-empty segments
+/// minimizing the maximum segment sum, using the *fewest* segments that
+/// achieve the optimum (extra pipeline stages add link hops without raising
+/// throughput). Returns the cut points `[0, …, costs.len()]`. Classic
+/// O(k·n²) DP — n is the number of fusion groups (≤ 20), k the board count.
+fn balance_min_max(costs: &[u64], k: usize) -> Vec<usize> {
+    let n = costs.len();
+    assert!(n >= 1 && (1..=n).contains(&k));
+    // prefix[i] = Σ costs[..i]
+    let mut prefix = vec![0u64; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + costs[i];
+    }
+    let seg = |j: usize, i: usize| prefix[i] - prefix[j];
+    // dp[s][i]: best max-segment-sum splitting costs[..i] into s segments.
+    let mut dp = vec![vec![u64::MAX; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    for i in 1..=n {
+        dp[1][i] = seg(0, i);
+    }
+    for s in 2..=k {
+        for i in s..=n {
+            for j in (s - 1)..i {
+                let v = dp[s - 1][j].max(seg(j, i));
+                if v < dp[s][i] {
+                    dp[s][i] = v;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+    let best = (1..=k).map(|s| dp[s][n]).min().unwrap();
+    let stages = (1..=k).find(|&s| dp[s][n] == best).unwrap();
+    let mut bounds = vec![n];
+    let mut i = n;
+    for s in (2..=stages).rev() {
+        i = cut[s][i];
+        bounds.push(i);
+    }
+    bounds.push(0);
+    bounds.reverse();
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{tiny_vgg, vgg16_prefix};
+
+    fn setup() -> (AccelConfig, Network, Weights) {
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 1);
+        (AccelConfig::paper_default(), net, w)
+    }
+
+    #[test]
+    fn balance_min_max_basic() {
+        assert_eq!(balance_min_max(&[5, 5, 5, 5], 2), vec![0, 2, 4]);
+        assert_eq!(balance_min_max(&[9, 1, 1, 1], 2), vec![0, 1, 4]);
+        assert_eq!(balance_min_max(&[1, 1, 1], 3), vec![0, 1, 2, 3]);
+        assert_eq!(balance_min_max(&[7], 1), vec![0, 1]);
+    }
+
+    #[test]
+    fn balance_uses_fewest_stages_for_the_optimum() {
+        // A third stage cannot beat max=10, so the planner must stop at two
+        // (extra stages would add link hops for nothing).
+        assert_eq!(balance_min_max(&[10, 1, 1], 3), vec![0, 1, 3]);
+        // One dominant group: even with k=4 the optimum is one cut per
+        // remaining improvement only.
+        let cuts = balance_min_max(&[100, 1, 1, 1], 4);
+        assert_eq!(cuts.first(), Some(&0));
+        assert_eq!(cuts.last(), Some(&4));
+        assert!(cuts.len() <= 3, "no more stages than help: {cuts:?}");
+    }
+
+    #[test]
+    fn balance_is_monotone_in_stage_count() {
+        let costs = [13u64, 2, 8, 41, 5, 5, 19];
+        let bottleneck = |k: usize| {
+            let cuts = balance_min_max(&costs, k);
+            cuts.windows(2)
+                .map(|w| costs[w[0]..w[1]].iter().sum::<u64>())
+                .max()
+                .unwrap()
+        };
+        let mut last = u64::MAX;
+        for k in 1..=costs.len() {
+            let b = bottleneck(k);
+            assert!(b <= last, "k={k}: {b} > {last}");
+            last = b;
+        }
+        assert_eq!(bottleneck(costs.len()), 41, "fully split → max element");
+    }
+
+    #[test]
+    fn replicated_shards_are_identical_whole_plans() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let sp = ShardPlan::replicated(&cfg, &net, &w, &plan, 4);
+        assert_eq!(sp.used_boards(), 4);
+        assert_eq!(sp.link_bytes_per_item(), 0);
+        for s in &sp.shards {
+            assert_eq!(s.layers, 0..7);
+            assert_eq!(s.egress_bytes, 0);
+            assert!(s.fits);
+        }
+        // Per-item cycles decompose the classic plan estimate.
+        let est = crate::accel::latency::plan_cycles_estimate(&cfg, &net, &plan);
+        assert_eq!(sp.shards[0].item_cycles(), est);
+        // Traffic matches the plan accounting.
+        let t = crate::accel::latency::plan_traffic_bytes(&cfg, &net, &w, &plan);
+        assert_eq!(sp.shards[0].traffic_bytes, t);
+    }
+
+    #[test]
+    fn pipelined_covers_every_layer_exactly_once() {
+        let (cfg, net, w) = setup();
+        for plan in [
+            FusionPlan::unfused(7),
+            FusionPlan::from_group_sizes(7, &[2, 3, 2]).unwrap(),
+        ] {
+            for boards in 1..=8 {
+                let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, boards);
+                assert!(sp.used_boards() <= boards);
+                assert!(sp.used_boards() <= plan.n_groups());
+                let mut covered = Vec::new();
+                for s in &sp.shards {
+                    covered.extend(s.layers.clone());
+                }
+                assert_eq!(covered, (0..7).collect::<Vec<_>>());
+                // Interior stages egress, the final stage does not.
+                for (i, s) in sp.shards.iter().enumerate() {
+                    if i + 1 == sp.used_boards() {
+                        assert_eq!(s.egress_bytes, 0);
+                    } else {
+                        assert!(s.egress_bytes > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_bottleneck_non_increasing_in_boards() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let mut last = u64::MAX;
+        for boards in 1..=8 {
+            let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, boards);
+            let b = sp.bottleneck_cycles();
+            assert!(b <= last, "boards={boards}: bottleneck rose {b} > {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn pipelined_single_board_equals_replicated_single() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::from_group_sizes(7, &[3, 2, 2]).unwrap();
+        let p1 = ShardPlan::pipelined(&cfg, &net, &w, &plan, 1);
+        let r1 = ShardPlan::replicated(&cfg, &net, &w, &plan, 1);
+        assert_eq!(p1.shards[0].item_cycles(), r1.shards[0].item_cycles());
+        assert_eq!(p1.shards[0].traffic_bytes, r1.shards[0].traffic_bytes);
+        assert_eq!(p1.link_bytes_per_item(), 0);
+    }
+
+    #[test]
+    fn link_bytes_equal_boundary_volumes() {
+        // The conservation law: bytes crossing links = volumes at the board
+        // cuts, straight from shape inference — nothing lost or duplicated.
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, 3);
+        let shapes = net.shapes();
+        let wb = cfg.platform.word_bytes;
+        let expected: u64 = sp.shards[..sp.used_boards() - 1]
+            .iter()
+            .map(|s| (shapes[s.layers.end].elems() * wb) as u64)
+            .sum();
+        assert!(expected > 0);
+        assert_eq!(sp.link_bytes_per_item(), expected);
+    }
+
+    #[test]
+    fn tiny_net_more_boards_than_groups() {
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 2);
+        let plan = FusionPlan::from_group_sizes(7, &[4, 3]).unwrap();
+        let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, 16);
+        assert_eq!(sp.used_boards(), 2, "only 2 groups to host");
+        assert_eq!(sp.boards, 16);
+    }
+}

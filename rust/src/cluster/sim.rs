@@ -1,0 +1,423 @@
+//! Fleet request scheduler / queue simulator.
+//!
+//! Open-loop arrivals (Poisson via [`Rng`], or a saturating burst at t = 0)
+//! are dispatched to per-board queues, batched by the coordinator's own
+//! [`DynamicBatcher`] (driven here with synthetic deterministic clocks
+//! instead of wall time), and served with the shard planner's closed-form
+//! batch costs. Off-chip phases stretch under the [`SharedDdr`] contention
+//! model; pipelined stages forward batches across [`InterBoardLink`]s.
+//! Everything is deterministic from the config's seed.
+//!
+//! Time is measured in accelerator cycles (u64) and converted to wall time
+//! at the platform clock only for reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{AccelConfig, ClusterConfig, ShardMode};
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use crate::fpga::ddr::SharedDdr;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::util::stats::percentile_sorted;
+
+use super::link::InterBoardLink;
+use super::shard::ShardPlan;
+
+/// Per-board outcome counters.
+#[derive(Debug, Clone)]
+pub struct BoardStats {
+    pub board: usize,
+    pub items: u64,
+    pub batches: u64,
+    pub busy_cycles: u64,
+    /// busy / makespan.
+    pub utilization: f64,
+}
+
+/// Outcome of one fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub mode: ShardMode,
+    pub boards: usize,
+    pub used_boards: usize,
+    pub requests: usize,
+    pub completed: usize,
+    pub makespan_cycles: u64,
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub per_board: Vec<BoardStats>,
+    /// Total bytes moved across inter-board links (0 for replicated).
+    pub link_bytes_total: u64,
+    /// The shared-DDR slowdown the fleet ran under (1.0 = uncontended).
+    pub ddr_slowdown: f64,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        let mut boards = Json::Arr(vec![]);
+        for b in &self.per_board {
+            boards = boards.push(
+                Json::obj()
+                    .set("board", b.board)
+                    .set("items", b.items)
+                    .set("batches", b.batches)
+                    .set("busy_cycles", b.busy_cycles)
+                    .set("utilization", b.utilization),
+            );
+        }
+        Json::obj()
+            .set("mode", self.mode.as_str())
+            .set("boards", self.boards)
+            .set("used_boards", self.used_boards)
+            .set("requests", self.requests)
+            .set("completed", self.completed)
+            .set("makespan_cycles", self.makespan_cycles)
+            .set("throughput_rps", self.throughput_rps)
+            .set("mean_ms", self.mean_ms)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("link_bytes_total", self.link_bytes_total)
+            .set("ddr_slowdown", self.ddr_slowdown)
+            .set("per_board", boards)
+    }
+}
+
+/// Open-loop Poisson arrival times in cycles. A non-finite rate means a
+/// saturating burst: every request arrives at t = 0.
+pub fn poisson_arrivals(n: usize, rps: f64, freq_mhz: f64, seed: u64) -> Vec<u64> {
+    if !rps.is_finite() {
+        return vec![0; n];
+    }
+    assert!(rps > 0.0);
+    let mean_cycles = freq_mhz * 1e6 / rps;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // Exponential inter-arrival; 1−u ∈ (0, 1] keeps ln finite.
+            t += -(1.0 - rng.next_f64()).ln() * mean_cycles;
+            t.round() as u64
+        })
+        .collect()
+}
+
+/// Drive round-robin arrivals through per-queue [`DynamicBatcher`]s: fire
+/// any flush deadline that elapsed before each arrival, push (which may trip
+/// the size bound), and drain the leftovers at their deadlines. `serve` gets
+/// `(queue index, batch, ready cycle)` for every emitted batch, in
+/// chronological order per queue.
+fn drive_batchers(
+    batchers: &mut [DynamicBatcher<usize>],
+    arrivals: &[u64],
+    to_instant: &impl Fn(u64) -> Instant,
+    to_cycles: &impl Fn(Instant) -> u64,
+    mut serve: impl FnMut(usize, Vec<usize>, u64),
+) {
+    for (i, &a) in arrivals.iter().enumerate() {
+        let b = i % batchers.len();
+        // Fire any batching deadline that elapsed before this arrival.
+        while let Some(dl) = batchers[b].next_deadline() {
+            if to_cycles(dl) > a {
+                break;
+            }
+            match batchers[b].poll(dl) {
+                Some(batch) => serve(b, batch, to_cycles(dl)),
+                None => break,
+            }
+        }
+        if let Some(batch) = batchers[b].push(i, to_instant(a)) {
+            serve(b, batch, a);
+        }
+    }
+    // Remaining queues flush when their wait deadline fires.
+    for (b, batcher) in batchers.iter_mut().enumerate() {
+        if let Some(dl) = batcher.next_deadline() {
+            let ready = to_cycles(dl);
+            let batch = match batcher.poll(dl) {
+                Some(batch) => batch,
+                None => batcher.flush(),
+            };
+            serve(b, batch, ready);
+        }
+    }
+}
+
+/// Simulate `ccfg.requests` requests against a sharded fleet.
+pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig) -> FleetReport {
+    ccfg.validate().expect("invalid cluster config");
+    let freq = cfg.platform.freq_mhz;
+    let n = ccfg.requests;
+    let arrivals = poisson_arrivals(n, ccfg.arrival_rps, freq, ccfg.seed);
+    let shared = SharedDdr::new(
+        cfg.platform.ddr_bytes_per_cycle,
+        ccfg.aggregate_ddr_bytes_per_cycle,
+    );
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let n_active = shard.used_boards();
+
+    // Synthetic clock: the DynamicBatcher speaks `Instant`, the simulator
+    // speaks cycles. One fixed origin maps between them deterministically.
+    let t0 = Instant::now();
+    let ns_per_cycle = 1e3 / freq;
+    let to_instant = |c: u64| t0 + Duration::from_nanos((c as f64 * ns_per_cycle).round() as u64);
+    let to_cycles =
+        |i: Instant| (i.duration_since(t0).as_nanos() as f64 / ns_per_cycle).round() as u64;
+    let policy = BatchPolicy {
+        max_batch: ccfg.max_batch,
+        max_wait: Duration::from_nanos((ccfg.max_wait_us * 1e3).round() as u64),
+    };
+
+    let mut complete = vec![0u64; n];
+    let mut link_bytes_total = 0u64;
+
+    let (busy, batch_counts, item_counts) = match shard.mode {
+        ShardMode::Replicated => {
+            let nb = shard.used_boards();
+            let mut batchers: Vec<DynamicBatcher<usize>> =
+                (0..nb).map(|_| DynamicBatcher::new(policy)).collect();
+            let mut free_at = vec![0u64; nb];
+            let mut busy = vec![0u64; nb];
+            drive_batchers(
+                &mut batchers,
+                &arrivals,
+                &to_instant,
+                &to_cycles,
+                |b, batch, ready| {
+                    let bsz = batch.len() as u64;
+                    let svc = shard.shards[b].batch_cycles(bsz)
+                        + shared.stall_cycles(shard.shards[b].traffic_bytes * bsz, n_active);
+                    let start = ready.max(free_at[b]);
+                    let done = start + svc;
+                    free_at[b] = done;
+                    busy[b] += svc;
+                    for req in batch {
+                        complete[req] = done;
+                    }
+                },
+            );
+            let batches: Vec<u64> = batchers.iter().map(|b| b.batches_emitted).collect();
+            let items: Vec<u64> = batchers.iter().map(|b| b.items_processed).collect();
+            (busy, batches, items)
+        }
+        ShardMode::Pipelined => {
+            let stages = shard.used_boards();
+            // One shared entry queue feeds stage 0; a batch then traverses
+            // the whole board chain as a unit.
+            let mut entry = vec![DynamicBatcher::<usize>::new(policy)];
+            let mut free_at = vec![0u64; stages];
+            let mut busy = vec![0u64; stages];
+            drive_batchers(
+                &mut entry,
+                &arrivals,
+                &to_instant,
+                &to_cycles,
+                |_, batch, ready| {
+                    let bsz = batch.len() as u64;
+                    let mut t = ready;
+                    for (s, bs) in shard.shards.iter().enumerate() {
+                        let svc = bs.batch_cycles(bsz)
+                            + shared.stall_cycles(bs.traffic_bytes * bsz, n_active);
+                        let start = t.max(free_at[s]);
+                        let done = start + svc;
+                        free_at[s] = done;
+                        busy[s] += svc;
+                        t = done;
+                        if s + 1 < stages {
+                            let bytes = bs.egress_bytes * bsz;
+                            link_bytes_total += bytes;
+                            t += link.transfer_cycles(bytes);
+                        }
+                    }
+                    for req in batch {
+                        complete[req] = t;
+                    }
+                },
+            );
+            let batches = vec![entry[0].batches_emitted; stages];
+            let items = vec![entry[0].items_processed; stages];
+            (busy, batches, items)
+        }
+    };
+
+    let makespan_cycles = complete.iter().copied().max().unwrap_or(0);
+    let makespan_s = makespan_cycles as f64 * ns_per_cycle / 1e9;
+    let mut lat_ms: Vec<f64> = complete
+        .iter()
+        .zip(&arrivals)
+        .map(|(&c, &a)| (c.saturating_sub(a)) as f64 * ns_per_cycle / 1e6)
+        .collect();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+
+    let per_board: Vec<BoardStats> = (0..shard.used_boards())
+        .map(|b| BoardStats {
+            board: b,
+            items: item_counts[b],
+            batches: batch_counts[b],
+            busy_cycles: busy[b],
+            utilization: if makespan_cycles == 0 {
+                0.0
+            } else {
+                busy[b] as f64 / makespan_cycles as f64
+            },
+        })
+        .collect();
+
+    FleetReport {
+        mode: shard.mode,
+        boards: shard.boards,
+        used_boards: shard.used_boards(),
+        requests: n,
+        completed: n,
+        makespan_cycles,
+        throughput_rps: n as f64 / makespan_s,
+        mean_ms,
+        p50_ms: percentile_sorted(&lat_ms, 50.0),
+        p99_ms: percentile_sorted(&lat_ms, 99.0),
+        per_board,
+        link_bytes_total,
+        ddr_slowdown: shared.slowdown(n_active),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::engine::Weights;
+    use crate::accel::fusion::FusionPlan;
+    use crate::config::vgg16_prefix;
+
+    fn setup() -> (AccelConfig, crate::config::Network, Weights) {
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 1);
+        (AccelConfig::paper_default(), net, w)
+    }
+
+    fn burst_cfg(boards: usize, mode: ShardMode) -> ClusterConfig {
+        ClusterConfig {
+            boards,
+            mode,
+            link_bytes_per_cycle: f64::INFINITY,
+            link_latency_cycles: 0,
+            aggregate_ddr_bytes_per_cycle: None,
+            arrival_rps: f64::INFINITY,
+            requests: 96,
+            seed: 7,
+            max_batch: 1,
+            max_wait_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_and_monotone() {
+        let a = poisson_arrivals(64, 1000.0, 120.0, 9);
+        let b = poisson_arrivals(64, 1000.0, 120.0, 9);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // Mean inter-arrival ≈ 120e6/1000 = 120k cycles; loose 3σ band.
+        let mean = a.last().unwrap() / 64;
+        assert!((40_000..400_000).contains(&mean), "mean gap {mean}");
+        assert_eq!(poisson_arrivals(5, f64::INFINITY, 120.0, 1), vec![0; 5]);
+    }
+
+    #[test]
+    fn replicated_burst_splits_work_evenly() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 4);
+        let r = simulate_fleet(&cfg, &shard, &burst_cfg(4, ShardMode::Replicated));
+        assert_eq!(r.completed, 96);
+        assert_eq!(r.per_board.len(), 4);
+        for b in &r.per_board {
+            assert_eq!(b.items, 24, "round-robin split");
+            assert!(b.utilization > 0.9, "burst keeps boards busy: {b:?}");
+        }
+        assert_eq!(r.link_bytes_total, 0);
+        assert_eq!(r.ddr_slowdown, 1.0);
+    }
+
+    #[test]
+    fn batching_amortizes_overheads() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7); // many groups → big fill/drain
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let mut c1 = burst_cfg(2, ShardMode::Replicated);
+        c1.max_batch = 1;
+        let mut c8 = c1.clone();
+        c8.max_batch = 8;
+        let r1 = simulate_fleet(&cfg, &shard, &c1);
+        let r8 = simulate_fleet(&cfg, &shard, &c8);
+        assert!(
+            r8.throughput_rps > r1.throughput_rps,
+            "batch 8 {} ≤ batch 1 {}",
+            r8.throughput_rps,
+            r1.throughput_rps
+        );
+    }
+
+    #[test]
+    fn contention_never_helps() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 8);
+        let free = burst_cfg(8, ShardMode::Replicated);
+        let mut tight = free.clone();
+        // Pool worth two boards for an 8-board fleet → 4× slowdown.
+        tight.aggregate_ddr_bytes_per_cycle = Some(2.0 * cfg.platform.ddr_bytes_per_cycle);
+        let r_free = simulate_fleet(&cfg, &shard, &free);
+        let r_tight = simulate_fleet(&cfg, &shard, &tight);
+        assert!(r_tight.throughput_rps < r_free.throughput_rps);
+        assert_eq!(r_tight.ddr_slowdown, 4.0);
+        assert!(r_tight.p99_ms > r_free.p99_ms);
+    }
+
+    #[test]
+    fn pipelined_burst_counts_link_bytes() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let shard = ShardPlan::pipelined(&cfg, &net, &w, &plan, 3);
+        let ccfg = burst_cfg(3, ShardMode::Pipelined);
+        let r = simulate_fleet(&cfg, &shard, &ccfg);
+        assert_eq!(r.completed, 96);
+        assert_eq!(
+            r.link_bytes_total,
+            shard.link_bytes_per_item() * 96,
+            "every item crosses every interior link exactly once"
+        );
+    }
+
+    #[test]
+    fn low_load_latency_near_service_time() {
+        // At a trickle arrival rate with batch=1, each request is served
+        // alone: latency ≈ single-inference cycles.
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let mut ccfg = burst_cfg(2, ShardMode::Replicated);
+        ccfg.requests = 32;
+        ccfg.arrival_rps = 1.0; // one per second ≫ service time apart
+        let r = simulate_fleet(&cfg, &shard, &ccfg);
+        let svc_ms = shard.shards[0].item_cycles() as f64 / (cfg.platform.freq_mhz * 1e3);
+        assert!(
+            (r.p50_ms - svc_ms).abs() / svc_ms < 0.05,
+            "p50 {} vs svc {}",
+            r.p50_ms,
+            svc_ms
+        );
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let r = simulate_fleet(&cfg, &shard, &burst_cfg(2, ShardMode::Replicated));
+        let j = r.to_json();
+        assert_eq!(j.get("mode").as_str(), Some("replicated"));
+        assert_eq!(j.get("boards").as_usize(), Some(2));
+        assert_eq!(j.get("per_board").as_arr().unwrap().len(), 2);
+        assert!(j.get("throughput_rps").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,229 @@
+//! Cluster (multi-board) configuration: fleet size, sharding mode,
+//! inter-board link, shared off-chip bandwidth, and the open-loop workload
+//! driven at the fleet. Parsed from JSON like the other configs.
+
+use crate::util::json::{parse, Json};
+
+/// How the network is distributed across boards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// Data parallel: every board hosts the whole network; requests are
+    /// load-balanced across boards.
+    Replicated,
+    /// Model parallel: each board hosts a contiguous range of fusion
+    /// groups; activations cross inter-board links at the cuts.
+    Pipelined,
+}
+
+impl ShardMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardMode::Replicated => "replicated",
+            ShardMode::Pipelined => "pipelined",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<ShardMode, String> {
+        match s {
+            "replicated" => Ok(ShardMode::Replicated),
+            "pipelined" => Ok(ShardMode::Pipelined),
+            other => Err(format!(
+                "unknown shard mode '{other}' (expected 'replicated' or 'pipelined')"
+            )),
+        }
+    }
+}
+
+/// Configuration of a simulated multi-accelerator serving fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of boards provisioned. Pipelined mode may leave boards idle
+    /// when the network has fewer fusion groups than boards.
+    pub boards: usize,
+    pub mode: ShardMode,
+    /// Inter-board link bandwidth (bytes per accelerator cycle). Only
+    /// pipelined mode moves activations across links.
+    pub link_bytes_per_cycle: f64,
+    /// Fixed per-transfer link latency (serialization + switch hop).
+    pub link_latency_cycles: u64,
+    /// Aggregate off-chip bandwidth shared by all co-located boards, in
+    /// bytes/cycle. `None` disables the contention model (each board keeps
+    /// its full private `Platform::ddr_bytes_per_cycle`).
+    pub aggregate_ddr_bytes_per_cycle: Option<f64>,
+    /// Open-loop arrival rate in requests/second. `f64::INFINITY` (JSON:
+    /// field absent or `null`) means a saturating burst: every request
+    /// arrives at t = 0, which measures fleet capacity.
+    pub arrival_rps: f64,
+    /// Number of requests the workload generator fires.
+    pub requests: usize,
+    /// PRNG seed for arrival sampling.
+    pub seed: u64,
+    /// Per-board dynamic batching bounds (mirrors `BatchPolicy`).
+    pub max_batch: usize,
+    pub max_wait_us: f64,
+}
+
+impl ClusterConfig {
+    /// A small default fleet: 4 replicated boards, PCIe-class links, shared
+    /// DDR pool worth two boards, moderate open-loop load.
+    pub fn fleet_default() -> ClusterConfig {
+        ClusterConfig {
+            boards: 4,
+            mode: ShardMode::Replicated,
+            link_bytes_per_cycle: 16.0,
+            link_latency_cycles: 64,
+            aggregate_ddr_bytes_per_cycle: Some(128.0),
+            arrival_rps: f64::INFINITY,
+            requests: 256,
+            seed: 1,
+            max_batch: 8,
+            max_wait_us: 200.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.boards == 0 {
+            return Err("cluster: boards must be >= 1".into());
+        }
+        if self.requests == 0 {
+            return Err("cluster: requests must be >= 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("cluster: max_batch must be >= 1".into());
+        }
+        if !(self.link_bytes_per_cycle > 0.0) {
+            return Err("cluster: link_bytes_per_cycle must be > 0".into());
+        }
+        if let Some(a) = self.aggregate_ddr_bytes_per_cycle {
+            if !(a > 0.0) {
+                return Err("cluster: aggregate_ddr_bytes_per_cycle must be > 0".into());
+            }
+        }
+        if !(self.arrival_rps > 0.0) {
+            return Err("cluster: arrival_rps must be > 0 (or omitted for a burst)".into());
+        }
+        if !(self.max_wait_us >= 0.0) {
+            return Err("cluster: max_wait_us must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("boards", self.boards)
+            .set("mode", self.mode.as_str())
+            .set("link_bytes_per_cycle", self.link_bytes_per_cycle)
+            .set("link_latency_cycles", self.link_latency_cycles)
+            .set("requests", self.requests)
+            .set("seed", self.seed)
+            .set("max_batch", self.max_batch)
+            .set("max_wait_us", self.max_wait_us);
+        if let Some(a) = self.aggregate_ddr_bytes_per_cycle {
+            j = j.set("aggregate_ddr_bytes_per_cycle", a);
+        }
+        // JSON has no Infinity: a saturating burst is encoded by omission.
+        if self.arrival_rps.is_finite() {
+            j = j.set("arrival_rps", self.arrival_rps);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterConfig, String> {
+        let base = ClusterConfig::fleet_default();
+        let cfg = ClusterConfig {
+            boards: j
+                .get("boards")
+                .as_usize()
+                .ok_or("cluster: missing/invalid 'boards'")?,
+            mode: ShardMode::from_name(
+                j.get("mode").as_str().ok_or("cluster: missing 'mode'")?,
+            )?,
+            link_bytes_per_cycle: j
+                .get("link_bytes_per_cycle")
+                .as_f64()
+                .unwrap_or(base.link_bytes_per_cycle),
+            link_latency_cycles: j
+                .get("link_latency_cycles")
+                .as_u64()
+                .unwrap_or(base.link_latency_cycles),
+            aggregate_ddr_bytes_per_cycle: match j.get("aggregate_ddr_bytes_per_cycle") {
+                Json::Null => None,
+                v => Some(
+                    v.as_f64()
+                        .ok_or("cluster: invalid 'aggregate_ddr_bytes_per_cycle'")?,
+                ),
+            },
+            arrival_rps: match j.get("arrival_rps") {
+                Json::Null => f64::INFINITY,
+                v => v.as_f64().ok_or("cluster: invalid 'arrival_rps'")?,
+            },
+            requests: j.get("requests").as_usize().unwrap_or(base.requests),
+            seed: j.get("seed").as_u64().unwrap_or(base.seed),
+            max_batch: j.get("max_batch").as_usize().unwrap_or(base.max_batch),
+            max_wait_us: j.get("max_wait_us").as_f64().unwrap_or(base.max_wait_us),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<ClusterConfig, String> {
+        let j = parse(s).map_err(|e| format!("cluster json: {e}"))?;
+        ClusterConfig::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_finite_rate() {
+        let mut c = ClusterConfig::fleet_default();
+        c.arrival_rps = 1500.0;
+        c.mode = ShardMode::Pipelined;
+        c.boards = 7;
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn json_roundtrip_burst_and_no_contention() {
+        let mut c = ClusterConfig::fleet_default();
+        c.aggregate_ddr_bytes_per_cycle = None; // contention disabled
+        assert!(c.arrival_rps.is_infinite());
+        let s = c.to_json().to_string_compact();
+        assert!(!s.contains("arrival_rps"), "burst is encoded by omission");
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        for (field, bad) in [
+            ("boards", r#"{"boards":0,"mode":"replicated"}"#),
+            ("mode", r#"{"boards":2,"mode":"sideways"}"#),
+            ("requests", r#"{"boards":2,"mode":"replicated","requests":0}"#),
+            ("batch", r#"{"boards":2,"mode":"replicated","max_batch":0}"#),
+            (
+                "aggregate",
+                r#"{"boards":2,"mode":"replicated","aggregate_ddr_bytes_per_cycle":0}"#,
+            ),
+            ("rate", r#"{"boards":2,"mode":"replicated","arrival_rps":-5}"#),
+        ] {
+            assert!(
+                ClusterConfig::from_json_str(bad).is_err(),
+                "{field} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn defaults_fill_optional_fields() {
+        let c = ClusterConfig::from_json_str(r#"{"boards":3,"mode":"pipelined"}"#).unwrap();
+        assert_eq!(c.boards, 3);
+        assert_eq!(c.mode, ShardMode::Pipelined);
+        assert!(c.arrival_rps.is_infinite());
+        assert_eq!(c.max_batch, ClusterConfig::fleet_default().max_batch);
+    }
+}

@@ -1,6 +1,9 @@
-//! Configuration: network topology specs and accelerator platform knobs.
+//! Configuration: network topology specs, accelerator platform knobs, and
+//! cluster (multi-board fleet) parameters.
 pub mod accel;
+pub mod cluster;
 pub mod network;
 
 pub use accel::{AccelConfig, Platform};
+pub use cluster::{ClusterConfig, ShardMode};
 pub use network::{custom_4conv, paper_test_example, tiny_vgg, vgg16_full, vgg16_prefix, Layer, Network, VolShape};

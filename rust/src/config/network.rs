@@ -159,13 +159,30 @@ impl Network {
         n
     }
 
-    /// Validate structural invariants (positive dims, pool divisibility, etc.).
+    /// Validate structural invariants (positive dims, pool divisibility,
+    /// sane magnitudes, etc.). Every loading path goes through here before
+    /// shape inference or the engine ever touch the spec, so hostile or
+    /// malformed JSON fails with a `SpecError` instead of a panic or an
+    /// arithmetic overflow deep in the stack.
     pub fn validate(&self) -> Result<(), SpecError> {
+        // Magnitude caps: far above anything a VGG-like net uses, low enough
+        // that every downstream product stays inside 64 bits — the worst
+        // per-layer MAC count is extent²·filters·kernel²·depth ≤
+        // 2^24·2^16·2^10·2^12 = 2^62.
+        const MAX_EXTENT: usize = 4096;
+        const MAX_KERNEL: usize = 31;
+        const MAX_FILTERS: usize = 1 << 16;
+        const MAX_STRIDE: usize = 256;
         if self.layers.is_empty() {
             return Err(SpecError("network has no layers".into()));
         }
         if self.input.h == 0 || self.input.w == 0 || self.input.d == 0 {
             return Err(SpecError("input shape has zero extent".into()));
+        }
+        if self.input.h > MAX_EXTENT || self.input.w > MAX_EXTENT || self.input.d > MAX_EXTENT {
+            return Err(SpecError(format!(
+                "input shape exceeds the {MAX_EXTENT} extent cap"
+            )));
         }
         let mut s = self.input;
         for layer in &self.layers {
@@ -181,6 +198,26 @@ impl Network {
                     if *kernel == 0 || *filters == 0 || *stride == 0 {
                         return Err(SpecError(format!("{name}: zero kernel/filters/stride")));
                     }
+                    if *kernel > MAX_KERNEL {
+                        return Err(SpecError(format!(
+                            "{name}: kernel {kernel} exceeds the {MAX_KERNEL} cap"
+                        )));
+                    }
+                    if *filters > MAX_FILTERS {
+                        return Err(SpecError(format!(
+                            "{name}: {filters} filters exceed the {MAX_FILTERS} cap"
+                        )));
+                    }
+                    if *stride > MAX_STRIDE {
+                        return Err(SpecError(format!(
+                            "{name}: stride {stride} exceeds the {MAX_STRIDE} cap"
+                        )));
+                    }
+                    if *padding >= *kernel {
+                        return Err(SpecError(format!(
+                            "{name}: padding {padding} must be smaller than kernel {kernel}"
+                        )));
+                    }
                     if s.h + 2 * padding < *kernel || s.w + 2 * padding < *kernel {
                         return Err(SpecError(format!(
                             "{name}: kernel {kernel} exceeds padded input {}x{}",
@@ -192,6 +229,11 @@ impl Network {
                 Layer::MaxPool { name, window, stride } => {
                     if *window == 0 || *stride == 0 {
                         return Err(SpecError(format!("{name}: zero window/stride")));
+                    }
+                    if *window > MAX_KERNEL || *stride > MAX_STRIDE {
+                        return Err(SpecError(format!(
+                            "{name}: pool window/stride exceed the caps"
+                        )));
                     }
                     if s.h < *window || s.w < *window {
                         return Err(SpecError(format!(
@@ -537,6 +579,93 @@ mod tests {
             }],
         };
         assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_zero_and_absurd_fields() {
+        let base = |layers: &str| {
+            format!(r#"{{"name":"x","input":{{"h":16,"w":16,"d":3}},"layers":[{layers}]}}"#)
+        };
+        for (what, layer) in [
+            (
+                "zero stride",
+                r#"{"type":"conv","name":"c","kernel":3,"filters":4,"stride":0,"padding":1}"#,
+            ),
+            (
+                "zero kernel",
+                r#"{"type":"conv","name":"c","kernel":0,"filters":4,"stride":1}"#,
+            ),
+            (
+                "zero filters",
+                r#"{"type":"conv","name":"c","kernel":3,"filters":0,"stride":1}"#,
+            ),
+            (
+                "zero pool stride",
+                r#"{"type":"maxpool","name":"p","window":2,"stride":0}"#,
+            ),
+            (
+                "padding >= kernel",
+                r#"{"type":"conv","name":"c","kernel":3,"filters":4,"stride":1,"padding":3}"#,
+            ),
+            (
+                "huge kernel",
+                r#"{"type":"conv","name":"c","kernel":999,"filters":4,"stride":1}"#,
+            ),
+            (
+                "huge filters",
+                r#"{"type":"conv","name":"c","kernel":3,"filters":9999999,"stride":1}"#,
+            ),
+            (
+                "huge padding (overflow bait)",
+                r#"{"type":"conv","name":"c","kernel":3,"filters":4,"stride":1,"padding":4503599627370496}"#,
+            ),
+        ] {
+            assert!(
+                Network::from_json_str(&base(layer)).is_err(),
+                "{what} must be rejected"
+            );
+        }
+        // Empty layer list.
+        assert!(
+            Network::from_json_str(r#"{"name":"x","input":{"h":8,"w":8,"d":3},"layers":[]}"#)
+                .is_err()
+        );
+        // Zero input extent.
+        assert!(Network::from_json_str(
+            r#"{"name":"x","input":{"h":0,"w":8,"d":3},
+                "layers":[{"type":"conv","name":"c","kernel":3,"filters":4,"stride":1,"padding":1}]}"#
+        )
+        .is_err());
+        // A valid spec still parses.
+        assert!(Network::from_json_str(&base(
+            r#"{"type":"conv","name":"c","kernel":3,"filters":4,"stride":1,"padding":1}"#
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn caps_keep_downstream_products_in_range() {
+        // A spec sitting exactly at the validation caps must not overflow
+        // the derived quantities (debug builds would panic on wraparound).
+        let net = Network {
+            name: "caps-edge".into(),
+            input: VolShape::new(4096, 4096, 4096),
+            layers: vec![Layer::Conv {
+                name: "c".into(),
+                kernel: 31,
+                filters: 1 << 16,
+                stride: 1,
+                padding: 0,
+                relu: true,
+            }],
+        };
+        net.validate().unwrap();
+        assert!(net.total_macs() > 0);
+        assert!(net.total_weights() > 0);
+        // One past the extent cap is rejected.
+        let mut big = net;
+        big.input = VolShape::new(4097, 4096, 4096);
+        assert!(big.validate().is_err());
     }
 
     #[test]

@@ -165,6 +165,86 @@ mod tests {
     }
 
     #[test]
+    fn objectives_pick_the_expected_plan_on_a_small_net() {
+        // tiny-vgg: every objective's winner must be *provably* optimal
+        // against the exhaustively costed plan space, not just plausible.
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 5);
+        let all = cost_all_plans(&cfg, &net, &w);
+        let feasible: Vec<&PlanCost> = all.iter().filter(|p| p.fits).collect();
+        assert!(!feasible.is_empty());
+
+        let lat = best_plan(&cfg, &net, &w, Objective::Latency).unwrap();
+        assert_eq!(
+            lat.cycles,
+            feasible.iter().map(|p| p.cycles).min().unwrap(),
+            "latency winner {} is not cycle-minimal",
+            lat.plan.label()
+        );
+
+        let tra = best_plan(&cfg, &net, &w, Objective::Traffic).unwrap();
+        assert_eq!(
+            tra.traffic_bytes,
+            feasible.iter().map(|p| p.traffic_bytes).min().unwrap()
+        );
+        assert_eq!(tra.plan.n_groups(), 1, "min traffic = spill nothing");
+
+        let cap_pct = 10u8;
+        let cap = cfg.platform.dsp * cap_pct as usize / 100;
+        if let Some(capped) = best_plan(&cfg, &net, &w, Objective::LatencyUnderDspCap(cap_pct)) {
+            assert!(capped.resources.dsp <= cap);
+            let best_under_cap = feasible
+                .iter()
+                .filter(|p| p.resources.dsp <= cap)
+                .map(|p| p.cycles)
+                .min()
+                .unwrap();
+            assert_eq!(capped.cycles, best_under_cap);
+        }
+    }
+
+    #[test]
+    fn over_budget_plans_marked_unfit_and_never_selected() {
+        // Shrink the board until heavy fusion stops fitting: every over-budget
+        // plan must be costed with fits = false, and no objective may ever
+        // return one.
+        let mut cfg = AccelConfig::paper_default();
+        cfg.platform.dsp = 700; // full 7-layer fusion needs ≈ 2333 DSPs
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 9);
+        let all = cost_all_plans(&cfg, &net, &w);
+        let n_unfit = all.iter().filter(|p| !p.fits).count();
+        assert!(n_unfit > 0, "shrunken board must exclude some plans");
+        for p in &all {
+            assert_eq!(p.fits, p.resources.fits(&cfg), "{}", p.plan.label());
+        }
+        for objective in [
+            Objective::Latency,
+            Objective::Traffic,
+            Objective::LatencyUnderDspCap(80),
+        ] {
+            if let Some(best) = best_plan(&cfg, &net, &w, objective) {
+                assert!(best.fits, "{objective:?} selected an unfit plan");
+                assert!(best.resources.fits(&cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_budget_yields_no_plan() {
+        let mut cfg = AccelConfig::paper_default();
+        cfg.platform.dsp = 10;
+        cfg.platform.lut = 1000;
+        cfg.platform.ff = 1000;
+        cfg.platform.bram36 = 1;
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 3);
+        assert!(best_plan(&cfg, &net, &w, Objective::Latency).is_none());
+        assert!(cost_all_plans(&cfg, &net, &w).iter().all(|p| !p.fits));
+    }
+
+    #[test]
     fn property_planner_respects_budget_and_partition() {
         let cfg = AccelConfig::paper_default();
         prop::check_default(

@@ -248,6 +248,22 @@ fn execute_batch(
     }
 }
 
+/// Fleet-mode serving: the coordinator's second front end.
+///
+/// The threaded [`Server`] drives one board's compiled artifacts with real
+/// clients; this entry point drives a *simulated* fleet of boards with an
+/// open-loop workload — same planning stack (fusion planner → shard planner),
+/// same batching policy semantics, closed-form service times. It is how
+/// capacity questions ("how many boards for this traffic?") are answered
+/// without hardware.
+pub fn simulate_cluster(
+    cfg: &crate::config::AccelConfig,
+    net: &crate::config::Network,
+    ccfg: &crate::config::ClusterConfig,
+) -> std::result::Result<crate::cluster::FleetReport, String> {
+    crate::cluster::run_fleet(cfg, net, ccfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -345,6 +361,18 @@ mod tests {
         let ok = srv.handle.submit(input, None).wait().unwrap();
         assert!(ok.result.is_ok());
         srv.shutdown();
+    }
+
+    #[test]
+    fn cluster_simulation_needs_no_artifacts() {
+        let cfg = crate::config::AccelConfig::paper_default();
+        let net = crate::config::vgg16_prefix();
+        let mut ccfg = crate::config::ClusterConfig::fleet_default();
+        ccfg.requests = 32;
+        let r = simulate_cluster(&cfg, &net, &ccfg).unwrap();
+        assert_eq!(r.completed, 32);
+        assert!(r.throughput_rps > 0.0);
+        assert_eq!(r.per_board.len(), ccfg.boards);
     }
 
     #[test]

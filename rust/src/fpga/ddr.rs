@@ -102,6 +102,57 @@ impl DdrChannel {
     }
 }
 
+/// Shared off-chip bandwidth across co-located boards (the cluster model).
+///
+/// Each board is provisioned with `per_board_bytes_per_cycle` of DDR
+/// bandwidth, but boards mounted on one host/backplane draw from an
+/// `aggregate_bytes_per_cycle` pool. While fewer boards are active than the
+/// pool covers, every board streams at its full provisioned rate; once
+/// `n_active · per_board > aggregate`, the memory controller time-slices and
+/// every board's off-chip phases stretch by the oversubscription ratio.
+/// `aggregate = None` disables the contention model entirely (private
+/// channels per board — the idealized scaling baseline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SharedDdr {
+    pub per_board_bytes_per_cycle: f64,
+    pub aggregate_bytes_per_cycle: Option<f64>,
+}
+
+impl SharedDdr {
+    pub fn new(per_board: f64, aggregate: Option<f64>) -> SharedDdr {
+        assert!(per_board > 0.0);
+        if let Some(a) = aggregate {
+            assert!(a > 0.0, "aggregate bandwidth must be positive");
+        }
+        SharedDdr {
+            per_board_bytes_per_cycle: per_board,
+            aggregate_bytes_per_cycle: aggregate,
+        }
+    }
+
+    /// Multiplier applied to off-chip phase durations when `n_active` boards
+    /// contend. ≥ 1; exactly 1 when contention is disabled or the pool
+    /// covers the demand.
+    pub fn slowdown(&self, n_active: usize) -> f64 {
+        match self.aggregate_bytes_per_cycle {
+            None => 1.0,
+            Some(agg) => {
+                let demand = n_active as f64 * self.per_board_bytes_per_cycle;
+                (demand / agg).max(1.0)
+            }
+        }
+    }
+
+    /// Extra stall cycles contention adds on top of an off-chip phase that
+    /// moves `bytes`. Uncontended, the phase overlaps compute and costs
+    /// nothing extra; contended, the stretch beyond the provisioned-rate
+    /// duration is pure added stall.
+    pub fn stall_cycles(&self, bytes: u64, n_active: usize) -> u64 {
+        let base = bytes as f64 / self.per_board_bytes_per_cycle;
+        ((self.slowdown(n_active) - 1.0) * base).ceil() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +195,31 @@ mod tests {
         assert_eq!(ddr.cycles_for(4), 1);
         assert_eq!(ddr.cycles_for(5), 2);
         assert_eq!(ddr.cycles_for(0), 0);
+    }
+
+    #[test]
+    fn shared_ddr_slowdown_kicks_in_past_the_pool() {
+        let s = SharedDdr::new(64.0, Some(128.0));
+        assert_eq!(s.slowdown(1), 1.0);
+        assert_eq!(s.slowdown(2), 1.0); // 2·64 = 128 exactly covered
+        assert_eq!(s.slowdown(4), 2.0); // 4·64 / 128
+        assert_eq!(s.slowdown(8), 4.0);
+    }
+
+    #[test]
+    fn shared_ddr_disabled_never_stalls() {
+        let s = SharedDdr::new(64.0, None);
+        assert_eq!(s.slowdown(16), 1.0);
+        assert_eq!(s.stall_cycles(1 << 20, 16), 0);
+    }
+
+    #[test]
+    fn shared_ddr_stall_is_the_stretch_beyond_provisioned() {
+        let s = SharedDdr::new(64.0, Some(128.0));
+        // 4 boards → 2× slowdown → stall equals one extra base duration.
+        let bytes = 64 * 1000;
+        assert_eq!(s.stall_cycles(bytes, 4), 1000);
+        assert_eq!(s.stall_cycles(bytes, 2), 0);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! DeCoILFNet reproduction library. See DESIGN.md for the system map.
 pub mod accel;
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod fpga;

@@ -6,6 +6,7 @@
 //!   resources  structural resource report (Table I)
 //!   verify     simulator <-> PJRT runtime numeric cross-check
 //!   serve      threaded inference server demo over the AOT artifacts
+//!   cluster    simulated multi-board fleet (sharding, contention, queueing)
 //!   report     headline paper-vs-measured summary (E7)
 
 use std::path::PathBuf;
@@ -30,7 +31,13 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory", default: Some("artifacts") },
         OptSpec { name: "objective", takes_value: true, help: "planner objective: latency | traffic", default: Some("latency") },
         OptSpec { name: "dsp-cap", takes_value: true, help: "planner DSP cap in percent of the board", default: None },
-        OptSpec { name: "requests", takes_value: true, help: "serve: number of requests to fire", default: Some("32") },
+        OptSpec { name: "requests", takes_value: true, help: "serve/cluster: number of requests to fire", default: Some("32") },
+        OptSpec { name: "boards", takes_value: true, help: "cluster: number of simulated boards", default: Some("4") },
+        OptSpec { name: "mode", takes_value: true, help: "cluster: sharding mode: replicated | pipelined", default: Some("replicated") },
+        OptSpec { name: "rate", takes_value: true, help: "cluster: open-loop arrival rate in req/s (omit for a saturating burst)", default: None },
+        OptSpec { name: "aggregate-ddr", takes_value: true, help: "cluster: shared off-chip bandwidth pool in bytes/cycle (omit to disable contention)", default: None },
+        OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above)", default: None },
+        OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
         OptSpec { name: "clients", takes_value: true, help: "serve: concurrent client threads", default: Some("4") },
         OptSpec { name: "batch", takes_value: true, help: "serve: max batch size", default: Some("8") },
         OptSpec { name: "seed", takes_value: true, help: "weight/input seed", default: Some("1") },
@@ -58,6 +65,7 @@ fn main() {
         "resources" => cmd_resources(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "report" => cmd_report(&args),
         "trace" => cmd_trace(&args),
         other => Err(format!("unknown subcommand '{other}'\n\n{}", help())),
@@ -77,6 +85,7 @@ fn help() -> String {
             ("resources", "structural resource report (Table I)"),
             ("verify", "simulator vs PJRT runtime numeric cross-check"),
             ("serve", "threaded inference server demo over the artifacts"),
+            ("cluster", "simulated multi-board fleet: sharding + contention + queueing"),
             ("report", "headline paper-vs-measured summary"),
             ("trace", "pipeline timeline (Fig 5 staircase) for a plan"),
         ],
@@ -308,6 +317,80 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         n_requests as f64 / wall.as_secs_f64()
     );
     srv.shutdown();
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    let net = load_net(args)?;
+    let cfg = AccelConfig::paper_default();
+
+    let ccfg = match args.opt("cluster-config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading cluster config '{path}': {e}"))?;
+            decoilfnet::config::ClusterConfig::from_json_str(&text)?
+        }
+        None => {
+            let mut c = decoilfnet::config::ClusterConfig::fleet_default();
+            c.boards = args.opt_usize("boards")?.unwrap_or(4).max(1);
+            c.mode = decoilfnet::config::ShardMode::from_name(args.opt("mode").unwrap())?;
+            c.arrival_rps = args.opt_f64("rate")?.unwrap_or(f64::INFINITY);
+            c.aggregate_ddr_bytes_per_cycle = args.opt_f64("aggregate-ddr")?;
+            c.requests = args.opt_usize("requests")?.unwrap_or(256).max(1);
+            c.seed = args.opt_usize("seed")?.unwrap_or(1) as u64;
+            c.max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
+            c.validate()?;
+            c
+        }
+    };
+
+    let board_counts: Vec<usize> = if args.has_flag("sweep") {
+        (1..=ccfg.boards).collect()
+    } else {
+        vec![ccfg.boards]
+    };
+
+    let mut t = Table::new(&[
+        "boards", "mode", "req/s", "p50 ms", "p99 ms", "avg util", "ddr slowdown",
+    ])
+    .title(&format!(
+        "fleet simulation: {} — {} requests, {}",
+        net.name,
+        ccfg.requests,
+        if ccfg.arrival_rps.is_finite() {
+            format!("{} req/s open loop", ccfg.arrival_rps)
+        } else {
+            "saturating burst".to_string()
+        }
+    ));
+    let mut reports = Vec::new();
+    for boards in board_counts {
+        let mut c = ccfg.clone();
+        c.boards = boards;
+        let r = decoilfnet::coordinator::simulate_cluster(&cfg, &net, &c)?;
+        let avg_util = r.per_board.iter().map(|b| b.utilization).sum::<f64>()
+            / r.per_board.len() as f64;
+        t.row(&[
+            format!("{} ({} used)", r.boards, r.used_boards),
+            r.mode.as_str().to_string(),
+            format!("{:.1}", r.throughput_rps),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.0}%", 100.0 * avg_util),
+            format!("{:.2}x", r.ddr_slowdown),
+        ]);
+        reports.push(r);
+    }
+
+    if args.has_flag("json") {
+        let mut arr = decoilfnet::util::json::Json::Arr(vec![]);
+        for r in &reports {
+            arr = arr.push(r.to_json());
+        }
+        println!("{}", arr.to_string_pretty());
+    } else {
+        println!("{}", t.to_ascii());
+    }
     Ok(())
 }
 

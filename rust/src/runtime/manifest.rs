@@ -202,6 +202,87 @@ mod tests {
     }
 
     #[test]
+    fn hand_written_manifest_matches_shape_inference() {
+        // Satellite check: a manifest written by hand (as aot.py would emit)
+        // round-trips, and every group's lo/hi range and in/out shapes agree
+        // with `Network::shapes()` computed independently from the spec.
+        let text = r#"{
+          "version": 1,
+          "networks": {
+            "tiny-vgg": {
+              "network": {
+                "name": "tiny-vgg",
+                "input": {"h": 32, "w": 32, "d": 3},
+                "layers": [
+                  {"type":"conv","name":"conv1_1","kernel":3,"filters":8,"stride":1,"padding":1,"relu":true},
+                  {"type":"conv","name":"conv1_2","kernel":3,"filters":8,"stride":1,"padding":1,"relu":true},
+                  {"type":"maxpool","name":"pool1","window":2,"stride":2},
+                  {"type":"conv","name":"conv2_1","kernel":3,"filters":16,"stride":1,"padding":1,"relu":true},
+                  {"type":"conv","name":"conv2_2","kernel":3,"filters":16,"stride":1,"padding":1,"relu":true},
+                  {"type":"maxpool","name":"pool2","window":2,"stride":2},
+                  {"type":"conv","name":"conv3_1","kernel":3,"filters":32,"stride":1,"padding":1,"relu":true}
+                ]
+              },
+              "weight_seed": 42,
+              "weights": [],
+              "plans": {
+                "fused": {
+                  "group_sizes": [7],
+                  "groups": [
+                    {"index":0,"lo":0,"hi":7,"hlo":"g0_0_7.hlo.txt",
+                     "in_shape":[32,32,3],"out_shape":[8,8,32]}
+                  ]
+                },
+                "split322": {
+                  "group_sizes": [3,2,2],
+                  "groups": [
+                    {"index":0,"lo":0,"hi":3,"hlo":"g0_0_3.hlo.txt",
+                     "in_shape":[32,32,3],"out_shape":[16,16,8]},
+                    {"index":1,"lo":3,"hi":5,"hlo":"g1_3_5.hlo.txt",
+                     "in_shape":[16,16,8],"out_shape":[16,16,16]},
+                    {"index":2,"lo":5,"hi":7,"hlo":"g2_5_7.hlo.txt",
+                     "in_shape":[16,16,16],"out_shape":[8,8,32]}
+                  ]
+                }
+              },
+              "golden": {
+                "input":"golden_input.bin","input_shape":[32,32,3],
+                "output":"golden_output.bin","output_shape":[8,8,32]
+              }
+            }
+          }
+        }"#;
+        let m = Manifest::from_json_str(text).unwrap();
+        let e = &m.networks["tiny-vgg"];
+        // The embedded spec equals the builtin tiny-vgg.
+        assert_eq!(e.network, crate::config::tiny_vgg());
+        let shapes = e.network.shapes();
+        for (pname, plan) in &e.plans {
+            // Group ranges tile the layer list contiguously.
+            let mut cursor = 0usize;
+            for g in &plan.groups {
+                assert_eq!(g.lo, cursor, "{pname}: group {} lo", g.index);
+                assert!(g.hi > g.lo);
+                // Boundary shapes match shape inference exactly.
+                assert_eq!(g.in_shape, shapes[g.lo].as_slice().to_vec(), "{pname} in");
+                assert_eq!(g.out_shape, shapes[g.hi].as_slice().to_vec(), "{pname} out");
+                cursor = g.hi;
+            }
+            assert_eq!(cursor, e.network.layers.len(), "{pname}: full coverage");
+            assert_eq!(
+                plan.group_sizes.iter().sum::<usize>(),
+                e.network.layers.len()
+            );
+        }
+        // Golden vectors carry the network's input/output shapes.
+        assert_eq!(e.golden.input_shape, shapes[0].as_slice().to_vec());
+        assert_eq!(
+            e.golden.output_shape,
+            shapes.last().unwrap().as_slice().to_vec()
+        );
+    }
+
+    #[test]
     fn missing_fields_error() {
         assert!(Manifest::from_json_str("{}").is_err());
         assert!(Manifest::from_json_str(r#"{"networks":{"x":{}}}"#).is_err());

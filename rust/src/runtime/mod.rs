@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::NdTensor;
-use manifest::{Manifest, NetworkEntry, PlanEntry};
+use self::manifest::{Manifest, NetworkEntry, PlanEntry};
 
 /// A compiled fusion-group executable.
 pub struct GroupExecutable {

@@ -7,7 +7,7 @@
 
 pub mod fixed;
 
-use fixed::Fx;
+use self::fixed::Fx;
 
 /// Row-major dense f32 tensor with runtime shape.
 ///

@@ -1,0 +1,174 @@
+//! Integration tests for the cluster subsystem — the acceptance properties:
+//! link-byte conservation under pipelined sharding, and idealized scaling
+//! monotonicity when the contention model is disabled.
+
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{plan_fleet, run_fleet, simulate_fleet, ShardPlan};
+use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig, Network, ShardMode};
+
+fn setup() -> (AccelConfig, Network, Weights) {
+    let net = vgg16_prefix();
+    let w = Weights::random(&net, 1);
+    (AccelConfig::paper_default(), net, w)
+}
+
+/// Contention off, ideal links, batch=1, saturating burst: the regime where
+/// scaling must be exactly monotone.
+fn ideal_cfg(boards: usize, mode: ShardMode, requests: usize) -> ClusterConfig {
+    ClusterConfig {
+        boards,
+        mode,
+        link_bytes_per_cycle: f64::INFINITY,
+        link_latency_cycles: 0,
+        aggregate_ddr_bytes_per_cycle: None,
+        arrival_rps: f64::INFINITY,
+        requests,
+        seed: 11,
+        max_batch: 1,
+        max_wait_us: 0.0,
+    }
+}
+
+#[test]
+fn pipelined_sharding_conserves_boundary_bytes() {
+    // Acceptance (a): bytes crossing inter-board links equal the activation
+    // volumes at the board cuts, computed independently from shape
+    // inference — for every board count and several fusion plans.
+    let (cfg, net, w) = setup();
+    let shapes = net.shapes();
+    let wb = cfg.platform.word_bytes;
+    for plan in [
+        FusionPlan::unfused(7),
+        FusionPlan::from_group_sizes(7, &[2, 1, 2, 1, 1]).unwrap(),
+        FusionPlan::from_group_sizes(7, &[3, 2, 2]).unwrap(),
+    ] {
+        for boards in 2..=8 {
+            let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, boards);
+            let expected: u64 = sp.shards[..sp.used_boards().saturating_sub(1)]
+                .iter()
+                .map(|s| (shapes[s.layers.end].elems() * wb) as u64)
+                .sum();
+            assert_eq!(
+                sp.link_bytes_per_item(),
+                expected,
+                "plan {} boards {boards}",
+                plan.label()
+            );
+            // And dynamically: the simulator moves exactly that per request.
+            let ccfg = ideal_cfg(boards, ShardMode::Pipelined, 40);
+            let r = simulate_fleet(&cfg, &sp, &ccfg);
+            assert_eq!(r.link_bytes_total, expected * 40);
+        }
+    }
+}
+
+#[test]
+fn replicated_throughput_monotone_without_contention() {
+    // Acceptance (b), data-parallel half.
+    let (cfg, net, w) = setup();
+    let plan = FusionPlan::fully_fused(7);
+    let mut last_makespan = u64::MAX;
+    let mut last_tp = 0.0f64;
+    for boards in 1..=12 {
+        let sp = ShardPlan::replicated(&cfg, &net, &w, &plan, boards);
+        let r = simulate_fleet(&cfg, &sp, &ideal_cfg(boards, ShardMode::Replicated, 120));
+        assert!(
+            r.makespan_cycles <= last_makespan,
+            "boards {boards}: makespan rose {} > {last_makespan}",
+            r.makespan_cycles
+        );
+        assert!(
+            r.throughput_rps >= last_tp,
+            "boards {boards}: throughput fell {} < {last_tp}",
+            r.throughput_rps
+        );
+        last_makespan = r.makespan_cycles;
+        last_tp = r.throughput_rps;
+    }
+}
+
+#[test]
+fn pipelined_throughput_monotone_without_contention() {
+    // Acceptance (b), model-parallel half (ideal links isolate the
+    // bandwidth question from link latency).
+    let (cfg, net, w) = setup();
+    let plan = FusionPlan::unfused(7);
+    let mut last_makespan = u64::MAX;
+    for boards in 1..=10 {
+        let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, boards);
+        let r = simulate_fleet(&cfg, &sp, &ideal_cfg(boards, ShardMode::Pipelined, 120));
+        assert!(
+            r.makespan_cycles <= last_makespan,
+            "boards {boards}: makespan rose {} > {last_makespan}",
+            r.makespan_cycles
+        );
+        last_makespan = r.makespan_cycles;
+    }
+}
+
+#[test]
+fn contention_only_ever_slows_the_fleet() {
+    let (cfg, net, w) = setup();
+    let plan = FusionPlan::unfused(7);
+    for mode in [ShardMode::Replicated, ShardMode::Pipelined] {
+        for boards in [2, 4, 8] {
+            let sp = match mode {
+                ShardMode::Replicated => ShardPlan::replicated(&cfg, &net, &w, &plan, boards),
+                ShardMode::Pipelined => ShardPlan::pipelined(&cfg, &net, &w, &plan, boards),
+            };
+            let free = ideal_cfg(boards, mode, 60);
+            let mut tight = free.clone();
+            tight.aggregate_ddr_bytes_per_cycle = Some(cfg.platform.ddr_bytes_per_cycle);
+            let r_free = simulate_fleet(&cfg, &sp, &free);
+            let r_tight = simulate_fleet(&cfg, &sp, &tight);
+            assert!(
+                r_tight.throughput_rps <= r_free.throughput_rps,
+                "{mode:?} {boards} boards"
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_from_json_config_end_to_end() {
+    // The serving wiring: a ClusterConfig straight from JSON drives the
+    // whole planner + scheduler stack.
+    let (cfg, net, _) = setup();
+    let ccfg = ClusterConfig::from_json_str(
+        r#"{
+            "boards": 6,
+            "mode": "pipelined",
+            "link_bytes_per_cycle": 32.0,
+            "link_latency_cycles": 32,
+            "aggregate_ddr_bytes_per_cycle": 256.0,
+            "arrival_rps": 500.0,
+            "requests": 48,
+            "seed": 3,
+            "max_batch": 4,
+            "max_wait_us": 100.0
+        }"#,
+    )
+    .unwrap();
+    let r = run_fleet(&cfg, &net, &ccfg).unwrap();
+    assert_eq!(r.completed, 48);
+    assert!(r.used_boards >= 2 && r.used_boards <= 6);
+    assert!(r.throughput_rps > 0.0);
+    assert!(r.p99_ms >= r.p50_ms);
+    let j = r.to_json();
+    assert_eq!(j.get("mode").as_str(), Some("pipelined"));
+    assert_eq!(j.get("completed").as_usize(), Some(48));
+}
+
+#[test]
+fn pipelined_shards_respect_per_board_budget() {
+    let (cfg, net, w) = setup();
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.mode = ShardMode::Pipelined;
+    ccfg.boards = 5;
+    let sp = plan_fleet(&cfg, &net, &w, &ccfg).unwrap();
+    assert!(sp.fits());
+    for s in &sp.shards {
+        assert!(s.resources.dsp <= cfg.platform.dsp);
+        assert!(s.resources.bram36() <= cfg.platform.bram36);
+    }
+}
