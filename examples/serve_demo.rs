@@ -1,10 +1,14 @@
-//! Serving demo, two tiers:
+//! Serving demo, three tiers:
 //!
 //! 1. **Fleet simulation** (always runs): the cluster subsystem plans a
 //!    multi-board shard of the VGG prefix, drives it with open-loop traffic,
 //!    and reports throughput / latency / utilization under shared-DDR
 //!    contention — replicated vs pipelined side by side.
-//! 2. **Live threaded server** (needs `make artifacts`): the coordinator
+//! 2. **Heterogeneous fleet + re-sharding** (always runs): a two-generation
+//!    fleet starts on cuts balanced under a homogeneous assumption, traffic
+//!    steps up mid-run, and the re-shard controller migrates to a plan that
+//!    respects each board's clock — throughput recovers.
+//! 3. **Live threaded server** (needs `make artifacts`): the coordinator
 //!    batching concurrent clients over the PJRT artifacts, with per-request
 //!    plan routing and live metrics.
 //!
@@ -13,7 +17,12 @@
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig, ShardMode};
+use decoilfnet::accel::latency::group_cost_estimate;
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{balance_min_max, simulate_fleet_dynamic, InterBoardLink, ShardPlan};
+use decoilfnet::config::{
+    vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, ReshardPolicy, ShardMode,
+};
 use decoilfnet::coordinator::{simulate_cluster, BatchPolicy, Server, ServerConfig};
 use decoilfnet::runtime::Runtime;
 
@@ -44,8 +53,70 @@ fn fleet_demo() -> Result<(), String> {
     Ok(())
 }
 
+/// Two fast boards, two older-generation boards; naive homogeneous cuts;
+/// a 4× traffic step a quarter of the way in. The controller notices the
+/// p99 blow-up, re-plans on the real fleet, pays the migration, recovers.
+fn hetero_reshard_demo() -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let net = vgg16_prefix();
+    let weights = Weights::random(&net, 1);
+    let slow = AccelConfig {
+        platform: Platform::virtex7_older_gen(),
+        ..cfg.clone()
+    };
+    let fleet = vec![cfg.clone(), cfg.clone(), slow.clone(), slow];
+    let plan = FusionPlan::unfused(7);
+
+    // Naive cuts: balance raw cycles as if every board ran the base clock.
+    let totals: Vec<u64> = plan
+        .groups()
+        .iter()
+        .map(|g| group_cost_estimate(&cfg, &net, g.clone()).total())
+        .collect();
+    let cuts = balance_min_max(&totals, fleet.len().min(totals.len()));
+    let naive = ShardPlan::pipelined_fleet_with_cuts(&fleet, &net, &weights, &plan, &cuts);
+
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.boards = fleet.len();
+    ccfg.mode = ShardMode::Pipelined;
+    ccfg.aggregate_ddr_bytes_per_cycle = None;
+    ccfg.requests = 512;
+    ccfg.max_batch = 8;
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let naive_cap = naive.capacity_rps(ccfg.max_batch, &link, cfg.platform.freq_mhz);
+    ccfg.arrival_rps = 0.4 * naive_cap;
+    ccfg.load_steps = vec![LoadStep {
+        at_request: 128,
+        rps: 1.6 * naive_cap,
+    }];
+    ccfg.reshard = Some(ReshardPolicy::default_policy());
+
+    println!("== heterogeneous fleet (2× 120 MHz + 2× 60 MHz), load step at request 128 ==");
+    let r = simulate_fleet_dynamic(&cfg, &fleet, &net, &weights, naive.clone(), &ccfg);
+    let mut frozen = ccfg.clone();
+    frozen.reshard = None;
+    let r_frozen = simulate_fleet_dynamic(&cfg, &fleet, &net, &weights, naive, &frozen);
+    for e in &r.reshard_events {
+        println!(
+            "  reshard @ cycle {}: {} -> {} ({}; moved {:.2} MB)",
+            e.at_cycle,
+            e.from,
+            e.to,
+            e.reason,
+            e.migration_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+    println!(
+        "  controller: {:7.1} req/s p99 {:8.2} ms   frozen naive plan: {:7.1} req/s p99 {:8.2} ms",
+        r.throughput_rps, r.p99_ms, r_frozen.throughput_rps, r_frozen.p99_ms
+    );
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     fleet_demo().map_err(anyhow::Error::msg)?;
+    hetero_reshard_demo().map_err(anyhow::Error::msg)?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {

@@ -1,22 +1,33 @@
 //! Cluster scaling sweep — the fleet-level analogue of the paper's Fig 7
-//! trade-off: 1→16 boards, replicated vs pipelined, fused vs unfused plans,
-//! with and without the shared-DDR contention model. Emits a table plus a
-//! machine-readable JSON array of {boards, mode, plan, contention,
-//! throughput_rps, p99_ms, utilization[]} rows, and asserts the headline
-//! shapes:
+//! trade-off, in three acts:
 //!
-//! * idealized (contention off) replicated throughput never decreases with
-//!   boards (the pipelined analogue, which needs ideal links, is pinned in
-//!   tests/integration_cluster.rs);
-//! * contention never helps;
-//! * the shared pool flattens the *unfused* fleet hard while the fused
-//!   fleet keeps scaling — inter-layer fusion pays off again at fleet scale,
-//!   because the bandwidth a board does not spend on intermediates is
-//!   bandwidth its neighbors get to keep.
+//! 1. **Homogeneous 1→16 boards**, replicated vs pipelined, fused vs
+//!    unfused, with and without the shared-DDR contention model: the shared
+//!    pool flattens the unfused fleet hard while the fused fleet keeps
+//!    scaling — inter-layer fusion pays off again at fleet scale.
+//! 2. **Heterogeneous two-generation fleets** (half current-gen 120 MHz,
+//!    half older-gen 60 MHz with thinner DDR): delivered throughput is
+//!    decided by the fleet mix and the planner's awareness of it, not by
+//!    peak DSP count.
+//! 3. **Load-step re-sharding**: a fleet starts on cuts balanced under a
+//!    homogeneous assumption, traffic steps up 4×, and the re-shard
+//!    controller migrates to a heterogeneity-aware plan — recovering the
+//!    statically re-planned throughput to within a few percent.
+//!
+//! Deterministic by construction (seeded arrivals, closed-form service
+//! times — no wall-clock anywhere), so the emitted metrics are
+//! bit-reproducible across machines: set `BENCH_JSON=/path/out.json` to
+//! write the `BENCH_cluster.json` trajectory point CI tracks against the
+//! committed baseline at the repo root.
 
+use decoilfnet::accel::latency::group_cost_estimate;
 use decoilfnet::accel::{FusionPlan, Weights};
-use decoilfnet::cluster::{simulate_fleet, ShardPlan};
-use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig, ShardMode};
+use decoilfnet::cluster::{
+    balance_min_max, simulate_fleet, simulate_fleet_dynamic, InterBoardLink, ShardPlan,
+};
+use decoilfnet::config::{
+    vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, ReshardPolicy, ShardMode,
+};
 use decoilfnet::coordinator::{best_plan, Objective};
 use decoilfnet::util::json::Json;
 use decoilfnet::util::table::Table;
@@ -27,6 +38,7 @@ struct Row {
     plan: &'static str,
     contention: bool,
     throughput_rps: f64,
+    p50_ms: f64,
     p99_ms: f64,
     utilization: Vec<f64>,
 }
@@ -35,15 +47,38 @@ fn sweep_cfg(boards: usize, mode: ShardMode, aggregate: Option<f64>) -> ClusterC
     ClusterConfig {
         boards,
         mode,
+        board_specs: vec![],
         link_bytes_per_cycle: 16.0,
         link_latency_cycles: 64,
         aggregate_ddr_bytes_per_cycle: aggregate,
         arrival_rps: f64::INFINITY, // saturating burst → measures capacity
+        load_steps: vec![],
         requests: 192,
         seed: 1,
         max_batch: 8,
         max_wait_us: 200.0,
+        reshard: None,
     }
+}
+
+/// The older board generation: half the clock, half the DDR draw.
+fn slow_gen(base: &AccelConfig) -> AccelConfig {
+    AccelConfig {
+        platform: Platform::virtex7_older_gen(),
+        ..base.clone()
+    }
+}
+
+/// Half current-gen, half older-gen, alternating in rack order (fast at
+/// even slots). Alternation matters for the pipelined planner, which maps
+/// stage *i* to board *i*: a fast-boards-first order would let short
+/// pipelines (≤ 7 stages here) run entirely on current-gen boards and the
+/// "heterogeneous" rows would carry no heterogeneity signal at 16 boards.
+fn two_gen_fleet(total: usize, base: &AccelConfig) -> Vec<AccelConfig> {
+    let slow = slow_gen(base);
+    (0..total)
+        .map(|i| if i % 2 == 0 { base.clone() } else { slow.clone() })
+        .collect()
 }
 
 fn main() {
@@ -82,6 +117,7 @@ fn main() {
                         plan: plan_name,
                         contention,
                         throughput_rps: r.throughput_rps,
+                        p50_ms: r.p50_ms,
                         p99_ms: r.p99_ms,
                         utilization: r.per_board.iter().map(|b| b.utilization).collect(),
                     });
@@ -140,6 +176,7 @@ fn main() {
                 .set("plan", r.plan)
                 .set("contention", r.contention)
                 .set("throughput_rps", r.throughput_rps)
+                .set("p50_ms", r.p50_ms)
                 .set("p99_ms", r.p99_ms)
                 .set("utilization", util),
         );
@@ -193,4 +230,201 @@ fn main() {
         "scaling shapes verified: monotone ideal; contended/ideal at 16 boards: \
          fused {r_fused:.3} vs unfused {r_unfused:.3} — fusion defends fleet scaling"
     );
+
+    // ------------------------------------------------------------------
+    // Act 2: heterogeneous two-generation fleets (greedy dispatcher,
+    // contention off to isolate the heterogeneity signal).
+    // ------------------------------------------------------------------
+    let unfused = FusionPlan::unfused(7);
+    let mut hetero_rows: Vec<(usize, &str, &str, f64, f64)> = Vec::new();
+    let mut ht = Table::new(&["boards", "fleet", "mode", "req/s", "p99 ms"])
+        .title("heterogeneous fleets: half 120 MHz + half 60 MHz vs all 120 MHz (burst)")
+        .label_col();
+    for total in [2usize, 4, 8, 16] {
+        for (fleet_name, fleet) in [
+            ("2-gen", two_gen_fleet(total, &cfg)),
+            ("all-fast", vec![cfg.clone(); total]),
+        ] {
+            for mode in [ShardMode::Replicated, ShardMode::Pipelined] {
+                let shard = match mode {
+                    ShardMode::Replicated => {
+                        ShardPlan::replicated_fleet(&fleet, &net, &weights, &unfused)
+                    }
+                    ShardMode::Pipelined => {
+                        ShardPlan::pipelined_fleet(&fleet, &net, &weights, &unfused)
+                    }
+                };
+                assert!(shard.fits());
+                let mut ccfg = sweep_cfg(total, mode, None);
+                ccfg.max_batch = 4;
+                let r = simulate_fleet_dynamic(&cfg, &fleet, &net, &weights, shard, &ccfg);
+                ht.row(&[
+                    total.to_string(),
+                    fleet_name.to_string(),
+                    mode.as_str().to_string(),
+                    format!("{:.1}", r.throughput_rps),
+                    format!("{:.2}", r.p99_ms),
+                ]);
+                hetero_rows.push((total, fleet_name, mode.as_str(), r.throughput_rps, r.p99_ms));
+                if fleet_name == "2-gen" && mode == ShardMode::Replicated {
+                    // Sanity: a mixed fleet cannot beat the same count of
+                    // current-gen boards.
+                    let all_fast =
+                        ShardPlan::replicated(&cfg, &net, &weights, &unfused, total);
+                    let rf = simulate_fleet_dynamic(
+                        &cfg,
+                        &vec![cfg.clone(); total],
+                        &net,
+                        &weights,
+                        all_fast,
+                        &ccfg,
+                    );
+                    assert!(
+                        r.throughput_rps <= rf.throughput_rps * (1.0 + 1e-9),
+                        "{total} boards: mixed fleet beat all-fast?!"
+                    );
+                }
+            }
+        }
+    }
+    println!("{}", ht.to_ascii());
+
+    // ------------------------------------------------------------------
+    // Act 3: load-step re-sharding on a 2-fast + 2-slow fleet.
+    // ------------------------------------------------------------------
+    let fleet = two_gen_fleet(4, &cfg);
+    let totals: Vec<u64> = unfused
+        .groups()
+        .iter()
+        .map(|g| group_cost_estimate(&cfg, &net, g.clone()).total())
+        .collect();
+    let naive_cuts = balance_min_max(&totals, fleet.len().min(totals.len()));
+    let naive = ShardPlan::pipelined_fleet_with_cuts(&fleet, &net, &weights, &unfused, &naive_cuts);
+
+    let mut ccfg = sweep_cfg(4, ShardMode::Pipelined, None);
+    ccfg.requests = 512;
+    ccfg.max_batch = 8;
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let ref_freq = cfg.platform.freq_mhz;
+    let naive_cap = naive.capacity_rps(ccfg.max_batch, &link, ref_freq);
+    let naive_item_ms: f64 = naive.shards.iter().map(|s| s.item_us()).sum::<f64>() / 1e3;
+    ccfg.arrival_rps = 0.4 * naive_cap;
+    ccfg.load_steps = vec![LoadStep {
+        at_request: 128,
+        rps: 1.3 * naive_cap,
+    }];
+    let policy = ReshardPolicy {
+        window: 32,
+        util_skew: 0.25,
+        p99_ms: 3.0 * naive_item_ms,
+        cooldown_windows: 2,
+        migration_factor: 1.0,
+    };
+
+    // Statically re-planned baseline: the controller's own candidate
+    // chooser, applied at t = 0, no re-sharding.
+    let static_best = [
+        ShardPlan::replicated_fleet(&fleet, &net, &weights, &unfused),
+        ShardPlan::pipelined_fleet(&fleet, &net, &weights, &unfused),
+    ]
+    .into_iter()
+    .filter(|p| p.fits())
+    .max_by(|a, b| {
+        a.capacity_rps(ccfg.max_batch, &link, ref_freq)
+            .partial_cmp(&b.capacity_rps(ccfg.max_batch, &link, ref_freq))
+            .unwrap()
+    })
+    .expect("some plan fits");
+    let r_static =
+        simulate_fleet_dynamic(&cfg, &fleet, &net, &weights, static_best.clone(), &ccfg);
+
+    let mut dyn_cfg = ccfg.clone();
+    dyn_cfg.reshard = Some(policy);
+    let r_dyn = simulate_fleet_dynamic(&cfg, &fleet, &net, &weights, naive.clone(), &dyn_cfg);
+    let r_frozen = simulate_fleet_dynamic(&cfg, &fleet, &net, &weights, naive, &ccfg);
+
+    let recovery = r_dyn.throughput_rps / r_static.throughput_rps;
+    println!(
+        "load step (0.4→1.3× naive capacity at request 128, 2 fast + 2 slow boards):\n\
+         naive frozen {:8.1} req/s p99 {:9.2} ms\n\
+         controller   {:8.1} req/s p99 {:9.2} ms  ({} reshard(s))\n\
+         static best  {:8.1} req/s p99 {:9.2} ms  [{}]\n\
+         recovery: {:.3} of statically re-planned throughput",
+        r_frozen.throughput_rps,
+        r_frozen.p99_ms,
+        r_dyn.throughput_rps,
+        r_dyn.p99_ms,
+        r_dyn.reshard_events.len(),
+        r_static.throughput_rps,
+        r_static.p99_ms,
+        static_best.label(),
+        recovery
+    );
+
+    // ------------------------------------------------------------------
+    // BENCH_cluster.json: the tracked trajectory point. Every value here is
+    // a deterministic model output (cycles → seconds at a fixed clock), so
+    // a >10% move is a real model change, not noise.
+    // ------------------------------------------------------------------
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let metric = |v: f64, better: &str| {
+            Json::obj().set("value", v).set("better", better)
+        };
+        let mut m = Json::obj();
+        let tp1_ideal = find("fused-best", ShardMode::Replicated, 1, false).throughput_rps;
+        let tp1_cont = find("fused-best", ShardMode::Replicated, 1, true).throughput_rps;
+        for b in [1usize, 2, 4, 8, 16] {
+            let ideal = find("fused-best", ShardMode::Replicated, b, false);
+            let cont = find("fused-best", ShardMode::Replicated, b, true);
+            m = m
+                .set(
+                    &format!("replicated_fused_ideal_rps_b{b}"),
+                    metric(ideal.throughput_rps, "higher"),
+                )
+                .set(
+                    &format!("replicated_fused_contended_rps_b{b}"),
+                    metric(cont.throughput_rps, "higher"),
+                )
+                .set(
+                    &format!("replicated_fused_contended_p50_ms_b{b}"),
+                    metric(cont.p50_ms, "lower"),
+                )
+                .set(
+                    &format!("replicated_fused_contended_p99_ms_b{b}"),
+                    metric(cont.p99_ms, "lower"),
+                )
+                .set(
+                    &format!("scaling_efficiency_ideal_b{b}"),
+                    metric(ideal.throughput_rps / (b as f64 * tp1_ideal), "higher"),
+                )
+                .set(
+                    &format!("scaling_efficiency_contended_b{b}"),
+                    metric(cont.throughput_rps / (b as f64 * tp1_cont), "higher"),
+                );
+        }
+        for (total, fleet_name, mode_name, tp, p99) in &hetero_rows {
+            if *fleet_name == "2-gen" {
+                m = m
+                    .set(
+                        &format!("hetero_2gen_b{total}_{mode_name}_rps"),
+                        metric(*tp, "higher"),
+                    )
+                    .set(
+                        &format!("hetero_2gen_b{total}_{mode_name}_p99_ms"),
+                        metric(*p99, "lower"),
+                    );
+            }
+        }
+        m = m
+            .set("load_step_recovery_ratio", metric(recovery, "higher"))
+            .set("load_step_controller_rps", metric(r_dyn.throughput_rps, "higher"))
+            .set("load_step_frozen_rps", metric(r_frozen.throughput_rps, "higher"));
+        let out = Json::obj()
+            .set("schema", "decoilfnet-cluster-bench/v1")
+            .set("seeded", true)
+            .set("metrics", m);
+        std::fs::write(&path, out.to_string_pretty())
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote bench metrics to {path}");
+    }
 }

@@ -40,6 +40,46 @@ impl InterBoardLink {
     }
 }
 
+/// A link with an occupancy timeline: the wire has finite capacity, so a
+/// transfer begins only when both the sender is ready *and* the previous
+/// transfer has drained. Under sustained boundary traffic the link itself
+/// can therefore become the bottleneck stage of a pipelined fleet — the
+/// failure mode a bandwidth-provisioning study has to be able to produce.
+#[derive(Debug, Clone)]
+pub struct LinkChannel {
+    pub link: InterBoardLink,
+    busy_until: u64,
+    pub bytes_moved: u64,
+}
+
+impl LinkChannel {
+    pub fn new(link: InterBoardLink) -> LinkChannel {
+        LinkChannel {
+            link,
+            busy_until: 0,
+            bytes_moved: 0,
+        }
+    }
+
+    /// Move `bytes` starting no earlier than `earliest`; returns the
+    /// completion cycle. Transfers serialize behind each other. An empty
+    /// transfer is free and does not occupy the wire.
+    pub fn transfer(&mut self, bytes: u64, earliest: u64) -> u64 {
+        if bytes == 0 {
+            return earliest;
+        }
+        let start = earliest.max(self.busy_until);
+        let end = start + self.link.transfer_cycles(bytes);
+        self.busy_until = end;
+        self.bytes_moved += bytes;
+        end
+    }
+
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,5 +96,33 @@ mod tests {
     fn ideal_link_is_free() {
         let l = InterBoardLink::ideal();
         assert_eq!(l.transfer_cycles(u64::MAX / 2), 0);
+    }
+
+    #[test]
+    fn channel_serializes_back_to_back_transfers() {
+        let mut ch = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        let e1 = ch.transfer(160, 0); // 0 .. 10+10
+        assert_eq!(e1, 20);
+        let e2 = ch.transfer(160, 5); // queued behind the first
+        assert_eq!(e2, 40);
+        let e3 = ch.transfer(16, 100); // idle gap, starts fresh
+        assert_eq!(e3, 111);
+        assert_eq!(ch.bytes_moved, 336);
+    }
+
+    #[test]
+    fn channel_empty_transfer_does_not_occupy_the_wire() {
+        let mut ch = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        assert_eq!(ch.transfer(0, 42), 42);
+        assert_eq!(ch.busy_until(), 0);
+        assert_eq!(ch.bytes_moved, 0);
+    }
+
+    #[test]
+    fn ideal_channel_adds_no_time() {
+        let mut ch = LinkChannel::new(InterBoardLink::ideal());
+        assert_eq!(ch.transfer(1 << 40, 7), 7);
+        // Instantaneous transfers occupy no wire time beyond their instant.
+        assert_eq!(ch.transfer(1 << 40, 9), 9);
     }
 }

@@ -8,33 +8,47 @@
 //!
 //! * a **shard planner** ([`ShardPlan`]): replicated (data-parallel) or
 //!   pipelined (model-parallel, min-max balanced contiguous group ranges
-//!   with inter-board link transfers of boundary volumes);
+//!   with inter-board link transfers of boundary volumes), heterogeneity
+//!   aware — stage cost is cycles *at that board's clock* and feasibility
+//!   is checked against *that board's* resource envelope;
 //! * a **shared-DDR contention model** ([`crate::fpga::ddr::SharedDdr`]):
 //!   co-located boards drawing from one off-chip bandwidth pool stretch
 //!   their DDR phases once oversubscribed — the fleet-level analogue of the
 //!   paper's bandwidth-constrained argument;
+//! * a **capacity-limited link model** ([`LinkChannel`]): boundary-volume
+//!   transfers serialize on finite wires, so the link itself can be the
+//!   bottleneck stage;
 //! * a **request scheduler** ([`simulate_fleet`]): open-loop Poisson
 //!   arrivals, per-board queues batched by the coordinator's
 //!   [`crate::coordinator::batcher::DynamicBatcher`], reporting throughput,
-//!   p50/p99 latency and per-board utilization.
+//!   p50/p99 latency and per-board utilization;
+//! * a **re-shard controller** ([`simulate_fleet_dynamic`]): watches window
+//!   p99 and utilization skew under drifting load, re-plans the shard,
+//!   bills the migration, and reports every decision as a [`ReshardEvent`].
 //!
-//! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes and shows
-//! where the shared bandwidth pool flattens the scaling curve.
+//! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
+//! heterogeneous two-generation fleet sweep and a load-step re-sharding
+//! scenario, and emits the `BENCH_cluster.json` metrics CI tracks.
 
 pub mod link;
 pub mod shard;
 pub mod sim;
 
-pub use link::InterBoardLink;
-pub use shard::{BoardShard, ShardPlan};
-pub use sim::{poisson_arrivals, simulate_fleet, BoardStats, FleetReport};
+pub use link::{InterBoardLink, LinkChannel};
+pub use shard::{balance_min_max, BoardShard, ShardPlan};
+pub use sim::{
+    arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic, BoardStats,
+    FleetReport, ReshardEvent,
+};
 
 use crate::accel::engine::Weights;
 use crate::config::{AccelConfig, ClusterConfig, Network, ShardMode};
 use crate::coordinator::planner::{best_plan, Objective};
 
 /// Plan a fleet for `net`: pick the best single-board fusion plan under the
-/// latency objective, then shard it according to the cluster config.
+/// latency objective (searched on the base config), then shard it across
+/// the fleet `ccfg` describes — homogeneous copies of `cfg` by default, or
+/// the per-generation platforms of `ccfg.board_specs`.
 pub fn plan_fleet(
     cfg: &AccelConfig,
     net: &Network,
@@ -42,19 +56,27 @@ pub fn plan_fleet(
     ccfg: &ClusterConfig,
 ) -> Result<ShardPlan, String> {
     ccfg.validate()?;
+    let fleet = ccfg.board_configs(cfg);
+    for (b, f) in fleet.iter().enumerate() {
+        if f.platform.word_bytes != cfg.platform.word_bytes {
+            return Err(format!(
+                "board {b}: word_bytes {} differs from the base config's {}",
+                f.platform.word_bytes, cfg.platform.word_bytes
+            ));
+        }
+    }
     let best = best_plan(cfg, net, weights, Objective::Latency)
         .ok_or("no fusion plan fits the board")?;
     let shard = match ccfg.mode {
-        ShardMode::Replicated => {
-            ShardPlan::replicated(cfg, net, weights, &best.plan, ccfg.boards)
-        }
+        ShardMode::Replicated => ShardPlan::replicated_fleet(&fleet, net, weights, &best.plan),
         ShardMode::Pipelined => {
             // Pipelining partitions *groups*; a latency-optimal plan is often
             // one big group, which cannot spread over boards. Re-plan under
             // progressively tighter DSP caps until the plan has enough groups
             // to occupy the fleet (or no tighter cap helps — a network can
             // simply run out of split points). Any residual shortfall is
-            // visible to callers as `used_boards() < boards`.
+            // visible to callers as `used_boards() < boards` and reported as
+            // `idle_boards`.
             let mut plan = best.plan;
             if plan.n_groups() < ccfg.boards {
                 for cap in [50u8, 25, 10] {
@@ -70,16 +92,19 @@ pub fn plan_fleet(
                     }
                 }
             }
-            ShardPlan::pipelined(cfg, net, weights, &plan, ccfg.boards)
+            ShardPlan::pipelined_fleet(&fleet, net, weights, &plan)
         }
     };
     if !shard.fits() {
-        return Err("shard does not fit the per-board resource budget".into());
+        return Err("shard does not fit some board's resource budget".into());
     }
     Ok(shard)
 }
 
-/// Convenience: plan the fleet and run the scheduler simulation in one call.
+/// Convenience: plan the fleet and run the scheduler simulation in one
+/// call. With a re-shard policy configured, the dynamic controller
+/// simulator runs (and may migrate shards under load); otherwise the static
+/// scheduler does.
 pub fn run_fleet(
     cfg: &AccelConfig,
     net: &Network,
@@ -87,13 +112,20 @@ pub fn run_fleet(
 ) -> Result<FleetReport, String> {
     let weights = Weights::random(net, ccfg.seed);
     let shard = plan_fleet(cfg, net, &weights, ccfg)?;
-    Ok(simulate_fleet(cfg, &shard, ccfg))
+    if ccfg.reshard.is_some() {
+        let fleet = ccfg.board_configs(cfg);
+        Ok(simulate_fleet_dynamic(
+            cfg, &fleet, net, &weights, shard, ccfg,
+        ))
+    } else {
+        Ok(simulate_fleet(cfg, &shard, ccfg))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::vgg16_prefix;
+    use crate::config::{vgg16_prefix, BoardSpec, Platform, ReshardPolicy};
 
     #[test]
     fn plan_fleet_replicated_uses_best_plan() {
@@ -123,6 +155,36 @@ mod tests {
     }
 
     #[test]
+    fn plan_fleet_heterogeneous_checks_every_boards_budget() {
+        let cfg = AccelConfig::paper_default();
+        let net = vgg16_prefix();
+        let w = Weights::random(&net, 1);
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.mode = ShardMode::Pipelined;
+        ccfg.boards = 3;
+        ccfg.board_specs = vec![
+            BoardSpec {
+                count: 2,
+                platform: Platform::virtex7_xc7v690t(),
+            },
+            BoardSpec {
+                count: 1,
+                platform: Platform::virtex7_at_100mhz(),
+            },
+        ];
+        let shard = plan_fleet(&cfg, &net, &w, &ccfg).unwrap();
+        assert!(shard.fits());
+        let fleet = ccfg.board_configs(&cfg);
+        for s in &shard.shards {
+            assert!(
+                s.resources.fits(&fleet[s.board]),
+                "stage on board {} must pass that board's own check",
+                s.board
+            );
+        }
+    }
+
+    #[test]
     fn run_fleet_end_to_end() {
         let cfg = AccelConfig::paper_default();
         let net = vgg16_prefix();
@@ -131,5 +193,19 @@ mod tests {
         let r = run_fleet(&cfg, &net, &ccfg).unwrap();
         assert_eq!(r.completed, 64);
         assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn run_fleet_with_reshard_policy_uses_the_controller() {
+        let cfg = AccelConfig::paper_default();
+        let net = vgg16_prefix();
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.requests = 64;
+        ccfg.reshard = Some(ReshardPolicy::default_policy());
+        let r = run_fleet(&cfg, &net, &ccfg).unwrap();
+        assert_eq!(r.completed, 64);
+        // Starting from the planner's own best shard, the controller has
+        // nothing better to move to — no churn on a well-planned fleet.
+        assert!(r.reshard_events.is_empty());
     }
 }

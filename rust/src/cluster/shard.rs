@@ -1,4 +1,4 @@
-//! Shard planner: partition a network's fusion groups across N boards.
+//! Shard planner: partition a network's fusion groups across a fleet.
 //!
 //! Two strategies, mirroring the two classic scale-out shapes:
 //!
@@ -10,10 +10,17 @@
 //!   Throughput is set by the slowest stage, so the planner balances stages
 //!   with a min-max DP over per-item group costs.
 //!
+//! Fleets may be **heterogeneous**: each board carries its own
+//! [`AccelConfig`] (resource envelope, clock, DDR share), and the pipelined
+//! DP balances stage *time* — cycles at that board's clock — while checking
+//! feasibility against that board's own budget. A cut that would overflow a
+//! small board is simply not a candidate.
+//!
 //! Costing reuses the closed-form models the single-board planner already
-//! trusts: [`group_cost_estimate`] for cycles, [`group_traffic_bytes`] for
-//! local DDR traffic, [`group_resources`] (max over resident groups — units
-//! are reused across serialized groups, paper §V) for per-board feasibility.
+//! trusts: [`group_cost_estimate`] for cycles,
+//! [`crate::accel::latency::group_traffic_bytes`] for local DDR traffic,
+//! [`group_resources`] (max over resident groups — units are reused across
+//! serialized groups, paper §V) for per-board feasibility.
 
 use std::ops::Range;
 
@@ -21,9 +28,13 @@ use crate::accel::engine::Weights;
 use crate::accel::fusion::FusionPlan;
 use crate::accel::latency::{group_cost_estimate, GroupCost};
 use crate::config::{AccelConfig, Network, ShardMode, VolShape};
+use crate::fpga::ddr::SharedDdr;
 use crate::resources::{group_resources, Resources};
 
-/// One board's slice of the work, fully costed.
+use super::link::InterBoardLink;
+
+/// One board's slice of the work, fully costed against *that board's*
+/// configuration.
 #[derive(Debug, Clone)]
 pub struct BoardShard {
     pub board: usize,
@@ -39,22 +50,60 @@ pub struct BoardShard {
     pub traffic_bytes: u64,
     /// Peak resources over resident groups (units reused across groups).
     pub resources: Resources,
+    /// Fits *this board's* platform budget.
     pub fits: bool,
     /// Bytes this board forwards to the next stage per inference
     /// (0 for the last stage and for replicated shards).
     pub egress_bytes: u64,
+    /// This board's clock in MHz. Cycle counts are only comparable across a
+    /// heterogeneous fleet after dividing by this.
+    pub freq_mhz: f64,
+    /// This board's provisioned off-chip draw, in bytes per *its own* cycle.
+    pub ddr_bytes_per_cycle: f64,
 }
 
 impl BoardShard {
     /// Cycles this board spends on a batch of `batch` inferences
-    /// (excluding contention stall, which depends on fleet state).
+    /// (excluding contention stall, which depends on fleet state). Measured
+    /// in this board's own clock domain.
     pub fn batch_cycles(&self, batch: u64) -> u64 {
         self.overhead_cycles + self.steady_cycles.saturating_mul(batch)
     }
 
-    /// Single-inference cycles on this board.
+    /// Single-inference cycles on this board (own clock domain).
     pub fn item_cycles(&self) -> u64 {
         self.batch_cycles(1)
+    }
+
+    /// Batch service time converted to cycles of a reference clock, so a
+    /// heterogeneous fleet can share one simulation timeline.
+    pub fn ref_cycles(&self, batch: u64, ref_freq_mhz: f64) -> u64 {
+        (self.batch_cycles(batch) as f64 * ref_freq_mhz / self.freq_mhz).round() as u64
+    }
+
+    /// Single-inference service time in microseconds at this board's clock.
+    pub fn item_us(&self) -> f64 {
+        self.item_cycles() as f64 / self.freq_mhz
+    }
+
+    /// Full batch service time on the shared reference timeline: compute at
+    /// this board's clock plus the contention stall of its off-chip phases
+    /// under the fleet's aggregate `demand` (bytes per reference cycle).
+    /// Both simulators price service through this one method so the static
+    /// baseline and the re-shard controller can never disagree on it.
+    pub fn service_cycles(
+        &self,
+        batch: u64,
+        ref_freq_mhz: f64,
+        shared: &SharedDdr,
+        demand: f64,
+    ) -> u64 {
+        self.ref_cycles(batch, ref_freq_mhz)
+            + shared.stall_cycles_of(
+                self.traffic_bytes * batch,
+                self.ddr_bytes_per_cycle * self.freq_mhz / ref_freq_mhz,
+                demand,
+            )
     }
 }
 
@@ -66,12 +115,13 @@ pub struct ShardPlan {
     /// when the plan has fewer groups).
     pub boards: usize,
     pub plan: FusionPlan,
-    /// One entry per *used* board.
+    /// One entry per *used* board, in fleet order (`shards[i].board == i`).
     pub shards: Vec<BoardShard>,
 }
 
 impl ShardPlan {
-    /// Data-parallel sharding: the whole plan on every board.
+    /// Data-parallel sharding: the whole plan on every board of a
+    /// homogeneous fleet.
     pub fn replicated(
         cfg: &AccelConfig,
         net: &Network,
@@ -80,24 +130,32 @@ impl ShardPlan {
         boards: usize,
     ) -> ShardPlan {
         assert!(boards >= 1);
-        let ctx = PlanCtx::new(cfg, net, weights, plan);
-        let proto = ctx.cost_range(0..plan.n_groups(), 0);
-        let shards = (0..boards)
-            .map(|b| BoardShard {
-                board: b,
-                ..proto.clone()
-            })
+        ShardPlan::replicated_fleet(&vec![cfg.clone(); boards], net, weights, plan)
+    }
+
+    /// Data-parallel sharding over an explicit (possibly heterogeneous)
+    /// fleet: the whole plan on every board, costed per board.
+    pub fn replicated_fleet(
+        fleet: &[AccelConfig],
+        net: &Network,
+        weights: &Weights,
+        plan: &FusionPlan,
+    ) -> ShardPlan {
+        assert!(!fleet.is_empty());
+        let ctx = FleetCtx::new(fleet, net, weights, plan);
+        let shards = (0..fleet.len())
+            .map(|b| ctx.cost_range(0..plan.n_groups(), b))
             .collect();
         ShardPlan {
             mode: ShardMode::Replicated,
-            boards,
+            boards: fleet.len(),
             plan: plan.clone(),
             shards,
         }
     }
 
-    /// Model-parallel sharding: balance contiguous group ranges over at most
-    /// `boards` stages, minimizing the slowest stage's per-item cycles.
+    /// Model-parallel sharding over a homogeneous fleet of `boards` copies
+    /// of `cfg`.
     pub fn pipelined(
         cfg: &AccelConfig,
         net: &Network,
@@ -106,9 +164,39 @@ impl ShardPlan {
         boards: usize,
     ) -> ShardPlan {
         assert!(boards >= 1);
-        let ctx = PlanCtx::new(cfg, net, weights, plan);
-        let totals: Vec<u64> = ctx.costs.iter().map(|c| c.total()).collect();
-        let cuts = balance_min_max(&totals, boards.min(totals.len()));
+        ShardPlan::pipelined_fleet(&vec![cfg.clone(); boards], net, weights, plan)
+    }
+
+    /// Model-parallel sharding over an explicit fleet: balance contiguous
+    /// group ranges over at most `fleet.len()` stages (stage *i* runs on
+    /// board *i*, fleet order), minimizing the slowest stage's per-item
+    /// *time* at that board's clock. Ranges that overflow a board's own
+    /// resource budget are not candidates; if no feasible partition exists
+    /// at any stage count, the planner falls back to the unconstrained
+    /// time-balanced partition so callers can inspect exactly which stage
+    /// fails (its `fits` flag is false, and `plan_fleet` surfaces the
+    /// error).
+    pub fn pipelined_fleet(
+        fleet: &[AccelConfig],
+        net: &Network,
+        weights: &Weights,
+        plan: &FusionPlan,
+    ) -> ShardPlan {
+        assert!(!fleet.is_empty());
+        let ctx = FleetCtx::new(fleet, net, weights, plan);
+        let n = plan.n_groups();
+        let k = fleet.len().min(n);
+        let totals: Vec<Vec<u64>> = ctx
+            .costs
+            .iter()
+            .map(|per_board| per_board.iter().map(|c| c.total()).collect())
+            .collect();
+        let freqs: Vec<f64> = fleet.iter().map(|c| c.platform.freq_mhz).collect();
+        let feasible = |b: usize, r: Range<usize>| ctx.range_resources(b, r).fits(&fleet[b]);
+        let always = |_: usize, _: Range<usize>| true;
+        let cuts = balance_fleet(&totals, &freqs, &feasible, k)
+            .or_else(|| balance_fleet(&totals, &freqs, &always, k))
+            .expect("a non-empty partition always exists unconstrained");
         let shards: Vec<BoardShard> = cuts
             .windows(2)
             .enumerate()
@@ -116,7 +204,42 @@ impl ShardPlan {
             .collect();
         ShardPlan {
             mode: ShardMode::Pipelined,
-            boards,
+            boards: fleet.len(),
+            plan: plan.clone(),
+            shards,
+        }
+    }
+
+    /// Model-parallel sharding with caller-chosen cut points (the
+    /// `[0, …, n_groups]` form [`balance_min_max`] returns). Used to cost a
+    /// *naive* partition — e.g. cuts balanced under a homogeneous-fleet
+    /// assumption — on a heterogeneous fleet, which is exactly the situation
+    /// the re-shard controller exists to repair.
+    pub fn pipelined_fleet_with_cuts(
+        fleet: &[AccelConfig],
+        net: &Network,
+        weights: &Weights,
+        plan: &FusionPlan,
+        cuts: &[usize],
+    ) -> ShardPlan {
+        assert!(!fleet.is_empty());
+        assert!(cuts.len() >= 2, "cuts must be [0, …, n_groups]");
+        assert_eq!(cuts[0], 0);
+        assert_eq!(*cuts.last().unwrap(), plan.n_groups());
+        assert!(cuts.windows(2).all(|w| w[0] < w[1]), "cuts must ascend");
+        assert!(
+            cuts.len() - 1 <= fleet.len(),
+            "more stages than boards in the fleet"
+        );
+        let ctx = FleetCtx::new(fleet, net, weights, plan);
+        let shards: Vec<BoardShard> = cuts
+            .windows(2)
+            .enumerate()
+            .map(|(b, w)| ctx.cost_range(w[0]..w[1], b))
+            .collect();
+        ShardPlan {
+            mode: ShardMode::Pipelined,
+            boards: fleet.len(),
             plan: plan.clone(),
             shards,
         }
@@ -127,78 +250,175 @@ impl ShardPlan {
         self.shards.len()
     }
 
+    /// Provisioned boards left without a stage (pipelined plans with fewer
+    /// groups than boards). 0 for replicated plans.
+    pub fn idle_boards(&self) -> usize {
+        self.boards.saturating_sub(self.used_boards())
+    }
+
     /// Bytes one inference moves across inter-board links (Σ egress of all
     /// non-final stages). 0 in replicated mode.
     pub fn link_bytes_per_item(&self) -> u64 {
         self.shards.iter().map(|s| s.egress_bytes).sum()
     }
 
-    /// Every used board fits its platform budget.
+    /// Every used board fits its own platform budget.
     pub fn fits(&self) -> bool {
         self.shards.iter().all(|s| s.fits)
     }
 
-    /// Per-item cycles of the slowest stage (pipeline bottleneck). For
-    /// replicated shards this is simply one board's per-item cycles.
+    /// Per-item cycles of the slowest stage (pipeline bottleneck). Only
+    /// meaningful on homogeneous fleets, where all boards share one clock;
+    /// heterogeneous callers want [`ShardPlan::bottleneck_us`].
     pub fn bottleneck_cycles(&self) -> u64 {
         self.shards.iter().map(|s| s.item_cycles()).max().unwrap_or(0)
     }
+
+    /// Per-item wall time of the slowest stage in microseconds, comparable
+    /// across clock domains.
+    pub fn bottleneck_us(&self) -> f64 {
+        self.shards.iter().map(|s| s.item_us()).fold(0.0, f64::max)
+    }
+
+    /// Short human-readable identity of this shard — mode plus layer cuts —
+    /// used by the re-shard controller to detect "the plan actually
+    /// changed" and by reports to name plans.
+    pub fn label(&self) -> String {
+        match self.mode {
+            ShardMode::Replicated => format!("replicated:{}", self.used_boards()),
+            ShardMode::Pipelined => {
+                let cuts: Vec<String> = self
+                    .shards
+                    .iter()
+                    .map(|s| format!("{}..{}", s.layers.start, s.layers.end))
+                    .collect();
+                format!("pipelined[{}]", cuts.join("|"))
+            }
+        }
+    }
+
+    /// Crude steady-state capacity estimate in items/second at full batch
+    /// `max_batch`, used by the re-shard controller to rank candidate plans
+    /// (DDR contention excluded — it slows candidates roughly alike).
+    /// Replicated: sum of per-board batch rates. Pipelined: the bottleneck
+    /// stage, where a stage is either a board's compute or a link
+    /// serializing that cut's boundary volume (`ref_freq_mhz` converts link
+    /// cycles to time).
+    pub fn capacity_rps(
+        &self,
+        max_batch: usize,
+        link: &InterBoardLink,
+        ref_freq_mhz: f64,
+    ) -> f64 {
+        let b = max_batch.max(1) as u64;
+        match self.mode {
+            ShardMode::Replicated => self
+                .shards
+                .iter()
+                .map(|s| b as f64 / (s.batch_cycles(b) as f64 / (s.freq_mhz * 1e6)))
+                .sum(),
+            ShardMode::Pipelined => {
+                let mut worst_s = 0.0f64;
+                for s in &self.shards {
+                    worst_s = worst_s.max(s.batch_cycles(b) as f64 / (s.freq_mhz * 1e6));
+                }
+                for s in &self.shards[..self.used_boards().saturating_sub(1)] {
+                    let cyc = link.transfer_cycles(s.egress_bytes * b);
+                    worst_s = worst_s.max(cyc as f64 / (ref_freq_mhz * 1e6));
+                }
+                b as f64 / worst_s
+            }
+        }
+    }
 }
 
-/// Per-plan costing context: shapes and group costs computed once, shared by
-/// every shard the planner carves out of the plan.
-struct PlanCtx<'a> {
-    cfg: &'a AccelConfig,
+/// Per-plan costing context: shapes computed once; group costs and resource
+/// envelopes computed per *board* so heterogeneous clocks, DDR shares and
+/// budgets each see their own numbers.
+struct FleetCtx<'a> {
+    boards: &'a [AccelConfig],
     net: &'a Network,
     weights: &'a Weights,
     groups: Vec<Range<usize>>,
     shapes: Vec<VolShape>,
-    costs: Vec<GroupCost>,
+    /// `costs[b][g]`: group `g` costed with board `b`'s config.
+    costs: Vec<Vec<GroupCost>>,
+    /// `res[b][g]`: group `g`'s resource envelope under board `b`'s config.
+    res: Vec<Vec<Resources>>,
 }
 
-impl<'a> PlanCtx<'a> {
+impl<'a> FleetCtx<'a> {
     fn new(
-        cfg: &'a AccelConfig,
+        boards: &'a [AccelConfig],
         net: &'a Network,
         weights: &'a Weights,
         plan: &FusionPlan,
-    ) -> PlanCtx<'a> {
+    ) -> FleetCtx<'a> {
         let groups = plan.groups();
-        let costs = groups
-            .iter()
-            .map(|g| group_cost_estimate(cfg, net, g.clone()))
-            .collect();
-        PlanCtx {
-            cfg,
+        // Fleets are mostly a few generations repeated many times (often
+        // one): cost each distinct config once and share the tables.
+        let mut costs: Vec<Vec<GroupCost>> = Vec::with_capacity(boards.len());
+        let mut res: Vec<Vec<Resources>> = Vec::with_capacity(boards.len());
+        for (b, cfg) in boards.iter().enumerate() {
+            if let Some(r) = boards[..b].iter().position(|c| c == cfg) {
+                let (c, e) = (costs[r].clone(), res[r].clone());
+                costs.push(c);
+                res.push(e);
+            } else {
+                costs.push(
+                    groups
+                        .iter()
+                        .map(|g| group_cost_estimate(cfg, net, g.clone()))
+                        .collect(),
+                );
+                res.push(
+                    groups
+                        .iter()
+                        .map(|g| group_resources(cfg, net, g.clone()))
+                        .collect(),
+                );
+            }
+        }
+        FleetCtx {
+            boards,
             net,
             weights,
             groups,
             shapes: net.shapes(),
             costs,
+            res,
         }
     }
 
-    /// Cost one contiguous range of fusion groups as a board shard.
-    fn cost_range(&self, group_range: Range<usize>, board: usize) -> BoardShard {
+    /// Peak resources of a contiguous group range on board `b` (units are
+    /// reused across serialized groups, so this is a max, not a sum).
+    fn range_resources(&self, b: usize, group_range: Range<usize>) -> Resources {
+        self.res[b][group_range]
+            .iter()
+            .fold(Resources::default(), |acc, r| acc.max(*r))
+    }
+
+    /// Cost one contiguous range of fusion groups as a shard on board `b`.
+    fn cost_range(&self, group_range: Range<usize>, b: usize) -> BoardShard {
         assert!(!group_range.is_empty());
-        let wb = self.cfg.platform.word_bytes;
+        let cfg = &self.boards[b];
+        let wb = cfg.platform.word_bytes;
         let layer_lo = self.groups[group_range.start].start;
         let layer_hi = self.groups[group_range.end - 1].end;
         let mut overhead = 0u64;
         let mut steady = 0u64;
         let mut traffic = 0u64;
-        let mut res = Resources::default();
         for (g, c) in self.groups[group_range.clone()]
             .iter()
-            .zip(&self.costs[group_range.clone()])
+            .zip(&self.costs[b][group_range.clone()])
         {
             overhead += c.fill + c.drain;
             steady += c.steady;
             traffic += (self.shapes[g.start].elems() * wb) as u64
                 + (self.shapes[g.end].elems() * wb) as u64
                 + self.weights.bytes_for_layers(g.clone(), wb);
-            res = res.max(group_resources(self.cfg, self.net, g.clone()));
         }
+        let res = self.range_resources(b, group_range.clone());
         // Egress: the output volume of the shard's last group, unless it is
         // the network's final output (which returns to the client, not a
         // peer board).
@@ -207,9 +427,9 @@ impl<'a> PlanCtx<'a> {
         } else {
             (self.shapes[layer_hi].elems() * wb) as u64
         };
-        let fits = res.fits(self.cfg);
+        let fits = res.fits(cfg);
         BoardShard {
-            board,
+            board: b,
             groups: group_range,
             layers: layer_lo..layer_hi,
             overhead_cycles: overhead,
@@ -218,6 +438,8 @@ impl<'a> PlanCtx<'a> {
             resources: res,
             fits,
             egress_bytes,
+            freq_mhz: cfg.platform.freq_mhz,
+            ddr_bytes_per_cycle: cfg.platform.ddr_bytes_per_cycle,
         }
     }
 }
@@ -227,7 +449,13 @@ impl<'a> PlanCtx<'a> {
 /// achieve the optimum (extra pipeline stages add link hops without raising
 /// throughput). Returns the cut points `[0, …, costs.len()]`. Classic
 /// O(k·n²) DP — n is the number of fusion groups (≤ 20), k the board count.
-fn balance_min_max(costs: &[u64], k: usize) -> Vec<usize> {
+///
+/// This is the *homogeneous* form (every stage costs the same everywhere);
+/// heterogeneous fleets go through the stage-aware DP inside
+/// [`ShardPlan::pipelined_fleet`]. Public so callers can build the "naive
+/// cuts" a homogeneity-assuming planner would pick and feed them to
+/// [`ShardPlan::pipelined_fleet_with_cuts`].
+pub fn balance_min_max(costs: &[u64], k: usize) -> Vec<usize> {
     let n = costs.len();
     assert!(n >= 1 && (1..=n).contains(&k));
     // prefix[i] = Σ costs[..i]
@@ -266,15 +494,90 @@ fn balance_min_max(costs: &[u64], k: usize) -> Vec<usize> {
     bounds
 }
 
+/// Heterogeneity-aware min-max partition: split groups `0..n` into at most
+/// `k` contiguous non-empty segments where segment `s` runs on board `s`
+/// (fleet order), minimizing the maximum segment *time*
+/// `Σ cycles(board, group) / freq(board)`. A segment is only a candidate if
+/// `feasible(board, range)` holds — that board's own resource check. Uses
+/// the fewest stages achieving the optimum. Returns `None` when no feasible
+/// partition exists at any stage count.
+fn balance_fleet(
+    per_board_costs: &[Vec<u64>],
+    freqs: &[f64],
+    feasible: &dyn Fn(usize, Range<usize>) -> bool,
+    k: usize,
+) -> Option<Vec<usize>> {
+    let n = per_board_costs[0].len();
+    assert!(n >= 1 && (1..=n).contains(&k));
+    assert!(per_board_costs.len() >= k && freqs.len() >= k);
+    // Per-board prefix sums of group cycles.
+    let prefix: Vec<Vec<u64>> = per_board_costs
+        .iter()
+        .map(|costs| {
+            let mut p = vec![0u64; n + 1];
+            for i in 0..n {
+                p[i + 1] = p[i] + costs[i];
+            }
+            p
+        })
+        .collect();
+    // Stage time in µs: segment cycles on board b at board b's clock.
+    let time = |b: usize, j: usize, i: usize| (prefix[b][i] - prefix[b][j]) as f64 / freqs[b];
+
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    for i in 1..=n {
+        if feasible(0, 0..i) {
+            dp[1][i] = time(0, 0, i);
+        }
+    }
+    for s in 2..=k {
+        let b = s - 1; // stage s−1 runs on board s−1
+        for i in s..=n {
+            for j in (s - 1)..i {
+                if dp[s - 1][j].is_finite() && feasible(b, j..i) {
+                    let v = dp[s - 1][j].max(time(b, j, i));
+                    if v < dp[s][i] {
+                        dp[s][i] = v;
+                        cut[s][i] = j;
+                    }
+                }
+            }
+        }
+    }
+    let best = (1..=k).map(|s| dp[s][n]).fold(f64::INFINITY, f64::min);
+    if !best.is_finite() {
+        return None;
+    }
+    let stages = (1..=k).find(|&s| dp[s][n] == best).unwrap();
+    let mut bounds = vec![n];
+    let mut i = n;
+    for s in (2..=stages).rev() {
+        i = cut[s][i];
+        bounds.push(i);
+    }
+    bounds.push(0);
+    bounds.reverse();
+    Some(bounds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{tiny_vgg, vgg16_prefix};
+    use crate::config::{tiny_vgg, vgg16_prefix, Platform};
 
     fn setup() -> (AccelConfig, Network, Weights) {
         let net = vgg16_prefix();
         let w = Weights::random(&net, 1);
         (AccelConfig::paper_default(), net, w)
+    }
+
+    /// An older, slower board generation: lower clock, thinner DDR.
+    fn slow_gen() -> AccelConfig {
+        AccelConfig {
+            platform: Platform::virtex7_older_gen(),
+            ..AccelConfig::paper_default()
+        }
     }
 
     #[test]
@@ -318,15 +621,60 @@ mod tests {
     }
 
     #[test]
+    fn balance_fleet_uniform_matches_homogeneous() {
+        // Same costs on every board at one clock → the hetero DP must pick
+        // the same cuts as the classic min-max partition.
+        let costs = vec![13u64, 2, 8, 41, 5, 5, 19];
+        for k in 1..=4usize {
+            let per_board = vec![costs.clone(); k];
+            let freqs = vec![120.0; k];
+            let always = |_: usize, _: Range<usize>| true;
+            let cuts = balance_fleet(&per_board, &freqs, &always, k).unwrap();
+            assert_eq!(cuts, balance_min_max(&costs, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn balance_fleet_gives_slow_boards_less_work() {
+        // Two boards, identical cycle costs, but board 1 runs at half the
+        // clock: the cut must shift work onto board 0.
+        let costs = vec![vec![10u64, 10, 10, 10], vec![10u64, 10, 10, 10]];
+        let freqs = vec![100.0, 50.0];
+        let always = |_: usize, _: Range<usize>| true;
+        let cuts = balance_fleet(&costs, &freqs, &always, 2).unwrap();
+        // Balanced in *time*: 3 groups at 100 MHz (0.3 µs) vs 1 at 50 MHz
+        // (0.2 µs) beats 2/2 (0.2 vs 0.4 µs).
+        assert_eq!(cuts, vec![0, 3, 4]);
+    }
+
+    #[test]
+    fn balance_fleet_respects_feasibility() {
+        // Board 1 can only host single groups: any wider range is
+        // infeasible there, so the DP must cut accordingly even though a
+        // 2/2 split would balance better.
+        let costs = vec![vec![10u64, 10, 10, 10], vec![10u64, 10, 10, 10]];
+        let freqs = vec![100.0, 100.0];
+        let feas =
+            |b: usize, r: Range<usize>| b != 1 || r.len() == 1;
+        let cuts = balance_fleet(&costs, &freqs, &feas, 2).unwrap();
+        assert_eq!(cuts, vec![0, 3, 4], "board 1 limited to one group");
+        // And when nothing is feasible at all, the DP reports it.
+        let never = |_: usize, _: Range<usize>| false;
+        assert!(balance_fleet(&costs, &freqs, &never, 2).is_none());
+    }
+
+    #[test]
     fn replicated_shards_are_identical_whole_plans() {
         let (cfg, net, w) = setup();
         let plan = FusionPlan::unfused(7);
         let sp = ShardPlan::replicated(&cfg, &net, &w, &plan, 4);
         assert_eq!(sp.used_boards(), 4);
+        assert_eq!(sp.idle_boards(), 0);
         assert_eq!(sp.link_bytes_per_item(), 0);
         for s in &sp.shards {
             assert_eq!(s.layers, 0..7);
             assert_eq!(s.egress_bytes, 0);
+            assert_eq!(s.freq_mhz, cfg.platform.freq_mhz);
             assert!(s.fits);
         }
         // Per-item cycles decompose the classic plan estimate.
@@ -415,5 +763,96 @@ mod tests {
         let sp = ShardPlan::pipelined(&cfg, &net, &w, &plan, 16);
         assert_eq!(sp.used_boards(), 2, "only 2 groups to host");
         assert_eq!(sp.boards, 16);
+        assert_eq!(sp.idle_boards(), 14);
+    }
+
+    #[test]
+    fn hetero_pipeline_balances_time_not_cycles() {
+        // Fast board first, slow board second. The hetero planner must give
+        // the slow board a smaller share than the homogeneous cuts would.
+        let (fast, net, w) = setup();
+        let fleet = vec![fast.clone(), slow_gen()];
+        let plan = FusionPlan::unfused(7);
+        let sp = ShardPlan::pipelined_fleet(&fleet, &net, &w, &plan);
+        assert!(sp.used_boards() >= 1 && sp.used_boards() <= 2);
+        assert_eq!(sp.shards[0].freq_mhz, 120.0);
+        if sp.used_boards() == 2 {
+            assert_eq!(sp.shards[1].freq_mhz, 60.0);
+            // Balanced in time, the slow board gets at most the fast
+            // board's cycle share (never more).
+            assert!(sp.shards[1].item_cycles() <= sp.shards[0].item_cycles());
+        }
+        // Naive cuts: balance raw cycles as if the boards were equal.
+        let ctx_totals: Vec<u64> = plan
+            .groups()
+            .iter()
+            .map(|g| group_cost_estimate(&fast, &net, g.clone()).total())
+            .collect();
+        let naive_cuts = balance_min_max(&ctx_totals, 2);
+        let naive = ShardPlan::pipelined_fleet_with_cuts(&fleet, &net, &w, &plan, &naive_cuts);
+        assert!(
+            sp.bottleneck_us() <= naive.bottleneck_us() + 1e-9,
+            "hetero-aware cuts {} µs must beat naive cuts {} µs",
+            sp.bottleneck_us(),
+            naive.bottleneck_us()
+        );
+    }
+
+    #[test]
+    fn hetero_pipeline_respects_each_boards_budget() {
+        // Board 1 is too small for the big conv groups; the DP must route
+        // around it (or mark the plan unfit) — never silently assign a
+        // stage that fails that board's own check.
+        let (fast, net, w) = setup();
+        let mut tiny = slow_gen();
+        tiny.platform.dsp = 40; // a 3×3×64-filter conv needs far more lanes
+        tiny.platform.name = "tiny".to_string();
+        let fleet = vec![fast.clone(), tiny.clone(), fast.clone()];
+        let plan = FusionPlan::unfused(7);
+        let sp = ShardPlan::pipelined_fleet(&fleet, &net, &w, &plan);
+        for s in &sp.shards {
+            if s.fits {
+                let board_cfg = &fleet[s.board];
+                assert!(
+                    s.resources.fits(board_cfg),
+                    "board {} claims fit but fails its own budget",
+                    s.board
+                );
+            }
+        }
+        // If the planner reports an overall fit, every stage passed its own
+        // board's check by construction.
+        if sp.fits() {
+            for s in &sp.shards {
+                assert!(s.resources.fits(&fleet[s.board]));
+            }
+        }
+    }
+
+    #[test]
+    fn labels_identify_mode_and_cuts() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let r = ShardPlan::replicated(&cfg, &net, &w, &plan, 3);
+        assert_eq!(r.label(), "replicated:3");
+        let p = ShardPlan::pipelined(&cfg, &net, &w, &plan, 2);
+        assert!(p.label().starts_with("pipelined["), "{}", p.label());
+        assert!(p.label().contains(".."));
+    }
+
+    #[test]
+    fn capacity_estimate_orders_plans_sensibly() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let link = InterBoardLink::ideal();
+        let f = cfg.platform.freq_mhz;
+        // More replicas → more capacity.
+        let r2 = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let r4 = ShardPlan::replicated(&cfg, &net, &w, &plan, 4);
+        assert!(r4.capacity_rps(8, &link, f) > r2.capacity_rps(8, &link, f));
+        // A finite link can cap a pipelined plan below its ideal-link form.
+        let p = ShardPlan::pipelined(&cfg, &net, &w, &plan, 4);
+        let tight = InterBoardLink::new(0.01, 1000);
+        assert!(p.capacity_rps(8, &tight, f) < p.capacity_rps(8, &link, f) + 1e-9);
     }
 }

@@ -1,26 +1,43 @@
 //! Fleet request scheduler / queue simulator.
 //!
-//! Open-loop arrivals (Poisson via [`Rng`], or a saturating burst at t = 0)
-//! are dispatched to per-board queues, batched by the coordinator's own
-//! [`DynamicBatcher`] (driven here with synthetic deterministic clocks
-//! instead of wall time), and served with the shard planner's closed-form
-//! batch costs. Off-chip phases stretch under the [`SharedDdr`] contention
-//! model; pipelined stages forward batches across [`InterBoardLink`]s.
-//! Everything is deterministic from the config's seed.
+//! Open-loop arrivals (Poisson via [`Rng`], or a saturating burst at t = 0,
+//! optionally with mid-run load steps) are dispatched to per-board queues,
+//! batched, and served with the shard planner's closed-form batch costs.
+//! Boards may be heterogeneous: each shard carries its own clock and DDR
+//! share, and all service times are converted onto one reference-clock
+//! timeline. Off-chip phases stretch under the [`SharedDdr`] contention
+//! model; pipelined stages forward batches across capacity-limited
+//! [`LinkChannel`]s that serialize concurrent transfers — the link itself
+//! can be the bottleneck stage. Everything is deterministic from the
+//! config's seed.
 //!
-//! Time is measured in accelerator cycles (u64) and converted to wall time
-//! at the platform clock only for reporting.
+//! Two simulators share the reporting types:
+//!
+//! * [`simulate_fleet`] — the static scheduler: one shard plan for the whole
+//!   run, per-board [`crate::coordinator::batcher::DynamicBatcher`]s driven
+//!   with synthetic deterministic clocks.
+//! * [`simulate_fleet_dynamic`] — the re-shard controller: greedy
+//!   work-conserving batching plus a window monitor; when the observed p99
+//!   or per-board utilization skew crosses the [`ReshardPolicy`] thresholds
+//!   it re-plans the shard (replicated ↔ pipelined or new cut points),
+//!   charges a migration bill (weights that change boards + in-flight
+//!   activation state, over a link), and continues. Re-shards are reported
+//!   as [`ReshardEvent`]s in the [`FleetReport`].
+//!
+//! Time is measured in reference-clock cycles (u64) and converted to wall
+//! time only for reporting.
 
 use std::time::{Duration, Instant};
 
-use crate::config::{AccelConfig, ClusterConfig, ShardMode};
+use crate::accel::engine::Weights;
+use crate::config::{AccelConfig, ClusterConfig, LoadStep, Network, ReshardPolicy, ShardMode};
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use crate::fpga::ddr::SharedDdr;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::stats::percentile_sorted;
 
-use super::link::InterBoardLink;
+use super::link::{InterBoardLink, LinkChannel};
 use super::shard::ShardPlan;
 
 /// Per-board outcome counters.
@@ -32,6 +49,37 @@ pub struct BoardStats {
     pub busy_cycles: u64,
     /// busy / makespan.
     pub utilization: f64,
+    /// The board's clock — heterogeneous fleets mix generations.
+    pub freq_mhz: f64,
+}
+
+/// One re-shard decision taken by the controller.
+#[derive(Debug, Clone)]
+pub struct ReshardEvent {
+    /// Reference-clock cycle at which the migration began.
+    pub at_cycle: u64,
+    /// Labels of the outgoing and incoming shard plans.
+    pub from: String,
+    pub to: String,
+    /// Which threshold fired.
+    pub reason: String,
+    /// Migration bill: weight bytes newly hosted per board plus in-flight
+    /// activation state, after the policy's `migration_factor`.
+    pub migration_bytes: u64,
+    /// Cycles the whole fleet stalled while state moved.
+    pub stall_cycles: u64,
+}
+
+impl ReshardEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("at_cycle", self.at_cycle)
+            .set("from", self.from.as_str())
+            .set("to", self.to.as_str())
+            .set("reason", self.reason.as_str())
+            .set("migration_bytes", self.migration_bytes)
+            .set("stall_cycles", self.stall_cycles)
+    }
 }
 
 /// Outcome of one fleet simulation.
@@ -40,6 +88,9 @@ pub struct FleetReport {
     pub mode: ShardMode,
     pub boards: usize,
     pub used_boards: usize,
+    /// Provisioned boards left without work — a pipelined plan with fewer
+    /// stages than boards wastes the difference.
+    pub idle_boards: usize,
     pub requests: usize,
     pub completed: usize,
     pub makespan_cycles: u64,
@@ -47,11 +98,19 @@ pub struct FleetReport {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// [`simulate_fleet`] reports one entry per board the (fixed) plan
+    /// uses; [`simulate_fleet_dynamic`] reports every provisioned board —
+    /// under re-sharding a board idle in the *final* plan may still have
+    /// served work earlier, so its counters must not be dropped. Consumers
+    /// averaging utilization should filter on `busy_cycles > 0`.
     pub per_board: Vec<BoardStats>,
     /// Total bytes moved across inter-board links (0 for replicated).
     pub link_bytes_total: u64,
     /// The shared-DDR slowdown the fleet ran under (1.0 = uncontended).
     pub ddr_slowdown: f64,
+    /// Re-shard decisions taken during the run (empty for the static
+    /// scheduler).
+    pub reshard_events: Vec<ReshardEvent>,
 }
 
 impl FleetReport {
@@ -64,13 +123,19 @@ impl FleetReport {
                     .set("items", b.items)
                     .set("batches", b.batches)
                     .set("busy_cycles", b.busy_cycles)
-                    .set("utilization", b.utilization),
+                    .set("utilization", b.utilization)
+                    .set("freq_mhz", b.freq_mhz),
             );
+        }
+        let mut events = Json::Arr(vec![]);
+        for e in &self.reshard_events {
+            events = events.push(e.to_json());
         }
         Json::obj()
             .set("mode", self.mode.as_str())
             .set("boards", self.boards)
             .set("used_boards", self.used_boards)
+            .set("idle_boards", self.idle_boards)
             .set("requests", self.requests)
             .set("completed", self.completed)
             .set("makespan_cycles", self.makespan_cycles)
@@ -80,6 +145,7 @@ impl FleetReport {
             .set("p99_ms", self.p99_ms)
             .set("link_bytes_total", self.link_bytes_total)
             .set("ddr_slowdown", self.ddr_slowdown)
+            .set("reshard_events", events)
             .set("per_board", boards)
     }
 }
@@ -87,20 +153,40 @@ impl FleetReport {
 /// Open-loop Poisson arrival times in cycles. A non-finite rate means a
 /// saturating burst: every request arrives at t = 0.
 pub fn poisson_arrivals(n: usize, rps: f64, freq_mhz: f64, seed: u64) -> Vec<u64> {
-    if !rps.is_finite() {
-        return vec![0; n];
-    }
-    assert!(rps > 0.0);
-    let mean_cycles = freq_mhz * 1e6 / rps;
+    arrivals_with_steps(n, rps, &[], freq_mhz, seed)
+}
+
+/// Poisson arrivals with traffic shifts: the rate starts at `base_rps` and
+/// switches at each [`LoadStep`]'s request index. A non-finite rate makes
+/// the affected requests arrive instantaneously (at the current clock —
+/// t = 0 when the base rate is a burst). Deterministic in `seed`; the
+/// no-step form is exactly [`poisson_arrivals`].
+pub fn arrivals_with_steps(
+    n: usize,
+    base_rps: f64,
+    steps: &[LoadStep],
+    freq_mhz: f64,
+    seed: u64,
+) -> Vec<u64> {
     let mut rng = Rng::new(seed);
     let mut t = 0.0f64;
-    (0..n)
-        .map(|_| {
+    let mut rate = base_rps;
+    let mut step_i = 0usize;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        while step_i < steps.len() && steps[step_i].at_request <= i {
+            rate = steps[step_i].rps;
+            step_i += 1;
+        }
+        if rate.is_finite() {
+            assert!(rate > 0.0);
+            let mean_cycles = freq_mhz * 1e6 / rate;
             // Exponential inter-arrival; 1−u ∈ (0, 1] keeps ln finite.
             t += -(1.0 - rng.next_f64()).ln() * mean_cycles;
-            t.round() as u64
-        })
-        .collect()
+        }
+        out.push(t.round() as u64);
+    }
+    out
 }
 
 /// Drive round-robin arrivals through per-queue [`DynamicBatcher`]s: fire
@@ -144,23 +230,33 @@ fn drive_batchers(
     }
 }
 
-/// Simulate `ccfg.requests` requests against a sharded fleet.
+/// Aggregate off-chip demand of a plan's active boards, in bytes per
+/// reference cycle (each board's provisioned rate rescaled by its clock).
+fn fleet_demand(plan: &ShardPlan, ref_freq: f64) -> f64 {
+    plan.shards
+        .iter()
+        .map(|s| s.ddr_bytes_per_cycle * s.freq_mhz / ref_freq)
+        .sum()
+}
+
+/// Simulate `ccfg.requests` requests against a sharded fleet with a fixed
+/// plan for the whole run.
 pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig) -> FleetReport {
     ccfg.validate().expect("invalid cluster config");
-    let freq = cfg.platform.freq_mhz;
+    let ref_freq = cfg.platform.freq_mhz;
     let n = ccfg.requests;
-    let arrivals = poisson_arrivals(n, ccfg.arrival_rps, freq, ccfg.seed);
+    let arrivals = arrivals_with_steps(n, ccfg.arrival_rps, &ccfg.load_steps, ref_freq, ccfg.seed);
     let shared = SharedDdr::new(
         cfg.platform.ddr_bytes_per_cycle,
         ccfg.aggregate_ddr_bytes_per_cycle,
     );
     let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
-    let n_active = shard.used_boards();
+    let demand = fleet_demand(shard, ref_freq);
 
     // Synthetic clock: the DynamicBatcher speaks `Instant`, the simulator
     // speaks cycles. One fixed origin maps between them deterministically.
     let t0 = Instant::now();
-    let ns_per_cycle = 1e3 / freq;
+    let ns_per_cycle = 1e3 / ref_freq;
     let to_instant = |c: u64| t0 + Duration::from_nanos((c as f64 * ns_per_cycle).round() as u64);
     let to_cycles =
         |i: Instant| (i.duration_since(t0).as_nanos() as f64 / ns_per_cycle).round() as u64;
@@ -171,6 +267,9 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
 
     let mut complete = vec![0u64; n];
     let mut link_bytes_total = 0u64;
+
+    let service =
+        |s: &super::shard::BoardShard, bsz: u64| s.service_cycles(bsz, ref_freq, &shared, demand);
 
     let (busy, batch_counts, item_counts) = match shard.mode {
         ShardMode::Replicated => {
@@ -186,8 +285,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                 &to_cycles,
                 |b, batch, ready| {
                     let bsz = batch.len() as u64;
-                    let svc = shard.shards[b].batch_cycles(bsz)
-                        + shared.stall_cycles(shard.shards[b].traffic_bytes * bsz, n_active);
+                    let svc = service(&shard.shards[b], bsz);
                     let start = ready.max(free_at[b]);
                     let done = start + svc;
                     free_at[b] = done;
@@ -204,10 +302,14 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
         ShardMode::Pipelined => {
             let stages = shard.used_boards();
             // One shared entry queue feeds stage 0; a batch then traverses
-            // the whole board chain as a unit.
+            // the whole board chain as a unit, and each cut's transfers
+            // serialize on that cut's own capacity-limited channel.
             let mut entry = vec![DynamicBatcher::<usize>::new(policy)];
             let mut free_at = vec![0u64; stages];
             let mut busy = vec![0u64; stages];
+            let mut links: Vec<LinkChannel> = (0..stages.saturating_sub(1))
+                .map(|_| LinkChannel::new(link))
+                .collect();
             drive_batchers(
                 &mut entry,
                 &arrivals,
@@ -217,8 +319,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                     let bsz = batch.len() as u64;
                     let mut t = ready;
                     for (s, bs) in shard.shards.iter().enumerate() {
-                        let svc = bs.batch_cycles(bsz)
-                            + shared.stall_cycles(bs.traffic_bytes * bsz, n_active);
+                        let svc = service(bs, bsz);
                         let start = t.max(free_at[s]);
                         let done = start + svc;
                         free_at[s] = done;
@@ -227,7 +328,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                         if s + 1 < stages {
                             let bytes = bs.egress_bytes * bsz;
                             link_bytes_total += bytes;
-                            t += link.transfer_cycles(bytes);
+                            t = links[s].transfer(bytes, t);
                         }
                     }
                     for req in batch {
@@ -262,6 +363,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
             } else {
                 busy[b] as f64 / makespan_cycles as f64
             },
+            freq_mhz: shard.shards[b].freq_mhz,
         })
         .collect();
 
@@ -269,6 +371,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
         mode: shard.mode,
         boards: shard.boards,
         used_boards: shard.used_boards(),
+        idle_boards: shard.idle_boards(),
         requests: n,
         completed: n,
         makespan_cycles,
@@ -278,7 +381,311 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
         p99_ms: percentile_sorted(&lat_ms, 99.0),
         per_board,
         link_bytes_total,
-        ddr_slowdown: shared.slowdown(n_active),
+        ddr_slowdown: shared.slowdown_of(demand),
+        reshard_events: Vec::new(),
+    }
+}
+
+/// Map `[board][layer] → hosted?` for a plan (replicated shards host every
+/// layer; pipelined shards host their stage's range).
+fn hosting(plan: &ShardPlan, n_layers: usize, nb: usize) -> Vec<Vec<bool>> {
+    let mut h = vec![vec![false; n_layers]; nb];
+    for s in &plan.shards {
+        for l in s.layers.clone() {
+            h[s.board][l] = true;
+        }
+    }
+    h
+}
+
+/// Bytes a plan switch moves over links: weights for every layer a board
+/// newly hosts, plus one pipeline's worth of in-flight activation state at
+/// the new cuts.
+fn migration_bytes(
+    old: &ShardPlan,
+    new: &ShardPlan,
+    weights: &Weights,
+    word_bytes: usize,
+    n_layers: usize,
+    nb: usize,
+) -> u64 {
+    let oldh = hosting(old, n_layers, nb);
+    let newh = hosting(new, n_layers, nb);
+    let mut bytes = new.link_bytes_per_item();
+    for b in 0..nb {
+        for l in 0..n_layers {
+            if newh[b][l] && !oldh[b][l] {
+                bytes += weights.bytes_for_layers(l..l + 1, word_bytes);
+            }
+        }
+    }
+    bytes
+}
+
+/// Simulate a fleet under the re-shard controller.
+///
+/// Starts from `initial` (which may be deliberately naive — e.g. cuts
+/// balanced under a homogeneous-fleet assumption) and processes arrivals
+/// with greedy work-conserving batching: a board takes up to `max_batch`
+/// requests that have arrived by the time it can start. After every
+/// [`ReshardPolicy::window`] completions the controller evaluates the
+/// window's p99 and per-board utilization skew; past a threshold it
+/// re-plans on the actual fleet, bills the migration (weights + activation
+/// state over a link, fleet-wide stall), swaps plans, and continues. With
+/// `ccfg.reshard = None` this is a plain greedy-batching simulator — use
+/// the same engine for the static baseline when comparing against the
+/// controller.
+pub fn simulate_fleet_dynamic(
+    cfg: &AccelConfig,
+    fleet: &[AccelConfig],
+    net: &Network,
+    weights: &Weights,
+    initial: ShardPlan,
+    ccfg: &ClusterConfig,
+) -> FleetReport {
+    ccfg.validate().expect("invalid cluster config");
+    assert!(!fleet.is_empty());
+    assert!(
+        initial.used_boards() <= fleet.len(),
+        "initial plan uses more boards than the fleet has"
+    );
+    let ref_freq = cfg.platform.freq_mhz;
+    let ns_per_cycle = 1e3 / ref_freq;
+    let n = ccfg.requests;
+    let arrivals = arrivals_with_steps(n, ccfg.arrival_rps, &ccfg.load_steps, ref_freq, ccfg.seed);
+    let shared = SharedDdr::new(
+        cfg.platform.ddr_bytes_per_cycle,
+        ccfg.aggregate_ddr_bytes_per_cycle,
+    );
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let nb = fleet.len();
+    let word_bytes = cfg.platform.word_bytes;
+    let n_layers = net.layers.len();
+
+    let mut plan = initial;
+    let mut links: Vec<LinkChannel> = (0..plan.used_boards().saturating_sub(1))
+        .map(|_| LinkChannel::new(link))
+        .collect();
+    let mut demand = fleet_demand(&plan, ref_freq);
+
+    let mut free_at = vec![0u64; nb];
+    let mut busy = vec![0u64; nb];
+    let mut items = vec![0u64; nb];
+    let mut batches = vec![0u64; nb];
+    let mut complete = vec![0u64; n];
+    let mut link_bytes_total = 0u64;
+    let mut events: Vec<ReshardEvent> = Vec::new();
+
+    // Controller window state. `sim_now` is the furthest completion seen —
+    // batch completions are not themselves monotone on a heterogeneous
+    // fleet (a fast board finishes later-dispatched work earlier), and the
+    // window span must never collapse to zero.
+    let policy: Option<ReshardPolicy> = ccfg.reshard.clone();
+    let mut win_lat_ms: Vec<f64> = Vec::new();
+    let mut win_start = 0u64;
+    let mut win_busy0 = busy.clone();
+    let mut cooldown = 0usize;
+    let mut sim_now = 0u64;
+
+    let mut i = 0usize;
+    while i < n {
+        // ---- dispatch one batch, greedy and work-conserving ----
+        let (batch_done, batch_len) = match plan.mode {
+            ShardMode::Replicated => {
+                let a = arrivals[i];
+                // The board that can start soonest; ties go to the faster
+                // clock, then the lower index.
+                let mut pick = 0usize;
+                let mut pick_start = u64::MAX;
+                let mut pick_freq = f64::MIN;
+                for (si, s) in plan.shards.iter().enumerate() {
+                    let start = free_at[s.board].max(a);
+                    if start < pick_start || (start == pick_start && s.freq_mhz > pick_freq) {
+                        pick = si;
+                        pick_start = start;
+                        pick_freq = s.freq_mhz;
+                    }
+                }
+                let s = &plan.shards[pick];
+                let start = pick_start;
+                let mut k = 1usize;
+                while i + k < n && k < ccfg.max_batch && arrivals[i + k] <= start {
+                    k += 1;
+                }
+                let bsz = k as u64;
+                let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                let done = start + svc;
+                free_at[s.board] = done;
+                busy[s.board] += svc;
+                items[s.board] += bsz;
+                batches[s.board] += 1;
+                for c in complete.iter_mut().skip(i).take(k) {
+                    *c = done;
+                }
+                (done, k)
+            }
+            ShardMode::Pipelined => {
+                let a = arrivals[i];
+                let first = plan.shards[0].board;
+                let start0 = free_at[first].max(a);
+                let mut k = 1usize;
+                while i + k < n && k < ccfg.max_batch && arrivals[i + k] <= start0 {
+                    k += 1;
+                }
+                let bsz = k as u64;
+                let stages = plan.used_boards();
+                let mut t = start0;
+                for (si, s) in plan.shards.iter().enumerate() {
+                    let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                    let start = t.max(free_at[s.board]);
+                    let done = start + svc;
+                    free_at[s.board] = done;
+                    busy[s.board] += svc;
+                    items[s.board] += bsz;
+                    batches[s.board] += 1;
+                    t = done;
+                    if si + 1 < stages {
+                        let bytes = s.egress_bytes * bsz;
+                        link_bytes_total += bytes;
+                        t = links[si].transfer(bytes, t);
+                    }
+                }
+                for c in complete.iter_mut().skip(i).take(k) {
+                    *c = t;
+                }
+                (t, k)
+            }
+        };
+
+        for j in i..i + batch_len {
+            win_lat_ms
+                .push(complete[j].saturating_sub(arrivals[j]) as f64 * ns_per_cycle / 1e6);
+        }
+        i += batch_len;
+        sim_now = sim_now.max(batch_done);
+
+        // ---- controller: evaluate the window ----
+        let Some(pol) = &policy else { continue };
+        if win_lat_ms.len() < pol.window {
+            continue;
+        }
+        let now = sim_now;
+        let span = now.saturating_sub(win_start);
+        let mut sorted = win_lat_ms.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let p99 = percentile_sorted(&sorted, 99.0);
+        let mut skew = 0.0f64;
+        if span > 0 {
+            let mut lo = f64::INFINITY;
+            let mut hi = 0.0f64;
+            for s in &plan.shards {
+                let u = busy[s.board].saturating_sub(win_busy0[s.board]) as f64 / span as f64;
+                lo = lo.min(u);
+                hi = hi.max(u);
+            }
+            skew = hi - lo;
+        }
+        if cooldown > 0 {
+            cooldown -= 1;
+        } else if p99 > pol.p99_ms || skew > pol.util_skew {
+            let reason = if p99 > pol.p99_ms {
+                format!("window p99 {p99:.1} ms > {:.1} ms", pol.p99_ms)
+            } else {
+                format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
+            };
+            // Re-plan on the actual fleet: both modes, ranked by predicted
+            // capacity; only feasible candidates compete.
+            let mut best: Option<(f64, ShardPlan)> = None;
+            for cand in [
+                ShardPlan::replicated_fleet(fleet, net, weights, &plan.plan),
+                ShardPlan::pipelined_fleet(fleet, net, weights, &plan.plan),
+            ] {
+                if !cand.fits() {
+                    continue;
+                }
+                let cap = cand.capacity_rps(ccfg.max_batch, &link, ref_freq);
+                let better = match &best {
+                    None => true,
+                    Some((b, _)) => cap > *b,
+                };
+                if better {
+                    best = Some((cap, cand));
+                }
+            }
+            if let Some((_, new_plan)) = best {
+                if new_plan.label() != plan.label() {
+                    let raw = migration_bytes(&plan, &new_plan, weights, word_bytes, n_layers, nb);
+                    let bill = (raw as f64 * pol.migration_factor).round() as u64;
+                    let stall = link.transfer_cycles(bill);
+                    // The whole fleet pauses: drain to the latest busy
+                    // board, move state, resume together.
+                    let sync = free_at.iter().copied().max().unwrap_or(now).max(now);
+                    for f in &mut free_at {
+                        *f = sync + stall;
+                    }
+                    events.push(ReshardEvent {
+                        at_cycle: sync,
+                        from: plan.label(),
+                        to: new_plan.label(),
+                        reason,
+                        migration_bytes: bill,
+                        stall_cycles: stall,
+                    });
+                    links = (0..new_plan.used_boards().saturating_sub(1))
+                        .map(|_| LinkChannel::new(link))
+                        .collect();
+                    plan = new_plan;
+                    demand = fleet_demand(&plan, ref_freq);
+                    cooldown = pol.cooldown_windows;
+                }
+            }
+        }
+        win_lat_ms.clear();
+        win_start = now;
+        win_busy0.copy_from_slice(&busy);
+    }
+
+    let makespan_cycles = complete.iter().copied().max().unwrap_or(0);
+    let makespan_s = makespan_cycles as f64 * ns_per_cycle / 1e9;
+    let mut lat_ms: Vec<f64> = complete
+        .iter()
+        .zip(&arrivals)
+        .map(|(&c, &a)| c.saturating_sub(a) as f64 * ns_per_cycle / 1e6)
+        .collect();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+
+    let per_board: Vec<BoardStats> = (0..nb)
+        .map(|b| BoardStats {
+            board: b,
+            items: items[b],
+            batches: batches[b],
+            busy_cycles: busy[b],
+            utilization: if makespan_cycles == 0 {
+                0.0
+            } else {
+                busy[b] as f64 / makespan_cycles as f64
+            },
+            freq_mhz: fleet[b].platform.freq_mhz,
+        })
+        .collect();
+
+    FleetReport {
+        mode: plan.mode,
+        boards: nb,
+        used_boards: plan.used_boards(),
+        idle_boards: nb - plan.used_boards(),
+        requests: n,
+        completed: n,
+        makespan_cycles,
+        throughput_rps: n as f64 / makespan_s,
+        mean_ms,
+        p50_ms: percentile_sorted(&lat_ms, 50.0),
+        p99_ms: percentile_sorted(&lat_ms, 99.0),
+        per_board,
+        link_bytes_total,
+        ddr_slowdown: shared.slowdown_of(demand),
+        reshard_events: events,
     }
 }
 
@@ -287,7 +694,7 @@ mod tests {
     use super::*;
     use crate::accel::engine::Weights;
     use crate::accel::fusion::FusionPlan;
-    use crate::config::vgg16_prefix;
+    use crate::config::{vgg16_prefix, Platform};
 
     fn setup() -> (AccelConfig, crate::config::Network, Weights) {
         let net = vgg16_prefix();
@@ -295,18 +702,28 @@ mod tests {
         (AccelConfig::paper_default(), net, w)
     }
 
+    fn slow_gen() -> AccelConfig {
+        AccelConfig {
+            platform: Platform::virtex7_older_gen(),
+            ..AccelConfig::paper_default()
+        }
+    }
+
     fn burst_cfg(boards: usize, mode: ShardMode) -> ClusterConfig {
         ClusterConfig {
             boards,
             mode,
+            board_specs: vec![],
             link_bytes_per_cycle: f64::INFINITY,
             link_latency_cycles: 0,
             aggregate_ddr_bytes_per_cycle: None,
             arrival_rps: f64::INFINITY,
+            load_steps: vec![],
             requests: 96,
             seed: 7,
             max_batch: 1,
             max_wait_us: 0.0,
+            reshard: None,
         }
     }
 
@@ -323,6 +740,39 @@ mod tests {
     }
 
     #[test]
+    fn poisson_arrivals_seed_sensitivity() {
+        // Same seed → bit-identical; different seeds → different sample
+        // paths (the determinism CI leans on).
+        let a = poisson_arrivals(128, 500.0, 120.0, 42);
+        let b = poisson_arrivals(128, 500.0, 120.0, 42);
+        let c = poisson_arrivals(128, 500.0, 120.0, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "distinct seeds must sample distinct paths");
+        // And the empty-steps form is exactly the classic generator.
+        let d = arrivals_with_steps(128, 500.0, &[], 120.0, 42);
+        assert_eq!(a, d);
+    }
+
+    #[test]
+    fn load_step_speeds_up_arrivals() {
+        let steps = [LoadStep {
+            at_request: 64,
+            rps: 4000.0,
+        }];
+        let a = arrivals_with_steps(128, 200.0, &steps, 120.0, 5);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "monotone");
+        // Mean gap before the step ≫ mean gap after it.
+        let pre_span = (a[63] - a[0]) as f64 / 63.0;
+        let post_span = (a[127] - a[64]) as f64 / 63.0;
+        assert!(
+            pre_span > 4.0 * post_span,
+            "step must densify arrivals: pre {pre_span:.0} post {post_span:.0}"
+        );
+        // Deterministic too.
+        assert_eq!(a, arrivals_with_steps(128, 200.0, &steps, 120.0, 5));
+    }
+
+    #[test]
     fn replicated_burst_splits_work_evenly() {
         let (cfg, net, w) = setup();
         let plan = FusionPlan::fully_fused(7);
@@ -336,6 +786,8 @@ mod tests {
         }
         assert_eq!(r.link_bytes_total, 0);
         assert_eq!(r.ddr_slowdown, 1.0);
+        assert_eq!(r.idle_boards, 0);
+        assert!(r.reshard_events.is_empty());
     }
 
     #[test]
@@ -389,6 +841,47 @@ mod tests {
     }
 
     #[test]
+    fn finite_links_serialize_and_slow_the_pipeline() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let shard = ShardPlan::pipelined(&cfg, &net, &w, &plan, 3);
+        let ideal = burst_cfg(3, ShardMode::Pipelined);
+        let mut tight = ideal.clone();
+        tight.link_bytes_per_cycle = 0.05; // starved wire
+        tight.link_latency_cycles = 500;
+        let r_ideal = simulate_fleet(&cfg, &shard, &ideal);
+        let r_tight = simulate_fleet(&cfg, &shard, &tight);
+        assert!(
+            r_tight.throughput_rps < r_ideal.throughput_rps,
+            "a starved link must become the bottleneck: {} vs {}",
+            r_tight.throughput_rps,
+            r_ideal.throughput_rps
+        );
+        assert_eq!(r_tight.link_bytes_total, r_ideal.link_bytes_total);
+    }
+
+    #[test]
+    fn hetero_fleet_slower_boards_do_less_replicated_work() {
+        // 2 fast + 2 slow replicated boards under the dynamic greedy
+        // dispatcher: the fast boards absorb more items.
+        let (cfg, net, w) = setup();
+        let fleet = vec![cfg.clone(), cfg.clone(), slow_gen(), slow_gen()];
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated_fleet(&fleet, &net, &w, &plan);
+        let mut ccfg = burst_cfg(4, ShardMode::Replicated);
+        ccfg.requests = 128;
+        ccfg.max_batch = 4;
+        let r = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard, &ccfg);
+        assert_eq!(r.completed, 128);
+        let fast_items: u64 = r.per_board[..2].iter().map(|b| b.items).sum();
+        let slow_items: u64 = r.per_board[2..].iter().map(|b| b.items).sum();
+        assert!(
+            fast_items > slow_items,
+            "fast boards must absorb more work: {fast_items} vs {slow_items}"
+        );
+    }
+
+    #[test]
     fn low_load_latency_near_service_time() {
         // At a trickle arrival rate with batch=1, each request is served
         // alone: latency ≈ single-inference cycles.
@@ -409,6 +902,65 @@ mod tests {
     }
 
     #[test]
+    fn dynamic_without_policy_is_a_plain_scheduler() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::unfused(7);
+        let fleet = vec![cfg.clone(); 3];
+        let shard = ShardPlan::pipelined_fleet(&fleet, &net, &w, &plan);
+        let mut ccfg = burst_cfg(3, ShardMode::Pipelined);
+        ccfg.requests = 48;
+        let r1 = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard.clone(), &ccfg);
+        let r2 = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard, &ccfg);
+        assert_eq!(r1.completed, 48);
+        assert!(r1.reshard_events.is_empty());
+        assert_eq!(r1.makespan_cycles, r2.makespan_cycles, "deterministic");
+        assert!(r1.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn controller_reshards_away_from_a_bad_plan() {
+        // Start from a deliberately terrible pipelined split on a hetero
+        // fleet and set a hair-trigger p99 threshold: the controller must
+        // fire, migrate, and end on a different plan.
+        let (cfg, net, w) = setup();
+        let fleet = vec![cfg.clone(), slow_gen()];
+        let plan = FusionPlan::unfused(7);
+        // Worst naive cut: everything but one group on the slow board.
+        let bad = ShardPlan::pipelined_fleet_with_cuts(&fleet, &net, &w, &plan, &[0, 1, 7]);
+        let mut ccfg = burst_cfg(2, ShardMode::Pipelined);
+        ccfg.requests = 160;
+        ccfg.max_batch = 4;
+        ccfg.reshard = Some(ReshardPolicy {
+            window: 16,
+            util_skew: 0.9,
+            p99_ms: 0.001, // anything trips it
+            cooldown_windows: 1,
+            migration_factor: 1.0,
+        });
+        let from_label = bad.label();
+        let r = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, bad, &ccfg);
+        assert!(
+            !r.reshard_events.is_empty(),
+            "hair-trigger policy must fire at least once"
+        );
+        let e = &r.reshard_events[0];
+        assert_eq!(e.from, from_label);
+        assert_ne!(e.from, e.to);
+        assert!(e.migration_bytes > 0);
+        assert!(e.stall_cycles > 0 || ccfg.link_latency_cycles == 0);
+        // JSON carries the events and idle-board accounting.
+        let j = r.to_json();
+        assert_eq!(
+            j.get("reshard_events").as_arr().unwrap().len(),
+            r.reshard_events.len()
+        );
+        assert_eq!(
+            j.get("idle_boards").as_usize(),
+            Some(r.idle_boards),
+        );
+    }
+
+    #[test]
     fn report_json_shape() {
         let (cfg, net, w) = setup();
         let plan = FusionPlan::fully_fused(7);
@@ -417,7 +969,9 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("mode").as_str(), Some("replicated"));
         assert_eq!(j.get("boards").as_usize(), Some(2));
+        assert_eq!(j.get("idle_boards").as_usize(), Some(0));
         assert_eq!(j.get("per_board").as_arr().unwrap().len(), 2);
         assert!(j.get("throughput_rps").as_f64().unwrap() > 0.0);
+        assert!(j.get("reshard_events").as_arr().unwrap().is_empty());
     }
 }

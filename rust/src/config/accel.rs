@@ -51,6 +51,20 @@ impl Platform {
         }
     }
 
+    /// An older board generation for heterogeneous-fleet studies: same
+    /// fabric resources, half the clock, half the off-chip draw (earlier
+    /// DDR controller). The canonical "slow gen" used by the cluster
+    /// benches, tests and demos — keep them on one definition so the
+    /// scenario numbers can't drift apart.
+    pub fn virtex7_older_gen() -> Platform {
+        Platform {
+            name: "Virtex-7 (older gen)".to_string(),
+            freq_mhz: 60.0,
+            ddr_bytes_per_cycle: 32.0,
+            ..Platform::virtex7_xc7v690t()
+        }
+    }
+
     /// Cycles → milliseconds at this platform's clock.
     pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.freq_mhz * 1e3)

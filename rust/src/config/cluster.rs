@@ -1,8 +1,12 @@
-//! Cluster (multi-board) configuration: fleet size, sharding mode,
-//! inter-board link, shared off-chip bandwidth, and the open-loop workload
-//! driven at the fleet. Parsed from JSON like the other configs.
+//! Cluster (multi-board) configuration: fleet size and composition
+//! (optionally heterogeneous board generations), sharding mode, inter-board
+//! link, shared off-chip bandwidth, the open-loop workload driven at the
+//! fleet (optionally with load steps), and the re-shard controller policy.
+//! Parsed from JSON like the other configs.
 
 use crate::util::json::{parse, Json};
+
+use super::accel::{AccelConfig, Platform};
 
 /// How the network is distributed across boards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +38,120 @@ impl ShardMode {
     }
 }
 
+/// One generation of boards in a heterogeneous fleet: `count` identical
+/// boards sharing one resource envelope, clock, and provisioned DDR draw
+/// (all carried by the [`Platform`]). Fleet order is the order of the specs —
+/// the pipelined planner assigns stage *i* to board *i* in that order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardSpec {
+    pub count: usize,
+    pub platform: Platform,
+}
+
+impl BoardSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count)
+            .set("platform", self.platform.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> Result<BoardSpec, String> {
+        Ok(BoardSpec {
+            count: j
+                .get("count")
+                .as_usize()
+                .ok_or("board_spec: missing/invalid 'count'")?,
+            platform: Platform::from_json(j.get("platform"))
+                .ok_or("board_spec: missing/invalid 'platform'")?,
+        })
+    }
+}
+
+/// A traffic shift: from request index `at_request` onward, arrivals come at
+/// `rps` requests/second (infinite = the remaining requests arrive at once).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadStep {
+    pub at_request: usize,
+    pub rps: f64,
+}
+
+/// Policy of the load-driven re-shard controller ([`crate::cluster`]'s
+/// dynamic simulator). The controller watches completed requests in windows;
+/// when the window p99 or the per-board utilization skew crosses a
+/// threshold, it re-plans the shard and charges a migration cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReshardPolicy {
+    /// Completed requests per observation window.
+    pub window: usize,
+    /// Trigger when (max − min) per-board utilization over the window
+    /// exceeds this (0..1 scale).
+    pub util_skew: f64,
+    /// Trigger when the window p99 latency exceeds this many milliseconds.
+    pub p99_ms: f64,
+    /// Windows to wait after a re-shard before evaluating triggers again.
+    pub cooldown_windows: usize,
+    /// Scales the migration byte bill (weights that change boards plus
+    /// in-flight activation state). 0 makes migration free.
+    pub migration_factor: f64,
+}
+
+impl ReshardPolicy {
+    /// Conservative defaults: 32-request windows, re-shard on >35 points of
+    /// utilization skew or a 50 ms p99, two windows of cooldown, full
+    /// migration billing.
+    pub fn default_policy() -> ReshardPolicy {
+        ReshardPolicy {
+            window: 32,
+            util_skew: 0.35,
+            p99_ms: 50.0,
+            cooldown_windows: 2,
+            migration_factor: 1.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.window == 0 {
+            return Err("reshard: window must be >= 1".into());
+        }
+        if !(self.util_skew > 0.0) {
+            return Err("reshard: util_skew must be > 0".into());
+        }
+        if !(self.p99_ms > 0.0) {
+            return Err("reshard: p99_ms must be > 0".into());
+        }
+        if !(self.migration_factor >= 0.0) {
+            return Err("reshard: migration_factor must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("window", self.window)
+            .set("util_skew", self.util_skew)
+            .set("p99_ms", self.p99_ms)
+            .set("cooldown_windows", self.cooldown_windows)
+            .set("migration_factor", self.migration_factor)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ReshardPolicy, String> {
+        let base = ReshardPolicy::default_policy();
+        Ok(ReshardPolicy {
+            window: j.get("window").as_usize().unwrap_or(base.window),
+            util_skew: j.get("util_skew").as_f64().unwrap_or(base.util_skew),
+            p99_ms: j.get("p99_ms").as_f64().unwrap_or(base.p99_ms),
+            cooldown_windows: j
+                .get("cooldown_windows")
+                .as_usize()
+                .unwrap_or(base.cooldown_windows),
+            migration_factor: j
+                .get("migration_factor")
+                .as_f64()
+                .unwrap_or(base.migration_factor),
+        })
+    }
+}
+
 /// Configuration of a simulated multi-accelerator serving fleet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
@@ -41,19 +159,27 @@ pub struct ClusterConfig {
     /// when the network has fewer fusion groups than boards.
     pub boards: usize,
     pub mode: ShardMode,
-    /// Inter-board link bandwidth (bytes per accelerator cycle). Only
-    /// pipelined mode moves activations across links.
+    /// Fleet composition for heterogeneous fleets. Empty means `boards`
+    /// identical boards on the base config's platform; otherwise the counts
+    /// must sum to `boards` and fleet order follows spec order.
+    pub board_specs: Vec<BoardSpec>,
+    /// Inter-board link bandwidth (bytes per reference-clock cycle). Links
+    /// have finite capacity: concurrent boundary transfers serialize, so the
+    /// link itself can become the bottleneck stage of a pipelined fleet.
     pub link_bytes_per_cycle: f64,
     /// Fixed per-transfer link latency (serialization + switch hop).
     pub link_latency_cycles: u64,
     /// Aggregate off-chip bandwidth shared by all co-located boards, in
-    /// bytes/cycle. `None` disables the contention model (each board keeps
-    /// its full private `Platform::ddr_bytes_per_cycle`).
+    /// bytes/cycle at the reference clock. `None` disables the contention
+    /// model (each board keeps its full private provisioned rate).
     pub aggregate_ddr_bytes_per_cycle: Option<f64>,
     /// Open-loop arrival rate in requests/second. `f64::INFINITY` (JSON:
     /// field absent or `null`) means a saturating burst: every request
     /// arrives at t = 0, which measures fleet capacity.
     pub arrival_rps: f64,
+    /// Traffic shifts applied on top of `arrival_rps` (empty = constant
+    /// rate). Steps must be ordered by `at_request`.
+    pub load_steps: Vec<LoadStep>,
     /// Number of requests the workload generator fires.
     pub requests: usize,
     /// PRNG seed for arrival sampling.
@@ -61,6 +187,9 @@ pub struct ClusterConfig {
     /// Per-board dynamic batching bounds (mirrors `BatchPolicy`).
     pub max_batch: usize,
     pub max_wait_us: f64,
+    /// Load-driven re-shard controller; `None` keeps the initial shard for
+    /// the whole run.
+    pub reshard: Option<ReshardPolicy>,
 }
 
 impl ClusterConfig {
@@ -70,15 +199,69 @@ impl ClusterConfig {
         ClusterConfig {
             boards: 4,
             mode: ShardMode::Replicated,
+            board_specs: Vec::new(),
             link_bytes_per_cycle: 16.0,
             link_latency_cycles: 64,
             aggregate_ddr_bytes_per_cycle: Some(128.0),
             arrival_rps: f64::INFINITY,
+            load_steps: Vec::new(),
             requests: 256,
             seed: 1,
             max_batch: 8,
             max_wait_us: 200.0,
+            reshard: None,
         }
+    }
+
+    /// A copy of this config provisioned with `boards` boards (the sweep
+    /// form). A homogeneous fleet just changes the count; a heterogeneous
+    /// fleet keeps rack order and truncates the generation counts to fit —
+    /// or extends the last generation when growing — so the copy always
+    /// validates.
+    pub fn with_boards(&self, boards: usize) -> ClusterConfig {
+        let mut c = self.clone();
+        c.boards = boards;
+        if !c.board_specs.is_empty() {
+            let mut specs: Vec<BoardSpec> = Vec::new();
+            let mut left = boards;
+            for s in &self.board_specs {
+                if left == 0 {
+                    break;
+                }
+                let take = s.count.min(left);
+                specs.push(BoardSpec {
+                    count: take,
+                    platform: s.platform.clone(),
+                });
+                left -= take;
+            }
+            if left > 0 {
+                if let Some(last) = specs.last_mut() {
+                    last.count += left;
+                }
+            }
+            c.board_specs = specs;
+        }
+        c
+    }
+
+    /// Expand the fleet into one `AccelConfig` per physical board, in rack
+    /// order: each board inherits the base config's design knobs and swaps
+    /// in its generation's platform (resource envelope, clock, DDR share).
+    pub fn board_configs(&self, base: &AccelConfig) -> Vec<AccelConfig> {
+        if self.board_specs.is_empty() {
+            return vec![base.clone(); self.boards];
+        }
+        let mut fleet = Vec::with_capacity(self.boards);
+        for spec in &self.board_specs {
+            for _ in 0..spec.count {
+                fleet.push(AccelConfig {
+                    platform: spec.platform.clone(),
+                    ..base.clone()
+                });
+            }
+        }
+        fleet
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -105,6 +288,50 @@ impl ClusterConfig {
         if !(self.max_wait_us >= 0.0) {
             return Err("cluster: max_wait_us must be >= 0".into());
         }
+        if !self.board_specs.is_empty() {
+            let total: usize = self.board_specs.iter().map(|s| s.count).sum();
+            if total != self.boards {
+                return Err(format!(
+                    "cluster: board_specs counts sum to {total}, expected boards = {}",
+                    self.boards
+                ));
+            }
+            let wb = self.board_specs[0].platform.word_bytes;
+            for (i, s) in self.board_specs.iter().enumerate() {
+                if s.count == 0 {
+                    return Err(format!("cluster: board_specs[{i}].count must be >= 1"));
+                }
+                let p = &s.platform;
+                if !(p.freq_mhz > 0.0) || !(p.ddr_bytes_per_cycle > 0.0) || p.word_bytes == 0 {
+                    return Err(format!(
+                        "cluster: board_specs[{i}].platform needs freq_mhz > 0, \
+                         ddr_bytes_per_cycle > 0, word_bytes >= 1"
+                    ));
+                }
+                if p.word_bytes != wb {
+                    return Err(
+                        "cluster: all board generations must share one word size \
+                         (mixed word_bytes would change boundary volumes mid-pipeline)"
+                            .into(),
+                    );
+                }
+            }
+        }
+        let mut last_at = None;
+        for (i, st) in self.load_steps.iter().enumerate() {
+            if !(st.rps > 0.0) {
+                return Err(format!("cluster: load_steps[{i}].rps must be > 0"));
+            }
+            if let Some(prev) = last_at {
+                if st.at_request <= prev {
+                    return Err("cluster: load_steps must be ordered by at_request".into());
+                }
+            }
+            last_at = Some(st.at_request);
+        }
+        if let Some(r) = &self.reshard {
+            r.validate()?;
+        }
         Ok(())
     }
 
@@ -125,11 +352,65 @@ impl ClusterConfig {
         if self.arrival_rps.is_finite() {
             j = j.set("arrival_rps", self.arrival_rps);
         }
+        if !self.board_specs.is_empty() {
+            let mut arr = Json::Arr(vec![]);
+            for s in &self.board_specs {
+                arr = arr.push(s.to_json());
+            }
+            j = j.set("board_specs", arr);
+        }
+        if !self.load_steps.is_empty() {
+            let mut arr = Json::Arr(vec![]);
+            for s in &self.load_steps {
+                let mut o = Json::obj().set("at_request", s.at_request);
+                if s.rps.is_finite() {
+                    o = o.set("rps", s.rps);
+                }
+                arr = arr.push(o);
+            }
+            j = j.set("load_steps", arr);
+        }
+        if let Some(r) = &self.reshard {
+            j = j.set("reshard", r.to_json());
+        }
         j
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterConfig, String> {
         let base = ClusterConfig::fleet_default();
+        let board_specs = match j.get("board_specs") {
+            Json::Null => Vec::new(),
+            v => v
+                .as_arr()
+                .ok_or("cluster: 'board_specs' must be an array")?
+                .iter()
+                .map(BoardSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let load_steps = match j.get("load_steps") {
+            Json::Null => Vec::new(),
+            v => v
+                .as_arr()
+                .ok_or("cluster: 'load_steps' must be an array")?
+                .iter()
+                .map(|s| -> Result<LoadStep, String> {
+                    Ok(LoadStep {
+                        at_request: s
+                            .get("at_request")
+                            .as_usize()
+                            .ok_or("cluster: load_step missing 'at_request'")?,
+                        rps: match s.get("rps") {
+                            Json::Null => f64::INFINITY,
+                            v => v.as_f64().ok_or("cluster: invalid load_step 'rps'")?,
+                        },
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+        };
+        let reshard = match j.get("reshard") {
+            Json::Null => None,
+            v => Some(ReshardPolicy::from_json(v)?),
+        };
         let cfg = ClusterConfig {
             boards: j
                 .get("boards")
@@ -138,6 +419,7 @@ impl ClusterConfig {
             mode: ShardMode::from_name(
                 j.get("mode").as_str().ok_or("cluster: missing 'mode'")?,
             )?,
+            board_specs,
             link_bytes_per_cycle: j
                 .get("link_bytes_per_cycle")
                 .as_f64()
@@ -157,10 +439,12 @@ impl ClusterConfig {
                 Json::Null => f64::INFINITY,
                 v => v.as_f64().ok_or("cluster: invalid 'arrival_rps'")?,
             },
+            load_steps,
             requests: j.get("requests").as_usize().unwrap_or(base.requests),
             seed: j.get("seed").as_u64().unwrap_or(base.seed),
             max_batch: j.get("max_batch").as_usize().unwrap_or(base.max_batch),
             max_wait_us: j.get("max_wait_us").as_f64().unwrap_or(base.max_wait_us),
+            reshard,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -199,6 +483,101 @@ mod tests {
     }
 
     #[test]
+    fn json_roundtrip_hetero_steps_reshard() {
+        let mut c = ClusterConfig::fleet_default();
+        c.boards = 3;
+        c.board_specs = vec![
+            BoardSpec {
+                count: 2,
+                platform: Platform::virtex7_xc7v690t(),
+            },
+            BoardSpec {
+                count: 1,
+                platform: Platform::virtex7_at_100mhz(),
+            },
+        ];
+        c.arrival_rps = 400.0;
+        c.load_steps = vec![
+            LoadStep {
+                at_request: 64,
+                rps: 900.0,
+            },
+            LoadStep {
+                at_request: 128,
+                rps: f64::INFINITY,
+            },
+        ];
+        c.reshard = Some(ReshardPolicy::default_policy());
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn board_configs_expand_in_rack_order() {
+        let base = AccelConfig::paper_default();
+        let mut c = ClusterConfig::fleet_default();
+        c.boards = 3;
+        c.board_specs = vec![
+            BoardSpec {
+                count: 1,
+                platform: Platform::virtex7_xc7v690t(),
+            },
+            BoardSpec {
+                count: 2,
+                platform: Platform::virtex7_at_100mhz(),
+            },
+        ];
+        let fleet = c.board_configs(&base);
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet[0].platform.freq_mhz, 120.0);
+        assert_eq!(fleet[1].platform.freq_mhz, 100.0);
+        assert_eq!(fleet[2].platform.freq_mhz, 100.0);
+        // Design knobs come from the base config.
+        assert_eq!(fleet[2].max_depth_parallel, base.max_depth_parallel);
+
+        // Homogeneous fallback.
+        let c2 = ClusterConfig::fleet_default();
+        let fleet2 = c2.board_configs(&base);
+        assert_eq!(fleet2.len(), 4);
+        assert!(fleet2.iter().all(|f| *f == base));
+    }
+
+    #[test]
+    fn with_boards_resizes_heterogeneous_fleets_validly() {
+        let mut c = ClusterConfig::fleet_default();
+        c.boards = 4;
+        c.board_specs = vec![
+            BoardSpec {
+                count: 2,
+                platform: Platform::virtex7_xc7v690t(),
+            },
+            BoardSpec {
+                count: 2,
+                platform: Platform::virtex7_at_100mhz(),
+            },
+        ];
+        c.validate().unwrap();
+        for boards in 1..=8 {
+            let s = c.with_boards(boards);
+            assert_eq!(s.boards, boards);
+            s.validate()
+                .unwrap_or_else(|e| panic!("with_boards({boards}): {e}"));
+            let total: usize = s.board_specs.iter().map(|b| b.count).sum();
+            assert_eq!(total, boards);
+        }
+        // Truncation keeps rack order: 1 board → the first (fast) spec.
+        assert_eq!(c.with_boards(1).board_specs[0].platform.freq_mhz, 120.0);
+        // Growth extends the last generation.
+        let grown = c.with_boards(6);
+        assert_eq!(grown.board_specs.last().unwrap().count, 4);
+        // Homogeneous configs just change the count.
+        let homo = ClusterConfig::fleet_default().with_boards(9);
+        assert_eq!(homo.boards, 9);
+        assert!(homo.board_specs.is_empty());
+    }
+
+    #[test]
     fn rejects_invalid() {
         for (field, bad) in [
             ("boards", r#"{"boards":0,"mode":"replicated"}"#),
@@ -210,6 +589,21 @@ mod tests {
                 r#"{"boards":2,"mode":"replicated","aggregate_ddr_bytes_per_cycle":0}"#,
             ),
             ("rate", r#"{"boards":2,"mode":"replicated","arrival_rps":-5}"#),
+            (
+                "spec count sum",
+                r#"{"boards":3,"mode":"replicated","board_specs":[
+                    {"count":1,"platform":{"name":"a","dsp":10,"bram36":10,"lut":10,
+                     "ff":10,"freq_mhz":100.0,"ddr_bytes_per_cycle":8.0,"word_bytes":4}}]}"#,
+            ),
+            (
+                "step order",
+                r#"{"boards":2,"mode":"replicated","arrival_rps":100,
+                    "load_steps":[{"at_request":50,"rps":200},{"at_request":20,"rps":300}]}"#,
+            ),
+            (
+                "reshard window",
+                r#"{"boards":2,"mode":"replicated","reshard":{"window":0}}"#,
+            ),
         ] {
             assert!(
                 ClusterConfig::from_json_str(bad).is_err(),
@@ -219,11 +613,33 @@ mod tests {
     }
 
     #[test]
+    fn rejects_mixed_word_sizes() {
+        let mut small = Platform::virtex7_at_100mhz();
+        small.word_bytes = 2;
+        let mut c = ClusterConfig::fleet_default();
+        c.boards = 2;
+        c.board_specs = vec![
+            BoardSpec {
+                count: 1,
+                platform: Platform::virtex7_xc7v690t(),
+            },
+            BoardSpec {
+                count: 1,
+                platform: small,
+            },
+        ];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn defaults_fill_optional_fields() {
         let c = ClusterConfig::from_json_str(r#"{"boards":3,"mode":"pipelined"}"#).unwrap();
         assert_eq!(c.boards, 3);
         assert_eq!(c.mode, ShardMode::Pipelined);
         assert!(c.arrival_rps.is_infinite());
         assert_eq!(c.max_batch, ClusterConfig::fleet_default().max_batch);
+        assert!(c.board_specs.is_empty());
+        assert!(c.load_steps.is_empty());
+        assert!(c.reshard.is_none());
     }
 }

@@ -253,7 +253,9 @@ fn execute_batch(
 /// The threaded [`Server`] drives one board's compiled artifacts with real
 /// clients; this entry point drives a *simulated* fleet of boards with an
 /// open-loop workload — same planning stack (fusion planner → shard planner),
-/// same batching policy semantics, closed-form service times. It is how
+/// same batching policy semantics, closed-form service times. The fleet may
+/// mix board generations (`ccfg.board_specs`), and with a re-shard policy
+/// configured the dynamic controller migrates shards under load. It is how
 /// capacity questions ("how many boards for this traffic?") are answered
 /// without hardware.
 pub fn simulate_cluster(

@@ -134,12 +134,18 @@ impl SharedDdr {
     /// contend. ≥ 1; exactly 1 when contention is disabled or the pool
     /// covers the demand.
     pub fn slowdown(&self, n_active: usize) -> f64 {
+        self.slowdown_of(n_active as f64 * self.per_board_bytes_per_cycle)
+    }
+
+    /// Slowdown for an explicit aggregate demand in bytes per reference
+    /// cycle — the heterogeneous-fleet form, where active boards draw
+    /// different provisioned rates and demand is their sum rather than
+    /// `n_active · per_board`. ≥ 1 always; exactly 1 when contention is
+    /// disabled or the pool covers the demand (exact saturation included).
+    pub fn slowdown_of(&self, demand_bytes_per_cycle: f64) -> f64 {
         match self.aggregate_bytes_per_cycle {
             None => 1.0,
-            Some(agg) => {
-                let demand = n_active as f64 * self.per_board_bytes_per_cycle;
-                (demand / agg).max(1.0)
-            }
+            Some(agg) => (demand_bytes_per_cycle / agg).max(1.0),
         }
     }
 
@@ -148,8 +154,20 @@ impl SharedDdr {
     /// nothing extra; contended, the stretch beyond the provisioned-rate
     /// duration is pure added stall.
     pub fn stall_cycles(&self, bytes: u64, n_active: usize) -> u64 {
-        let base = bytes as f64 / self.per_board_bytes_per_cycle;
-        ((self.slowdown(n_active) - 1.0) * base).ceil() as u64
+        self.stall_cycles_of(
+            bytes,
+            self.per_board_bytes_per_cycle,
+            n_active as f64 * self.per_board_bytes_per_cycle,
+        )
+    }
+
+    /// Heterogeneous form of [`SharedDdr::stall_cycles`]: the stall added to
+    /// a phase moving `bytes` on a board provisioned at `own_rate` (bytes
+    /// per reference cycle) while the fleet draws `demand` in total.
+    pub fn stall_cycles_of(&self, bytes: u64, own_rate: f64, demand: f64) -> u64 {
+        assert!(own_rate > 0.0);
+        let base = bytes as f64 / own_rate;
+        ((self.slowdown_of(demand) - 1.0) * base).ceil() as u64
     }
 }
 
@@ -220,6 +238,59 @@ mod tests {
         let bytes = 64 * 1000;
         assert_eq!(s.stall_cycles(bytes, 4), 1000);
         assert_eq!(s.stall_cycles(bytes, 2), 0);
+    }
+
+    #[test]
+    fn shared_ddr_exact_saturation_is_free() {
+        // demand == aggregate exactly: the pool is fully used but nobody
+        // waits — the stretch factor must be exactly 1.0, not 1.0 + ε.
+        let s = SharedDdr::new(64.0, Some(256.0));
+        assert_eq!(s.slowdown(4), 1.0);
+        assert_eq!(s.stall_cycles(1 << 24, 4), 0);
+        assert_eq!(s.slowdown_of(256.0), 1.0);
+        // One byte/cycle past the pool starts stretching.
+        assert!(s.slowdown_of(257.0) > 1.0);
+    }
+
+    #[test]
+    fn shared_ddr_heavy_oversubscription_scales_linearly() {
+        let s = SharedDdr::new(64.0, Some(64.0));
+        assert_eq!(s.slowdown(64), 64.0);
+        assert_eq!(s.slowdown(1024), 1024.0);
+        // Stall at 64× is 63 extra base durations.
+        assert_eq!(s.stall_cycles(64 * 100, 64), 63 * 100);
+    }
+
+    #[test]
+    fn shared_ddr_stretch_monotone_and_never_below_one() {
+        let s = SharedDdr::new(64.0, Some(160.0));
+        let mut last = 0.0f64;
+        for n in 1..=64 {
+            let sd = s.slowdown(n);
+            assert!(sd >= 1.0, "n={n}: slowdown {sd} < 1");
+            assert!(sd >= last, "n={n}: slowdown fell {sd} < {last}");
+            last = sd;
+        }
+        // Heterogeneous form: monotone in demand too.
+        let mut last = 0.0f64;
+        for d in 0..200 {
+            let sd = s.slowdown_of(d as f64 * 2.0);
+            assert!(sd >= 1.0);
+            assert!(sd >= last);
+            last = sd;
+        }
+    }
+
+    #[test]
+    fn shared_ddr_hetero_matches_homogeneous_when_uniform() {
+        let s = SharedDdr::new(64.0, Some(128.0));
+        for n in 1..=8 {
+            assert_eq!(s.slowdown(n), s.slowdown_of(n as f64 * 64.0));
+            assert_eq!(
+                s.stall_cycles(10_000, n),
+                s.stall_cycles_of(10_000, 64.0, n as f64 * 64.0)
+            );
+        }
     }
 
     #[test]

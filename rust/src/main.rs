@@ -23,6 +23,7 @@ use decoilfnet::util::stats::fmt_count;
 use decoilfnet::util::table::{fmt_speedup, Table};
 use decoilfnet::verify;
 
+#[rustfmt::skip]
 fn opt_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "net", takes_value: true, help: "network: vgg16-prefix7 | custom-4conv64 | tiny-vgg | paper-example | path to JSON", default: Some("vgg16-prefix7") },
@@ -36,8 +37,9 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "mode", takes_value: true, help: "cluster: sharding mode: replicated | pipelined", default: Some("replicated") },
         OptSpec { name: "rate", takes_value: true, help: "cluster: open-loop arrival rate in req/s (omit for a saturating burst)", default: None },
         OptSpec { name: "aggregate-ddr", takes_value: true, help: "cluster: shared off-chip bandwidth pool in bytes/cycle (omit to disable contention)", default: None },
-        OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above)", default: None },
+        OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy)", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
+        OptSpec { name: "reshard", takes_value: false, help: "cluster: enable the load-driven re-shard controller (default policy)", default: None },
         OptSpec { name: "clients", takes_value: true, help: "serve: concurrent client threads", default: Some("4") },
         OptSpec { name: "batch", takes_value: true, help: "serve: max batch size", default: Some("8") },
         OptSpec { name: "seed", takes_value: true, help: "weight/input seed", default: Some("1") },
@@ -339,6 +341,9 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             c.requests = args.opt_usize("requests")?.unwrap_or(256).max(1);
             c.seed = args.opt_usize("seed")?.unwrap_or(1) as u64;
             c.max_batch = args.opt_usize("batch")?.unwrap_or(8).max(1);
+            if args.has_flag("reshard") {
+                c.reshard = Some(decoilfnet::config::ReshardPolicy::default_policy());
+            }
             c.validate()?;
             c
         }
@@ -365,11 +370,23 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     ));
     let mut reports = Vec::new();
     for boards in board_counts {
-        let mut c = ccfg.clone();
-        c.boards = boards;
+        // `with_boards` resizes heterogeneous fleets validly (truncating or
+        // extending board_specs in rack order), so sweeps work there too.
+        let c = ccfg.with_boards(boards);
         let r = decoilfnet::coordinator::simulate_cluster(&cfg, &net, &c)?;
-        let avg_util = r.per_board.iter().map(|b| b.utilization).sum::<f64>()
-            / r.per_board.len() as f64;
+        // The dynamic engine reports idle provisioned boards too; average
+        // utilization over boards that actually served work.
+        let active = r.per_board.iter().filter(|b| b.busy_cycles > 0).count();
+        let avg_util = if active == 0 {
+            0.0
+        } else {
+            r.per_board
+                .iter()
+                .filter(|b| b.busy_cycles > 0)
+                .map(|b| b.utilization)
+                .sum::<f64>()
+                / active as f64
+        };
         t.row(&[
             format!("{} ({} used)", r.boards, r.used_boards),
             r.mode.as_str().to_string(),
@@ -390,6 +407,26 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         println!("{}", arr.to_string_pretty());
     } else {
         println!("{}", t.to_ascii());
+        for r in &reports {
+            if r.idle_boards > 0 {
+                println!(
+                    "warning: {} of {} provisioned board(s) idle — the plan has only {} \
+                     pipeline stage(s); extra boards add cost but no throughput",
+                    r.idle_boards, r.boards, r.used_boards
+                );
+            }
+            for e in &r.reshard_events {
+                println!(
+                    "reshard @ cycle {}: {} -> {} ({}; moved {:.2} MB, stalled {} cycles)",
+                    e.at_cycle,
+                    e.from,
+                    e.to,
+                    e.reason,
+                    e.migration_bytes as f64 / (1024.0 * 1024.0),
+                    e.stall_cycles
+                );
+            }
+        }
     }
     Ok(())
 }

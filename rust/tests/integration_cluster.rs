@@ -1,15 +1,32 @@
 //! Integration tests for the cluster subsystem — the acceptance properties:
-//! link-byte conservation under pipelined sharding, and idealized scaling
-//! monotonicity when the contention model is disabled.
+//! link-byte conservation under pipelined sharding, idealized scaling
+//! monotonicity when the contention model is disabled, per-board resource
+//! feasibility on heterogeneous fleets, and the re-shard controller
+//! recovering statically re-planned throughput after a traffic shift.
 
+use decoilfnet::accel::latency::group_cost_estimate;
 use decoilfnet::accel::{FusionPlan, Weights};
-use decoilfnet::cluster::{plan_fleet, run_fleet, simulate_fleet, ShardPlan};
-use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig, Network, ShardMode};
+use decoilfnet::cluster::{
+    balance_min_max, plan_fleet, run_fleet, simulate_fleet, simulate_fleet_dynamic,
+    InterBoardLink, ShardPlan,
+};
+use decoilfnet::config::{
+    vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Network, Platform, ReshardPolicy,
+    ShardMode,
+};
 
 fn setup() -> (AccelConfig, Network, Weights) {
     let net = vgg16_prefix();
     let w = Weights::random(&net, 1);
     (AccelConfig::paper_default(), net, w)
+}
+
+/// The older board generation: half the clock, half the DDR draw.
+fn slow_gen(base: &AccelConfig) -> AccelConfig {
+    AccelConfig {
+        platform: Platform::virtex7_older_gen(),
+        ..base.clone()
+    }
 }
 
 /// Contention off, ideal links, batch=1, saturating burst: the regime where
@@ -18,14 +35,17 @@ fn ideal_cfg(boards: usize, mode: ShardMode, requests: usize) -> ClusterConfig {
     ClusterConfig {
         boards,
         mode,
+        board_specs: vec![],
         link_bytes_per_cycle: f64::INFINITY,
         link_latency_cycles: 0,
         aggregate_ddr_bytes_per_cycle: None,
         arrival_rps: f64::INFINITY,
+        load_steps: vec![],
         requests,
         seed: 11,
         max_batch: 1,
         max_wait_us: 0.0,
+        reshard: None,
     }
 }
 
@@ -171,4 +191,178 @@ fn pipelined_shards_respect_per_board_budget() {
         assert!(s.resources.dsp <= cfg.platform.dsp);
         assert!(s.resources.bram36() <= cfg.platform.bram36);
     }
+}
+
+#[test]
+fn hetero_pipelined_planner_respects_each_boards_own_budget() {
+    // Acceptance: the heterogeneous pipelined planner never assigns a stage
+    // that fails that board's own resource check. One mid-fleet board is
+    // shrunk until it can only host the cheap layers; the DP must either
+    // route around it or leave a provably infeasible board out — every
+    // shard of a fitting plan passes the check of the *specific* board it
+    // landed on.
+    let (fast, net, w) = setup();
+    let mut small = slow_gen(&fast);
+    // 9·64-lane conv groups need 578 DSPs; 500 leaves room only for the
+    // first conv (9·3 + 2 = 29) and the pools.
+    small.platform.dsp = 500;
+    small.platform.name = "small".to_string();
+    let plan = FusionPlan::unfused(7);
+    for fleet in [
+        vec![fast.clone(), small.clone(), fast.clone()],
+        vec![small.clone(), fast.clone(), fast.clone()],
+        vec![fast.clone(), fast.clone(), small.clone(), fast.clone()],
+    ] {
+        let sp = ShardPlan::pipelined_fleet(&fleet, &net, &w, &plan);
+        if sp.fits() {
+            for s in &sp.shards {
+                assert!(
+                    s.resources.fits(&fleet[s.board]),
+                    "stage {:?} on board {} ({}) exceeds that board's envelope",
+                    s.layers,
+                    s.board,
+                    fleet[s.board].platform.name
+                );
+            }
+        }
+        // Whatever the DP decided, the fits flags must be truthful per
+        // board, never checked against some other board's budget.
+        for s in &sp.shards {
+            assert_eq!(s.fits, s.resources.fits(&fleet[s.board]), "board {}", s.board);
+        }
+    }
+}
+
+#[test]
+fn load_step_reshard_recovers_static_throughput() {
+    // Acceptance: after a traffic shift, the re-shard controller recovers
+    // ≥ 90% of the statically re-planned throughput. A two-generation fleet
+    // starts on cuts balanced under a homogeneous assumption (the slow
+    // boards become the bottleneck), traffic steps from 0.4× to 1.25× of
+    // the naive plan's capacity, and the controller must migrate.
+    let (cfg, net, w) = setup();
+    let fleet = vec![cfg.clone(), cfg.clone(), slow_gen(&cfg), slow_gen(&cfg)];
+    let plan = FusionPlan::unfused(7);
+
+    // Naive cuts: min-max balance of raw cycles, blind to clocks.
+    let totals: Vec<u64> = plan
+        .groups()
+        .iter()
+        .map(|g| group_cost_estimate(&cfg, &net, g.clone()).total())
+        .collect();
+    let cuts = balance_min_max(&totals, fleet.len().min(totals.len()));
+    let naive = ShardPlan::pipelined_fleet_with_cuts(&fleet, &net, &w, &plan, &cuts);
+
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.boards = 4;
+    ccfg.mode = ShardMode::Pipelined;
+    ccfg.aggregate_ddr_bytes_per_cycle = None;
+    ccfg.requests = 512;
+    ccfg.max_batch = 8;
+    ccfg.seed = 3;
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let ref_freq = cfg.platform.freq_mhz;
+    let naive_cap = naive.capacity_rps(ccfg.max_batch, &link, ref_freq);
+    let naive_item_ms: f64 = naive.shards.iter().map(|s| s.item_us()).sum::<f64>() / 1e3;
+    ccfg.arrival_rps = 0.4 * naive_cap;
+    ccfg.load_steps = vec![LoadStep {
+        at_request: 128,
+        rps: 1.25 * naive_cap,
+    }];
+
+    // Statically re-planned baseline: the controller's own chooser at t=0.
+    let static_best = [
+        ShardPlan::replicated_fleet(&fleet, &net, &w, &plan),
+        ShardPlan::pipelined_fleet(&fleet, &net, &w, &plan),
+    ]
+    .into_iter()
+    .filter(|p| p.fits())
+    .max_by(|a, b| {
+        a.capacity_rps(ccfg.max_batch, &link, ref_freq)
+            .partial_cmp(&b.capacity_rps(ccfg.max_batch, &link, ref_freq))
+            .unwrap()
+    })
+    .expect("some plan fits the fleet");
+    // The naive plan must genuinely be the inferior one, or the scenario
+    // tests nothing.
+    assert!(
+        static_best.capacity_rps(ccfg.max_batch, &link, ref_freq) > naive_cap * 1.05,
+        "static re-plan must beat naive capacity"
+    );
+    let r_static = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, static_best.clone(), &ccfg);
+
+    let mut dyn_cfg = ccfg.clone();
+    dyn_cfg.reshard = Some(ReshardPolicy {
+        window: 24,
+        util_skew: 0.25,
+        p99_ms: 2.5 * naive_item_ms,
+        cooldown_windows: 1,
+        migration_factor: 1.0,
+    });
+    let r_dyn = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, naive.clone(), &dyn_cfg);
+
+    assert!(
+        !r_dyn.reshard_events.is_empty(),
+        "the controller must migrate off the naive plan under load"
+    );
+    let e = &r_dyn.reshard_events[0];
+    assert_eq!(e.from, naive.label());
+    assert_ne!(e.to, naive.label());
+    assert!(e.migration_bytes > 0, "weights must move");
+
+    let recovery = r_dyn.throughput_rps / r_static.throughput_rps;
+    assert!(
+        recovery >= 0.9,
+        "controller recovered only {recovery:.3} of statically re-planned \
+         throughput ({:.1} vs {:.1} req/s)",
+        r_dyn.throughput_rps,
+        r_static.throughput_rps
+    );
+
+    // And the controller must actually have helped versus doing nothing.
+    let r_frozen = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, naive, &ccfg);
+    assert!(
+        r_dyn.throughput_rps >= r_frozen.throughput_rps * (1.0 - 1e-9),
+        "re-sharding made things worse: {} vs frozen {}",
+        r_dyn.throughput_rps,
+        r_frozen.throughput_rps
+    );
+}
+
+#[test]
+fn hetero_fleet_from_json_end_to_end() {
+    // Heterogeneous fleet + reshard policy straight from JSON through
+    // `run_fleet`: planner uses each generation's envelope, report carries
+    // idle-board accounting.
+    let (cfg, net, _) = setup();
+    let ccfg = ClusterConfig::from_json_str(
+        r#"{
+            "boards": 3,
+            "mode": "pipelined",
+            "board_specs": [
+                {"count": 2, "platform": {"name": "Virtex-7 XC7V690T", "dsp": 3600,
+                 "bram36": 1470, "lut": 433200, "ff": 866400, "freq_mhz": 120.0,
+                 "ddr_bytes_per_cycle": 64.0, "word_bytes": 4}},
+                {"count": 1, "platform": {"name": "Virtex-7 older", "dsp": 3600,
+                 "bram36": 1470, "lut": 433200, "ff": 866400, "freq_mhz": 60.0,
+                 "ddr_bytes_per_cycle": 32.0, "word_bytes": 4}}
+            ],
+            "arrival_rps": 200.0,
+            "requests": 48,
+            "seed": 5,
+            "max_batch": 4,
+            "reshard": {"window": 16, "util_skew": 0.5, "p99_ms": 500.0}
+        }"#,
+    )
+    .unwrap();
+    let r = run_fleet(&cfg, &net, &ccfg).unwrap();
+    assert_eq!(r.completed, 48);
+    assert!(r.throughput_rps > 0.0);
+    let j = r.to_json();
+    assert_eq!(
+        j.get("idle_boards").as_usize(),
+        Some(r.idle_boards),
+        "idle boards must be surfaced in the report JSON"
+    );
+    assert_eq!(j.get("boards").as_usize(), Some(3));
 }

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Gate CI on the cluster bench's deterministic metrics.
+
+Usage:
+    check_bench_regression.py BASELINE.json CURRENT.json [--tolerance 0.10]
+                              [--write-baseline]
+
+The bench (`cargo bench --bench cluster_scaling` with BENCH_JSON set) emits
+a flat map of tracked metrics, each `{"value": <float>, "better": "higher" |
+"lower"}`. Every value is a deterministic simulation output — cycles at a
+fixed clock, no wall time — so any move beyond the tolerance is a real model
+change, not machine noise.
+
+Comparison rules per metric present in the BASELINE:
+  * better == "higher": fail when current < baseline * (1 - tolerance)
+  * better == "lower":  fail when current > baseline * (1 + tolerance)
+  * metric missing from CURRENT: fail (a tracked metric disappeared)
+
+Seed mode: a baseline whose top level has `"seeded": false` (or an absent
+baseline file) arms the gate instead of enforcing it — the CURRENT file is
+schema-checked and printed so a maintainer can commit it as the repo-root
+`BENCH_cluster.json`, turning the gate on for every later run. Use
+`--write-baseline` to copy CURRENT over BASELINE locally.
+"""
+
+import argparse
+import json
+import shutil
+import sys
+
+SCHEMA = "decoilfnet-cluster-bench/v1"
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def check_schema(doc, path):
+    errors = []
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        errors.append(f"{path}: 'metrics' must be a non-empty object")
+        return errors
+    for name, m in metrics.items():
+        if not isinstance(m, dict):
+            errors.append(f"{path}: metric {name!r} is not an object")
+            continue
+        if not isinstance(m.get("value"), (int, float)):
+            errors.append(f"{path}: metric {name!r} has no numeric 'value'")
+        if m.get("better") not in ("higher", "lower"):
+            errors.append(f"{path}: metric {name!r} 'better' must be higher|lower")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="copy CURRENT over BASELINE after a successful run",
+    )
+    args = ap.parse_args()
+
+    current = load(args.current)
+    errors = check_schema(current, args.current)
+    if errors:
+        print("current bench output is malformed:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+
+    try:
+        baseline = load(args.baseline)
+    except FileNotFoundError:
+        baseline = None
+
+    if baseline is None or not baseline.get("seeded", False):
+        print(
+            "baseline is absent or unseeded — seed mode: schema-checking the "
+            "fresh metrics instead of gating."
+        )
+        print(
+            f"to arm the gate, commit the generated file as {args.baseline} "
+            "(it is deterministic — identical on every machine):"
+        )
+        print(json.dumps(current, indent=2, sort_keys=True))
+        if args.write_baseline:
+            shutil.copyfile(args.current, args.baseline)
+            print(f"wrote {args.baseline}")
+        return 0
+
+    base_metrics = baseline["metrics"]
+    cur_metrics = current["metrics"]
+    tol = args.tolerance
+    regressions, improvements, missing = [], [], []
+
+    for name, base in sorted(base_metrics.items()):
+        if name not in cur_metrics:
+            missing.append(name)
+            continue
+        bv, cv = base["value"], cur_metrics[name]["value"]
+        better = base["better"]
+        if bv == 0:
+            continue  # nothing to compare against
+        delta = (cv - bv) / abs(bv)
+        if better == "higher":
+            if cv < bv * (1.0 - tol):
+                regressions.append((name, bv, cv, delta))
+            elif cv > bv * (1.0 + tol):
+                improvements.append((name, bv, cv, delta))
+        else:
+            if cv > bv * (1.0 + tol):
+                regressions.append((name, bv, cv, delta))
+            elif cv < bv * (1.0 - tol):
+                improvements.append((name, bv, cv, delta))
+
+    new = sorted(set(cur_metrics) - set(base_metrics))
+    if new:
+        print(f"note: {len(new)} new untracked metric(s): {', '.join(new)}")
+    for name, bv, cv, delta in improvements:
+        print(f"improved: {name}: {bv:.6g} -> {cv:.6g} ({delta:+.1%})")
+
+    ok = True
+    if missing:
+        ok = False
+        for name in missing:
+            print(f"FAIL: tracked metric disappeared: {name}")
+    if regressions:
+        ok = False
+        for name, bv, cv, delta in regressions:
+            print(
+                f"FAIL: {name} regressed beyond {tol:.0%}: "
+                f"{bv:.6g} -> {cv:.6g} ({delta:+.1%})"
+            )
+    if ok:
+        n = len(base_metrics)
+        print(f"all {n} tracked metrics within {tol:.0%} of baseline")
+        if args.write_baseline:
+            shutil.copyfile(args.current, args.baseline)
+            print(f"wrote {args.baseline}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
