@@ -1,0 +1,270 @@
+//! Compute-kernel bench: the depth-flattened im2col/MAC path vs the naive
+//! per-pixel walk, plus fleet-simulator events/s (event queue vs the legacy
+//! linear walk).
+//!
+//! Layer shapes carry the paper nets' channel structure (VGG-16 prefix
+//! depths/filters; the custom 4×conv64 net is the conv1_2 shape) at a
+//! reduced 28×28 spatial extent — per-pixel work is what the kernel changes,
+//! so speedups are extent-invariant while the naive side stays affordable
+//! in CI. Wall-clock rates are machine-dependent and therefore **gate
+//! exempt** in `BENCH_compute.json` (`"gate": false`); the deterministic
+//! bit-exactness and simulator-equivalence checks are the gated metrics.
+//!
+//! Set `BENCH_JSON=/path/out.json` to write the metrics file CI tracks, and
+//! `DECOILFNET_THREADS` to pin the multi-threaded rows' worker count.
+
+use std::time::Duration;
+
+use decoilfnet::accel::depth_concat::FilterBanks;
+use decoilfnet::accel::kernels::{self, conv2d_fx, naive, KernelScratch};
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{sim_legacy, simulate_fleet, simulate_fleet_dynamic, ShardPlan};
+use decoilfnet::config::{tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, Platform, ShardMode};
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::bench::{BenchConfig, Bencher};
+use decoilfnet::util::json::Json;
+use decoilfnet::util::stats::geomean;
+use decoilfnet::util::table::Table;
+
+/// Paper-net conv layer shapes: (name, input depth, filters).
+const LAYERS: [(&str, usize, usize); 5] = [
+    ("conv1_1", 3, 64),
+    ("conv1_2", 64, 64),
+    ("conv2_1", 64, 128),
+    ("conv2_2", 128, 128),
+    ("conv3_1", 128, 256),
+];
+const EXTENT: usize = 28;
+
+fn bench_cfg() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(60),
+        measure: Duration::from_millis(700),
+        min_samples: 2,
+        max_samples: 8,
+    }
+}
+
+struct LayerRow {
+    name: &'static str,
+    naive_px_s: f64,
+    kernel_px_s: f64,
+    kernel_mt_px_s: f64,
+    speedup: f64,
+}
+
+fn main() {
+    let mt_threads = kernels::default_threads();
+    let mut b = Bencher::with_config(bench_cfg());
+    let mut rows: Vec<LayerRow> = Vec::new();
+    let mut bit_exact = true;
+
+    for (i, &(name, d, k)) in LAYERS.iter().enumerate() {
+        let seed = 100 + i as u64;
+        let input = NdTensor::random(&[EXTENT, EXTENT, d], seed, -1.0, 1.0).to_fixed();
+        let filt = NdTensor::random(&[k, 3, 3, d], seed ^ 1, -0.3, 0.3);
+        let bias = NdTensor::random(&[k], seed ^ 2, -0.1, 0.1);
+        let banks = FilterBanks::from_tensor(&filt, &bias);
+        let out_px = (EXTENT * EXTENT) as f64;
+
+        let mut scratch = KernelScratch::new();
+        bit_exact &=
+            conv2d_fx(&input, &banks, 1, true, 1, &mut scratch) ==
+                naive::conv2d_fx_naive(&input, &banks, 1, true);
+
+        let naive_ns = b
+            .bench(&format!("naive/{name}"), || {
+                naive::conv2d_fx_naive(&input, &banks, 1, true)
+            })
+            .ns_per_iter();
+        let kernel_ns = b
+            .bench(&format!("kernel/{name}"), || {
+                conv2d_fx(&input, &banks, 1, true, 1, &mut scratch)
+            })
+            .ns_per_iter();
+        let kernel_mt_ns = b
+            .bench(&format!("kernel-mt{mt_threads}/{name}"), || {
+                conv2d_fx(&input, &banks, 1, true, mt_threads, &mut scratch)
+            })
+            .ns_per_iter();
+
+        rows.push(LayerRow {
+            name,
+            naive_px_s: out_px * 1e9 / naive_ns,
+            kernel_px_s: out_px * 1e9 / kernel_ns,
+            kernel_mt_px_s: out_px * 1e9 / kernel_mt_ns,
+            speedup: naive_ns / kernel_ns,
+        });
+    }
+    assert!(bit_exact, "kernel path must be bit-exact vs the naive oracle");
+
+    let mut t = Table::new(&["layer", "naive px/s", "kernel px/s", "kernel-mt px/s", "speedup"])
+        .title(&format!(
+            "depth-flattened kernel vs naive walk ({EXTENT}×{EXTENT}, paper channel shapes, \
+             single thread unless -mt)"
+        ))
+        .label_col();
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.0}", r.naive_px_s),
+            format!("{:.0}", r.kernel_px_s),
+            format!("{:.0}", r.kernel_mt_px_s),
+            format!("{:.2}×", r.speedup),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    let speedups: Vec<f64> = rows.iter().map(|r| r.speedup).collect();
+    let geo = geomean(&speedups);
+    println!("single-thread speedup geomean over paper layer shapes: {geo:.2}×");
+
+    // ---- whole-network forward: frames/s on tiny-vgg ----
+    let net = tiny_vgg();
+    let w = Weights::random(&net, 1);
+    let input = NdTensor::random(&net.input.as_slice(), 2, -1.0, 1.0).to_fixed();
+    let mut scratch = KernelScratch::new();
+    let fwd_ns = b
+        .bench("forward/tiny-vgg/1t", || {
+            kernels::forward_network_fx(&net, &w, &input, 1, &mut scratch)
+        })
+        .ns_per_iter();
+    let fwd_mt_ns = b
+        .bench(&format!("forward/tiny-vgg/{mt_threads}t"), || {
+            kernels::forward_network_fx(&net, &w, &input, mt_threads, &mut scratch)
+        })
+        .ns_per_iter();
+    let naive_fwd_ns = b
+        .bench("forward/tiny-vgg/naive", || {
+            naive::forward_network_fx_naive(&net, &w, &input)
+        })
+        .ns_per_iter();
+    println!(
+        "tiny-vgg forward: naive {:.1}/s, kernel {:.1}/s (1t), {:.1}/s ({mt_threads}t)",
+        1e9 / naive_fwd_ns,
+        1e9 / fwd_ns,
+        1e9 / fwd_mt_ns
+    );
+
+    // ---- fleet simulator: events/s, event queue vs legacy linear walk ----
+    let vgg = vgg16_prefix();
+    let vw = Weights::random(&vgg, 1);
+    let cfg = AccelConfig::paper_default();
+    let fused = FusionPlan::fully_fused(7);
+
+    let static_shard = ShardPlan::replicated(&cfg, &vgg, &vw, &fused, 16);
+    let static_ccfg = ClusterConfig {
+        boards: 16,
+        mode: ShardMode::Replicated,
+        board_specs: vec![],
+        link_bytes_per_cycle: f64::INFINITY,
+        link_latency_cycles: 0,
+        aggregate_ddr_bytes_per_cycle: None,
+        arrival_rps: 50_000.0,
+        load_steps: vec![],
+        requests: 20_000,
+        seed: 5,
+        max_batch: 8,
+        max_wait_us: 100.0,
+        reshard: None,
+    };
+    let r_event = simulate_fleet(&cfg, &static_shard, &static_ccfg);
+    let r_legacy = sim_legacy::simulate_fleet(&cfg, &static_shard, &static_ccfg);
+    let mut sims_identical =
+        r_event.to_json().to_string_pretty() == r_legacy.to_json().to_string_pretty();
+
+    let slow_gen = AccelConfig {
+        platform: Platform::virtex7_older_gen(),
+        ..cfg.clone()
+    };
+    let fleet: Vec<AccelConfig> = (0..16)
+        .map(|i| if i % 2 == 0 { cfg.clone() } else { slow_gen.clone() })
+        .collect();
+    let dyn_shard = ShardPlan::replicated_fleet(&fleet, &vgg, &vw, &fused);
+    let mut dyn_ccfg = static_ccfg.clone();
+    dyn_ccfg.max_batch = 4;
+    let rd_event = simulate_fleet_dynamic(&cfg, &fleet, &vgg, &vw, dyn_shard.clone(), &dyn_ccfg);
+    let rd_legacy =
+        sim_legacy::simulate_fleet_dynamic(&cfg, &fleet, &vgg, &vw, dyn_shard.clone(), &dyn_ccfg);
+    sims_identical &=
+        rd_event.to_json().to_string_pretty() == rd_legacy.to_json().to_string_pretty();
+    assert!(sims_identical, "event-queue simulators must match the legacy walk byte-for-byte");
+
+    let n_req = static_ccfg.requests as f64;
+    let static_event_ns = b
+        .bench("sim/static-16b/event-queue", || {
+            simulate_fleet(&cfg, &static_shard, &static_ccfg)
+        })
+        .ns_per_iter();
+    let static_legacy_ns = b
+        .bench("sim/static-16b/legacy-scan", || {
+            sim_legacy::simulate_fleet(&cfg, &static_shard, &static_ccfg)
+        })
+        .ns_per_iter();
+    let dyn_event_ns = b
+        .bench("sim/dynamic-16b/event-queue", || {
+            simulate_fleet_dynamic(&cfg, &fleet, &vgg, &vw, dyn_shard.clone(), &dyn_ccfg)
+        })
+        .ns_per_iter();
+    let dyn_legacy_ns = b
+        .bench("sim/dynamic-16b/legacy-scan", || {
+            sim_legacy::simulate_fleet_dynamic(&cfg, &fleet, &vgg, &vw, dyn_shard.clone(), &dyn_ccfg)
+        })
+        .ns_per_iter();
+    println!(
+        "fleet sim events/s (16 boards, 20k arrivals): static {:.0} (event) vs {:.0} (legacy); \
+         dynamic {:.0} (event) vs {:.0} (legacy)",
+        n_req * 1e9 / static_event_ns,
+        n_req * 1e9 / static_legacy_ns,
+        n_req * 1e9 / dyn_event_ns,
+        n_req * 1e9 / dyn_legacy_ns
+    );
+
+    // ---- BENCH_compute.json ----
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let metric = |v: f64, better: &str, gate: bool| {
+            Json::obj().set("value", v).set("better", better).set("gate", gate)
+        };
+        let mut m = Json::obj()
+            .set("kernel_bit_exact", metric(1.0, "higher", true))
+            .set("sim_reports_identical", metric(1.0, "higher", true))
+            .set("speedup_geomean", metric(geo, "higher", false))
+            .set("forward_tiny_vgg_1t_items_per_s", metric(1e9 / fwd_ns, "higher", false))
+            .set("forward_tiny_vgg_mt_items_per_s", metric(1e9 / fwd_mt_ns, "higher", false))
+            .set(
+                "sim_static_event_events_per_s",
+                metric(n_req * 1e9 / static_event_ns, "higher", false),
+            )
+            .set(
+                "sim_static_legacy_events_per_s",
+                metric(n_req * 1e9 / static_legacy_ns, "higher", false),
+            )
+            .set(
+                "sim_dynamic_event_events_per_s",
+                metric(n_req * 1e9 / dyn_event_ns, "higher", false),
+            )
+            .set(
+                "sim_dynamic_legacy_events_per_s",
+                metric(n_req * 1e9 / dyn_legacy_ns, "higher", false),
+            );
+        for r in &rows {
+            m = m
+                .set(&format!("naive_{}_items_per_s", r.name), metric(r.naive_px_s, "higher", false))
+                .set(
+                    &format!("kernel_{}_items_per_s", r.name),
+                    metric(r.kernel_px_s, "higher", false),
+                )
+                .set(
+                    &format!("kernel_mt_{}_items_per_s", r.name),
+                    metric(r.kernel_mt_px_s, "higher", false),
+                )
+                .set(&format!("speedup_{}", r.name), metric(r.speedup, "higher", false));
+        }
+        let out = Json::obj()
+            .set("schema", "decoilfnet-compute-bench/v1")
+            .set("seeded", true)
+            .set("metrics", m);
+        std::fs::write(&path, out.to_string_pretty())
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote bench metrics to {path}");
+    }
+}

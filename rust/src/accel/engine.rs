@@ -24,7 +24,6 @@
 use crate::config::{AccelConfig, Layer, Network};
 use crate::fpga::ddr::{DdrChannel, Dir};
 use crate::fpga::line_buffer::WindowSchedule;
-use crate::tensor::fixed::Fx;
 use crate::tensor::{FxTensor, NdTensor};
 
 use super::conv3d::ConvUnit;
@@ -91,6 +90,17 @@ impl Weights {
             .filter_map(|i| self.banks[i].as_ref())
             .map(|b| b.total_bytes(word_bytes))
             .sum()
+    }
+
+    /// Weight bytes of every layer (0 for pools), derived once — callers
+    /// that price layer subsets inside loops (the migration biller, the
+    /// fleet costing context) index this instead of re-walking the banks
+    /// per query.
+    pub fn per_layer_bytes(&self, word_bytes: usize) -> Vec<u64> {
+        self.banks
+            .iter()
+            .map(|b| b.as_ref().map_or(0, |b| b.total_bytes(word_bytes)))
+            .collect()
     }
 }
 
@@ -186,17 +196,16 @@ impl Engine {
             ddr.account_only(&format!("weights[g{}..{}]", group.start, group.end), Dir::Read, wbytes);
             weight_load_total += weight_load;
 
-            // Group input streamed from DDR, row bursts on the channel.
+            // Group input streamed from DDR, row bursts on the channel. One
+            // label per group — building a fresh `format!` string per row
+            // dominated this loop's profile (shape inference and labels are
+            // now derived once per group, not per row).
             let mut avail: Vec<u64> =
                 Vec::with_capacity(in_shape.h * in_shape.w);
             let row_bytes = (in_shape.w * in_shape.d * wb) as u64;
-            for r in 0..in_shape.h {
-                let end = ddr.transfer(
-                    &format!("in[g{}] row{r}", group.start),
-                    Dir::Read,
-                    row_bytes,
-                    t_group_start,
-                );
+            let in_label = format!("in[g{}] rows", group.start);
+            for _ in 0..in_shape.h {
+                let end = ddr.transfer(&in_label, Dir::Read, row_bytes, t_group_start);
                 for _ in 0..in_shape.w {
                     avail.push(end);
                 }
@@ -241,15 +250,11 @@ impl Engine {
             // Group output written back to DDR in row bursts.
             let out_shape = shapes[group.end];
             let out_row_bytes = (out_shape.w * out_shape.d * wb) as u64;
+            let out_label = format!("out[g{}] rows", group.start);
             let mut end = t_group_start;
             for r in 0..out_shape.h {
                 let row_last = avail[(r + 1) * out_shape.w - 1];
-                end = ddr.transfer(
-                    &format!("out[g{}] row{r}", group.start),
-                    Dir::Write,
-                    out_row_bytes,
-                    row_last,
-                );
+                end = ddr.transfer(&out_label, Dir::Write, out_row_bytes, row_last);
             }
             per_group.push(GroupTiming {
                 layers: group.clone(),
@@ -290,59 +295,33 @@ impl Engine {
             return (single.total_cycles, single.total_cycles as f64);
         }
         // Frame k may start streaming as soon as the first layer's line
-        // buffer has drained frame k-1 — i.e. one frame every
-        // `bottleneck` cycles, where bottleneck is the slowest stage's
-        // work (rate × pixels) plus the inter-frame DDR gap.
+        // buffer has drained frame k-1 — i.e. one frame per bottleneck
+        // interval. Per-layer steady-state work (rate × pixels) is derived
+        // once — shapes and compute units used to be re-inferred in two
+        // separate passes over the plan.
         let shapes = net.shapes();
-        let mut bottleneck = 0u64;
-        for g in plan.groups() {
-            for li in g.clone() {
-                let in_sh = shapes[li];
-                let work = match &net.layers[li] {
-                    crate::config::Layer::Conv {
-                        kernel, filters, ..
-                    } => {
-                        let unit = super::conv3d::ConvUnit::for_layer(
-                            &self.cfg, *kernel, in_sh.d, *filters,
-                        );
-                        let out = shapes[li + 1];
+        let work: Vec<u64> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, layer)| {
+                let out = shapes[li + 1];
+                match layer {
+                    Layer::Conv { kernel, filters, .. } => {
+                        let unit =
+                            ConvUnit::for_layer(&self.cfg, *kernel, shapes[li].d, *filters);
                         (out.h * out.w) as u64 * unit.cycles_per_output_pixel()
                     }
-                    crate::config::Layer::MaxPool { .. } => {
-                        let out = shapes[li + 1];
-                        (out.h * out.w) as u64
-                    }
-                };
-                bottleneck = bottleneck.max(work);
-            }
-            // Serialized groups add their own bottleneck per frame.
-        }
+                    Layer::MaxPool { .. } => (out.h * out.w) as u64,
+                }
+            })
+            .collect();
         // Groups execute serially per frame, so the per-frame interval is
         // the sum over groups of each group's bottleneck stage.
         let interval: u64 = plan
             .groups()
             .into_iter()
-            .map(|g| {
-                let mut b = 0u64;
-                for li in g {
-                    let in_sh = shapes[li];
-                    let work = match &net.layers[li] {
-                        crate::config::Layer::Conv { kernel, filters, .. } => {
-                            let unit = super::conv3d::ConvUnit::for_layer(
-                                &self.cfg, *kernel, in_sh.d, *filters,
-                            );
-                            let out = shapes[li + 1];
-                            (out.h * out.w) as u64 * unit.cycles_per_output_pixel()
-                        }
-                        crate::config::Layer::MaxPool { .. } => {
-                            let out = shapes[li + 1];
-                            (out.h * out.w) as u64
-                        }
-                    };
-                    b = b.max(work);
-                }
-                b
-            })
+            .map(|g| work[g].iter().copied().max().unwrap_or(0))
             .sum();
         let total = single.total_cycles + interval * (n_frames as u64 - 1);
         (total, interval as f64)
@@ -352,20 +331,27 @@ impl Engine {
     // Functional forward (bit-exact datapath)
     // ------------------------------------------------------------------
 
-    /// Run the network functionally in the Q16.16 datapath. Fusion does not
-    /// change values (only movement), so this is plan-independent.
+    /// Run the network functionally in the Q16.16 datapath through the
+    /// shared depth-flattened kernels ([`crate::accel::kernels`]): one
+    /// im2col scratch reused across every layer, row bands fanned over
+    /// scoped threads. Fusion does not change values (only movement), so
+    /// this is plan-independent; the bit-exact naive oracle lives in
+    /// [`crate::accel::kernels::naive`].
     pub fn forward_fx(&self, net: &Network, weights: &Weights, input: &NdTensor) -> FxTensor {
         assert_eq!(input.shape(), &net.input.as_slice());
-        let mut cur = input.to_fixed();
-        for (li, layer) in net.layers.iter().enumerate() {
-            cur = self.forward_layer_fx(net, weights, li, &cur);
-            let _ = layer;
-        }
-        cur
+        let mut scratch = super::kernels::KernelScratch::new();
+        super::kernels::forward_network_fx(
+            net,
+            weights,
+            &input.to_fixed(),
+            super::kernels::default_threads(),
+            &mut scratch,
+        )
     }
 
     /// One layer of the functional pass (exposed for layer-by-layer
-    /// verification against the JAX reference).
+    /// verification against the JAX reference). Same kernel path as
+    /// [`Engine::forward_fx`], with a per-call scratch.
     pub fn forward_layer_fx(
         &self,
         net: &Network,
@@ -376,70 +362,20 @@ impl Engine {
         let in_sh = net.shape_before(li);
         assert_eq!(input.shape(), &in_sh.as_slice());
         match &net.layers[li] {
-            Layer::Conv {
-                kernel,
-                filters,
-                padding,
-                relu,
-                ..
-            } => {
-                let unit = ConvUnit::for_layer(&self.cfg, *kernel, in_sh.d, *filters);
+            Layer::Conv { padding, relu, .. } => {
                 let banks = weights.banks[li].as_ref().expect("conv layer needs weights");
-                let sched = WindowSchedule::new(in_sh.h, in_sh.w, *kernel, *padding);
-                let (oh, ow) = (sched.out_h(), sched.out_w());
-                let mut out = FxTensor::zeros(&[oh, ow, *filters]);
-                let taps = kernel * kernel;
-                let mut window: Vec<Fx> = vec![Fx::ZERO; taps * in_sh.d];
-                // Accumulator scratch reused across every output pixel
-                // (allocation in this loop was the forward_fx hot spot —
-                // §Perf L3 iteration 4).
-                let mut accs = vec![crate::tensor::fixed::MacAcc::new(); *filters];
-                for oy in 0..oh {
-                    for ox in 0..ow {
-                        gather_window_wide(input, &sched, oy, ox, in_sh.d, &mut window);
-                        let pixel =
-                            unit.compute_pixel_into(&window, banks, *relu, &mut accs);
-                        for (c, v) in pixel.iter().enumerate() {
-                            out.set3(oy, ox, c, *v);
-                        }
-                    }
-                }
-                out
+                let mut scratch = super::kernels::KernelScratch::new();
+                super::kernels::conv2d_fx(
+                    input,
+                    banks,
+                    *padding,
+                    *relu,
+                    super::kernels::default_threads(),
+                    &mut scratch,
+                )
             }
             Layer::MaxPool { window, stride, .. } => {
                 PoolUnit::new(*window, *stride).forward(input)
-            }
-        }
-    }
-}
-
-/// Gather the depth-concatenated window (`win·win` taps × `d` channels) for
-/// output position `(oy, ox)` with zero padding, into `buf[t*d + c]`.
-#[inline]
-fn gather_window_wide(
-    input: &FxTensor,
-    sched: &WindowSchedule,
-    oy: usize,
-    ox: usize,
-    d: usize,
-    buf: &mut [Fx],
-) {
-    let win = sched.win;
-    for dy in 0..win {
-        for dx in 0..win {
-            let t = dy * win + dx;
-            let iy = oy + dy;
-            let ix = ox + dx;
-            let dst = &mut buf[t * d..(t + 1) * d];
-            if iy < sched.pad || ix < sched.pad {
-                dst.fill(Fx::ZERO);
-                continue;
-            }
-            let (ry, rx) = (iy - sched.pad, ix - sched.pad);
-            if ry >= sched.h || rx >= sched.w {
-                dst.fill(Fx::ZERO);
-            } else {
-                dst.copy_from_slice(input.pixel(ry, rx));
             }
         }
     }

@@ -1,0 +1,149 @@
+//! im2col lowering into the depth-major scratch layout.
+//!
+//! Each output pixel's receptive field becomes one contiguous scratch row of
+//! `kernel² · d` values in `tap·d + c` order — the same depth-concatenated
+//! word layout the paper's line buffer emits (§III-B), which is what lets
+//! the MAC kernel consume all channels of a window in one unit-stride burst.
+//! Because feature maps are `[h, w, c]` row-major, every kernel row of a
+//! window is a single contiguous `run·d` copy from the input (clipped at the
+//! zero-padded borders), so the lowering is memcpy-bound, not gather-bound.
+
+use std::ops::Range;
+
+use crate::tensor::fixed::Fx;
+use crate::tensor::FxTensor;
+
+use super::ConvGeom;
+
+/// Lower output rows `rows` of the conv described by `geom` into `col`,
+/// which must hold exactly `(rows.len() · out_w) · patch` values. Row
+/// `(oy - rows.start)·out_w + ox` of `col` is the depth-major window of
+/// output pixel `(oy, ox)`, zero-padded outside the image.
+pub fn im2col_band(input: &FxTensor, geom: &ConvGeom, rows: Range<usize>, col: &mut [Fx]) {
+    let (w, d) = (geom.w, geom.d);
+    let (kernel, pad) = (geom.kernel, geom.pad);
+    let ow = geom.out_w();
+    let patch = geom.patch();
+    assert_eq!(col.len(), (rows.end - rows.start) * ow * patch);
+    let data = input.data();
+
+    for oy in rows.clone() {
+        let band_row = oy - rows.start;
+        for ox in 0..ow {
+            let dst_row = &mut col[(band_row * ow + ox) * patch..][..patch];
+            // Columns of the window that land on real pixels: dx in
+            // [dx_lo, dx_hi) maps to input column ox + dx - pad.
+            let dx_lo = pad.saturating_sub(ox);
+            let dx_hi = kernel.min(w + pad - ox);
+            for dy in 0..kernel {
+                let tap_base = dy * kernel * d;
+                let iy = oy + dy;
+                if iy < pad || iy - pad >= geom.h {
+                    dst_row[tap_base..tap_base + kernel * d].fill(Fx::ZERO);
+                    continue;
+                }
+                let ry = iy - pad;
+                // Zero the clipped taps, then one contiguous copy for the
+                // valid run (runs are depth-contiguous in both layouts).
+                dst_row[tap_base..tap_base + dx_lo * d].fill(Fx::ZERO);
+                dst_row[tap_base + dx_hi * d..tap_base + kernel * d].fill(Fx::ZERO);
+                if dx_lo < dx_hi {
+                    let rx = ox + dx_lo - pad;
+                    let run = (dx_hi - dx_lo) * d;
+                    let src = (ry * w + rx) * d;
+                    dst_row[tap_base + dx_lo * d..tap_base + dx_hi * d]
+                        .copy_from_slice(&data[src..src + run]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::NdTensor;
+
+    fn geom(h: usize, w: usize, d: usize, kernel: usize, pad: usize) -> ConvGeom {
+        ConvGeom {
+            h,
+            w,
+            d,
+            kernel,
+            pad,
+            filters: 1,
+        }
+    }
+
+    /// Scalar reference: index arithmetic straight from the definition.
+    fn reference(input: &FxTensor, g: &ConvGeom, oy: usize, ox: usize) -> Vec<Fx> {
+        let mut out = Vec::with_capacity(g.patch());
+        for dy in 0..g.kernel {
+            for dx in 0..g.kernel {
+                for c in 0..g.d {
+                    let (iy, ix) = (oy + dy, ox + dx);
+                    let v = if iy < g.pad || ix < g.pad {
+                        Fx::ZERO
+                    } else {
+                        let (ry, rx) = (iy - g.pad, ix - g.pad);
+                        if ry >= g.h || rx >= g.w {
+                            Fx::ZERO
+                        } else {
+                            input.at3(ry, rx, c)
+                        }
+                    };
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference_with_and_without_padding() {
+        for &(h, w, d, pad) in &[(5usize, 7usize, 3usize, 1usize), (4, 4, 2, 0), (3, 3, 1, 2)] {
+            let g = geom(h, w, d, 3, pad);
+            let input = NdTensor::random(&[h, w, d], 3, -1.0, 1.0).to_fixed();
+            let (oh, ow, patch) = (g.out_h(), g.out_w(), g.patch());
+            let mut col = vec![Fx::ZERO; oh * ow * patch];
+            im2col_band(&input, &g, 0..oh, &mut col);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let got = &col[(oy * ow + ox) * patch..][..patch];
+                    let want = reference(&input, &g, oy, ox);
+                    assert_eq!(got, &want[..], "h={h} w={w} pad={pad} at ({oy},{ox})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn band_slices_agree_with_full_lowering() {
+        let g = geom(9, 6, 4, 3, 1);
+        let input = NdTensor::random(&[9, 6, 4], 8, -1.0, 1.0).to_fixed();
+        let (oh, ow, patch) = (g.out_h(), g.out_w(), g.patch());
+        let mut full = vec![Fx::ZERO; oh * ow * patch];
+        im2col_band(&input, &g, 0..oh, &mut full);
+        for r0 in 0..oh {
+            for r1 in r0 + 1..=oh {
+                let mut band = vec![Fx::ZERO; (r1 - r0) * ow * patch];
+                im2col_band(&input, &g, r0..r1, &mut band);
+                assert_eq!(band, full[r0 * ow * patch..r1 * ow * patch].to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn stale_scratch_contents_are_fully_overwritten() {
+        // Every slot is written (zero-fill or copy), so a dirty buffer from a
+        // previous layer cannot leak through.
+        let g = geom(4, 4, 2, 3, 1);
+        let input = NdTensor::random(&[4, 4, 2], 2, -1.0, 1.0).to_fixed();
+        let n = g.out_h() * g.out_w() * g.patch();
+        let mut clean = vec![Fx::ZERO; n];
+        im2col_band(&input, &g, 0..g.out_h(), &mut clean);
+        let mut dirty = vec![Fx::from_f32(123.0); n];
+        im2col_band(&input, &g, 0..g.out_h(), &mut dirty);
+        assert_eq!(clean, dirty);
+    }
+}

@@ -1,0 +1,207 @@
+//! The cache-blocked, depth-flattened MAC kernel.
+//!
+//! One im2col row (a depth-concatenated window) is a `patch = kernel²·d`
+//! vector; the layer's filters form a `patch × k` matrix. The kernel is a
+//! register-tiled GEMM specialized to the Q16.16 datapath: a 4×4 tile of
+//! (output pixels × output filters) accumulates in `i64` registers while the
+//! inner loop streams the *entire* patch — every input channel of the window
+//! in one pass, the software image of the paper's depth-parallel MAC burst.
+//!
+//! Accumulation per (pixel, filter) walks the patch in ascending
+//! `tap·d + c` order with saturating adds, exactly like
+//! [`crate::accel::conv3d::ConvUnit::compute_pixel_into`] and the naive
+//! oracle, so all three paths are bit-identical (see the module docs of
+//! [`super`]).
+
+use crate::accel::depth_concat::FilterBanks;
+use crate::tensor::fixed::{Fx, MacAcc};
+
+/// Register tile extents: MR output pixels × NR output filters.
+const MR: usize = 4;
+const NR: usize = 4;
+
+/// Patch-major packed weights: `mat[p·k + f]` is filter `f`'s weight for
+/// patch position `p = tap·d + c`. The repack (from the tap-major BRAM
+/// layout of [`FilterBanks`]) costs one `patch·k` copy per layer and buys a
+/// single unit-stride weight stream for the whole MAC loop.
+#[derive(Debug, Default)]
+pub struct PackedFilters {
+    mat: Vec<Fx>,
+    biases: Vec<Fx>,
+    /// Patch length this matrix was packed for (`kernel²·d`).
+    pub patch: usize,
+    /// Output filters.
+    pub k: usize,
+}
+
+impl PackedFilters {
+    /// (Re)pack `banks` into the patch-major layout, reusing the allocation.
+    pub fn pack(&mut self, banks: &FilterBanks) {
+        let taps = banks.w * banks.w;
+        let (d, k) = (banks.d, banks.k);
+        self.patch = taps * d;
+        self.k = k;
+        self.mat.clear();
+        self.mat.reserve(self.patch * k);
+        for t in 0..taps {
+            for c in 0..d {
+                self.mat.extend_from_slice(banks.tap_channel_all_filters(t, c));
+            }
+        }
+        self.biases.clear();
+        self.biases.extend((0..k).map(|f| banks.bias(f)));
+    }
+
+    #[inline]
+    fn row(&self, p: usize) -> &[Fx] {
+        &self.mat[p * self.k..(p + 1) * self.k]
+    }
+}
+
+/// Multiply a band of im2col rows by the packed filters: `col` holds
+/// `n_px · patch` values, `out` receives `n_px · k` finished Q16.16 outputs
+/// (bias, requantization, optional ReLU applied).
+pub fn mac_band(col: &[Fx], packed: &PackedFilters, patch: usize, relu: bool, out: &mut [Fx]) {
+    debug_assert_eq!(packed.patch, patch);
+    let k = packed.k;
+    assert_eq!(col.len() % patch, 0);
+    let n_px = col.len() / patch;
+    assert_eq!(out.len(), n_px * k);
+
+    let mut i = 0;
+    while i < n_px {
+        let mi = (i + MR).min(n_px) - i;
+        let mut j = 0;
+        while j < k {
+            let nj = (j + NR).min(k) - j;
+            // 4×4 micro-kernel: accumulators live in registers across the
+            // whole patch walk; `p` ascends so the add order matches the
+            // hardware-mirroring paths exactly.
+            let mut acc = [[0i64; NR]; MR];
+            for p in 0..patch {
+                let wrow = &packed.row(p)[j..j + nj];
+                for (ii, arow) in acc.iter_mut().enumerate().take(mi) {
+                    let x = col[(i + ii) * patch + p].0 as i64;
+                    if x == 0 {
+                        continue;
+                    }
+                    for (a, wv) in arow.iter_mut().zip(wrow) {
+                        *a = a.saturating_add(x * wv.0 as i64);
+                    }
+                }
+            }
+            for (ii, arow) in acc.iter().enumerate().take(mi) {
+                let out_row = &mut out[(i + ii) * k + j..(i + ii) * k + j + nj];
+                for ((slot, &a), f) in out_row.iter_mut().zip(arow).zip(j..j + nj) {
+                    let mut m = MacAcc(a);
+                    m.add_bias(packed.biases[f]);
+                    let v = m.finish();
+                    *slot = if relu { v.relu() } else { v };
+                }
+            }
+            j += nj;
+        }
+        i += mi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::NdTensor;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn random_banks(seed: u64, k: usize, w: usize, d: usize) -> FilterBanks {
+        let mut rng = Rng::new(seed);
+        let filt = NdTensor::random(&[k, w, w, d], rng.next_u64(), -0.5, 0.5);
+        let bias = NdTensor::random(&[k], rng.next_u64(), -0.1, 0.1);
+        FilterBanks::from_tensor(&filt, &bias)
+    }
+
+    #[test]
+    fn packed_layout_matches_banks() {
+        let banks = random_banks(1, 5, 3, 4);
+        let mut p = PackedFilters::default();
+        p.pack(&banks);
+        assert_eq!(p.patch, 9 * 4);
+        assert_eq!(p.k, 5);
+        for t in 0..9 {
+            for c in 0..4 {
+                for f in 0..5 {
+                    assert_eq!(p.row(t * 4 + c)[f], banks.tap(f, t)[c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repack_reuses_cleanly_across_shapes() {
+        let mut p = PackedFilters::default();
+        p.pack(&random_banks(2, 8, 3, 6));
+        p.pack(&random_banks(3, 2, 3, 1));
+        assert_eq!(p.patch, 9);
+        assert_eq!(p.k, 2);
+        assert_eq!(p.mat.len(), 9 * 2);
+        assert_eq!(p.biases.len(), 2);
+    }
+
+    /// Scalar MacAcc reference in the canonical accumulation order.
+    fn reference(col: &[Fx], banks: &FilterBanks, patch: usize, relu: bool) -> Vec<Fx> {
+        let (d, k) = (banks.d, banks.k);
+        let n_px = col.len() / patch;
+        let mut out = Vec::with_capacity(n_px * k);
+        for px in 0..n_px {
+            let row = &col[px * patch..(px + 1) * patch];
+            for f in 0..k {
+                let mut acc = MacAcc::new();
+                for (p, x) in row.iter().enumerate() {
+                    let (t, c) = (p / d, p % d);
+                    acc.mac(*x, banks.tap(f, t)[c]);
+                }
+                acc.add_bias(banks.bias(f));
+                let v = acc.finish();
+                out.push(if relu { v.relu() } else { v });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tile_edges_and_relu_match_reference() {
+        prop::check_default(
+            "mac-band-vs-macacc",
+            |r: &mut Rng| {
+                // Deliberately straddle the 4×4 tile: 1..10 pixels/filters.
+                let n_px = r.range_usize(1, 10);
+                let d = r.range_usize(1, 7);
+                let k = r.range_usize(1, 10);
+                (n_px, d, k, r.chance(0.5), r.next_u64())
+            },
+            |&(n_px, d, k, relu, seed)| {
+                let banks = random_banks(seed, k, 3, d);
+                let patch = 9 * d;
+                let mut rng = Rng::new(seed ^ 0xABCD);
+                let col: Vec<Fx> = (0..n_px * patch)
+                    .map(|_| {
+                        if rng.chance(0.3) {
+                            Fx::ZERO // exercise the zero-skip
+                        } else {
+                            Fx::from_f32(rng.range_f32(-1.0, 1.0))
+                        }
+                    })
+                    .collect();
+                let mut packed = PackedFilters::default();
+                packed.pack(&banks);
+                let mut out = vec![Fx::ZERO; n_px * k];
+                mac_band(&col, &packed, patch, relu, &mut out);
+                let want = reference(&col, &banks, patch, relu);
+                if out == want {
+                    Ok(())
+                } else {
+                    Err("mac_band diverged from MacAcc reference".to_string())
+                }
+            },
+        );
+    }
+}

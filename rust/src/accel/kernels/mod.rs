@@ -1,0 +1,412 @@
+//! Shared fixed-point compute kernels — the one place conv math happens.
+//!
+//! The paper's core trick is *depth flattening*: all input channels of a
+//! window are consumed in one pipelined burst instead of one channel at a
+//! time. This module is the software mirror of that dataflow, structured the
+//! way the FPGA CNN surveys describe the canonical CPU lowering:
+//!
+//! * [`im2col`] lowers windows into a **depth-major scratch row** — exactly
+//!   the paper's depth-concatenated word layout, `buf[tap·d + c]` — so the
+//!   whole receptive field of an output pixel is one contiguous burst;
+//! * [`mac`] runs a **cache-blocked, depth-flattened MAC kernel** over those
+//!   rows: the inner loop walks the full `k²·d` patch of a window while a
+//!   4×4 register tile unrolls over output pixels × output filters, with
+//!   weights packed patch-major ([`mac::PackedFilters`], one unit-stride
+//!   stream);
+//! * [`conv2d_fx`] adds **scoped-thread row parallelism**
+//!   (`std::thread::scope`) over disjoint output-row bands.
+//!
+//! Every consumer — [`crate::accel::Engine::forward_fx`], the baseline
+//! models' functional forwards (`baselines::optimized::forward_fx`,
+//! `baselines::fused_layer::forward_fx`) — routes through [`conv2d_fx`], so
+//! there is exactly one compute implementation. [`naive::conv2d_fx_naive`]
+//! keeps the textbook one-pixel/one-channel walk as the bit-exact oracle
+//! (and the "before" side of `benches/compute_kernels.rs`), while
+//! `baselines::cpu_ref` remains the independent f32 oracle.
+//!
+//! ## Bit-exactness
+//!
+//! The Q16.16 datapath accumulates full-width `i64` partial products
+//! ([`crate::tensor::fixed::MacAcc`]) and quantizes once per output. For
+//! every (pixel, filter) pair, both the naive walk and the blocked kernel
+//! accumulate the patch in the same ascending `tap·d + c` order with the
+//! same saturating adds, so the results are bit-identical by construction —
+//! including the (astronomically rare) mid-sum saturation cases that a
+//! reordered reduction could disturb. `tests/integration_compute.rs` pins
+//! this down over randomized shapes.
+
+pub mod im2col;
+pub mod mac;
+pub mod naive;
+
+use std::num::NonZeroUsize;
+use std::ops::Range;
+
+use crate::accel::depth_concat::FilterBanks;
+use crate::accel::pool::PoolUnit;
+use crate::config::{Layer, Network};
+use crate::tensor::fixed::Fx;
+use crate::tensor::FxTensor;
+
+use self::im2col::im2col_band;
+use self::mac::{mac_band, PackedFilters};
+
+use super::engine::Weights;
+
+/// Geometry of one conv layer as the kernels see it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Input extent and depth.
+    pub h: usize,
+    pub w: usize,
+    pub d: usize,
+    /// Kernel extent (square), zero padding, output filters.
+    pub kernel: usize,
+    pub pad: usize,
+    pub filters: usize,
+}
+
+impl ConvGeom {
+    pub fn for_input(input: &FxTensor, banks: &FilterBanks, pad: usize) -> ConvGeom {
+        let sh = input.shape();
+        assert_eq!(sh.len(), 3, "conv input must be [h, w, d]");
+        assert_eq!(sh[2], banks.d, "input depth must match the filter bank");
+        assert!(pad < banks.w, "padding must be smaller than the kernel");
+        assert!(
+            sh[0] + 2 * pad >= banks.w && sh[1] + 2 * pad >= banks.w,
+            "kernel exceeds the padded input"
+        );
+        ConvGeom {
+            h: sh[0],
+            w: sh[1],
+            d: sh[2],
+            kernel: banks.w,
+            pad,
+            filters: banks.k,
+        }
+    }
+
+    pub fn out_h(&self) -> usize {
+        self.h + 2 * self.pad - self.kernel + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.w + 2 * self.pad - self.kernel + 1
+    }
+
+    /// Patch length: the depth-concatenated window, `kernel² · d` values.
+    pub fn patch(&self) -> usize {
+        self.kernel * self.kernel * self.d
+    }
+}
+
+/// Reusable scratch for the kernel path: the im2col band buffer and the
+/// packed filter matrix. One `KernelScratch` is allocated per forward pass
+/// and reused across every layer (buffers only ever grow), mirroring the
+/// paper's single depth-concatenation buffer that all layers stream through.
+#[derive(Debug, Default)]
+pub struct KernelScratch {
+    /// Depth-major im2col rows for the current band: `[band_px][patch]`.
+    col: Vec<Fx>,
+    /// Per-worker im2col buffers for the scoped-thread path, one per row
+    /// band — reused across layers just like `col`.
+    bands: Vec<Vec<Fx>>,
+    /// Patch-major packed weights for the current layer (see
+    /// [`mac::PackedFilters`]).
+    packed: PackedFilters,
+}
+
+impl KernelScratch {
+    pub fn new() -> KernelScratch {
+        KernelScratch::default()
+    }
+
+    /// Pack a layer's filters for the band API. [`conv2d_fx`] does this
+    /// itself; callers walking a layer in tiles via [`conv2d_fx_rows`] pack
+    /// once here and then run every tile against the same matrix, instead
+    /// of paying a full repack per tile.
+    pub fn pack_filters(&mut self, banks: &FilterBanks) {
+        self.packed.pack(banks);
+    }
+}
+
+/// Number of worker threads the kernel path uses by default: the
+/// `DECOILFNET_THREADS` environment variable when set (CI pins it for
+/// reproducible bench *structure*), otherwise the machine's available
+/// parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DECOILFNET_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Cap a row band so its im2col buffer stays cache-resident (~256 KiB).
+fn band_rows(geom: &ConvGeom) -> usize {
+    const TARGET_BYTES: usize = 1 << 18;
+    let row_bytes = geom.out_w() * geom.patch() * std::mem::size_of::<Fx>();
+    (TARGET_BYTES / row_bytes.max(1)).clamp(1, geom.out_h().max(1))
+}
+
+/// Convolve one band of output rows `rows` into `out` (single threaded).
+/// Exposed so tiled consumers — `baselines::optimized::forward_fx` walks its
+/// roofline-chosen `Tr` row tiles through this — share the exact same kernel
+/// as the whole-layer path.
+///
+/// Contract: the caller packs the layer's filters once with
+/// [`KernelScratch::pack_filters`] before the tile loop (geometry is
+/// asserted here; re-packing per tile would cost a full `patch·k` copy per
+/// band for nothing).
+pub fn conv2d_fx_rows(
+    input: &FxTensor,
+    banks: &FilterBanks,
+    pad: usize,
+    relu: bool,
+    rows: Range<usize>,
+    scratch: &mut KernelScratch,
+    out: &mut FxTensor,
+) {
+    let geom = ConvGeom::for_input(input, banks, pad);
+    assert_eq!(
+        out.shape(),
+        &[geom.out_h(), geom.out_w(), geom.filters],
+        "output tensor shape mismatch"
+    );
+    assert!(rows.start <= rows.end && rows.end <= geom.out_h());
+    assert_eq!(
+        (scratch.packed.patch, scratch.packed.k),
+        (geom.patch(), geom.filters),
+        "pack_filters(banks) must run before the tile loop"
+    );
+    let ow = geom.out_w();
+    let k = geom.filters;
+    let row_stride = ow * k;
+    let out_band = &mut out.data_mut()[rows.start * row_stride..rows.end * row_stride];
+    conv_rows_into(input, &geom, relu, rows, &mut scratch.col, &scratch.packed, out_band);
+}
+
+/// Band worker shared by the single-thread and scoped-thread paths: lower
+/// sub-bands of `rows` with im2col and run the blocked MAC kernel, writing
+/// into `out_band` (the rows' slice of the output tensor).
+fn conv_rows_into(
+    input: &FxTensor,
+    geom: &ConvGeom,
+    relu: bool,
+    rows: Range<usize>,
+    col: &mut Vec<Fx>,
+    packed: &PackedFilters,
+    out_band: &mut [Fx],
+) {
+    let ow = geom.out_w();
+    let k = geom.filters;
+    let patch = geom.patch();
+    let sub = band_rows(geom);
+    let mut r = rows.start;
+    while r < rows.end {
+        let r_end = (r + sub).min(rows.end);
+        let n_px = (r_end - r) * ow;
+        col.clear();
+        col.resize(n_px * patch, Fx::ZERO);
+        im2col_band(input, geom, r..r_end, col);
+        let off = (r - rows.start) * ow * k;
+        mac_band(col, packed, patch, relu, &mut out_band[off..off + n_px * k]);
+        r = r_end;
+    }
+}
+
+/// Full conv layer through the shared kernel: im2col lowering, blocked
+/// depth-flattened MAC, and (for `threads > 1`) scoped-thread parallelism
+/// over disjoint output-row bands. Values are identical for every thread
+/// count — threads only partition rows.
+pub fn conv2d_fx(
+    input: &FxTensor,
+    banks: &FilterBanks,
+    pad: usize,
+    relu: bool,
+    threads: usize,
+    scratch: &mut KernelScratch,
+) -> FxTensor {
+    let geom = ConvGeom::for_input(input, banks, pad);
+    let (oh, ow, k) = (geom.out_h(), geom.out_w(), geom.filters);
+    let mut out = FxTensor::zeros(&[oh, ow, k]);
+    scratch.packed.pack(banks);
+    let threads = threads.clamp(1, oh.max(1));
+    if threads <= 1 {
+        conv_rows_into(
+            input,
+            &geom,
+            relu,
+            0..oh,
+            &mut scratch.col,
+            &scratch.packed,
+            out.data_mut(),
+        );
+        return out;
+    }
+    // Contiguous row bands, one per worker; `chunks_mut` hands each thread a
+    // disjoint slice of the output (no synchronization), and each worker
+    // borrows its own scratch band buffer, reused across layers.
+    let rows_per = oh.div_ceil(threads);
+    let row_stride = ow * k;
+    if scratch.bands.len() < threads {
+        scratch.bands.resize_with(threads, Vec::new);
+    }
+    let packed = &scratch.packed;
+    std::thread::scope(|scope| {
+        let chunks = out.data_mut().chunks_mut(rows_per * row_stride);
+        for ((t, chunk), col) in chunks.enumerate().zip(scratch.bands.iter_mut()) {
+            let r0 = t * rows_per;
+            let r1 = (r0 + chunk.len() / row_stride).min(oh);
+            scope.spawn(move || {
+                conv_rows_into(input, &geom, relu, r0..r1, col, packed, chunk);
+            });
+        }
+    });
+    out
+}
+
+/// Functional forward of a whole network through the shared kernels.
+/// Fusion plans change data movement, never values, so this is the single
+/// functional-forward implementation behind [`crate::accel::Engine`] and
+/// both baseline models.
+pub fn forward_network_fx(
+    net: &Network,
+    weights: &Weights,
+    input: &FxTensor,
+    threads: usize,
+    scratch: &mut KernelScratch,
+) -> FxTensor {
+    let mut cur = input.clone();
+    for (li, layer) in net.layers.iter().enumerate() {
+        cur = match layer {
+            Layer::Conv { padding, relu, .. } => {
+                let banks = weights.banks[li].as_ref().expect("conv layer needs weights");
+                conv2d_fx(&cur, banks, *padding, *relu, threads, scratch)
+            }
+            Layer::MaxPool { window, stride, .. } => PoolUnit::new(*window, *stride).forward(&cur),
+        };
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_test_example;
+    use crate::tensor::NdTensor;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn random_banks(rng: &mut Rng, k: usize, w: usize, d: usize) -> FilterBanks {
+        let filt = NdTensor::random(&[k, w, w, d], rng.next_u64(), -0.5, 0.5);
+        let bias = NdTensor::random(&[k], rng.next_u64(), -0.1, 0.1);
+        FilterBanks::from_tensor(&filt, &bias)
+    }
+
+    #[test]
+    fn geom_shapes() {
+        let mut rng = Rng::new(1);
+        let banks = random_banks(&mut rng, 4, 3, 2);
+        let input = NdTensor::random(&[6, 5, 2], 2, -1.0, 1.0).to_fixed();
+        let g = ConvGeom::for_input(&input, &banks, 1);
+        assert_eq!((g.out_h(), g.out_w()), (6, 5));
+        assert_eq!(g.patch(), 9 * 2);
+        let g0 = ConvGeom::for_input(&input, &banks, 0);
+        assert_eq!((g0.out_h(), g0.out_w()), (4, 3));
+    }
+
+    #[test]
+    fn kernel_matches_naive_on_random_shapes() {
+        prop::check_default(
+            "kernels-vs-naive",
+            |r: &mut Rng| {
+                let h = r.range_usize(3, 12);
+                let w = r.range_usize(3, 12);
+                let d = r.range_usize(1, 9);
+                let k = r.range_usize(1, 9);
+                let pad = r.range_usize(0, 2);
+                (h, w, d, k, pad, r.chance(0.5), r.next_u64())
+            },
+            |&(h, w, d, k, pad, relu, seed)| {
+                let mut rng = Rng::new(seed);
+                let banks = random_banks(&mut rng, k, 3, d);
+                let input = NdTensor::random(&[h, w, d], seed ^ 5, -1.0, 1.0).to_fixed();
+                let mut scratch = KernelScratch::new();
+                let fast = conv2d_fx(&input, &banks, pad, relu, 1, &mut scratch);
+                let slow = naive::conv2d_fx_naive(&input, &banks, pad, relu);
+                if fast == slow {
+                    Ok(())
+                } else {
+                    Err("kernel diverged from the naive oracle".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn threading_never_changes_values() {
+        let mut rng = Rng::new(7);
+        let banks = random_banks(&mut rng, 6, 3, 5);
+        let input = NdTensor::random(&[17, 11, 5], 9, -1.0, 1.0).to_fixed();
+        let mut scratch = KernelScratch::new();
+        let one = conv2d_fx(&input, &banks, 1, true, 1, &mut scratch);
+        for threads in [2, 3, 8, 64] {
+            let t = conv2d_fx(&input, &banks, 1, true, threads, &mut scratch);
+            assert_eq!(one, t, "threads={threads} changed values");
+        }
+    }
+
+    #[test]
+    fn row_band_api_tiles_the_whole_layer() {
+        let mut rng = Rng::new(11);
+        let banks = random_banks(&mut rng, 4, 3, 3);
+        let input = NdTensor::random(&[10, 9, 3], 13, -1.0, 1.0).to_fixed();
+        let mut scratch = KernelScratch::new();
+        let whole = conv2d_fx(&input, &banks, 1, false, 1, &mut scratch);
+        let geom = ConvGeom::for_input(&input, &banks, 1);
+        let mut tiled = FxTensor::zeros(&[geom.out_h(), geom.out_w(), 4]);
+        scratch.pack_filters(&banks);
+        let mut r = 0;
+        while r < geom.out_h() {
+            let r1 = (r + 3).min(geom.out_h());
+            conv2d_fx_rows(&input, &banks, 1, false, r..r1, &mut scratch, &mut tiled);
+            r = r1;
+        }
+        assert_eq!(whole, tiled);
+    }
+
+    #[test]
+    fn scratch_reuse_across_layer_shapes_is_safe() {
+        // Grow, shrink, grow again: the shared scratch must never leak one
+        // layer's geometry into the next.
+        let mut rng = Rng::new(17);
+        let mut scratch = KernelScratch::new();
+        for &(h, w, d, k) in &[(9usize, 9usize, 8usize, 4usize), (5, 5, 2, 3), (12, 7, 6, 8)] {
+            let banks = random_banks(&mut rng, k, 3, d);
+            let input = NdTensor::random(&[h, w, d], rng.next_u64(), -1.0, 1.0).to_fixed();
+            let shared = conv2d_fx(&input, &banks, 1, true, 1, &mut scratch);
+            let fresh = conv2d_fx(&input, &banks, 1, true, 1, &mut KernelScratch::new());
+            assert_eq!(shared, fresh);
+        }
+    }
+
+    #[test]
+    fn forward_network_matches_naive_reference() {
+        let net = paper_test_example();
+        let weights = Weights::random(&net, 3);
+        let input = NdTensor::random(&net.input.as_slice(), 4, -1.0, 1.0).to_fixed();
+        let mut scratch = KernelScratch::new();
+        let fast = forward_network_fx(&net, &weights, &input, 2, &mut scratch);
+        let slow = naive::forward_network_fx_naive(&net, &weights, &input);
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! The naive per-pixel, per-channel conv walk — the bit-exact oracle.
+//!
+//! This is the loop nest the paper's depth flattening exists to kill: one
+//! output pixel at a time, one filter at a time, one tap at a time, one
+//! channel at a time, with indexed tensor reads and a window re-gathered per
+//! filter. It is kept (a) as the ground-truth oracle the blocked kernel is
+//! property-tested against, and (b) as the "before" side of
+//! `benches/compute_kernels.rs`, whose `BENCH_compute.json` tracks the
+//! speedup of the depth-flattened path over this walk.
+//!
+//! Accumulation per (pixel, filter) is ascending `tap·d + c` with
+//! [`MacAcc`] saturating adds — the identical order and arithmetic of both
+//! the blocked kernel and the hardware-mirroring
+//! [`crate::accel::conv3d::ConvUnit`], which is what makes bit-equality a
+//! meaningful assertion rather than a tolerance check.
+
+use crate::accel::depth_concat::FilterBanks;
+use crate::accel::pool::PoolUnit;
+use crate::config::{Layer, Network};
+use crate::tensor::fixed::{Fx, MacAcc};
+use crate::tensor::FxTensor;
+
+use crate::accel::engine::Weights;
+
+use super::ConvGeom;
+
+/// Textbook convolution: no lowering, no blocking, no threading.
+pub fn conv2d_fx_naive(input: &FxTensor, banks: &FilterBanks, pad: usize, relu: bool) -> FxTensor {
+    let geom = ConvGeom::for_input(input, banks, pad);
+    let (oh, ow) = (geom.out_h(), geom.out_w());
+    let (kernel, d, k) = (geom.kernel, geom.d, geom.filters);
+    let mut out = FxTensor::zeros(&[oh, ow, k]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for f in 0..k {
+                let mut acc = MacAcc::new();
+                for dy in 0..kernel {
+                    for dx in 0..kernel {
+                        let (iy, ix) = (oy + dy, ox + dx);
+                        if iy < pad || ix < pad {
+                            continue;
+                        }
+                        let (ry, rx) = (iy - pad, ix - pad);
+                        if ry >= geom.h || rx >= geom.w {
+                            continue;
+                        }
+                        let tap = banks.tap(f, dy * kernel + dx);
+                        for (c, wv) in tap.iter().enumerate().take(d) {
+                            acc.mac(input.at3(ry, rx, c), *wv);
+                        }
+                    }
+                }
+                acc.add_bias(banks.bias(f));
+                let v = acc.finish();
+                out.set3(oy, ox, f, if relu { v.relu() } else { v });
+            }
+        }
+    }
+    out
+}
+
+/// Whole-network forward on the naive walk (pooling shared with the fast
+/// path — it was never the hot spot).
+pub fn forward_network_fx_naive(net: &Network, weights: &Weights, input: &FxTensor) -> FxTensor {
+    let mut cur = input.clone();
+    for (li, layer) in net.layers.iter().enumerate() {
+        cur = match layer {
+            Layer::Conv { padding, relu, .. } => {
+                let banks = weights.banks[li].as_ref().expect("conv layer needs weights");
+                conv2d_fx_naive(&cur, banks, *padding, *relu)
+            }
+            Layer::MaxPool { window, stride, .. } => PoolUnit::new(*window, *stride).forward(&cur),
+        };
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::conv3d::ConvUnit;
+    use crate::config::AccelConfig;
+    use crate::fpga::line_buffer::WindowSchedule;
+    use crate::tensor::NdTensor;
+    use crate::util::prng::Rng;
+
+    /// The naive walk must agree bit-for-bit with the hardware-mirroring
+    /// `ConvUnit::compute_pixel` path (window gathered via the line-buffer
+    /// schedule) — the pre-kernel `forward_fx` implementation.
+    #[test]
+    fn naive_matches_conv_unit_pixelwise() {
+        let mut rng = Rng::new(21);
+        let (h, w, d, k, pad) = (7, 6, 5, 4, 1);
+        let filt = NdTensor::random(&[k, 3, 3, d], rng.next_u64(), -0.5, 0.5);
+        let bias = NdTensor::random(&[k], rng.next_u64(), -0.1, 0.1);
+        let banks = FilterBanks::from_tensor(&filt, &bias);
+        let input = NdTensor::random(&[h, w, d], rng.next_u64(), -1.0, 1.0).to_fixed();
+        let got = conv2d_fx_naive(&input, &banks, pad, true);
+
+        let cfg = AccelConfig::paper_default();
+        let unit = ConvUnit::for_layer(&cfg, 3, d, k);
+        let sched = WindowSchedule::new(h, w, 3, pad);
+        let mut window = vec![Fx::ZERO; 9 * d];
+        for oy in 0..sched.out_h() {
+            for ox in 0..sched.out_w() {
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        let t = dy * 3 + dx;
+                        let (iy, ix) = (oy + dy, ox + dx);
+                        let dst = &mut window[t * d..(t + 1) * d];
+                        if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                            dst.fill(Fx::ZERO);
+                        } else {
+                            dst.copy_from_slice(input.pixel(iy - pad, ix - pad));
+                        }
+                    }
+                }
+                let pixel = unit.compute_pixel(&window, &banks, true);
+                for (f, v) in pixel.iter().enumerate() {
+                    assert_eq!(got.at3(oy, ox, f), *v, "pixel ({oy},{ox}) filter {f}");
+                }
+            }
+        }
+    }
+}

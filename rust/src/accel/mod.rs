@@ -5,6 +5,7 @@ pub mod conv3d;
 pub mod depth_concat;
 pub mod engine;
 pub mod fusion;
+pub mod kernels;
 pub mod latency;
 pub mod pool;
 pub mod trace;

@@ -8,8 +8,11 @@
 //! halos (their Table 3 reports single-digit-% for early VGG layers); BRAM
 //! grows to hold the pyramid's intermediate tiles.
 
+use crate::accel::engine::Weights;
+use crate::accel::kernels::{forward_network_fx, KernelScratch};
 use crate::config::{AccelConfig, Layer, Network};
 use crate::fpga::bram::bram18_for;
+use crate::tensor::FxTensor;
 
 use super::optimized::{run as run_optimized, OptimizedConfig, OptimizedResult};
 
@@ -147,6 +150,25 @@ pub fn run(
     }
 }
 
+/// Functional forward of the fused-layer engine. The pyramid *recomputes*
+/// overlapping halos — pure extra movement and duplicated arithmetic on
+/// identical inputs — so its values equal a straight layer-by-layer
+/// evaluation; like every other functional path in this repo it routes
+/// through the one shared kernel
+/// ([`crate::accel::kernels::forward_network_fx`]). The cost model above is
+/// where the fused-layer-specific behavior (recompute overhead, collapsed
+/// traffic, pyramid BRAM) lives.
+pub fn forward_fx(net: &Network, weights: &Weights, input: &FxTensor) -> FxTensor {
+    let mut scratch = KernelScratch::new();
+    forward_network_fx(
+        net,
+        weights,
+        input,
+        crate::accel::kernels::default_threads(),
+        &mut scratch,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +221,19 @@ mod tests {
         let large = pyramid_overhead(&net, 112);
         assert!(small > mid && mid > large, "{small} {mid} {large}");
         assert!(large < 0.2);
+    }
+
+    #[test]
+    fn functional_forward_is_bit_exact_vs_engine() {
+        use crate::accel::Engine;
+        use crate::config::paper_test_example;
+        use crate::tensor::NdTensor;
+        let net = paper_test_example();
+        let w = Weights::random(&net, 41);
+        let input = NdTensor::random(&net.input.as_slice(), 19, -1.0, 1.0);
+        let fused = forward_fx(&net, &w, &input.to_fixed());
+        let engine = Engine::new(AccelConfig::paper_default()).forward_fx(&net, &w, &input);
+        assert_eq!(fused, engine);
     }
 
     #[test]

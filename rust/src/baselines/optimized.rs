@@ -10,8 +10,12 @@
 //! local-memory-promotion trip counts), BRAM for double-buffered tiles, and
 //! DSPs for the ⟨Tm, Tn⟩ MAC array.
 
+use crate::accel::engine::Weights;
+use crate::accel::kernels::{conv2d_fx_rows, ConvGeom, KernelScratch};
+use crate::accel::pool::PoolUnit;
 use crate::config::{AccelConfig, Layer, Network};
 use crate::fpga::bram::bram18_for;
+use crate::tensor::FxTensor;
 
 /// One layer's chosen tiling and its costs.
 #[derive(Debug, Clone)]
@@ -132,8 +136,22 @@ fn search_layer(
     // bandwidth requirement" roofline selection.
     let mut candidates: Vec<(u64, u64, LayerTiling)> = Vec::new();
     // Tm/Tn over divisor-ish candidates; Tr/Tc over a coarse grid (the cost
-    // model is smooth in Tr/Tc — full enumeration is unnecessary).
+    // model is smooth in Tr/Tc — full enumeration is unnecessary). The
+    // layer's own extents ride along so small nets (tiny-vgg's 8×8 tail,
+    // the 5×5 paper example) always have at least the whole-extent tile;
+    // for the paper-scale nets r/c are already on the grid, so this adds
+    // nothing there.
     let tm_cands: Vec<usize> = (1..=m.min(max_macs)).filter(|t| m % t == 0 || *t == m).collect();
+    let tr_cands: Vec<usize> = [4usize, 8, 14, 16, 28, 32, 56, 64, 112, 224]
+        .into_iter()
+        .chain([r])
+        .filter(|&t| t <= r)
+        .collect();
+    let tc_cands: Vec<usize> = [14usize, 28, 32, 56, 64, 112, 224]
+        .into_iter()
+        .chain([c])
+        .filter(|&t| t <= c)
+        .collect();
     for &tm in &tm_cands {
         let tn_max = (max_macs / tm).min(n);
         if tn_max == 0 {
@@ -142,14 +160,8 @@ fn search_layer(
         let tn_cands: Vec<usize> =
             (1..=tn_max).filter(|t| n % t == 0 || *t == tn_max).collect();
         for &tn in &tn_cands {
-            for &tr in &[4usize, 8, 14, 16, 28, 32, 56, 64, 112, 224] {
-                if tr > r {
-                    continue;
-                }
-                for &tc in &[14usize, 28, 32, 56, 64, 112, 224] {
-                    if tc > c {
-                        continue;
-                    }
+            for &tr in &tr_cands {
+                for &tc in &tc_cands {
                     if let Some((cycles, traffic, _)) =
                         evaluate_tiling(cfg, m, n, r, c, k, tm, tn, tr, tc)
                     {
@@ -252,6 +264,45 @@ pub fn run(cfg: &OptimizedConfig, accel: &AccelConfig, net: &Network) -> Optimiz
     }
 }
 
+/// Functional forward of the Zhang'15 engine: every conv layer is evaluated
+/// in the roofline-chosen `Tr` output-row tiles, each tile running through
+/// the repo's one shared compute kernel
+/// ([`crate::accel::kernels::conv2d_fx_rows`]). Tiling is pure data
+/// movement — the widened Q16.16 accumulator makes the math
+/// order-independent — so this is bit-identical to
+/// [`crate::accel::Engine::forward_fx`]; only the cost model above differs.
+pub fn forward_fx(
+    cfg: &OptimizedConfig,
+    accel: &AccelConfig,
+    net: &Network,
+    weights: &Weights,
+    input: &FxTensor,
+) -> FxTensor {
+    let tilings = run(cfg, accel, net);
+    let mut scratch = KernelScratch::new();
+    let mut cur = input.clone();
+    for (li, layer) in net.layers.iter().enumerate() {
+        cur = match layer {
+            Layer::Conv { padding, relu, .. } => {
+                let banks = weights.banks[li].as_ref().expect("conv layer needs weights");
+                let geom = ConvGeom::for_input(&cur, banks, *padding);
+                let mut out = FxTensor::zeros(&[geom.out_h(), geom.out_w(), geom.filters]);
+                scratch.pack_filters(banks);
+                let tr = tilings.per_layer[li].tr.max(1);
+                let mut r = 0;
+                while r < geom.out_h() {
+                    let r1 = (r + tr).min(geom.out_h());
+                    conv2d_fx_rows(&cur, banks, *padding, *relu, r..r1, &mut scratch, &mut out);
+                    r = r1;
+                }
+                out
+            }
+            Layer::MaxPool { window, stride, .. } => PoolUnit::new(*window, *stride).forward(&cur),
+        };
+    }
+    cur
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +353,23 @@ mod tests {
         let r = run(&cfg, &AccelConfig::paper_default(), &net);
         let min_cycles = net.total_macs() / (cfg.dsp_budget / cfg.dsps_per_mac) as u64;
         assert!(r.total_cycles >= min_cycles);
+    }
+
+    #[test]
+    fn tiled_forward_is_bit_exact_vs_engine() {
+        // The baseline's Tr-tiled functional forward and the engine's
+        // banded forward share one kernel; tiling must not change a bit.
+        use crate::accel::{Engine, Weights};
+        use crate::config::tiny_vgg;
+        use crate::tensor::NdTensor;
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 31);
+        let input = NdTensor::random(&net.input.as_slice(), 17, -1.0, 1.0);
+        let accel = AccelConfig::paper_default();
+        let tiled =
+            forward_fx(&OptimizedConfig::zhang2015(), &accel, &net, &w, &input.to_fixed());
+        let engine = Engine::new(accel).forward_fx(&net, &w, &input);
+        assert_eq!(tiled, engine);
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Event-queue machinery for the fleet simulators.
+//!
+//! The simulators used to walk linear structures on every arrival: the
+//! static scheduler re-checked batcher deadlines queue by queue, and the
+//! dynamic dispatcher re-scanned every board to find the earliest start —
+//! O(n·boards) over a sweep. This module replaces both inner loops with
+//! `BinaryHeap`s, making a 16-board × 100k-arrival sweep O(n log boards):
+//!
+//! * [`DeadlineQueue`] — a min-heap of pending batch-flush deadlines
+//!   (arrival/flush events), drained in time order;
+//! * [`BoardPool`] — a busy/idle heap pair answering "which board can start
+//!   soonest" with the *exact* tie-breaks of the linear scan it replaces
+//!   (earliest start, then faster clock, then lower index), which is what
+//!   keeps the rewritten simulator byte-identical to
+//!   [`crate::cluster::sim_legacy`].
+//!
+//! Link-free state needs no heap: a pipelined batch walks its stage chain in
+//! order and each cut's [`crate::cluster::LinkChannel`] already carries its
+//! own occupancy timeline.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Min-heap of `(cycle, queue)` flush deadlines. Entries may go stale (a
+/// size-bound flush emptied the queue first); consumers validate against
+/// the batcher's live deadline before firing.
+#[derive(Debug, Default)]
+pub struct DeadlineQueue {
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl DeadlineQueue {
+    pub fn new() -> DeadlineQueue {
+        DeadlineQueue::default()
+    }
+
+    pub fn schedule(&mut self, at: u64, queue: usize) {
+        self.heap.push(Reverse((at, queue)));
+    }
+
+    /// Pop the earliest event not after `t`, if any.
+    pub fn next_at_or_before(&mut self, t: u64) -> Option<(u64, usize)> {
+        match self.heap.peek() {
+            Some(Reverse((at, _))) if *at <= t => self.heap.pop().map(|Reverse(e)| e),
+            _ => None,
+        }
+    }
+
+    /// Pop the earliest event unconditionally (drain phase).
+    pub fn pop(&mut self) -> Option<(u64, usize)> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+}
+
+/// Busy-board min-heap key: earliest `free_at` first; ties go to the faster
+/// clock (max `freq_bits`), then the lower slot index. Wrapped in `Reverse`
+/// inside the max-heap.
+type BusyKey = (u64, Reverse<u64>, usize);
+
+/// Idle-board max-heap key: fastest clock first, then lowest slot index.
+type IdleKey = (u64, Reverse<usize>);
+
+/// Board availability pool for the greedy dispatcher.
+///
+/// `pick(now)` returns the slot the replaced linear scan would have picked:
+/// the lexicographic minimum of `(max(free_at, now), -freq, slot)` over all
+/// slots. Boards whose `free_at ≤ now` are *released* into the idle heap
+/// (start = `now`, ranked by clock then index); if none is idle the
+/// earliest-freeing busy board wins. Positive clocks compare correctly via
+/// their IEEE-754 bit patterns.
+#[derive(Debug, Default)]
+pub struct BoardPool {
+    busy: BinaryHeap<Reverse<BusyKey>>,
+    idle: BinaryHeap<IdleKey>,
+    freq_bits: Vec<u64>,
+}
+
+impl BoardPool {
+    /// Build from `(freq_mhz, free_at)` slots, one per dispatchable shard.
+    pub fn from_slots(slots: impl Iterator<Item = (f64, u64)>) -> BoardPool {
+        let mut pool = BoardPool::default();
+        for (slot, (freq_mhz, free_at)) in slots.enumerate() {
+            assert!(freq_mhz > 0.0, "board clocks must be positive");
+            pool.freq_bits.push(freq_mhz.to_bits());
+            pool.busy.push(Reverse((free_at, Reverse(freq_mhz.to_bits()), slot)));
+        }
+        assert!(!pool.freq_bits.is_empty(), "pool needs at least one slot");
+        pool
+    }
+
+    /// Choose the slot that can start soonest at time `now`; returns
+    /// `(slot, start_cycle)`. The caller must hand the slot back with
+    /// [`BoardPool::release`] once its completion time is known.
+    pub fn pick(&mut self, now: u64) -> (usize, u64) {
+        // Release every board that has gone idle by `now`.
+        while let Some(Reverse((free_at, _, slot))) = self.busy.peek().copied() {
+            if free_at > now {
+                break;
+            }
+            self.busy.pop();
+            self.idle.push((self.freq_bits[slot], Reverse(slot)));
+        }
+        if let Some((_, Reverse(slot))) = self.idle.pop() {
+            return (slot, now);
+        }
+        let Reverse((free_at, _, slot)) = self.busy.pop().expect("pool has a slot");
+        (slot, free_at)
+    }
+
+    /// Return a picked slot with its next-free cycle.
+    pub fn release(&mut self, slot: usize, free_at: u64) {
+        self.busy.push(Reverse((free_at, Reverse(self.freq_bits[slot]), slot)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The oracle `BoardPool` must reproduce: the linear scan from the
+    /// pre-rewrite dispatcher.
+    fn scan_pick(free_at: &[u64], freqs: &[f64], now: u64) -> (usize, u64) {
+        let mut pick = 0usize;
+        let mut pick_start = u64::MAX;
+        let mut pick_freq = f64::MIN;
+        for (i, (&f, &fr)) in free_at.iter().zip(freqs).enumerate() {
+            let start = f.max(now);
+            if start < pick_start || (start == pick_start && fr > pick_freq) {
+                pick = i;
+                pick_start = start;
+                pick_freq = fr;
+            }
+        }
+        (pick, pick_start)
+    }
+
+    #[test]
+    fn deadline_queue_orders_and_bounds() {
+        let mut q = DeadlineQueue::new();
+        q.schedule(30, 1);
+        q.schedule(10, 2);
+        q.schedule(20, 0);
+        assert_eq!(q.next_at_or_before(5), None);
+        assert_eq!(q.next_at_or_before(25), Some((10, 2)));
+        assert_eq!(q.next_at_or_before(25), Some((20, 0)));
+        assert_eq!(q.next_at_or_before(25), None);
+        assert_eq!(q.pop(), Some((30, 1)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pool_matches_linear_scan_on_random_traces() {
+        use crate::util::prng::Rng;
+        use crate::util::prop;
+        prop::check_default(
+            "board-pool-vs-scan",
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 6);
+                let freqs: Vec<f64> =
+                    (0..n).map(|_| [60.0, 100.0, 120.0][r.below(3) as usize]).collect();
+                let ops: Vec<(u64, u64)> =
+                    (0..r.range_usize(1, 40)).map(|_| (r.below(50), 1 + r.below(30))).collect();
+                (freqs, ops)
+            },
+            |(freqs, ops)| {
+                let mut scan_free = vec![0u64; freqs.len()];
+                let mut pool =
+                    BoardPool::from_slots(freqs.iter().map(|&f| (f, 0u64)));
+                let mut now = 0u64;
+                for &(advance, svc) in ops {
+                    now += advance;
+                    let want = scan_pick(&scan_free, freqs, now);
+                    let got = pool.pick(now);
+                    if got != want {
+                        return Err(format!("at t={now}: pool {got:?} vs scan {want:?}"));
+                    }
+                    let done = got.1 + svc;
+                    scan_free[got.0] = done;
+                    pool.release(got.0, done);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pool_tie_breaks_prefer_fast_then_low_index() {
+        // Three idle boards at t=0: the 120 MHz one wins; among equal
+        // clocks, the lower index.
+        let mut pool = BoardPool::from_slots([(60.0, 0), (120.0, 0), (120.0, 0)].into_iter());
+        assert_eq!(pool.pick(0), (1, 0));
+        pool.release(1, 100);
+        assert_eq!(pool.pick(0), (2, 0));
+        pool.release(2, 100);
+        assert_eq!(pool.pick(0), (0, 0));
+        pool.release(0, 90);
+        // All busy: earliest free_at wins regardless of clock.
+        assert_eq!(pool.pick(10), (0, 90));
+    }
+}

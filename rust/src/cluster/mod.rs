@@ -30,9 +30,11 @@
 //! heterogeneous two-generation fleet sweep and a load-step re-sharding
 //! scenario, and emits the `BENCH_cluster.json` metrics CI tracks.
 
+pub mod events;
 pub mod link;
 pub mod shard;
 pub mod sim;
+pub mod sim_legacy;
 
 pub use link::{InterBoardLink, LinkChannel};
 pub use shard::{balance_min_max, BoardShard, ShardPlan};

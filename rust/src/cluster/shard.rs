@@ -338,13 +338,16 @@ impl ShardPlan {
 struct FleetCtx<'a> {
     boards: &'a [AccelConfig],
     net: &'a Network,
-    weights: &'a Weights,
     groups: Vec<Range<usize>>,
     shapes: Vec<VolShape>,
     /// `costs[b][g]`: group `g` costed with board `b`'s config.
     costs: Vec<Vec<GroupCost>>,
     /// `res[b][g]`: group `g`'s resource envelope under board `b`'s config.
     res: Vec<Vec<Resources>>,
+    /// `layer_bytes[b][l]`: layer `l`'s weight bytes at board `b`'s word
+    /// size — derived once per distinct config instead of re-walking the
+    /// filter banks for every costed range.
+    layer_bytes: Vec<Vec<u64>>,
 }
 
 impl<'a> FleetCtx<'a> {
@@ -359,11 +362,13 @@ impl<'a> FleetCtx<'a> {
         // one): cost each distinct config once and share the tables.
         let mut costs: Vec<Vec<GroupCost>> = Vec::with_capacity(boards.len());
         let mut res: Vec<Vec<Resources>> = Vec::with_capacity(boards.len());
+        let mut layer_bytes: Vec<Vec<u64>> = Vec::with_capacity(boards.len());
         for (b, cfg) in boards.iter().enumerate() {
             if let Some(r) = boards[..b].iter().position(|c| c == cfg) {
-                let (c, e) = (costs[r].clone(), res[r].clone());
+                let (c, e, w) = (costs[r].clone(), res[r].clone(), layer_bytes[r].clone());
                 costs.push(c);
                 res.push(e);
+                layer_bytes.push(w);
             } else {
                 costs.push(
                     groups
@@ -377,16 +382,17 @@ impl<'a> FleetCtx<'a> {
                         .map(|g| group_resources(cfg, net, g.clone()))
                         .collect(),
                 );
+                layer_bytes.push(weights.per_layer_bytes(cfg.platform.word_bytes));
             }
         }
         FleetCtx {
             boards,
             net,
-            weights,
             groups,
             shapes: net.shapes(),
             costs,
             res,
+            layer_bytes,
         }
     }
 
@@ -414,9 +420,10 @@ impl<'a> FleetCtx<'a> {
         {
             overhead += c.fill + c.drain;
             steady += c.steady;
+            let group_weights: u64 = self.layer_bytes[b][g.clone()].iter().sum();
             traffic += (self.shapes[g.start].elems() * wb) as u64
                 + (self.shapes[g.end].elems() * wb) as u64
-                + self.weights.bytes_for_layers(g.clone(), wb);
+                + group_weights;
         }
         let res = self.range_resources(b, group_range.clone());
         // Egress: the output volume of the shard's last group, unless it is

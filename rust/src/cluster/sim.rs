@@ -24,6 +24,14 @@
 //!   activation state, over a link), and continues. Re-shards are reported
 //!   as [`ReshardEvent`]s in the [`FleetReport`].
 //!
+//! Both inner loops are event driven ([`crate::cluster::events`]): batch
+//! flush deadlines drain from a [`DeadlineQueue`] in time order, and the
+//! dynamic dispatcher picks boards from a [`BoardPool`] busy/idle heap pair
+//! instead of re-scanning the fleet per arrival — O(n log boards) for a
+//! 16-board × 100k-arrival sweep. Reports are byte-identical to the
+//! pre-rewrite linear walks, which survive in
+//! [`crate::cluster::sim_legacy`] as the differential oracle.
+//!
 //! Time is measured in reference-clock cycles (u64) and converted to wall
 //! time only for reporting.
 
@@ -37,6 +45,7 @@ use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::stats::percentile_sorted;
 
+use super::events::{BoardPool, DeadlineQueue};
 use super::link::{InterBoardLink, LinkChannel};
 use super::shard::ShardPlan;
 
@@ -189,11 +198,15 @@ pub fn arrivals_with_steps(
     out
 }
 
-/// Drive round-robin arrivals through per-queue [`DynamicBatcher`]s: fire
-/// any flush deadline that elapsed before each arrival, push (which may trip
-/// the size bound), and drain the leftovers at their deadlines. `serve` gets
-/// `(queue index, batch, ready cycle)` for every emitted batch, in
-/// chronological order per queue.
+/// Drive round-robin arrivals through per-queue [`DynamicBatcher`]s with an
+/// event queue: a queue schedules one flush-deadline event whenever it turns
+/// non-empty, and events drain fleet-wide in time order interleaved with
+/// arrivals (instead of the old lazy per-queue re-check on every arrival).
+/// `serve` gets `(queue index, batch, ready cycle)` for every emitted batch,
+/// chronologically per queue — queues are independent, so the global
+/// reordering leaves every served batch, and therefore the report,
+/// byte-identical to the lazy walk (`sim_legacy` keeps that walk; the
+/// equivalence tests diff the two).
 fn drive_batchers(
     batchers: &mut [DynamicBatcher<usize>],
     arrivals: &[u64],
@@ -201,38 +214,50 @@ fn drive_batchers(
     to_cycles: &impl Fn(Instant) -> u64,
     mut serve: impl FnMut(usize, Vec<usize>, u64),
 ) {
+    let mut deadlines = DeadlineQueue::new();
+    // Fire the deadline event for queue `q` at cycle `at`. Events can be
+    // stale (a size-bound flush beat them); compare against the batcher's
+    // live deadline before flushing. A later live deadline always has its
+    // own event: one is scheduled on every empty→non-empty transition.
+    let fire = |batchers: &mut [DynamicBatcher<usize>],
+                q: usize,
+                at: u64,
+                serve: &mut dyn FnMut(usize, Vec<usize>, u64)| {
+        match batchers[q].next_deadline() {
+            Some(dl) if to_cycles(dl) == at => {
+                let batch = match batchers[q].poll(dl) {
+                    Some(batch) => batch,
+                    None => batchers[q].flush(),
+                };
+                serve(q, batch, at);
+            }
+            _ => {} // stale event — the queue flushed by size in between
+        }
+    };
+
     for (i, &a) in arrivals.iter().enumerate() {
         let b = i % batchers.len();
-        // Fire any batching deadline that elapsed before this arrival.
-        while let Some(dl) = batchers[b].next_deadline() {
-            if to_cycles(dl) > a {
-                break;
-            }
-            match batchers[b].poll(dl) {
-                Some(batch) => serve(b, batch, to_cycles(dl)),
-                None => break,
-            }
+        while let Some((at, q)) = deadlines.next_at_or_before(a) {
+            fire(batchers, q, at, &mut serve);
         }
+        let was_empty = batchers[b].is_empty();
         if let Some(batch) = batchers[b].push(i, to_instant(a)) {
             serve(b, batch, a);
+        } else if was_empty {
+            if let Some(dl) = batchers[b].next_deadline() {
+                deadlines.schedule(to_cycles(dl), b);
+            }
         }
     }
-    // Remaining queues flush when their wait deadline fires.
-    for (b, batcher) in batchers.iter_mut().enumerate() {
-        if let Some(dl) = batcher.next_deadline() {
-            let ready = to_cycles(dl);
-            let batch = match batcher.poll(dl) {
-                Some(batch) => batch,
-                None => batcher.flush(),
-            };
-            serve(b, batch, ready);
-        }
+    // Drain: remaining non-empty queues flush at their scheduled deadlines.
+    while let Some((at, q)) = deadlines.pop() {
+        fire(batchers, q, at, &mut serve);
     }
 }
 
 /// Aggregate off-chip demand of a plan's active boards, in bytes per
 /// reference cycle (each board's provisioned rate rescaled by its clock).
-fn fleet_demand(plan: &ShardPlan, ref_freq: f64) -> f64 {
+pub(crate) fn fleet_demand(plan: &ShardPlan, ref_freq: f64) -> f64 {
     plan.shards
         .iter()
         .map(|s| s.ddr_bytes_per_cycle * s.freq_mhz / ref_freq)
@@ -400,8 +425,10 @@ fn hosting(plan: &ShardPlan, n_layers: usize, nb: usize) -> Vec<Vec<bool>> {
 
 /// Bytes a plan switch moves over links: weights for every layer a board
 /// newly hosts, plus one pipeline's worth of in-flight activation state at
-/// the new cuts.
-fn migration_bytes(
+/// the new cuts. Per-layer weight bytes are derived once up front
+/// ([`Weights::per_layer_bytes`]) instead of re-walking the banks inside
+/// the boards × layers loop.
+pub(crate) fn migration_bytes(
     old: &ShardPlan,
     new: &ShardPlan,
     weights: &Weights,
@@ -411,11 +438,12 @@ fn migration_bytes(
 ) -> u64 {
     let oldh = hosting(old, n_layers, nb);
     let newh = hosting(new, n_layers, nb);
+    let layer_bytes = weights.per_layer_bytes(word_bytes);
     let mut bytes = new.link_bytes_per_item();
     for b in 0..nb {
         for l in 0..n_layers {
             if newh[b][l] && !oldh[b][l] {
-                bytes += weights.bytes_for_layers(l..l + 1, word_bytes);
+                bytes += layer_bytes[l];
             }
         }
     }
@@ -468,6 +496,13 @@ pub fn simulate_fleet_dynamic(
         .collect();
     let mut demand = fleet_demand(&plan, ref_freq);
 
+    // Earliest-start board selection for the replicated arm: a busy/idle
+    // heap pair instead of scanning every shard per batch. Rebuilt on every
+    // plan swap (shard set and free_at both change).
+    let pool_of = |plan: &ShardPlan, free_at: &[u64]| {
+        BoardPool::from_slots(plan.shards.iter().map(|s| (s.freq_mhz, free_at[s.board])))
+    };
+
     let mut free_at = vec![0u64; nb];
     let mut busy = vec![0u64; nb];
     let mut items = vec![0u64; nb];
@@ -486,6 +521,7 @@ pub fn simulate_fleet_dynamic(
     let mut win_busy0 = busy.clone();
     let mut cooldown = 0usize;
     let mut sim_now = 0u64;
+    let mut pool = pool_of(&plan, &free_at);
 
     let mut i = 0usize;
     while i < n {
@@ -494,20 +530,10 @@ pub fn simulate_fleet_dynamic(
             ShardMode::Replicated => {
                 let a = arrivals[i];
                 // The board that can start soonest; ties go to the faster
-                // clock, then the lower index.
-                let mut pick = 0usize;
-                let mut pick_start = u64::MAX;
-                let mut pick_freq = f64::MIN;
-                for (si, s) in plan.shards.iter().enumerate() {
-                    let start = free_at[s.board].max(a);
-                    if start < pick_start || (start == pick_start && s.freq_mhz > pick_freq) {
-                        pick = si;
-                        pick_start = start;
-                        pick_freq = s.freq_mhz;
-                    }
-                }
+                // clock, then the lower index (the pool reproduces the old
+                // linear scan's tie-breaks exactly).
+                let (pick, start) = pool.pick(a);
                 let s = &plan.shards[pick];
-                let start = pick_start;
                 let mut k = 1usize;
                 while i + k < n && k < ccfg.max_batch && arrivals[i + k] <= start {
                     k += 1;
@@ -516,6 +542,7 @@ pub fn simulate_fleet_dynamic(
                 let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
                 let done = start + svc;
                 free_at[s.board] = done;
+                pool.release(pick, done);
                 busy[s.board] += svc;
                 items[s.board] += bsz;
                 batches[s.board] += 1;
@@ -636,6 +663,7 @@ pub fn simulate_fleet_dynamic(
                         .collect();
                     plan = new_plan;
                     demand = fleet_demand(&plan, ref_freq);
+                    pool = pool_of(&plan, &free_at);
                     cooldown = pol.cooldown_windows;
                 }
             }
@@ -957,6 +985,105 @@ mod tests {
         assert_eq!(
             j.get("idle_boards").as_usize(),
             Some(r.idle_boards),
+        );
+    }
+
+    /// Full-report byte equality between the event-queue simulator and the
+    /// pre-rewrite linear walk (`sim_legacy`), across the scenario classes:
+    /// burst and Poisson arrivals, both shard modes, finite links, load
+    /// steps, time-based batch flushes.
+    #[test]
+    fn event_queue_static_sim_is_byte_identical_to_legacy() {
+        let (cfg, net, w) = setup();
+        let fused = FusionPlan::fully_fused(7);
+        let unfused = FusionPlan::unfused(7);
+
+        // Poisson arrivals with batching deadlines (time flushes fire).
+        let mut poisson = burst_cfg(3, ShardMode::Replicated);
+        poisson.arrival_rps = 2000.0;
+        poisson.requests = 200;
+        poisson.max_batch = 8;
+        poisson.max_wait_us = 150.0;
+        // Pipelined over finite serializing links.
+        let mut piped = burst_cfg(3, ShardMode::Pipelined);
+        piped.link_bytes_per_cycle = 8.0;
+        piped.link_latency_cycles = 200;
+        piped.max_batch = 4;
+        // Load-step traffic with contention.
+        let mut stepped = burst_cfg(2, ShardMode::Replicated);
+        stepped.arrival_rps = 500.0;
+        stepped.load_steps = vec![LoadStep {
+            at_request: 48,
+            rps: 4000.0,
+        }];
+        stepped.requests = 128;
+        stepped.max_batch = 8;
+        stepped.max_wait_us = 200.0;
+        stepped.aggregate_ddr_bytes_per_cycle = Some(96.0);
+
+        let scenarios: Vec<(ShardPlan, ClusterConfig)> = vec![
+            (
+                ShardPlan::replicated(&cfg, &net, &w, &fused, 4),
+                burst_cfg(4, ShardMode::Replicated),
+            ),
+            (ShardPlan::replicated(&cfg, &net, &w, &fused, 3), poisson),
+            (ShardPlan::pipelined(&cfg, &net, &w, &unfused, 3), piped),
+            (ShardPlan::replicated(&cfg, &net, &w, &fused, 2), stepped),
+        ];
+
+        for (i, (shard, ccfg)) in scenarios.into_iter().enumerate() {
+            let fast = simulate_fleet(&cfg, &shard, &ccfg).to_json().to_string_pretty();
+            let slow = crate::cluster::sim_legacy::simulate_fleet(&cfg, &shard, &ccfg)
+                .to_json()
+                .to_string_pretty();
+            assert_eq!(fast, slow, "scenario {i} diverged from the legacy simulator");
+        }
+    }
+
+    #[test]
+    fn event_queue_dynamic_sim_is_byte_identical_to_legacy() {
+        let (cfg, net, w) = setup();
+        let fused = FusionPlan::fully_fused(7);
+        let fleet = vec![cfg.clone(), cfg.clone(), slow_gen(), slow_gen()];
+
+        // Greedy hetero dispatch, no controller.
+        let shard = ShardPlan::replicated_fleet(&fleet, &net, &w, &fused);
+        let mut ccfg = burst_cfg(4, ShardMode::Replicated);
+        ccfg.requests = 160;
+        ccfg.max_batch = 4;
+        let fast = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard.clone(), &ccfg)
+            .to_json()
+            .to_string_pretty();
+        let slow =
+            crate::cluster::sim_legacy::simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard, &ccfg)
+                .to_json()
+                .to_string_pretty();
+        assert_eq!(fast, slow, "hetero greedy dispatch diverged");
+
+        // Controller firing: bad pipelined cuts + hair-trigger policy (the
+        // PR-2 re-shard fixture) — plan swaps, pool rebuilds, stall billing.
+        let plan = FusionPlan::unfused(7);
+        let hetero2 = vec![cfg.clone(), slow_gen()];
+        let bad = ShardPlan::pipelined_fleet_with_cuts(&hetero2, &net, &w, &plan, &[0, 1, 7]);
+        let mut dyn_cfg = burst_cfg(2, ShardMode::Pipelined);
+        dyn_cfg.requests = 160;
+        dyn_cfg.max_batch = 4;
+        dyn_cfg.reshard = Some(ReshardPolicy {
+            window: 16,
+            util_skew: 0.9,
+            p99_ms: 0.001,
+            cooldown_windows: 1,
+            migration_factor: 1.0,
+        });
+        let fast = simulate_fleet_dynamic(&cfg, &hetero2, &net, &w, bad.clone(), &dyn_cfg);
+        assert!(!fast.reshard_events.is_empty(), "fixture must exercise a re-shard");
+        let slow = crate::cluster::sim_legacy::simulate_fleet_dynamic(
+            &cfg, &hetero2, &net, &w, bad, &dyn_cfg,
+        );
+        assert_eq!(
+            fast.to_json().to_string_pretty(),
+            slow.to_json().to_string_pretty(),
+            "re-shard controller diverged"
         );
     }
 

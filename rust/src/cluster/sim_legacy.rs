@@ -1,0 +1,454 @@
+//! The pre-event-queue fleet simulators, kept verbatim as a differential
+//! oracle.
+//!
+//! [`crate::cluster::sim`] rewrote the inner loops around heaps
+//! ([`crate::cluster::events`]); the contract of that rewrite is *byte
+//! identical* [`FleetReport`]s. This module preserves the original
+//! per-arrival linear walks — queue-by-queue deadline checks in
+//! [`simulate_fleet`], the O(boards) earliest-start scan in
+//! [`simulate_fleet_dynamic`] — so equivalence tests
+//! (`tests/integration_cluster.rs`, `sim::tests`) can diff the two paths on
+//! every scenario class, and `benches/compute_kernels.rs` can report the
+//! naive-vs-event-queue events/s ratio. Not wired into any serving path;
+//! new features land in `sim` only.
+
+use std::time::{Duration, Instant};
+
+use crate::accel::engine::Weights;
+use crate::config::{AccelConfig, ClusterConfig, Network, ReshardPolicy, ShardMode};
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use crate::fpga::ddr::SharedDdr;
+use crate::util::stats::percentile_sorted;
+
+use super::link::{InterBoardLink, LinkChannel};
+use super::shard::ShardPlan;
+use super::sim::{
+    arrivals_with_steps, fleet_demand, migration_bytes, BoardStats, FleetReport, ReshardEvent,
+};
+
+/// Drive round-robin arrivals through per-queue [`DynamicBatcher`]s — the
+/// original lazy form: a queue's elapsed flush deadline fires only when its
+/// own next arrival lands (or at the final drain), not in global time order.
+fn drive_batchers(
+    batchers: &mut [DynamicBatcher<usize>],
+    arrivals: &[u64],
+    to_instant: &impl Fn(u64) -> Instant,
+    to_cycles: &impl Fn(Instant) -> u64,
+    mut serve: impl FnMut(usize, Vec<usize>, u64),
+) {
+    for (i, &a) in arrivals.iter().enumerate() {
+        let b = i % batchers.len();
+        // Fire any batching deadline that elapsed before this arrival.
+        while let Some(dl) = batchers[b].next_deadline() {
+            if to_cycles(dl) > a {
+                break;
+            }
+            match batchers[b].poll(dl) {
+                Some(batch) => serve(b, batch, to_cycles(dl)),
+                None => break,
+            }
+        }
+        if let Some(batch) = batchers[b].push(i, to_instant(a)) {
+            serve(b, batch, a);
+        }
+    }
+    // Remaining queues flush when their wait deadline fires.
+    for (b, batcher) in batchers.iter_mut().enumerate() {
+        if let Some(dl) = batcher.next_deadline() {
+            let ready = to_cycles(dl);
+            let batch = match batcher.poll(dl) {
+                Some(batch) => batch,
+                None => batcher.flush(),
+            };
+            serve(b, batch, ready);
+        }
+    }
+}
+
+/// Pre-rewrite [`crate::cluster::sim::simulate_fleet`].
+pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig) -> FleetReport {
+    ccfg.validate().expect("invalid cluster config");
+    let ref_freq = cfg.platform.freq_mhz;
+    let n = ccfg.requests;
+    let arrivals = arrivals_with_steps(n, ccfg.arrival_rps, &ccfg.load_steps, ref_freq, ccfg.seed);
+    let shared = SharedDdr::new(
+        cfg.platform.ddr_bytes_per_cycle,
+        ccfg.aggregate_ddr_bytes_per_cycle,
+    );
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let demand = fleet_demand(shard, ref_freq);
+
+    let t0 = Instant::now();
+    let ns_per_cycle = 1e3 / ref_freq;
+    let to_instant = |c: u64| t0 + Duration::from_nanos((c as f64 * ns_per_cycle).round() as u64);
+    let to_cycles =
+        |i: Instant| (i.duration_since(t0).as_nanos() as f64 / ns_per_cycle).round() as u64;
+    let policy = BatchPolicy {
+        max_batch: ccfg.max_batch,
+        max_wait: Duration::from_nanos((ccfg.max_wait_us * 1e3).round() as u64),
+    };
+
+    let mut complete = vec![0u64; n];
+    let mut link_bytes_total = 0u64;
+
+    let service =
+        |s: &super::shard::BoardShard, bsz: u64| s.service_cycles(bsz, ref_freq, &shared, demand);
+
+    let (busy, batch_counts, item_counts) = match shard.mode {
+        ShardMode::Replicated => {
+            let nb = shard.used_boards();
+            let mut batchers: Vec<DynamicBatcher<usize>> =
+                (0..nb).map(|_| DynamicBatcher::new(policy)).collect();
+            let mut free_at = vec![0u64; nb];
+            let mut busy = vec![0u64; nb];
+            drive_batchers(
+                &mut batchers,
+                &arrivals,
+                &to_instant,
+                &to_cycles,
+                |b, batch, ready| {
+                    let bsz = batch.len() as u64;
+                    let svc = service(&shard.shards[b], bsz);
+                    let start = ready.max(free_at[b]);
+                    let done = start + svc;
+                    free_at[b] = done;
+                    busy[b] += svc;
+                    for req in batch {
+                        complete[req] = done;
+                    }
+                },
+            );
+            let batches: Vec<u64> = batchers.iter().map(|b| b.batches_emitted).collect();
+            let items: Vec<u64> = batchers.iter().map(|b| b.items_processed).collect();
+            (busy, batches, items)
+        }
+        ShardMode::Pipelined => {
+            let stages = shard.used_boards();
+            let mut entry = vec![DynamicBatcher::<usize>::new(policy)];
+            let mut free_at = vec![0u64; stages];
+            let mut busy = vec![0u64; stages];
+            let mut links: Vec<LinkChannel> = (0..stages.saturating_sub(1))
+                .map(|_| LinkChannel::new(link))
+                .collect();
+            drive_batchers(
+                &mut entry,
+                &arrivals,
+                &to_instant,
+                &to_cycles,
+                |_, batch, ready| {
+                    let bsz = batch.len() as u64;
+                    let mut t = ready;
+                    for (s, bs) in shard.shards.iter().enumerate() {
+                        let svc = service(bs, bsz);
+                        let start = t.max(free_at[s]);
+                        let done = start + svc;
+                        free_at[s] = done;
+                        busy[s] += svc;
+                        t = done;
+                        if s + 1 < stages {
+                            let bytes = bs.egress_bytes * bsz;
+                            link_bytes_total += bytes;
+                            t = links[s].transfer(bytes, t);
+                        }
+                    }
+                    for req in batch {
+                        complete[req] = t;
+                    }
+                },
+            );
+            let batches = vec![entry[0].batches_emitted; stages];
+            let items = vec![entry[0].items_processed; stages];
+            (busy, batches, items)
+        }
+    };
+
+    let makespan_cycles = complete.iter().copied().max().unwrap_or(0);
+    let makespan_s = makespan_cycles as f64 * ns_per_cycle / 1e9;
+    let mut lat_ms: Vec<f64> = complete
+        .iter()
+        .zip(&arrivals)
+        .map(|(&c, &a)| (c.saturating_sub(a)) as f64 * ns_per_cycle / 1e6)
+        .collect();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+
+    let per_board: Vec<BoardStats> = (0..shard.used_boards())
+        .map(|b| BoardStats {
+            board: b,
+            items: item_counts[b],
+            batches: batch_counts[b],
+            busy_cycles: busy[b],
+            utilization: if makespan_cycles == 0 {
+                0.0
+            } else {
+                busy[b] as f64 / makespan_cycles as f64
+            },
+            freq_mhz: shard.shards[b].freq_mhz,
+        })
+        .collect();
+
+    FleetReport {
+        mode: shard.mode,
+        boards: shard.boards,
+        used_boards: shard.used_boards(),
+        idle_boards: shard.idle_boards(),
+        requests: n,
+        completed: n,
+        makespan_cycles,
+        throughput_rps: n as f64 / makespan_s,
+        mean_ms,
+        p50_ms: percentile_sorted(&lat_ms, 50.0),
+        p99_ms: percentile_sorted(&lat_ms, 99.0),
+        per_board,
+        link_bytes_total,
+        ddr_slowdown: shared.slowdown_of(demand),
+        reshard_events: Vec::new(),
+    }
+}
+
+/// Pre-rewrite [`crate::cluster::sim::simulate_fleet_dynamic`]: the
+/// replicated arm re-scans every shard per batch.
+pub fn simulate_fleet_dynamic(
+    cfg: &AccelConfig,
+    fleet: &[AccelConfig],
+    net: &Network,
+    weights: &Weights,
+    initial: ShardPlan,
+    ccfg: &ClusterConfig,
+) -> FleetReport {
+    ccfg.validate().expect("invalid cluster config");
+    assert!(!fleet.is_empty());
+    assert!(
+        initial.used_boards() <= fleet.len(),
+        "initial plan uses more boards than the fleet has"
+    );
+    let ref_freq = cfg.platform.freq_mhz;
+    let ns_per_cycle = 1e3 / ref_freq;
+    let n = ccfg.requests;
+    let arrivals = arrivals_with_steps(n, ccfg.arrival_rps, &ccfg.load_steps, ref_freq, ccfg.seed);
+    let shared = SharedDdr::new(
+        cfg.platform.ddr_bytes_per_cycle,
+        ccfg.aggregate_ddr_bytes_per_cycle,
+    );
+    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    let nb = fleet.len();
+    let word_bytes = cfg.platform.word_bytes;
+    let n_layers = net.layers.len();
+
+    let mut plan = initial;
+    let mut links: Vec<LinkChannel> = (0..plan.used_boards().saturating_sub(1))
+        .map(|_| LinkChannel::new(link))
+        .collect();
+    let mut demand = fleet_demand(&plan, ref_freq);
+
+    let mut free_at = vec![0u64; nb];
+    let mut busy = vec![0u64; nb];
+    let mut items = vec![0u64; nb];
+    let mut batches = vec![0u64; nb];
+    let mut complete = vec![0u64; n];
+    let mut link_bytes_total = 0u64;
+    let mut events: Vec<ReshardEvent> = Vec::new();
+
+    let policy: Option<ReshardPolicy> = ccfg.reshard.clone();
+    let mut win_lat_ms: Vec<f64> = Vec::new();
+    let mut win_start = 0u64;
+    let mut win_busy0 = busy.clone();
+    let mut cooldown = 0usize;
+    let mut sim_now = 0u64;
+
+    let mut i = 0usize;
+    while i < n {
+        // ---- dispatch one batch, greedy and work-conserving ----
+        let (batch_done, batch_len) = match plan.mode {
+            ShardMode::Replicated => {
+                let a = arrivals[i];
+                // The original linear scan: every shard examined per batch.
+                let mut pick = 0usize;
+                let mut pick_start = u64::MAX;
+                let mut pick_freq = f64::MIN;
+                for (si, s) in plan.shards.iter().enumerate() {
+                    let start = free_at[s.board].max(a);
+                    if start < pick_start || (start == pick_start && s.freq_mhz > pick_freq) {
+                        pick = si;
+                        pick_start = start;
+                        pick_freq = s.freq_mhz;
+                    }
+                }
+                let s = &plan.shards[pick];
+                let start = pick_start;
+                let mut k = 1usize;
+                while i + k < n && k < ccfg.max_batch && arrivals[i + k] <= start {
+                    k += 1;
+                }
+                let bsz = k as u64;
+                let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                let done = start + svc;
+                free_at[s.board] = done;
+                busy[s.board] += svc;
+                items[s.board] += bsz;
+                batches[s.board] += 1;
+                for c in complete.iter_mut().skip(i).take(k) {
+                    *c = done;
+                }
+                (done, k)
+            }
+            ShardMode::Pipelined => {
+                let a = arrivals[i];
+                let first = plan.shards[0].board;
+                let start0 = free_at[first].max(a);
+                let mut k = 1usize;
+                while i + k < n && k < ccfg.max_batch && arrivals[i + k] <= start0 {
+                    k += 1;
+                }
+                let bsz = k as u64;
+                let stages = plan.used_boards();
+                let mut t = start0;
+                for (si, s) in plan.shards.iter().enumerate() {
+                    let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                    let start = t.max(free_at[s.board]);
+                    let done = start + svc;
+                    free_at[s.board] = done;
+                    busy[s.board] += svc;
+                    items[s.board] += bsz;
+                    batches[s.board] += 1;
+                    t = done;
+                    if si + 1 < stages {
+                        let bytes = s.egress_bytes * bsz;
+                        link_bytes_total += bytes;
+                        t = links[si].transfer(bytes, t);
+                    }
+                }
+                for c in complete.iter_mut().skip(i).take(k) {
+                    *c = t;
+                }
+                (t, k)
+            }
+        };
+
+        for j in i..i + batch_len {
+            win_lat_ms
+                .push(complete[j].saturating_sub(arrivals[j]) as f64 * ns_per_cycle / 1e6);
+        }
+        i += batch_len;
+        sim_now = sim_now.max(batch_done);
+
+        // ---- controller: evaluate the window ----
+        let Some(pol) = &policy else { continue };
+        if win_lat_ms.len() < pol.window {
+            continue;
+        }
+        let now = sim_now;
+        let span = now.saturating_sub(win_start);
+        let mut sorted = win_lat_ms.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let p99 = percentile_sorted(&sorted, 99.0);
+        let mut skew = 0.0f64;
+        if span > 0 {
+            let mut lo = f64::INFINITY;
+            let mut hi = 0.0f64;
+            for s in &plan.shards {
+                let u = busy[s.board].saturating_sub(win_busy0[s.board]) as f64 / span as f64;
+                lo = lo.min(u);
+                hi = hi.max(u);
+            }
+            skew = hi - lo;
+        }
+        if cooldown > 0 {
+            cooldown -= 1;
+        } else if p99 > pol.p99_ms || skew > pol.util_skew {
+            let reason = if p99 > pol.p99_ms {
+                format!("window p99 {p99:.1} ms > {:.1} ms", pol.p99_ms)
+            } else {
+                format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
+            };
+            let mut best: Option<(f64, ShardPlan)> = None;
+            for cand in [
+                ShardPlan::replicated_fleet(fleet, net, weights, &plan.plan),
+                ShardPlan::pipelined_fleet(fleet, net, weights, &plan.plan),
+            ] {
+                if !cand.fits() {
+                    continue;
+                }
+                let cap = cand.capacity_rps(ccfg.max_batch, &link, ref_freq);
+                let better = match &best {
+                    None => true,
+                    Some((b, _)) => cap > *b,
+                };
+                if better {
+                    best = Some((cap, cand));
+                }
+            }
+            if let Some((_, new_plan)) = best {
+                if new_plan.label() != plan.label() {
+                    let raw = migration_bytes(&plan, &new_plan, weights, word_bytes, n_layers, nb);
+                    let bill = (raw as f64 * pol.migration_factor).round() as u64;
+                    let stall = link.transfer_cycles(bill);
+                    let sync = free_at.iter().copied().max().unwrap_or(now).max(now);
+                    for f in &mut free_at {
+                        *f = sync + stall;
+                    }
+                    events.push(ReshardEvent {
+                        at_cycle: sync,
+                        from: plan.label(),
+                        to: new_plan.label(),
+                        reason,
+                        migration_bytes: bill,
+                        stall_cycles: stall,
+                    });
+                    links = (0..new_plan.used_boards().saturating_sub(1))
+                        .map(|_| LinkChannel::new(link))
+                        .collect();
+                    plan = new_plan;
+                    demand = fleet_demand(&plan, ref_freq);
+                    cooldown = pol.cooldown_windows;
+                }
+            }
+        }
+        win_lat_ms.clear();
+        win_start = now;
+        win_busy0.copy_from_slice(&busy);
+    }
+
+    let makespan_cycles = complete.iter().copied().max().unwrap_or(0);
+    let makespan_s = makespan_cycles as f64 * ns_per_cycle / 1e9;
+    let mut lat_ms: Vec<f64> = complete
+        .iter()
+        .zip(&arrivals)
+        .map(|(&c, &a)| c.saturating_sub(a) as f64 * ns_per_cycle / 1e6)
+        .collect();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+
+    let per_board: Vec<BoardStats> = (0..nb)
+        .map(|b| BoardStats {
+            board: b,
+            items: items[b],
+            batches: batches[b],
+            busy_cycles: busy[b],
+            utilization: if makespan_cycles == 0 {
+                0.0
+            } else {
+                busy[b] as f64 / makespan_cycles as f64
+            },
+            freq_mhz: fleet[b].platform.freq_mhz,
+        })
+        .collect();
+
+    FleetReport {
+        mode: plan.mode,
+        boards: nb,
+        used_boards: plan.used_boards(),
+        idle_boards: nb - plan.used_boards(),
+        requests: n,
+        completed: n,
+        makespan_cycles,
+        throughput_rps: n as f64 / makespan_s,
+        mean_ms,
+        p50_ms: percentile_sorted(&lat_ms, 50.0),
+        p99_ms: percentile_sorted(&lat_ms, 99.0),
+        per_board,
+        link_bytes_total,
+        ddr_slowdown: shared.slowdown_of(demand),
+        reshard_events: events,
+    }
+}

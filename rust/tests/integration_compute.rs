@@ -1,0 +1,149 @@
+//! Acceptance properties of the shared compute-kernel layer
+//! (`accel::kernels`):
+//!
+//! * the im2col + blocked-MAC path is **bit-exact** against the naive
+//!   per-pixel/per-channel oracle across randomized layer shapes — odd
+//!   widths, padding < kernel, depths past the `max_depth_parallel` cap
+//!   (serial depth-concat groups), with and without ReLU and threading;
+//! * the engine's functional forward (now routed through the kernels)
+//!   agrees with the independent f32 `cpu_ref` oracle to quantization
+//!   tolerance on a whole network;
+//! * all functional forwards in the repo (engine, Zhang'15 tiled baseline,
+//!   fused-layer baseline) are one implementation: bit-equal outputs.
+
+use decoilfnet::accel::kernels::{self, conv2d_fx, naive, KernelScratch};
+use decoilfnet::accel::{Engine, Weights};
+use decoilfnet::baselines::{cpu_ref, fused_layer, optimized};
+use decoilfnet::config::{paper_test_example, tiny_vgg, AccelConfig, Layer, Network, VolShape};
+use decoilfnet::tensor::NdTensor;
+use decoilfnet::util::prng::Rng;
+use decoilfnet::util::prop;
+
+/// Randomized single-layer bit-exactness: kernel path vs naive oracle.
+#[test]
+fn kernel_path_bit_exact_vs_naive_across_shapes() {
+    prop::check(
+        "integration-kernel-vs-naive",
+        prop::PropConfig {
+            cases: 64,
+            ..Default::default()
+        },
+        |r: &mut Rng| {
+            // Odd widths and non-square extents on purpose; kernel extents
+            // beyond the paper's 3×3 (1×1 degenerates the clip runs, 5×5
+            // clips both borders at once); padding strictly below the
+            // kernel; depths crossing tile and word boundaries.
+            let kernel = [1usize, 3, 5][r.below(3) as usize];
+            let pad = r.range_usize(0, kernel - 1);
+            let h = (2 * r.range_usize(1, 8) + 1).max(kernel);
+            let w = r.range_usize(3, 15).max(kernel);
+            let d = r.range_usize(1, 12);
+            let k = r.range_usize(1, 12);
+            let threads = 1 + r.below(4) as usize;
+            (h, w, d, k, kernel, pad, threads, r.chance(0.5), r.next_u64())
+        },
+        |&(h, w, d, k, kernel, pad, threads, relu, seed)| {
+            let filt = NdTensor::random(&[k, kernel, kernel, d], seed ^ 1, -0.5, 0.5);
+            let bias = NdTensor::random(&[k], seed ^ 2, -0.1, 0.1);
+            let banks = decoilfnet::accel::depth_concat::FilterBanks::from_tensor(&filt, &bias);
+            let input = NdTensor::random(&[h, w, d], seed ^ 3, -1.0, 1.0).to_fixed();
+            let mut scratch = KernelScratch::new();
+            let fast = conv2d_fx(&input, &banks, pad, relu, threads, &mut scratch);
+            let slow = naive::conv2d_fx_naive(&input, &banks, pad, relu);
+            if fast == slow {
+                Ok(())
+            } else {
+                Err(format!(
+                    "h={h} w={w} d={d} k={k} kernel={kernel} pad={pad} threads={threads}"
+                ))
+            }
+        },
+    );
+}
+
+/// Whole-network bit-exactness with serial depth-concat groups: a config
+/// whose `max_depth_parallel` forces iterative decomposition must still be
+/// value-identical (grouping only reorders hardware, never math).
+#[test]
+fn depth_concat_groups_never_change_values() {
+    let net = Network {
+        name: "deep-narrow".into(),
+        input: VolShape::new(9, 9, 3),
+        layers: vec![
+            Layer::conv3x3("c1", 24),
+            Layer::conv3x3("c2", 24),
+            Layer::pool2x2("p"),
+            Layer::conv3x3("c3", 40),
+        ],
+    };
+    let w = Weights::random(&net, 5);
+    let input = NdTensor::random(&net.input.as_slice(), 6, -1.0, 1.0);
+    // Depth caps 1, 7 and 64 give 24, 4 and 1 serial groups respectively.
+    let mut outs = Vec::new();
+    for cap in [1usize, 7, 64] {
+        let mut cfg = AccelConfig::paper_default();
+        cfg.max_depth_parallel = cap;
+        outs.push(Engine::new(cfg).forward_fx(&net, &w, &input));
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[1], outs[2]);
+    // And the naive oracle agrees bit-for-bit.
+    let oracle = naive::forward_network_fx_naive(&net, &w, &input.to_fixed());
+    assert_eq!(outs[0], oracle);
+}
+
+/// The engine's kernel-routed forward vs the independent f32 CPU baseline:
+/// quantization-tolerance agreement on a whole network (the f32 path is the
+/// cross-implementation oracle; bitwise equality is impossible across
+/// number formats).
+#[test]
+fn kernel_forward_tracks_cpu_ref_within_quantization() {
+    let net = tiny_vgg();
+    let seed = 23;
+    let wf = cpu_ref::CpuWeights::random(&net, seed);
+    let wx = Weights::random(&net, seed);
+    let input = NdTensor::random(&net.input.as_slice(), 8, -1.0, 1.0);
+    let cpu = cpu_ref::forward(&net, &wf, &input);
+    let fx = Engine::new(AccelConfig::paper_default())
+        .forward_fx(&net, &wx, &input)
+        .to_f32();
+    let diff = cpu.max_abs_diff(&fx);
+    assert!(diff < 5e-3, "kernel path drifted from the f32 oracle: {diff}");
+}
+
+/// One compute implementation: engine, tiled Zhang'15 forward, and
+/// fused-layer forward emit bit-identical tensors.
+#[test]
+fn all_functional_forwards_are_one_implementation() {
+    let net = paper_test_example();
+    let w = Weights::random(&net, 9);
+    let input = NdTensor::random(&net.input.as_slice(), 10, -1.0, 1.0);
+    let accel = AccelConfig::paper_default();
+    let engine = Engine::new(accel.clone()).forward_fx(&net, &w, &input);
+    let tiled = optimized::forward_fx(
+        &optimized::OptimizedConfig::zhang2015(),
+        &accel,
+        &net,
+        &w,
+        &input.to_fixed(),
+    );
+    let fused = fused_layer::forward_fx(&net, &w, &input.to_fixed());
+    assert_eq!(engine, tiled);
+    assert_eq!(engine, fused);
+}
+
+/// Scratch reuse across a whole net equals per-layer fresh scratch, and the
+/// thread count never leaks into values at network scale.
+#[test]
+fn network_forward_invariant_to_scratch_and_threads() {
+    let net = tiny_vgg();
+    let w = Weights::random(&net, 12);
+    let input = NdTensor::random(&net.input.as_slice(), 13, -1.0, 1.0).to_fixed();
+    let mut shared = KernelScratch::new();
+    let base = kernels::forward_network_fx(&net, &w, &input, 1, &mut shared);
+    for threads in [2usize, 5, 16] {
+        let mut fresh = KernelScratch::new();
+        let out = kernels::forward_network_fx(&net, &w, &input, threads, &mut fresh);
+        assert_eq!(base, out, "threads={threads}");
+    }
+}

@@ -1,34 +1,42 @@
 #!/usr/bin/env python3
-"""Gate CI on the cluster bench's deterministic metrics.
+"""Gate CI on the benches' deterministic metrics.
 
 Usage:
-    check_bench_regression.py BASELINE.json CURRENT.json [--tolerance 0.10]
-                              [--write-baseline]
+    check_bench_regression.py BASELINE.json CURRENT.json
+                              [BASELINE2.json CURRENT2.json ...]
+                              [--tolerance 0.10] [--write-baseline]
 
-The bench (`cargo bench --bench cluster_scaling` with BENCH_JSON set) emits
-a flat map of tracked metrics, each `{"value": <float>, "better": "higher" |
-"lower"}`. Every value is a deterministic simulation output — cycles at a
-fixed clock, no wall time — so any move beyond the tolerance is a real model
-change, not machine noise.
+Each bench (`cargo bench --bench cluster_scaling`, `--bench compute_kernels`
+with BENCH_JSON set) emits a flat map of tracked metrics, each
+`{"value": <float>, "better": "higher" | "lower"[, "gate": false]}`.
+Positional arguments are (baseline, current) file pairs — the bench job
+gates the cluster and compute files in one invocation.
 
 Comparison rules per metric present in the BASELINE:
   * better == "higher": fail when current < baseline * (1 - tolerance)
   * better == "lower":  fail when current > baseline * (1 + tolerance)
   * metric missing from CURRENT: fail (a tracked metric disappeared)
+  * "gate": false in the BASELINE entry: report drift but never fail —
+    wall-clock rates (items/s on the CI runner) are tracked for trend, not
+    gated, while deterministic model outputs stay hard gates.
+
+Metrics present only in CURRENT are listed as untracked — commit an
+extended baseline to start gating them.
 
 Seed mode: a baseline whose top level has `"seeded": false` (or an absent
-baseline file) arms the gate instead of enforcing it — the CURRENT file is
-schema-checked and printed so a maintainer can commit it as the repo-root
-`BENCH_cluster.json`, turning the gate on for every later run. Use
-`--write-baseline` to copy CURRENT over BASELINE locally.
+baseline file) arms that pair's gate instead of enforcing it — the CURRENT
+file is schema-checked and printed so a maintainer can commit it as the
+repo-root baseline. Use `--write-baseline` to copy CURRENT over BASELINE
+locally.
 """
 
 import argparse
 import json
+import re
 import shutil
 import sys
 
-SCHEMA = "decoilfnet-cluster-bench/v1"
+SCHEMA_RE = re.compile(r"^decoilfnet-[a-z0-9_]+-bench/v1$")
 
 
 def load(path):
@@ -38,8 +46,11 @@ def load(path):
 
 def check_schema(doc, path):
     errors = []
-    if doc.get("schema") != SCHEMA:
-        errors.append(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    if not SCHEMA_RE.match(str(doc.get("schema"))):
+        errors.append(
+            f"{path}: schema {doc.get('schema')!r} does not match "
+            f"decoilfnet-<name>-bench/v1"
+        )
     metrics = doc.get("metrics")
     if not isinstance(metrics, dict) or not metrics:
         errors.append(f"{path}: 'metrics' must be a non-empty object")
@@ -52,79 +63,79 @@ def check_schema(doc, path):
             errors.append(f"{path}: metric {name!r} has no numeric 'value'")
         if m.get("better") not in ("higher", "lower"):
             errors.append(f"{path}: metric {name!r} 'better' must be higher|lower")
+        if not isinstance(m.get("gate", True), bool):
+            errors.append(f"{path}: metric {name!r} 'gate' must be a bool")
     return errors
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline")
-    ap.add_argument("current")
-    ap.add_argument("--tolerance", type=float, default=0.10)
-    ap.add_argument(
-        "--write-baseline",
-        action="store_true",
-        help="copy CURRENT over BASELINE after a successful run",
-    )
-    args = ap.parse_args()
-
-    current = load(args.current)
-    errors = check_schema(current, args.current)
+def check_pair(baseline_path, current_path, tol, write_baseline):
+    """Gate one (baseline, current) pair; returns True when it passes."""
+    current = load(current_path)
+    errors = check_schema(current, current_path)
     if errors:
-        print("current bench output is malformed:")
+        print(f"current bench output {current_path} is malformed:")
         for e in errors:
             print(f"  - {e}")
-        return 1
+        return False
 
     try:
-        baseline = load(args.baseline)
+        baseline = load(baseline_path)
     except FileNotFoundError:
         baseline = None
 
     if baseline is None or not baseline.get("seeded", False):
         print(
-            "baseline is absent or unseeded — seed mode: schema-checking the "
-            "fresh metrics instead of gating."
+            f"[{baseline_path}] baseline is absent or unseeded — seed mode: "
+            "schema-checking the fresh metrics instead of gating."
         )
         print(
-            f"to arm the gate, commit the generated file as {args.baseline} "
-            "(it is deterministic — identical on every machine):"
+            f"to arm the gate, commit the generated file as {baseline_path} "
+            "(deterministic metrics are identical on every machine):"
         )
         print(json.dumps(current, indent=2, sort_keys=True))
-        if args.write_baseline:
-            shutil.copyfile(args.current, args.baseline)
-            print(f"wrote {args.baseline}")
-        return 0
+        if write_baseline:
+            shutil.copyfile(current_path, baseline_path)
+            print(f"wrote {baseline_path}")
+        return True
+
+    if baseline.get("schema") != current.get("schema"):
+        print(
+            f"FAIL: {baseline_path} schema {baseline.get('schema')!r} != "
+            f"{current_path} schema {current.get('schema')!r}"
+        )
+        return False
 
     base_metrics = baseline["metrics"]
     cur_metrics = current["metrics"]
-    tol = args.tolerance
-    regressions, improvements, missing = [], [], []
+    regressions, improvements, exempt_drift, missing = [], [], [], []
 
     for name, base in sorted(base_metrics.items()):
+        gated = base.get("gate", True)
         if name not in cur_metrics:
-            missing.append(name)
+            if gated:
+                missing.append(name)
+            else:
+                print(f"note: gate-exempt metric absent from current: {name}")
             continue
         bv, cv = base["value"], cur_metrics[name]["value"]
         better = base["better"]
         if bv == 0:
             continue  # nothing to compare against
         delta = (cv - bv) / abs(bv)
-        if better == "higher":
-            if cv < bv * (1.0 - tol):
-                regressions.append((name, bv, cv, delta))
-            elif cv > bv * (1.0 + tol):
-                improvements.append((name, bv, cv, delta))
-        else:
-            if cv > bv * (1.0 + tol):
-                regressions.append((name, bv, cv, delta))
-            elif cv < bv * (1.0 - tol):
-                improvements.append((name, bv, cv, delta))
+        worse = cv < bv * (1.0 - tol) if better == "higher" else cv > bv * (1.0 + tol)
+        better_now = cv > bv * (1.0 + tol) if better == "higher" else cv < bv * (1.0 - tol)
+        if worse:
+            (regressions if gated else exempt_drift).append((name, bv, cv, delta))
+        elif better_now:
+            improvements.append((name, bv, cv, delta))
 
     new = sorted(set(cur_metrics) - set(base_metrics))
     if new:
         print(f"note: {len(new)} new untracked metric(s): {', '.join(new)}")
     for name, bv, cv, delta in improvements:
         print(f"improved: {name}: {bv:.6g} -> {cv:.6g} ({delta:+.1%})")
+    for name, bv, cv, delta in exempt_drift:
+        print(f"drift (gate-exempt): {name}: {bv:.6g} -> {cv:.6g} ({delta:+.1%})")
 
     ok = True
     if missing:
@@ -140,10 +151,36 @@ def main():
             )
     if ok:
         n = len(base_metrics)
-        print(f"all {n} tracked metrics within {tol:.0%} of baseline")
-        if args.write_baseline:
-            shutil.copyfile(args.current, args.baseline)
-            print(f"wrote {args.baseline}")
+        print(f"[{baseline_path}] all {n} tracked metrics within {tol:.0%} of baseline")
+        if write_baseline:
+            shutil.copyfile(current_path, baseline_path)
+            print(f"wrote {baseline_path}")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument(
+        "files",
+        nargs="+",
+        metavar="BASELINE CURRENT",
+        help="one or more (baseline, current) JSON file pairs",
+    )
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="copy each CURRENT over its BASELINE after a successful run",
+    )
+    args = ap.parse_args()
+    if len(args.files) % 2 != 0:
+        ap.error("files must come in (baseline, current) pairs")
+
+    ok = True
+    for i in range(0, len(args.files), 2):
+        ok &= check_pair(args.files[i], args.files[i + 1], args.tolerance, args.write_baseline)
     return 0 if ok else 1
 
 
