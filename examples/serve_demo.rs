@@ -8,7 +8,12 @@
 //!    fleet starts on cuts balanced under a homogeneous assumption, traffic
 //!    steps up mid-run, and the re-shard controller migrates to a plan that
 //!    respects each board's clock — throughput recovers.
-//! 3. **Live threaded server** (needs `make artifacts`): the coordinator
+//! 3. **Multi-tenant priorities** (always runs): two tenants share two
+//!    boards — a high-priority interactive stream with a 1 ms p99 SLO and a
+//!    low-priority bulk tenant whose traffic spikes to a burst mid-run. The
+//!    spike floods the fleet; preemption cuts the interactive tenant
+//!    through, the bulk tenant absorbs the aborted batches.
+//! 4. **Live threaded server** (needs `make artifacts`): the coordinator
 //!    batching concurrent clients over the PJRT artifacts, with per-request
 //!    plan routing and live metrics.
 //!
@@ -19,9 +24,13 @@ use std::time::{Duration, Instant};
 
 use decoilfnet::accel::latency::group_cost_estimate;
 use decoilfnet::accel::{FusionPlan, Weights};
-use decoilfnet::cluster::{balance_min_max, simulate_fleet_dynamic, InterBoardLink, ShardPlan};
+use decoilfnet::cluster::{
+    balance_min_max, place_tenants, simulate_fleet_dynamic, simulate_fleet_multi_tenant,
+    InterBoardLink, ShardPlan, TenantWorkload,
+};
 use decoilfnet::config::{
-    vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, ReshardPolicy, ShardMode,
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, ReshardPolicy,
+    ShardMode, SloPolicy, TenantSpec,
 };
 use decoilfnet::coordinator::{simulate_cluster, BatchPolicy, Server, ServerConfig};
 use decoilfnet::runtime::Runtime;
@@ -114,9 +123,104 @@ fn hetero_reshard_demo() -> Result<(), String> {
     Ok(())
 }
 
+/// Two tenants, two boards, strict priorities: the interactive tenant's
+/// Poisson stream holds a 1 ms p99 SLO while the bulk tenant's mid-run
+/// burst floods the fleet and absorbs every preemption.
+fn multi_tenant_demo() -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = vec![
+        TenantSpec {
+            name: "interactive".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 1500.0,
+            requests: 48,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 1.0,
+                priority: 2,
+            },
+        },
+        TenantSpec {
+            name: "bulk".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: 800.0,
+            requests: 96,
+            load_steps: vec![LoadStep {
+                at_request: 16,
+                rps: f64::INFINITY,
+            }],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 2.0,
+                priority: 0,
+            },
+        },
+    ];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads)?;
+
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.boards = 2;
+    ccfg.aggregate_ddr_bytes_per_cycle = None;
+    ccfg.link_bytes_per_cycle = f64::INFINITY;
+    ccfg.link_latency_cycles = 0;
+    ccfg.max_batch = 8;
+    ccfg.max_wait_us = 0.0;
+    ccfg.seed = 7;
+
+    println!(
+        "== multi-tenant priorities: 2 tenants on 2 shared boards, bulk spike at request 16 =="
+    );
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
+    for t in &r.tenants {
+        println!(
+            "  {:>12} (prio {}): {:7.1} req/s  p50 {:7.3} ms  p99 {:7.3} ms  \
+             slo {:6.1} ms [{}]  preempted {} time(s)",
+            t.name,
+            t.priority,
+            t.throughput_rps,
+            t.p50_ms,
+            t.p99_ms,
+            t.slo_p99_ms,
+            if t.slo_met { "MET" } else { "MISSED" },
+            t.preemptions,
+        );
+    }
+    println!(
+        "  fleet: {} requests over {} boards, ddr slowdown {:.2}x",
+        r.completed, r.boards, r.ddr_slowdown
+    );
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     fleet_demo().map_err(anyhow::Error::msg)?;
     hetero_reshard_demo().map_err(anyhow::Error::msg)?;
+    multi_tenant_demo().map_err(anyhow::Error::msg)?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {

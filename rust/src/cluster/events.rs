@@ -9,10 +9,11 @@
 //! * [`DeadlineQueue`] — a min-heap of pending batch-flush deadlines
 //!   (arrival/flush events), drained in time order;
 //! * [`BoardPool`] — a busy/idle heap pair answering "which board can start
-//!   soonest" with the *exact* tie-breaks of the linear scan it replaces
-//!   (earliest start, then faster clock, then lower index), which is what
-//!   keeps the rewritten simulator byte-identical to
-//!   [`crate::cluster::sim_legacy`].
+//!   soonest" with the *exact* tie-breaks of the linear scan it replaced
+//!   (earliest start, then faster clock, then lower index); the property
+//!   suite below replays randomized traces against a brute-force scan
+//!   oracle, and the golden fixtures under `tests/fixtures/` pin the
+//!   resulting reports.
 //!
 //! Link-free state needs no heap: a pipelined batch walks its stage chain in
 //! order and each cut's [`crate::cluster::LinkChannel`] already carries its
@@ -134,6 +135,20 @@ mod tests {
         (pick, pick_start)
     }
 
+    /// Property-suite size: the event heaps guard every simulator, so they
+    /// get a deeper randomized sweep than the default 128 cases.
+    const HEAP_PROP_CASES: usize = 256;
+
+    fn heap_prop_cfg() -> prop::PropConfig {
+        prop::PropConfig {
+            cases: HEAP_PROP_CASES,
+            ..prop::PropConfig::default()
+        }
+    }
+
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
     #[test]
     fn deadline_queue_orders_and_bounds() {
         let mut q = DeadlineQueue::new();
@@ -148,12 +163,121 @@ mod tests {
         assert_eq!(q.pop(), None);
     }
 
+    /// One randomized operation against the queue: schedule an event, pop
+    /// bounded at a horizon, or drain one unconditionally.
+    #[derive(Debug, Clone, Copy)]
+    enum QueueOp {
+        Schedule(u64, usize),
+        PopAtOrBefore(u64),
+        Pop,
+    }
+
+    #[test]
+    fn deadline_queue_drains_in_nondecreasing_time_order_on_random_traces() {
+        // Oracle: a sorted vector popped from the front. The queue must
+        // agree with it op-for-op, which implies (a) pops come out in
+        // nondecreasing (time, queue) order between intervening schedules,
+        // (b) `next_at_or_before(t)` never yields an event after `t` and
+        // never withholds one at or before `t`, and (c) nothing is lost.
+        prop::check(
+            "deadline-queue-vs-sorted-oracle",
+            heap_prop_cfg(),
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 60);
+                (0..n)
+                    .map(|_| match r.below(3) {
+                        0 | 1 => QueueOp::Schedule(r.below(100), r.range_usize(0, 4)),
+                        _ => {
+                            if r.chance(0.5) {
+                                QueueOp::PopAtOrBefore(r.below(120))
+                            } else {
+                                QueueOp::Pop
+                            }
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut q = DeadlineQueue::new();
+                let mut oracle: Vec<(u64, usize)> = Vec::new();
+                let mut last_popped: Option<(u64, usize)> = None;
+                for &op in ops {
+                    match op {
+                        QueueOp::Schedule(at, queue) => {
+                            q.schedule(at, queue);
+                            let i = oracle.partition_point(|&e| e <= (at, queue));
+                            oracle.insert(i, (at, queue));
+                            // A fresh earlier event may legitimately pop
+                            // before the last one we saw.
+                            if Some((at, queue)) < last_popped {
+                                last_popped = None;
+                            }
+                        }
+                        QueueOp::PopAtOrBefore(t) => {
+                            let want = match oracle.first() {
+                                Some(&e) if e.0 <= t => Some(oracle.remove(0)),
+                                _ => None,
+                            };
+                            let got = q.next_at_or_before(t);
+                            if got != want {
+                                return Err(format!(
+                                    "next_at_or_before({t}): {got:?} vs oracle {want:?}"
+                                ));
+                            }
+                            if let Some(e) = got {
+                                if let Some(prev) = last_popped {
+                                    if e < prev {
+                                        return Err(format!(
+                                            "pops went back in time: {prev:?} then {e:?}"
+                                        ));
+                                    }
+                                }
+                                last_popped = Some(e);
+                            }
+                        }
+                        QueueOp::Pop => {
+                            let want = if oracle.is_empty() {
+                                None
+                            } else {
+                                Some(oracle.remove(0))
+                            };
+                            let got = q.pop();
+                            if got != want {
+                                return Err(format!("pop: {got:?} vs oracle {want:?}"));
+                            }
+                            if let Some(e) = got {
+                                if let Some(prev) = last_popped {
+                                    if e < prev {
+                                        return Err(format!(
+                                            "pops went back in time: {prev:?} then {e:?}"
+                                        ));
+                                    }
+                                }
+                                last_popped = Some(e);
+                            }
+                        }
+                    }
+                }
+                // Full drain at the end comes out exactly sorted.
+                while let Some(e) = q.pop() {
+                    let want = oracle.remove(0);
+                    if e != want {
+                        return Err(format!("drain: {e:?} vs oracle {want:?}"));
+                    }
+                }
+                if !oracle.is_empty() {
+                    return Err(format!("queue lost events: {oracle:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn pool_matches_linear_scan_on_random_traces() {
-        use crate::util::prng::Rng;
-        use crate::util::prop;
-        prop::check_default(
+        prop::check(
             "board-pool-vs-scan",
+            heap_prop_cfg(),
             |r: &mut Rng| {
                 let n = r.range_usize(1, 6);
                 let freqs: Vec<f64> =
@@ -170,6 +294,43 @@ mod tests {
                 for &(advance, svc) in ops {
                     now += advance;
                     let want = scan_pick(&scan_free, freqs, now);
+                    let got = pool.pick(now);
+                    if got != want {
+                        return Err(format!("at t={now}: pool {got:?} vs scan {want:?}"));
+                    }
+                    let done = got.1 + svc;
+                    scan_free[got.0] = done;
+                    pool.release(got.0, done);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pool_matches_scan_from_staggered_initial_state() {
+        // Same oracle, but slots start with nonzero, distinct `free_at`
+        // values — the state every plan swap rebuilds the pool from.
+        prop::check(
+            "board-pool-vs-scan-staggered",
+            heap_prop_cfg(),
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 6);
+                let slots: Vec<(f64, u64)> = (0..n)
+                    .map(|_| ([60.0, 100.0, 120.0][r.below(3) as usize], r.below(80)))
+                    .collect();
+                let ops: Vec<(u64, u64)> =
+                    (0..r.range_usize(1, 30)).map(|_| (r.below(40), 1 + r.below(25))).collect();
+                (slots, ops)
+            },
+            |(slots, ops)| {
+                let freqs: Vec<f64> = slots.iter().map(|&(f, _)| f).collect();
+                let mut scan_free: Vec<u64> = slots.iter().map(|&(_, at)| at).collect();
+                let mut pool = BoardPool::from_slots(slots.iter().copied());
+                let mut now = 0u64;
+                for &(advance, svc) in ops {
+                    now += advance;
+                    let want = scan_pick(&scan_free, &freqs, now);
                     let got = pool.pick(now);
                     if got != want {
                         return Err(format!("at t={now}: pool {got:?} vs scan {want:?}"));

@@ -24,26 +24,35 @@
 //!   p50/p99 latency and per-board utilization;
 //! * a **re-shard controller** ([`simulate_fleet_dynamic`]): watches window
 //!   p99 and utilization skew under drifting load, re-plans the shard,
-//!   bills the migration, and reports every decision as a [`ReshardEvent`].
+//!   bills the migration, and reports every decision as a [`ReshardEvent`];
+//! * a **multi-tenant layer**: several networks share one fleet —
+//!   [`place_tenants`] packs per-tenant shard plans onto the boards under
+//!   joint fabric feasibility (one shared shell per board plus each
+//!   resident's incremental engine), and
+//!   [`simulate_fleet_multi_tenant`] serves the merged per-tenant arrival
+//!   streams under strict priorities, preempting lower-priority batches
+//!   when a higher class is starved and reporting per-tenant
+//!   [`TenantStats`] (p50/p99, SLO attainment, preemption counts).
 //!
 //! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
-//! heterogeneous two-generation fleet sweep and a load-step re-sharding
-//! scenario, and emits the `BENCH_cluster.json` metrics CI tracks.
+//! heterogeneous two-generation fleet sweep, a load-step re-sharding
+//! scenario and a two-tenant priority scene, and emits the
+//! `BENCH_cluster.json` metrics CI tracks.
 
 pub mod events;
 pub mod link;
 pub mod shard;
 pub mod sim;
-pub mod sim_legacy;
 
 pub use link::{InterBoardLink, LinkChannel};
-pub use shard::{balance_min_max, BoardShard, ShardPlan};
+pub use shard::{balance_min_max, place_tenants, BoardShard, ShardPlan, TenantWorkload};
 pub use sim::{
-    arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic, BoardStats,
-    FleetReport, ReshardEvent,
+    arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic,
+    simulate_fleet_multi_tenant, tenant_seed, BoardStats, FleetReport, ReshardEvent, TenantStats,
 };
 
 use crate::accel::engine::Weights;
+use crate::accel::fusion::FusionPlan;
 use crate::config::{AccelConfig, ClusterConfig, Network, ShardMode};
 use crate::coordinator::planner::{best_plan, Objective};
 
@@ -67,35 +76,10 @@ pub fn plan_fleet(
             ));
         }
     }
-    let best = best_plan(cfg, net, weights, Objective::Latency)
-        .ok_or("no fusion plan fits the board")?;
+    let plan = fusion_plan_for_fleet(cfg, net, weights, ccfg.mode, ccfg.boards)?;
     let shard = match ccfg.mode {
-        ShardMode::Replicated => ShardPlan::replicated_fleet(&fleet, net, weights, &best.plan),
-        ShardMode::Pipelined => {
-            // Pipelining partitions *groups*; a latency-optimal plan is often
-            // one big group, which cannot spread over boards. Re-plan under
-            // progressively tighter DSP caps until the plan has enough groups
-            // to occupy the fleet (or no tighter cap helps — a network can
-            // simply run out of split points). Any residual shortfall is
-            // visible to callers as `used_boards() < boards` and reported as
-            // `idle_boards`.
-            let mut plan = best.plan;
-            if plan.n_groups() < ccfg.boards {
-                for cap in [50u8, 25, 10] {
-                    if let Some(p) =
-                        best_plan(cfg, net, weights, Objective::LatencyUnderDspCap(cap))
-                    {
-                        if p.plan.n_groups() > plan.n_groups() {
-                            plan = p.plan;
-                        }
-                    }
-                    if plan.n_groups() >= ccfg.boards {
-                        break;
-                    }
-                }
-            }
-            ShardPlan::pipelined_fleet(&fleet, net, weights, &plan)
-        }
+        ShardMode::Replicated => ShardPlan::replicated_fleet(&fleet, net, weights, &plan),
+        ShardMode::Pipelined => ShardPlan::pipelined_fleet(&fleet, net, weights, &plan),
     };
     if !shard.fits() {
         return Err("shard does not fit some board's resource budget".into());
@@ -103,15 +87,101 @@ pub fn plan_fleet(
     Ok(shard)
 }
 
+/// Pick the fusion plan a fleet should shard. Latency-optimal by default;
+/// for pipelined fleets a latency-optimal plan is often one big group,
+/// which cannot spread over boards, so the search re-plans under
+/// progressively tighter DSP caps until the plan has enough groups to
+/// occupy the fleet (or no tighter cap helps — a network can simply run out
+/// of split points). Any residual shortfall is visible to callers as
+/// `used_boards() < boards` and reported as `idle_boards`.
+fn fusion_plan_for_fleet(
+    cfg: &AccelConfig,
+    net: &Network,
+    weights: &Weights,
+    mode: ShardMode,
+    boards: usize,
+) -> Result<FusionPlan, String> {
+    let best = best_plan(cfg, net, weights, Objective::Latency)
+        .ok_or("no fusion plan fits the board")?;
+    let mut plan = best.plan;
+    if mode == ShardMode::Pipelined && plan.n_groups() < boards {
+        for cap in [50u8, 25, 10] {
+            if let Some(p) = best_plan(cfg, net, weights, Objective::LatencyUnderDspCap(cap)) {
+                if p.plan.n_groups() > plan.n_groups() {
+                    plan = p.plan;
+                }
+            }
+            if plan.n_groups() >= boards {
+                break;
+            }
+        }
+    }
+    Ok(plan)
+}
+
+/// Plan every tenant of a multi-tenant cluster config: per-tenant weights
+/// (from each tenant's seed), per-tenant fusion plans (searched on the base
+/// config, same policy as [`plan_fleet`]), then the joint placement over the
+/// shared fleet. Returns `(weights, plans)` in tenant order.
+pub fn plan_tenants(
+    cfg: &AccelConfig,
+    ccfg: &ClusterConfig,
+) -> Result<(Vec<Weights>, Vec<ShardPlan>), String> {
+    ccfg.validate()?;
+    assert!(!ccfg.tenants.is_empty(), "no tenants configured");
+    let fleet = ccfg.board_configs(cfg);
+    let weights: Vec<Weights> = ccfg
+        .tenants
+        .iter()
+        .map(|t| Weights::random(&t.network, t.weights_seed))
+        .collect();
+    let plans: Vec<FusionPlan> = ccfg
+        .tenants
+        .iter()
+        .zip(&weights)
+        .map(|(t, w)| fusion_plan_for_fleet(cfg, &t.network, w, t.mode, ccfg.boards))
+        .collect::<Result<Vec<_>, _>>()?;
+    let workloads: Vec<TenantWorkload> = ccfg
+        .tenants
+        .iter()
+        .zip(&weights)
+        .zip(&plans)
+        .map(|((t, w), p)| TenantWorkload {
+            name: &t.name,
+            net: &t.network,
+            weights: w,
+            plan: p,
+            mode: t.mode,
+            priority: t.slo.priority,
+            replicas: t.replicas,
+        })
+        .collect();
+    let shard_plans = place_tenants(&fleet, &workloads)?;
+    Ok((weights, shard_plans))
+}
+
 /// Convenience: plan the fleet and run the scheduler simulation in one
-/// call. With a re-shard policy configured, the dynamic controller
-/// simulator runs (and may migrate shards under load); otherwise the static
-/// scheduler does.
+/// call. With tenants configured, the multi-tenant placement planner and
+/// the priority-aware simulator run (`net` is ignored — every tenant brings
+/// its own network). Otherwise, with a re-shard policy configured, the
+/// dynamic controller simulator runs (and may migrate shards under load);
+/// else the static scheduler does.
 pub fn run_fleet(
     cfg: &AccelConfig,
     net: &Network,
     ccfg: &ClusterConfig,
 ) -> Result<FleetReport, String> {
+    if !ccfg.tenants.is_empty() {
+        let fleet = ccfg.board_configs(cfg);
+        let (_weights, plans) = plan_tenants(cfg, ccfg)?;
+        return Ok(simulate_fleet_multi_tenant(
+            cfg,
+            &fleet,
+            &ccfg.tenants,
+            &plans,
+            ccfg,
+        ));
+    }
     let weights = Weights::random(net, ccfg.seed);
     let shard = plan_fleet(cfg, net, &weights, ccfg)?;
     if ccfg.reshard.is_some() {
@@ -195,6 +265,51 @@ mod tests {
         let r = run_fleet(&cfg, &net, &ccfg).unwrap();
         assert_eq!(r.completed, 64);
         assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn run_fleet_with_tenants_uses_the_multi_tenant_simulator() {
+        use crate::config::{tiny_vgg, SloPolicy, TenantSpec};
+        let cfg = AccelConfig::paper_default();
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.boards = 2;
+        ccfg.tenants = vec![
+            TenantSpec {
+                name: "hi".to_string(),
+                network: tiny_vgg(),
+                weights_seed: 1,
+                arrival_rps: 500.0,
+                requests: 24,
+                load_steps: vec![],
+                mode: ShardMode::Replicated,
+                replicas: None,
+                slo: SloPolicy {
+                    p99_ms: 10.0,
+                    priority: 2,
+                },
+            },
+            TenantSpec {
+                name: "lo".to_string(),
+                network: tiny_vgg(),
+                weights_seed: 2,
+                arrival_rps: f64::INFINITY,
+                requests: 40,
+                load_steps: vec![],
+                mode: ShardMode::Replicated,
+                replicas: None,
+                slo: SloPolicy {
+                    p99_ms: 5000.0,
+                    priority: 0,
+                },
+            },
+        ];
+        // `net` is ignored on the multi-tenant path.
+        let r = run_fleet(&cfg, &vgg16_prefix(), &ccfg).unwrap();
+        assert_eq!(r.tenants.len(), 2);
+        assert_eq!(r.completed, 64);
+        assert_eq!(r.tenants[0].name, "hi");
+        assert_eq!(r.tenants[0].completed, 24);
+        assert_eq!(r.tenants[1].completed, 40);
     }
 
     #[test]

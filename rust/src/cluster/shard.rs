@@ -115,7 +115,10 @@ pub struct ShardPlan {
     /// when the plan has fewer groups).
     pub boards: usize,
     pub plan: FusionPlan,
-    /// One entry per *used* board, in fleet order (`shards[i].board == i`).
+    /// One entry per *used* board, in fleet order. Single-tenant plans use a
+    /// board prefix (`shards[i].board == i`); multi-tenant placements
+    /// ([`place_tenants`]) may skip boards another tenant filled, so consumers
+    /// must index boards through `BoardShard::board`, not the shard position.
     pub shards: Vec<BoardShard>,
 }
 
@@ -330,6 +333,131 @@ impl ShardPlan {
             }
         }
     }
+}
+
+/// One tenant's workload, as the fleet-wide placement planner sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantWorkload<'a> {
+    pub name: &'a str,
+    pub net: &'a Network,
+    pub weights: &'a Weights,
+    pub plan: &'a FusionPlan,
+    pub mode: ShardMode,
+    /// Priority class (larger preempts smaller); also the placement order —
+    /// higher-priority tenants pack first and get first pick of the fabric.
+    pub priority: u8,
+    /// Replicated mode: cap on the number of replicas (None = every board
+    /// with room). Ignored for pipelined tenants.
+    pub replicas: Option<usize>,
+}
+
+/// Pack several tenants' shard plans onto one shared fleet.
+///
+/// Placement runs in priority order (descending, ties by tenant index): each
+/// tenant plans against the fabric *left over* by the tenants placed before
+/// it. Feasibility is joint: a board instantiates the fixed shell
+/// ([`crate::resources::shell_resources`]: AXI/DDR interfacing, stream
+/// routing, control) once, then stacks each resident's incremental fabric
+/// (envelope − shell) — so co-residency is possible exactly when the
+/// incremental engines fit beside one shared shell.
+///
+/// * **Replicated** tenants land on up to `replicas` boards with room
+///   (emptier boards first, then lower index — spreading before stacking);
+///   they need at least one, and may skip boards another tenant filled.
+/// * **Pipelined** tenants run the heterogeneity-aware stage DP with the
+///   joint-residency feasibility predicate: a stage is only a candidate on
+///   a board whose remaining budget covers it. Like the single-tenant
+///   planner, the DP maps stage *i* to board *i* in rack order — a
+///   pipelined tenant cannot route around an occupied board prefix, so if
+///   an earlier tenant filled board 0 its placement fails even when later
+///   boards are free (place high-priority replicated tenants with a
+///   `replicas` cap, or rack-order the fleet, to leave the prefix open).
+///
+/// The returned plans are in the *input* tenant order, with
+/// [`BoardShard::board`] indexing the shared fleet (multi-tenant plans may
+/// skip boards, so consumers must go through that field). Off-chip
+/// co-residency is not a placement constraint — every resident shard keeps
+/// its provisioned DDR draw and the simulator bills the aggregate through
+/// the [`SharedDdr`] contention model (oversubscription stretches everyone;
+/// it never rejects a placement).
+pub fn place_tenants(
+    fleet: &[AccelConfig],
+    tenants: &[TenantWorkload],
+) -> Result<Vec<ShardPlan>, String> {
+    assert!(!fleet.is_empty());
+    let nb = fleet.len();
+    let shell = crate::resources::shell_resources();
+    // Incremental fabric already resident per board, and resident count
+    // (for the spread-before-stack ordering).
+    let mut used = vec![Resources::default(); nb];
+    let mut residents = vec![0usize; nb];
+    let joint_fits = |used: &[Resources], extra: Resources, b: usize| {
+        let mut joint = shell;
+        joint.add(used[b]);
+        joint.add(extra.saturating_sub(shell));
+        joint.fits(&fleet[b])
+    };
+
+    let mut order: Vec<usize> = (0..tenants.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(tenants[i].priority), i));
+
+    let mut plans: Vec<Option<ShardPlan>> = vec![None; tenants.len()];
+    for ti in order {
+        let t = &tenants[ti];
+        let ctx = FleetCtx::new(fleet, t.net, t.weights, t.plan);
+        let n = t.plan.n_groups();
+        let shards: Vec<BoardShard> = match t.mode {
+            ShardMode::Replicated => {
+                let mut fitting: Vec<usize> = (0..nb)
+                    .filter(|&b| joint_fits(&used, ctx.range_resources(b, 0..n), b))
+                    .collect();
+                fitting.sort_by_key(|&b| (residents[b], b));
+                let target = t.replicas.unwrap_or(nb).max(1);
+                fitting.truncate(target);
+                fitting.sort_unstable();
+                if fitting.is_empty() {
+                    return Err(format!(
+                        "tenant '{}': no board has room left for a replica",
+                        t.name
+                    ));
+                }
+                fitting.into_iter().map(|b| ctx.cost_range(0..n, b)).collect()
+            }
+            ShardMode::Pipelined => {
+                let k = nb.min(n);
+                let totals: Vec<Vec<u64>> = ctx
+                    .costs
+                    .iter()
+                    .map(|per_board| per_board.iter().map(|c| c.total()).collect())
+                    .collect();
+                let freqs: Vec<f64> = fleet.iter().map(|c| c.platform.freq_mhz).collect();
+                let feasible = |b: usize, r: Range<usize>| {
+                    joint_fits(&used, ctx.range_resources(b, r), b)
+                };
+                let cuts = balance_fleet(&totals, &freqs, &feasible, k).ok_or_else(|| {
+                    format!(
+                        "tenant '{}': no pipelined partition fits the remaining fabric",
+                        t.name
+                    )
+                })?;
+                cuts.windows(2)
+                    .enumerate()
+                    .map(|(b, w)| ctx.cost_range(w[0]..w[1], b))
+                    .collect()
+            }
+        };
+        for s in &shards {
+            used[s.board].add(s.resources.saturating_sub(shell));
+            residents[s.board] += 1;
+        }
+        plans[ti] = Some(ShardPlan {
+            mode: t.mode,
+            boards: nb,
+            plan: t.plan.clone(),
+            shards,
+        });
+    }
+    Ok(plans.into_iter().map(|p| p.expect("all placed")).collect())
 }
 
 /// Per-plan costing context: shapes computed once; group costs and resource
@@ -845,6 +973,170 @@ mod tests {
         let p = ShardPlan::pipelined(&cfg, &net, &w, &plan, 2);
         assert!(p.label().starts_with("pipelined["), "{}", p.label());
         assert!(p.label().contains(".."));
+    }
+
+    /// Sum co-resident envelopes the way the placement planner bills them:
+    /// one shared shell per board plus each resident's incremental fabric.
+    fn joint_residency(plans: &[ShardPlan], nb: usize) -> Vec<Resources> {
+        let shell = crate::resources::shell_resources();
+        let mut total = vec![Resources::default(); nb];
+        let mut residents = vec![0usize; nb];
+        for p in plans {
+            for s in &p.shards {
+                total[s.board].add(s.resources.saturating_sub(shell));
+                residents[s.board] += 1;
+            }
+        }
+        for (t, &r) in total.iter_mut().zip(&residents) {
+            if r > 0 {
+                t.add(shell);
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn place_tenants_coresident_replicas_fit_jointly() {
+        // Two small tenants on a 3-board fleet: every board hosts both
+        // (sharing one shell), and the joint envelopes stay inside the
+        // fabric budget.
+        let cfg = AccelConfig::paper_default();
+        let net1 = tiny_vgg();
+        let w1 = Weights::random(&net1, 1);
+        let net2 = tiny_vgg();
+        let w2 = Weights::random(&net2, 2);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        let tenants = [
+            TenantWorkload {
+                name: "hi",
+                net: &net1,
+                weights: &w1,
+                plan: &fused,
+                mode: ShardMode::Replicated,
+                priority: 2,
+                replicas: None,
+            },
+            TenantWorkload {
+                name: "lo",
+                net: &net2,
+                weights: &w2,
+                plan: &fused,
+                mode: ShardMode::Replicated,
+                priority: 0,
+                replicas: None,
+            },
+        ];
+        let plans = place_tenants(&fleet, &tenants).unwrap();
+        assert_eq!(plans.len(), 2);
+        for p in &plans {
+            assert_eq!(p.used_boards(), 3, "both tenants replicate everywhere");
+        }
+        for (b, r) in joint_residency(&plans, 3).iter().enumerate() {
+            assert!(r.fits(&fleet[b]), "board {b} jointly overflows: {r:?}");
+        }
+    }
+
+    #[test]
+    fn place_tenants_respects_leftover_budget() {
+        // Board 1 is too small for the VGG tenant (DSP-starved); the VGG
+        // replicas land on boards 0 and 2 and fill their LUT/FF budgets, so
+        // the lower-priority tiny tenant can only land on board 1.
+        let (fast, net, w) = setup();
+        let mut mid = slow_gen();
+        mid.platform.dsp = 600;
+        mid.platform.name = "mid-board".to_string();
+        let fleet = vec![fast.clone(), mid, fast.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        let net2 = tiny_vgg();
+        let w2 = Weights::random(&net2, 2);
+        let tenants = [
+            TenantWorkload {
+                name: "vgg",
+                net: &net,
+                weights: &w,
+                plan: &fused,
+                mode: ShardMode::Replicated,
+                priority: 3,
+                replicas: None,
+            },
+            TenantWorkload {
+                name: "tiny",
+                net: &net2,
+                weights: &w2,
+                plan: &fused,
+                mode: ShardMode::Replicated,
+                priority: 1,
+                replicas: None,
+            },
+        ];
+        let plans = place_tenants(&fleet, &tenants).unwrap();
+        let vgg_boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(vgg_boards, vec![0, 2], "DSP-starved board must be skipped");
+        let tiny_boards: Vec<usize> = plans[1].shards.iter().map(|s| s.board).collect();
+        assert_eq!(tiny_boards, vec![1], "only the mid board has fabric left");
+        for (b, r) in joint_residency(&plans, 3).iter().enumerate() {
+            assert!(r.fits(&fleet[b]), "board {b} jointly overflows");
+        }
+
+        // A replica cap takes the emptiest boards first (ties → low index).
+        let capped = [TenantWorkload {
+            replicas: Some(1),
+            ..tenants[0]
+        }];
+        let plans = place_tenants(&fleet, &capped).unwrap();
+        let boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(boards, vec![0]);
+
+        // And a tenant that fits nowhere is a placement error, not a panic.
+        let mut nano = slow_gen();
+        nano.platform.dsp = 40;
+        let impossible_fleet = vec![nano];
+        assert!(place_tenants(&impossible_fleet, &[tenants[0]]).is_err());
+    }
+
+    #[test]
+    fn place_tenants_pipelined_uses_joint_feasibility() {
+        // A small replicated tenant is placed first (higher priority); the
+        // pipelined VGG tenant's stage DP must then respect what is left on
+        // every board it stages onto.
+        let (cfg, net, w) = setup();
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let net2 = tiny_vgg();
+        let w2 = Weights::random(&net2, 2);
+        let tiny_fused = FusionPlan::fully_fused(7);
+        let unfused = FusionPlan::unfused(7);
+        let tenants = [
+            TenantWorkload {
+                name: "hi",
+                net: &net2,
+                weights: &w2,
+                plan: &tiny_fused,
+                mode: ShardMode::Replicated,
+                priority: 2,
+                replicas: None,
+            },
+            TenantWorkload {
+                name: "piped",
+                net: &net,
+                weights: &w,
+                plan: &unfused,
+                mode: ShardMode::Pipelined,
+                priority: 1,
+                replicas: None,
+            },
+        ];
+        let plans = place_tenants(&fleet, &tenants).unwrap();
+        assert_eq!(plans[1].mode, ShardMode::Pipelined);
+        // Stage shards cover every layer exactly once.
+        let mut covered = Vec::new();
+        for s in &plans[1].shards {
+            covered.extend(s.layers.clone());
+        }
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
+        for (b, r) in joint_residency(&plans, 3).iter().enumerate() {
+            assert!(r.fits(&fleet[b]), "board {b} jointly overflows");
+        }
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Cluster (multi-board) configuration: fleet size and composition
 //! (optionally heterogeneous board generations), sharding mode, inter-board
 //! link, shared off-chip bandwidth, the open-loop workload driven at the
-//! fleet (optionally with load steps), and the re-shard controller policy.
+//! fleet (optionally with load steps), the re-shard controller policy, and
+//! the multi-tenant workload description (several networks sharing one
+//! fleet, each with its own SLO and priority class).
 //! Parsed from JSON like the other configs.
 
 use crate::util::json::{parse, Json};
 
 use super::accel::{AccelConfig, Platform};
+use super::network::Network;
 
 /// How the network is distributed across boards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -152,6 +155,221 @@ impl ReshardPolicy {
     }
 }
 
+/// Service-level objective of one tenant: a latency target plus a priority
+/// class. Priorities are strict: under contention a higher-priority tenant's
+/// batch may preempt a lower-priority tenant's batch mid-service (the
+/// preempted work is re-queued and billed a restart penalty).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloPolicy {
+    /// Target p99 latency in milliseconds; the per-tenant report compares
+    /// the simulated p99 against this and sets `slo_met`.
+    pub p99_ms: f64,
+    /// Priority class: larger values preempt smaller ones. Equal priorities
+    /// never preempt each other.
+    pub priority: u8,
+}
+
+impl SloPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.p99_ms > 0.0) {
+            return Err("slo: p99_ms must be > 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("p99_ms", self.p99_ms)
+            .set("priority", self.priority as usize)
+    }
+
+    pub fn from_json(j: &Json) -> Result<SloPolicy, String> {
+        Ok(SloPolicy {
+            p99_ms: j
+                .get("p99_ms")
+                .as_f64()
+                .ok_or("slo: missing/invalid 'p99_ms'")?,
+            // Absent means the lowest class; present-but-malformed is an
+            // error, not a silent demotion to priority 0.
+            priority: match j.get("priority") {
+                Json::Null => 0,
+                v => v
+                    .as_usize()
+                    .filter(|&p| p <= u8::MAX as usize)
+                    .ok_or("slo: 'priority' must be an integer in 0..=255")?
+                    as u8,
+            },
+        })
+    }
+}
+
+/// One tenant of a shared fleet: its own network, weights, open-loop
+/// workload and SLO. Multi-tenant simulation ignores the fleet-level
+/// `arrival_rps`/`requests`/`load_steps` fields and drives each tenant's
+/// stream instead; per-tenant streams are seeded from the cluster seed and
+/// the tenant index, so every tenant samples an independent arrival path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Unique tenant name (reports and CLI tables key on it).
+    pub name: String,
+    /// The tenant's own network.
+    pub network: Network,
+    /// Seed for this tenant's synthetic weights.
+    pub weights_seed: u64,
+    /// Open-loop arrival rate in requests/second (JSON: absent/null means a
+    /// saturating burst, as at fleet level).
+    pub arrival_rps: f64,
+    /// Requests this tenant fires.
+    pub requests: usize,
+    /// Traffic shifts on top of `arrival_rps` (per-tenant load spikes).
+    pub load_steps: Vec<LoadStep>,
+    /// How this tenant's network is sharded across the fleet.
+    pub mode: ShardMode,
+    /// Replicated mode: cap on the number of replicas the placement planner
+    /// may take (`None` = every board with room). Capping a high-priority
+    /// tenant leaves fabric — including the board prefix a pipelined tenant
+    /// needs — free for lower classes.
+    pub replicas: Option<usize>,
+    pub slo: SloPolicy,
+}
+
+impl TenantSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("tenant: name must be non-empty".into());
+        }
+        self.network
+            .validate()
+            .map_err(|e| format!("tenant '{}': {e}", self.name))?;
+        if self.requests == 0 {
+            return Err(format!("tenant '{}': requests must be >= 1", self.name));
+        }
+        if !(self.arrival_rps > 0.0) {
+            return Err(format!(
+                "tenant '{}': arrival_rps must be > 0 (or omitted for a burst)",
+                self.name
+            ));
+        }
+        if self.replicas == Some(0) {
+            return Err(format!(
+                "tenant '{}': replicas must be >= 1 when set",
+                self.name
+            ));
+        }
+        let mut last_at = None;
+        for (i, st) in self.load_steps.iter().enumerate() {
+            if !(st.rps > 0.0) {
+                return Err(format!(
+                    "tenant '{}': load_steps[{i}].rps must be > 0",
+                    self.name
+                ));
+            }
+            if let Some(prev) = last_at {
+                if st.at_request <= prev {
+                    return Err(format!(
+                        "tenant '{}': load_steps must be ordered by at_request",
+                        self.name
+                    ));
+                }
+            }
+            last_at = Some(st.at_request);
+        }
+        self.slo
+            .validate()
+            .map_err(|e| format!("tenant '{}': {e}", self.name))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("network", self.network.to_json())
+            .set("weights_seed", self.weights_seed)
+            .set("requests", self.requests)
+            .set("mode", self.mode.as_str())
+            .set("slo", self.slo.to_json());
+        // As at fleet level, a saturating burst is encoded by omission.
+        if self.arrival_rps.is_finite() {
+            j = j.set("arrival_rps", self.arrival_rps);
+        }
+        if let Some(r) = self.replicas {
+            j = j.set("replicas", r);
+        }
+        if !self.load_steps.is_empty() {
+            let mut arr = Json::Arr(vec![]);
+            for s in &self.load_steps {
+                let mut o = Json::obj().set("at_request", s.at_request);
+                if s.rps.is_finite() {
+                    o = o.set("rps", s.rps);
+                }
+                arr = arr.push(o);
+            }
+            j = j.set("load_steps", arr);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<TenantSpec, String> {
+        let load_steps = parse_load_steps(j.get("load_steps"), "tenant")?;
+        let spec = TenantSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or("tenant: missing/invalid 'name'")?
+                .to_string(),
+            network: Network::from_json(j.get("network"))
+                .map_err(|e| format!("tenant network: {e}"))?,
+            weights_seed: j.get("weights_seed").as_u64().unwrap_or(1),
+            arrival_rps: match j.get("arrival_rps") {
+                Json::Null => f64::INFINITY,
+                v => v.as_f64().ok_or("tenant: invalid 'arrival_rps'")?,
+            },
+            requests: j
+                .get("requests")
+                .as_usize()
+                .ok_or("tenant: missing/invalid 'requests'")?,
+            load_steps,
+            mode: match j.get("mode") {
+                Json::Null => ShardMode::Replicated,
+                v => ShardMode::from_name(v.as_str().ok_or("tenant: invalid 'mode'")?)?,
+            },
+            replicas: match j.get("replicas") {
+                Json::Null => None,
+                v => Some(v.as_usize().ok_or("tenant: invalid 'replicas'")?),
+            },
+            slo: SloPolicy::from_json(j.get("slo"))?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Parse a `load_steps` JSON array (shared by the fleet-level and per-tenant
+/// forms; `ctx` names the owner in error messages).
+fn parse_load_steps(j: &Json, ctx: &str) -> Result<Vec<LoadStep>, String> {
+    match j {
+        Json::Null => Ok(Vec::new()),
+        v => v
+            .as_arr()
+            .ok_or_else(|| format!("{ctx}: 'load_steps' must be an array"))?
+            .iter()
+            .map(|s| -> Result<LoadStep, String> {
+                Ok(LoadStep {
+                    at_request: s
+                        .get("at_request")
+                        .as_usize()
+                        .ok_or_else(|| format!("{ctx}: load_step missing 'at_request'"))?,
+                    rps: match s.get("rps") {
+                        Json::Null => f64::INFINITY,
+                        v => v
+                            .as_f64()
+                            .ok_or_else(|| format!("{ctx}: invalid load_step 'rps'"))?,
+                    },
+                })
+            })
+            .collect(),
+    }
+}
+
 /// Configuration of a simulated multi-accelerator serving fleet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
@@ -190,6 +408,15 @@ pub struct ClusterConfig {
     /// Load-driven re-shard controller; `None` keeps the initial shard for
     /// the whole run.
     pub reshard: Option<ReshardPolicy>,
+    /// Tenants sharing this fleet. Empty means the classic single-network
+    /// simulation; non-empty switches `run_fleet` to the multi-tenant
+    /// placement planner + priority-aware simulator, and the fleet-level
+    /// `arrival_rps`/`requests`/`load_steps` fields are ignored in favor of
+    /// each tenant's own stream.
+    pub tenants: Vec<TenantSpec>,
+    /// Restart penalty in reference-clock cycles billed when a preempted
+    /// batch is re-served (context restore + pipeline refill).
+    pub preempt_restart_cycles: u64,
 }
 
 impl ClusterConfig {
@@ -210,6 +437,8 @@ impl ClusterConfig {
             max_batch: 8,
             max_wait_us: 200.0,
             reshard: None,
+            tenants: Vec::new(),
+            preempt_restart_cycles: 500,
         }
     }
 
@@ -332,6 +561,12 @@ impl ClusterConfig {
         if let Some(r) = &self.reshard {
             r.validate()?;
         }
+        for (i, t) in self.tenants.iter().enumerate() {
+            t.validate()?;
+            if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                return Err(format!("cluster: duplicate tenant name '{}'", t.name));
+            }
+        }
         Ok(())
     }
 
@@ -344,7 +579,8 @@ impl ClusterConfig {
             .set("requests", self.requests)
             .set("seed", self.seed)
             .set("max_batch", self.max_batch)
-            .set("max_wait_us", self.max_wait_us);
+            .set("max_wait_us", self.max_wait_us)
+            .set("preempt_restart_cycles", self.preempt_restart_cycles);
         if let Some(a) = self.aggregate_ddr_bytes_per_cycle {
             j = j.set("aggregate_ddr_bytes_per_cycle", a);
         }
@@ -373,6 +609,13 @@ impl ClusterConfig {
         if let Some(r) = &self.reshard {
             j = j.set("reshard", r.to_json());
         }
+        if !self.tenants.is_empty() {
+            let mut arr = Json::Arr(vec![]);
+            for t in &self.tenants {
+                arr = arr.push(t.to_json());
+            }
+            j = j.set("tenants", arr);
+        }
         j
     }
 
@@ -387,29 +630,19 @@ impl ClusterConfig {
                 .map(BoardSpec::from_json)
                 .collect::<Result<Vec<_>, _>>()?,
         };
-        let load_steps = match j.get("load_steps") {
-            Json::Null => Vec::new(),
-            v => v
-                .as_arr()
-                .ok_or("cluster: 'load_steps' must be an array")?
-                .iter()
-                .map(|s| -> Result<LoadStep, String> {
-                    Ok(LoadStep {
-                        at_request: s
-                            .get("at_request")
-                            .as_usize()
-                            .ok_or("cluster: load_step missing 'at_request'")?,
-                        rps: match s.get("rps") {
-                            Json::Null => f64::INFINITY,
-                            v => v.as_f64().ok_or("cluster: invalid load_step 'rps'")?,
-                        },
-                    })
-                })
-                .collect::<Result<Vec<_>, String>>()?,
-        };
+        let load_steps = parse_load_steps(j.get("load_steps"), "cluster")?;
         let reshard = match j.get("reshard") {
             Json::Null => None,
             v => Some(ReshardPolicy::from_json(v)?),
+        };
+        let tenants = match j.get("tenants") {
+            Json::Null => Vec::new(),
+            v => v
+                .as_arr()
+                .ok_or("cluster: 'tenants' must be an array")?
+                .iter()
+                .map(TenantSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
         };
         let cfg = ClusterConfig {
             boards: j
@@ -445,6 +678,11 @@ impl ClusterConfig {
             max_batch: j.get("max_batch").as_usize().unwrap_or(base.max_batch),
             max_wait_us: j.get("max_wait_us").as_f64().unwrap_or(base.max_wait_us),
             reshard,
+            tenants,
+            preempt_restart_cycles: j
+                .get("preempt_restart_cycles")
+                .as_u64()
+                .unwrap_or(base.preempt_restart_cycles),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -631,6 +869,146 @@ mod tests {
         assert!(c.validate().is_err());
     }
 
+    fn two_tenants() -> Vec<TenantSpec> {
+        use crate::config::network::{tiny_vgg, vgg16_prefix};
+        vec![
+            TenantSpec {
+                name: "interactive".to_string(),
+                network: vgg16_prefix(),
+                weights_seed: 1,
+                arrival_rps: 40.0,
+                requests: 64,
+                load_steps: vec![],
+                mode: ShardMode::Replicated,
+                replicas: None,
+                slo: SloPolicy {
+                    p99_ms: 80.0,
+                    priority: 2,
+                },
+            },
+            TenantSpec {
+                name: "batch".to_string(),
+                network: tiny_vgg(),
+                weights_seed: 2,
+                arrival_rps: f64::INFINITY,
+                requests: 128,
+                load_steps: vec![LoadStep {
+                    at_request: 32,
+                    rps: 500.0,
+                }],
+                mode: ShardMode::Replicated,
+                replicas: None,
+                slo: SloPolicy {
+                    p99_ms: 5000.0,
+                    priority: 0,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn json_roundtrip_tenants() {
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[0].replicas = Some(2);
+        c.preempt_restart_cycles = 1234;
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+        // Burst is encoded by omission on the tenant too, and so is an
+        // uncapped replica count.
+        assert!(back.tenants[1].arrival_rps.is_infinite());
+        assert_eq!(back.tenants[0].replicas, Some(2));
+        assert_eq!(back.tenants[1].replicas, None);
+        assert_eq!(back.tenants[0].slo.priority, 2);
+
+        // replicas: 0 is rejected.
+        let mut bad = ClusterConfig::fleet_default();
+        bad.tenants = two_tenants();
+        bad.tenants[0].replicas = Some(0);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn tenant_validation_rejects_bad_specs() {
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[1].name = "interactive".to_string(); // duplicate
+        assert!(c.validate().unwrap_err().contains("duplicate tenant"));
+
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[0].requests = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[0].slo.p99_ms = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[0].name = String::new();
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[1].load_steps = vec![
+            LoadStep {
+                at_request: 40,
+                rps: 10.0,
+            },
+            LoadStep {
+                at_request: 20,
+                rps: 20.0,
+            },
+        ];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn slo_priority_malformed_is_an_error_not_a_demotion() {
+        use crate::util::json::parse;
+        // Absent → lowest class.
+        let s = SloPolicy::from_json(&parse(r#"{"p99_ms": 5.0}"#).unwrap()).unwrap();
+        assert_eq!(s.priority, 0);
+        // Present but malformed → error (a silent priority-0 demotion would
+        // invert the preemption story without a diagnostic).
+        for bad in [
+            r#"{"p99_ms": 5.0, "priority": "2"}"#,
+            r#"{"p99_ms": 5.0, "priority": 2.5}"#,
+            r#"{"p99_ms": 5.0, "priority": 300}"#,
+            r#"{"p99_ms": 5.0, "priority": -1}"#,
+        ] {
+            assert!(
+                SloPolicy::from_json(&parse(bad).unwrap()).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn tenant_spec_parses_minimal_json() {
+        // Only name/network/requests/slo are required; everything else
+        // defaults (burst arrivals, replicated, seed 1).
+        let s = r#"{
+            "name": "t0",
+            "requests": 16,
+            "slo": {"p99_ms": 100.0, "priority": 1},
+            "network": {
+                "name": "n", "input": {"h": 8, "w": 8, "d": 3},
+                "layers": [{"type": "conv", "name": "c1", "kernel": 3,
+                            "filters": 4, "stride": 1, "padding": 1}]
+            }
+        }"#;
+        let t = TenantSpec::from_json(&crate::util::json::parse(s).unwrap()).unwrap();
+        assert_eq!(t.name, "t0");
+        assert!(t.arrival_rps.is_infinite());
+        assert_eq!(t.mode, ShardMode::Replicated);
+        assert_eq!(t.weights_seed, 1);
+        assert_eq!(t.slo.priority, 1);
+    }
+
     #[test]
     fn defaults_fill_optional_fields() {
         let c = ClusterConfig::from_json_str(r#"{"boards":3,"mode":"pipelined"}"#).unwrap();
@@ -641,5 +1019,10 @@ mod tests {
         assert!(c.board_specs.is_empty());
         assert!(c.load_steps.is_empty());
         assert!(c.reshard.is_none());
+        assert!(c.tenants.is_empty());
+        assert_eq!(
+            c.preempt_restart_cycles,
+            ClusterConfig::fleet_default().preempt_restart_cycles
+        );
     }
 }

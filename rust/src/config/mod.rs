@@ -5,5 +5,7 @@ pub mod cluster;
 pub mod network;
 
 pub use accel::{AccelConfig, Platform};
-pub use cluster::{BoardSpec, ClusterConfig, LoadStep, ReshardPolicy, ShardMode};
+pub use cluster::{
+    BoardSpec, ClusterConfig, LoadStep, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+};
 pub use network::{custom_4conv, paper_test_example, tiny_vgg, vgg16_full, vgg16_prefix, Layer, Network, VolShape};

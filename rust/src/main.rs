@@ -37,7 +37,8 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "mode", takes_value: true, help: "cluster: sharding mode: replicated | pipelined", default: Some("replicated") },
         OptSpec { name: "rate", takes_value: true, help: "cluster: open-loop arrival rate in req/s (omit for a saturating burst)", default: None },
         OptSpec { name: "aggregate-ddr", takes_value: true, help: "cluster: shared off-chip bandwidth pool in bytes/cycle (omit to disable contention)", default: None },
-        OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy)", default: None },
+        OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy, tenants)", default: None },
+        OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities and preemption", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
         OptSpec { name: "reshard", takes_value: false, help: "cluster: enable the load-driven re-shard controller (default policy)", default: None },
         OptSpec { name: "clients", takes_value: true, help: "serve: concurrent client threads", default: Some("4") },
@@ -326,7 +327,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     let net = load_net(args)?;
     let cfg = AccelConfig::paper_default();
 
-    let ccfg = match args.opt("cluster-config") {
+    let mut ccfg = match args.opt("cluster-config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| format!("reading cluster config '{path}': {e}"))?;
@@ -344,10 +345,21 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             if args.has_flag("reshard") {
                 c.reshard = Some(decoilfnet::config::ReshardPolicy::default_policy());
             }
-            c.validate()?;
             c
         }
     };
+    if let Some(path) = args.opt("tenants") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading tenants '{path}': {e}"))?;
+        let j = decoilfnet::util::json::parse(&text).map_err(|e| format!("tenants json: {e}"))?;
+        ccfg.tenants = j
+            .as_arr()
+            .ok_or("tenants file must contain a JSON array of TenantSpec objects")?
+            .iter()
+            .map(decoilfnet::config::TenantSpec::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    ccfg.validate()?;
 
     let board_counts: Vec<usize> = if args.has_flag("sweep") {
         (1..=ccfg.boards).collect()
@@ -425,6 +437,27 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                     e.migration_bytes as f64 / (1024.0 * 1024.0),
                     e.stall_cycles
                 );
+            }
+            if !r.tenants.is_empty() {
+                let mut tt = Table::new(&[
+                    "tenant", "prio", "req/s", "p50 ms", "p99 ms", "slo p99 ms", "slo",
+                    "preempted",
+                ])
+                .title(&format!("per-tenant SLOs ({} boards)", r.boards))
+                .label_col();
+                for t in &r.tenants {
+                    tt.row(&[
+                        t.name.clone(),
+                        t.priority.to_string(),
+                        format!("{:.1}", t.throughput_rps),
+                        format!("{:.2}", t.p50_ms),
+                        format!("{:.2}", t.p99_ms),
+                        format!("{:.2}", t.slo_p99_ms),
+                        if t.slo_met { "MET" } else { "MISSED" }.to_string(),
+                        t.preemptions.to_string(),
+                    ]);
+                }
+                println!("{}", tt.to_ascii());
             }
         }
     }

@@ -71,6 +71,17 @@ impl Resources {
         }
     }
 
+    /// Component-wise saturating subtraction (used to split an envelope into
+    /// shared-shell and incremental parts).
+    pub fn saturating_sub(&self, other: Resources) -> Resources {
+        Resources {
+            dsp: self.dsp.saturating_sub(other.dsp),
+            bram18: self.bram18.saturating_sub(other.bram18),
+            lut: self.lut.saturating_sub(other.lut),
+            ff: self.ff.saturating_sub(other.ff),
+        }
+    }
+
     /// Does this fit the platform budget?
     pub fn fits(&self, cfg: &AccelConfig) -> bool {
         let p = &cfg.platform;
@@ -153,6 +164,21 @@ pub fn layer_resources(cfg: &AccelConfig, net: &Network, li: usize) -> Resources
                 ff: in_sh.d * wb,
             }
         }
+    }
+}
+
+/// The fixed per-board infrastructure folded into every [`group_resources`]
+/// envelope: AXI/DDR interfacing, stream routing and control (the `CAL_*`
+/// fixed terms plus the control DSPs). One board instantiates this shell
+/// once, however many tenants it hosts — the multi-tenant placement planner
+/// bills it per board and stacks each resident's *incremental* fabric
+/// (`envelope − shell`) on top.
+pub fn shell_resources() -> Resources {
+    Resources {
+        dsp: CAL_DSP_OVERHEAD,
+        bram18: 0,
+        lut: CAL_LUT_FIXED,
+        ff: CAL_FF_FIXED,
     }
 }
 

@@ -1,0 +1,115 @@
+//! Portable deterministic math kernels.
+//!
+//! The workload samplers feed committed golden fixtures
+//! (`tests/fixtures/`), so every float op on their path must produce the
+//! same bits on every platform. IEEE-754 add/mul/div are exact by spec, but
+//! `f64::ln` routes to the platform libm, whose last-ulp behavior differs
+//! across libc versions — enough to shift a rounded arrival cycle and
+//! cascade through a whole simulated schedule. This module provides a
+//! deterministic natural log built only from exactly-specified operations
+//! (bit manipulation, add/mul/div), accurate to a couple of ulp — sampling
+//! quality is unaffected, and the result is bit-identical everywhere.
+
+use std::f64::consts::{LN_2, SQRT_2};
+
+/// Deterministic natural logarithm for finite `x > 0`.
+///
+/// Decomposes `x = m·2^e` with `m ∈ (√2/2, √2]`, then evaluates
+/// `ln m = 2·atanh(t)` for `t = (m−1)/(m+1)` (|t| ≤ 0.1716) with a fixed
+/// 12-term odd series in Horner form. Every step is an exactly-specified
+/// IEEE-754 operation, so the result is bit-identical on every conforming
+/// platform (unlike the libm `f64::ln`).
+pub fn ln_det(x: f64) -> f64 {
+    assert!(x > 0.0 && x.is_finite(), "ln_det domain: 0 < x < inf, got {x}");
+    let mut bits = x.to_bits();
+    let mut e = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    if e == -1023 {
+        // Subnormal: renormalize by 2^54 (exact).
+        bits = (x * 18_014_398_509_481_984.0).to_bits();
+        e = ((bits >> 52) & 0x7ff) as i64 - 1023 - 54;
+    }
+    let mut m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000);
+    if m > SQRT_2 {
+        m *= 0.5;
+        e += 1;
+    }
+    let t = (m - 1.0) / (m + 1.0);
+    let t2 = t * t;
+    // Σ_{j=0..11} t²ʲ/(2j+1), Horner over t².
+    let mut p = 1.0 / 23.0;
+    p = p * t2 + 1.0 / 21.0;
+    p = p * t2 + 1.0 / 19.0;
+    p = p * t2 + 1.0 / 17.0;
+    p = p * t2 + 1.0 / 15.0;
+    p = p * t2 + 1.0 / 13.0;
+    p = p * t2 + 1.0 / 11.0;
+    p = p * t2 + 1.0 / 9.0;
+    p = p * t2 + 1.0 / 7.0;
+    p = p * t2 + 1.0 / 5.0;
+    p = p * t2 + 1.0 / 3.0;
+    p = p * t2 + 1.0;
+    e as f64 * LN_2 + 2.0 * t * p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_libm_closely_over_wide_range() {
+        // A couple of ulp of agreement with the platform ln is plenty — the
+        // point is determinism, not replacing libm.
+        let mut x = 1e-12f64;
+        while x < 1e12 {
+            let got = ln_det(x);
+            let want = x.ln();
+            let tol = 1e-14 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() <= tol,
+                "ln_det({x}) = {got} vs libm {want}"
+            );
+            x *= 1.318;
+        }
+    }
+
+    #[test]
+    fn exact_anchors() {
+        assert_eq!(ln_det(1.0), 0.0);
+        // ln 2 and ln ½ come straight off the exponent path.
+        assert_eq!(ln_det(2.0), LN_2);
+        assert_eq!(ln_det(0.5), -LN_2);
+        assert_eq!(ln_det(4.0), 2.0 * LN_2);
+    }
+
+    #[test]
+    fn subnormal_inputs_are_handled() {
+        let tiny = f64::from_bits(1); // smallest positive subnormal
+        let got = ln_det(tiny);
+        let want = tiny.ln();
+        assert!((got - want).abs() < 1e-11 * want.abs(), "{got} vs {want}");
+    }
+
+    #[test]
+    #[should_panic(expected = "ln_det domain")]
+    fn rejects_nonpositive() {
+        ln_det(0.0);
+    }
+
+    #[test]
+    fn unit_interval_samples_match_libm() {
+        // The sampler's actual domain: 1 − u for u ∈ [0, 1).
+        let mut u = 1e-16f64;
+        while u < 1.0 {
+            let x = 1.0 - u;
+            if x > 0.0 {
+                let got = ln_det(x);
+                let want = x.ln();
+                assert!(
+                    (got - want).abs() <= 1e-14 * want.abs().max(1e-300),
+                    "ln_det({x}) = {got} vs {want}"
+                );
+            }
+            u *= 1.7;
+        }
+    }
+}

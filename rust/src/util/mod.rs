@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod math;
 pub mod prng;
 pub mod prop;
 pub mod stats;

@@ -7,7 +7,7 @@
 use decoilfnet::accel::latency::group_cost_estimate;
 use decoilfnet::accel::{FusionPlan, Weights};
 use decoilfnet::cluster::{
-    balance_min_max, plan_fleet, run_fleet, sim_legacy, simulate_fleet, simulate_fleet_dynamic,
+    balance_min_max, plan_fleet, run_fleet, simulate_fleet, simulate_fleet_dynamic,
     InterBoardLink, ShardPlan,
 };
 use decoilfnet::config::{
@@ -46,6 +46,8 @@ fn ideal_cfg(boards: usize, mode: ShardMode, requests: usize) -> ClusterConfig {
         max_batch: 1,
         max_wait_us: 0.0,
         reshard: None,
+        tenants: vec![],
+        preempt_restart_cycles: 500,
     }
 }
 
@@ -326,66 +328,6 @@ fn load_step_reshard_recovers_static_throughput() {
         "re-sharding made things worse: {} vs frozen {}",
         r_dyn.throughput_rps,
         r_frozen.throughput_rps
-    );
-}
-
-#[test]
-fn event_queue_rewrite_matches_legacy_on_load_step_fixture() {
-    // Acceptance: the event-queue simulators produce byte-identical
-    // `FleetReport` JSON to the pre-rewrite linear walks on the PR-2 hetero
-    // load-step fixture — naive cuts on a 2-fast + 2-slow fleet, traffic
-    // stepping past capacity, re-shard controller armed.
-    let (cfg, net, w) = setup();
-    let fleet = vec![cfg.clone(), cfg.clone(), slow_gen(&cfg), slow_gen(&cfg)];
-    let plan = FusionPlan::unfused(7);
-    let totals: Vec<u64> = plan
-        .groups()
-        .iter()
-        .map(|g| group_cost_estimate(&cfg, &net, g.clone()).total())
-        .collect();
-    let cuts = balance_min_max(&totals, fleet.len().min(totals.len()));
-    let naive = ShardPlan::pipelined_fleet_with_cuts(&fleet, &net, &w, &plan, &cuts);
-
-    let mut ccfg = ClusterConfig::fleet_default();
-    ccfg.boards = 4;
-    ccfg.mode = ShardMode::Pipelined;
-    ccfg.aggregate_ddr_bytes_per_cycle = None;
-    ccfg.requests = 256;
-    ccfg.max_batch = 8;
-    ccfg.seed = 3;
-    let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
-    let naive_cap = naive.capacity_rps(ccfg.max_batch, &link, cfg.platform.freq_mhz);
-    let naive_item_ms: f64 = naive.shards.iter().map(|s| s.item_us()).sum::<f64>() / 1e3;
-    ccfg.arrival_rps = 0.4 * naive_cap;
-    ccfg.load_steps = vec![LoadStep {
-        at_request: 64,
-        rps: 1.25 * naive_cap,
-    }];
-    ccfg.reshard = Some(ReshardPolicy {
-        window: 24,
-        util_skew: 0.25,
-        p99_ms: 2.5 * naive_item_ms,
-        cooldown_windows: 1,
-        migration_factor: 1.0,
-    });
-
-    let fast = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, naive.clone(), &ccfg);
-    let slow = sim_legacy::simulate_fleet_dynamic(&cfg, &fleet, &net, &w, naive.clone(), &ccfg);
-    assert_eq!(
-        fast.to_json().to_string_pretty(),
-        slow.to_json().to_string_pretty(),
-        "dynamic event-queue simulator diverged from the legacy walk"
-    );
-
-    // Static scheduler on the same fleet shape, both shard modes.
-    let mut static_cfg = ccfg.clone();
-    static_cfg.reshard = None;
-    let fast = simulate_fleet(&cfg, &naive, &static_cfg);
-    let slow = sim_legacy::simulate_fleet(&cfg, &naive, &static_cfg);
-    assert_eq!(
-        fast.to_json().to_string_pretty(),
-        slow.to_json().to_string_pretty(),
-        "static event-queue simulator diverged from the legacy walk"
     );
 }
 

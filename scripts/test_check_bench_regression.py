@@ -1,0 +1,178 @@
+"""Unit tests for check_bench_regression.py (pure stdlib; the CI bench job
+runs them before gating real metrics).
+
+Covered behaviors, per the module docstring's contract:
+  * direction handling — "higher" fails on drops, "lower" fails on rises,
+    and improvements never fail;
+  * "gate": false exemption — drift is reported but never fails the pair;
+  * multi-pair mode — one bad pair fails the whole invocation;
+  * missing tracked metric — fails; missing gate-exempt metric — does not;
+  * seed mode — an unseeded or absent baseline schema-checks instead of
+    gating; malformed current output fails.
+
+Run: python3 -m unittest discover -s scripts
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import check_bench_regression as cbr
+
+
+def doc(metrics, seeded=True, schema="decoilfnet-test-bench/v1"):
+    return {"schema": schema, "seeded": seeded, "metrics": metrics}
+
+
+def metric(value, better="higher", gate=None):
+    m = {"value": value, "better": better}
+    if gate is not None:
+        m["gate"] = gate
+    return m
+
+
+class CheckPairBase(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+        self._n = 0
+
+    def write(self, payload):
+        self._n += 1
+        path = os.path.join(self.dir.name, f"doc{self._n}.json")
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(payload, f)
+        return path
+
+    def check(self, baseline, current, tol=0.10):
+        return cbr.check_pair(self.write(baseline), self.write(current), tol, False)
+
+
+class DirectionHandling(CheckPairBase):
+    def test_higher_metric_fails_on_regression(self):
+        base = doc({"rps": metric(100.0, "higher")})
+        self.assertFalse(self.check(base, doc({"rps": metric(80.0, "higher")})))
+
+    def test_higher_metric_passes_within_tolerance(self):
+        base = doc({"rps": metric(100.0, "higher")})
+        self.assertTrue(self.check(base, doc({"rps": metric(91.0, "higher")})))
+
+    def test_higher_metric_improvement_passes(self):
+        base = doc({"rps": metric(100.0, "higher")})
+        self.assertTrue(self.check(base, doc({"rps": metric(150.0, "higher")})))
+
+    def test_lower_metric_fails_on_rise(self):
+        base = doc({"p99": metric(10.0, "lower")})
+        self.assertFalse(self.check(base, doc({"p99": metric(12.0, "lower")})))
+
+    def test_lower_metric_improvement_passes(self):
+        base = doc({"p99": metric(10.0, "lower")})
+        self.assertTrue(self.check(base, doc({"p99": metric(5.0, "lower")})))
+
+    def test_zero_baseline_is_skipped(self):
+        base = doc({"ratio": metric(0.0, "higher")})
+        self.assertTrue(self.check(base, doc({"ratio": metric(-5.0, "higher")})))
+
+    def test_tolerance_is_respected(self):
+        base = doc({"rps": metric(100.0, "higher")})
+        cur = doc({"rps": metric(75.0, "higher")})
+        self.assertFalse(self.check(base, cur, tol=0.10))
+        self.assertTrue(self.check(base, cur, tol=0.30))
+
+
+class GateExemption(CheckPairBase):
+    def test_exempt_drift_does_not_fail(self):
+        base = doc({"wallclock": metric(100.0, "higher", gate=False)})
+        self.assertTrue(self.check(base, doc({"wallclock": metric(10.0, "higher")})))
+
+    def test_exempt_metric_may_disappear(self):
+        base = doc({"wallclock": metric(100.0, "higher", gate=False)})
+        self.assertTrue(self.check(base, doc({"other": metric(1.0)})))
+
+    def test_gated_metric_disappearing_fails(self):
+        base = doc({"rps": metric(100.0, "higher")})
+        self.assertFalse(self.check(base, doc({"other": metric(1.0)})))
+
+    def test_mixed_gated_and_exempt(self):
+        base = doc(
+            {
+                "rps": metric(100.0, "higher"),
+                "wallclock": metric(50.0, "higher", gate=False),
+            }
+        )
+        cur = doc({"rps": metric(99.0, "higher"), "wallclock": metric(1.0, "higher")})
+        self.assertTrue(self.check(base, cur))
+
+
+class SeedMode(CheckPairBase):
+    def test_unseeded_baseline_schema_checks_only(self):
+        base = doc({"rps": metric(100.0)}, seeded=False)
+        self.assertTrue(self.check(base, doc({"rps": metric(1.0)})))
+
+    def test_absent_baseline_is_seed_mode(self):
+        cur = self.write(doc({"rps": metric(1.0)}))
+        missing = os.path.join(self.dir.name, "nope.json")
+        self.assertTrue(cbr.check_pair(missing, cur, 0.10, False))
+
+    def test_malformed_current_fails_even_in_seed_mode(self):
+        cur = self.write({"schema": "bogus", "metrics": {}})
+        missing = os.path.join(self.dir.name, "nope.json")
+        self.assertFalse(cbr.check_pair(missing, cur, 0.10, False))
+
+    def test_schema_mismatch_fails(self):
+        base = doc({"rps": metric(100.0)}, schema="decoilfnet-aaa-bench/v1")
+        cur = doc({"rps": metric(100.0)}, schema="decoilfnet-bbb-bench/v1")
+        self.assertFalse(self.check(base, cur))
+
+    def test_current_metric_without_direction_fails_schema(self):
+        base = doc({"rps": metric(100.0)})
+        cur = doc({"rps": {"value": 100.0, "better": "sideways"}})
+        self.assertFalse(self.check(base, cur))
+
+
+class MultiPairMain(CheckPairBase):
+    def run_main(self, argv):
+        old = sys.argv
+        sys.argv = ["check_bench_regression.py"] + argv
+        try:
+            return cbr.main()
+        finally:
+            sys.argv = old
+
+    def test_two_good_pairs_pass(self):
+        b1 = self.write(doc({"a": metric(1.0)}))
+        c1 = self.write(doc({"a": metric(1.0)}))
+        b2 = self.write(doc({"b": metric(2.0, "lower")}))
+        c2 = self.write(doc({"b": metric(2.0, "lower")}))
+        self.assertEqual(self.run_main([b1, c1, b2, c2]), 0)
+
+    def test_one_bad_pair_fails_the_invocation(self):
+        b1 = self.write(doc({"a": metric(1.0)}))
+        c1 = self.write(doc({"a": metric(1.0)}))
+        b2 = self.write(doc({"b": metric(100.0, "higher")}))
+        c2 = self.write(doc({"b": metric(1.0, "higher")}))
+        self.assertEqual(self.run_main([b1, c1, b2, c2]), 1)
+        # Order must not matter: bad pair first fails too.
+        self.assertEqual(self.run_main([b2, c2, b1, c1]), 1)
+
+    def test_odd_file_count_is_a_usage_error(self):
+        b1 = self.write(doc({"a": metric(1.0)}))
+        with self.assertRaises(SystemExit) as ctx:
+            self.run_main([b1])
+        self.assertEqual(ctx.exception.code, 2)
+
+    def test_write_baseline_copies_current(self):
+        base = doc({"a": metric(1.0)})
+        cur = doc({"a": metric(1.05)})
+        bpath, cpath = self.write(base), self.write(cur)
+        self.assertTrue(cbr.check_pair(bpath, cpath, 0.10, True))
+        with open(bpath, encoding="utf-8") as f:
+            self.assertEqual(json.load(f)["metrics"]["a"]["value"], 1.05)
+
+
+if __name__ == "__main__":
+    unittest.main()
