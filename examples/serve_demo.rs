@@ -1,4 +1,4 @@
-//! Serving demo, three tiers:
+//! Serving demo, five tiers:
 //!
 //! 1. **Fleet simulation** (always runs): the cluster subsystem plans a
 //!    multi-board shard of the VGG prefix, drives it with open-loop traffic,
@@ -13,7 +13,11 @@
 //!    low-priority bulk tenant whose traffic spikes to a burst mid-run. The
 //!    spike floods the fleet; preemption cuts the interactive tenant
 //!    through, the bulk tenant absorbs the aborted batches.
-//! 4. **Live threaded server** (needs `make artifacts`): the coordinator
+//! 4. **Unified control plane** (always runs): a replica-capped interactive
+//!    stream's rate doubles mid-run; the tenant-aware re-shard controller
+//!    scales it onto both boards and the tail settles — shown in both
+//!    restart and work-preserving (resume) preemption modes.
+//! 5. **Live threaded server** (needs `make artifacts`): the coordinator
 //!    batching concurrent clients over the PJRT artifacts, with per-request
 //!    plan routing and live metrics.
 //!
@@ -29,8 +33,8 @@ use decoilfnet::cluster::{
     InterBoardLink, ShardPlan, TenantWorkload,
 };
 use decoilfnet::config::{
-    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, ReshardPolicy,
-    ShardMode, SloPolicy, TenantSpec,
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, PreemptMode,
+    ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
 };
 use decoilfnet::coordinator::{simulate_cluster, BatchPolicy, Server, ServerConfig};
 use decoilfnet::runtime::Runtime;
@@ -142,6 +146,7 @@ fn multi_tenant_demo() -> Result<(), String> {
             slo: SloPolicy {
                 p99_ms: 1.0,
                 priority: 2,
+                weight: 1.0,
             },
         },
         TenantSpec {
@@ -159,6 +164,7 @@ fn multi_tenant_demo() -> Result<(), String> {
             slo: SloPolicy {
                 p99_ms: 2.0,
                 priority: 0,
+                weight: 1.0,
             },
         },
     ];
@@ -194,7 +200,7 @@ fn multi_tenant_demo() -> Result<(), String> {
     println!(
         "== multi-tenant priorities: 2 tenants on 2 shared boards, bulk spike at request 16 =="
     );
-    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
     for t in &r.tenants {
         println!(
             "  {:>12} (prio {}): {:7.1} req/s  p50 {:7.3} ms  p99 {:7.3} ms  \
@@ -217,10 +223,122 @@ fn multi_tenant_demo() -> Result<(), String> {
     Ok(())
 }
 
+/// The unified control plane: a replica-capped interactive stream whose
+/// rate doubles mid-run past its board's capacity. The tenant-aware
+/// controller sees its window p99 blow the SLO, uncaps it onto both boards
+/// (billing the weight migration), and the tail settles again — with
+/// work-preserving preemption saving cycles over full restarts throughout.
+fn unified_control_plane_demo() -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = vec![
+        TenantSpec {
+            name: "stream".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 7500.0,
+            requests: 320,
+            load_steps: vec![LoadStep {
+                at_request: 96,
+                rps: 15000.0,
+            }],
+            mode: ShardMode::Replicated,
+            replicas: Some(1),
+            slo: SloPolicy {
+                p99_ms: 0.5,
+                priority: 2,
+                weight: 1.0,
+            },
+        },
+        TenantSpec {
+            name: "bulk".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: f64::INFINITY,
+            requests: 64,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5000.0,
+                priority: 0,
+                weight: 1.0,
+            },
+        },
+    ];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads)?;
+
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.boards = 2;
+    ccfg.aggregate_ddr_bytes_per_cycle = None;
+    ccfg.max_batch = 8;
+    ccfg.max_wait_us = 0.0;
+    ccfg.seed = 11;
+    ccfg.reshard = Some(ReshardPolicy {
+        window: 48,
+        util_skew: 0.9,
+        p99_ms: 50.0, // per-tenant SLOs supersede this on the unified path
+        cooldown_windows: 1,
+        migration_factor: 1.0,
+    });
+
+    println!(
+        "== unified control plane: capped stream, rate 7.5k -> 15k req/s at request 96 =="
+    );
+    for mode in [PreemptMode::Restart, PreemptMode::Resume] {
+        let mut c = ccfg.clone();
+        c.preempt_mode = mode;
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &c);
+        for e in &r.reshard_events {
+            println!(
+                "  [{}] reshard @ cycle {} tenant {}: {} -> {} ({})",
+                mode.as_str(),
+                e.at_cycle,
+                e.tenant.as_deref().unwrap_or("?"),
+                e.from,
+                e.to,
+                e.reason
+            );
+        }
+        let billed: u64 = r.per_board.iter().map(|b| b.busy_cycles).sum();
+        let stream = &r.tenants[0];
+        println!(
+            "  [{}] stream p99 {:7.3} ms  tail p99 {:7.3} ms  bulk preempted {}  \
+             billed {} cycles",
+            mode.as_str(),
+            stream.p99_ms,
+            stream.tail_p99_ms.unwrap_or(f64::NAN),
+            r.tenants[1].preemptions,
+            billed,
+        );
+    }
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     fleet_demo().map_err(anyhow::Error::msg)?;
     hetero_reshard_demo().map_err(anyhow::Error::msg)?;
     multi_tenant_demo().map_err(anyhow::Error::msg)?;
+    unified_control_plane_demo().map_err(anyhow::Error::msg)?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {

@@ -17,6 +17,11 @@
 //!    low-priority tenant's burst grows across the sweep while the
 //!    high-priority tenant's p99 must stay flat — preemption isolates the
 //!    interactive tail from the bulk flood.
+//! 5. **Unified control plane**: a replica-capped stream's load step blows
+//!    its SLO, the tenant-aware re-shard controller scales it out, and the
+//!    post-settle tail recovers to ≤1.1× its pre-step value — with
+//!    work-preserving (`resume`) preemption billing fewer cycles than
+//!    restart on the same trace (`mt_reshard_*` rows, gate-exempt).
 //!
 //! Deterministic by construction (seeded arrivals, closed-form service
 //! times — no wall-clock anywhere), so the emitted metrics are
@@ -31,8 +36,8 @@ use decoilfnet::cluster::{
     simulate_fleet_multi_tenant, InterBoardLink, ShardPlan, TenantWorkload,
 };
 use decoilfnet::config::{
-    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, ReshardPolicy,
-    ShardMode, SloPolicy, TenantSpec,
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, PreemptMode,
+    ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
 };
 use decoilfnet::coordinator::{best_plan, Objective};
 use decoilfnet::util::json::Json;
@@ -66,6 +71,8 @@ fn sweep_cfg(boards: usize, mode: ShardMode, aggregate: Option<f64>) -> ClusterC
         reshard: None,
         tenants: vec![],
         preempt_restart_cycles: 500,
+        preempt_mode: PreemptMode::Restart,
+        preempt_refill_cycles: 100,
     }
 }
 
@@ -396,6 +403,7 @@ fn main() {
                 slo: SloPolicy {
                     p99_ms: 1.0,
                     priority: 2,
+                    weight: 1.0,
                 },
             },
             TenantSpec {
@@ -410,6 +418,7 @@ fn main() {
                 slo: SloPolicy {
                     p99_ms: 2.0,
                     priority: 0,
+                    weight: 1.0,
                 },
             },
         ];
@@ -435,7 +444,7 @@ fn main() {
         mt_cfg.max_batch = 8;
         mt_cfg.max_wait_us = 0.0;
         mt_cfg.seed = 7;
-        let r = simulate_fleet_multi_tenant(&cfg, &mt_fleet, &specs, &plans, &mt_cfg);
+        let r = simulate_fleet_multi_tenant(&cfg, &mt_fleet, &specs, &tw, &plans, &mt_cfg);
         let hi = &r.tenants[0];
         let lo = &r.tenants[1];
         assert_eq!(hi.completed + lo.completed, r.completed, "conservation");
@@ -462,6 +471,132 @@ fn main() {
             "flood {n}: interactive tail {hi_p99} must stay below bulk {lo_p99}"
         );
     }
+
+    // ------------------------------------------------------------------
+    // Act 5: the unified control plane — tenant-aware re-sharding under a
+    // load step, restart vs work-preserving preemption. A capped stream's
+    // rate doubles past its single board's capacity; the controller uncaps
+    // it onto both boards; the post-settle tail must recover to within
+    // 1.1× the pre-step tail while Resume bills fewer cycles than Restart.
+    // ------------------------------------------------------------------
+    let mk_stream = |requests: usize, with_step: bool| TenantSpec {
+        name: "stream".to_string(),
+        network: tiny.clone(),
+        weights_seed: 1,
+        arrival_rps: 7500.0,
+        requests,
+        load_steps: if with_step {
+            vec![LoadStep {
+                at_request: 96,
+                rps: 15000.0,
+            }]
+        } else {
+            vec![]
+        },
+        mode: ShardMode::Replicated,
+        replicas: Some(1),
+        slo: SloPolicy {
+            p99_ms: 0.5,
+            priority: 2,
+            weight: 1.0,
+        },
+    };
+    let mk_bulk = || TenantSpec {
+        name: "bulk".to_string(),
+        network: tiny.clone(),
+        weights_seed: 2,
+        arrival_rps: f64::INFINITY,
+        requests: 64,
+        load_steps: vec![],
+        mode: ShardMode::Replicated,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 5000.0,
+            priority: 0,
+            weight: 1.0,
+        },
+    };
+    let run_unified = |specs: &[TenantSpec], mode: PreemptMode, reshard: bool| {
+        let tw: Vec<Weights> = specs
+            .iter()
+            .map(|s| Weights::random(&s.network, s.weights_seed))
+            .collect();
+        let workloads: Vec<TenantWorkload> = specs
+            .iter()
+            .zip(&tw)
+            .map(|(s, w)| TenantWorkload {
+                name: &s.name,
+                net: &s.network,
+                weights: w,
+                plan: &tiny_fused,
+                mode: s.mode,
+                priority: s.slo.priority,
+                replicas: s.replicas,
+            })
+            .collect();
+        let plans = place_tenants(&mt_fleet, &workloads).expect("tenants place");
+        let mut c = sweep_cfg(2, ShardMode::Replicated, None);
+        c.max_batch = 8;
+        c.max_wait_us = 0.0;
+        c.seed = 11;
+        c.link_bytes_per_cycle = 16.0;
+        c.link_latency_cycles = 64;
+        c.preempt_mode = mode;
+        c.preempt_refill_cycles = 100;
+        if reshard {
+            c.reshard = Some(ReshardPolicy {
+                window: 48,
+                util_skew: 0.9,
+                p99_ms: 50.0,
+                cooldown_windows: 1,
+                migration_factor: 1.0,
+            });
+        }
+        simulate_fleet_multi_tenant(&cfg, &mt_fleet, specs, &tw, &plans, &c)
+    };
+    let billed = |r: &decoilfnet::cluster::FleetReport| {
+        r.per_board.iter().map(|b| b.busy_cycles).sum::<u64>()
+    };
+    // Pre-step reference: same seed, stream truncated before the step.
+    let ref_specs = vec![mk_stream(96, false), mk_bulk()];
+    let r_ref = run_unified(&ref_specs, PreemptMode::Restart, true);
+    assert!(r_ref.reshard_events.is_empty(), "reference must not trigger");
+    let step_specs = vec![mk_stream(320, true), mk_bulk()];
+    let r_restart = run_unified(&step_specs, PreemptMode::Restart, true);
+    let r_resume = run_unified(&step_specs, PreemptMode::Resume, true);
+    let r_frozen = run_unified(&step_specs, PreemptMode::Restart, false);
+    assert!(
+        !r_restart.reshard_events.is_empty() && !r_resume.reshard_events.is_empty(),
+        "the load step must trigger a tenant-aware re-shard"
+    );
+    let tail = |r: &decoilfnet::cluster::FleetReport| {
+        r.tenants[0].tail_p99_ms.expect("armed controller reports tails")
+    };
+    let recovery = tail(&r_restart) / r_ref.tenants[0].p99_ms;
+    assert!(
+        recovery <= 1.1,
+        "post-reshard tail p99 must recover to <= 1.1x pre-step: {recovery:.3}"
+    );
+    let saved = billed(&r_restart).saturating_sub(billed(&r_resume));
+    assert!(saved > 0, "resume must bill fewer cycles than restart");
+    println!(
+        "unified control plane (stream 7.5k→15k req/s at request 96, 1→2 replicas):\n\
+         pre-step p99   {:8.4} ms\n\
+         frozen p99     {:8.4} ms  (no controller — tail stays blown)\n\
+         restart: {} reshard(s), tail p99 {:8.4} ms, billed {} cycles\n\
+         resume:  {} reshard(s), tail p99 {:8.4} ms, billed {} cycles  (saved {})\n\
+         recovery: {:.3} of the pre-step tail (gate: <= 1.1)",
+        r_ref.tenants[0].p99_ms,
+        r_frozen.tenants[0].p99_ms,
+        r_restart.reshard_events.len(),
+        tail(&r_restart),
+        billed(&r_restart),
+        r_resume.reshard_events.len(),
+        tail(&r_resume),
+        billed(&r_resume),
+        saved,
+        recovery,
+    );
 
     // ------------------------------------------------------------------
     // BENCH_cluster.json: the tracked trajectory point. Every value here is
@@ -538,6 +673,38 @@ fn main() {
                     exempt(*preempted as f64, "lower"),
                 );
         }
+        // Unified control plane sweep — gate-exempt until extended from a
+        // CI artifact (same arming path as the other mt_* rows).
+        m = m
+            .set("mt_reshard_recovery_ratio", exempt(recovery, "lower"))
+            .set(
+                "mt_reshard_events",
+                exempt(r_restart.reshard_events.len() as f64, "lower"),
+            )
+            .set(
+                "mt_reshard_tail_p99_ms_restart",
+                exempt(tail(&r_restart), "lower"),
+            )
+            .set(
+                "mt_reshard_tail_p99_ms_resume",
+                exempt(tail(&r_resume), "lower"),
+            )
+            .set(
+                "mt_reshard_billed_cycles_restart",
+                exempt(billed(&r_restart) as f64, "lower"),
+            )
+            .set(
+                "mt_reshard_billed_cycles_resume",
+                exempt(billed(&r_resume) as f64, "lower"),
+            )
+            .set(
+                "mt_reshard_resume_saved_cycles",
+                exempt(saved as f64, "higher"),
+            )
+            .set(
+                "mt_reshard_frozen_p99_ms",
+                exempt(r_frozen.tenants[0].p99_ms, "lower"),
+            );
         let out = Json::obj()
             .set("schema", "decoilfnet-cluster-bench/v1")
             .set("seeded", true)

@@ -19,7 +19,9 @@ use decoilfnet::accel::depth_concat::FilterBanks;
 use decoilfnet::accel::kernels::{self, conv2d_fx, naive, KernelScratch};
 use decoilfnet::accel::{FusionPlan, Weights};
 use decoilfnet::cluster::{simulate_fleet, simulate_fleet_dynamic, ShardPlan};
-use decoilfnet::config::{tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, Platform, ShardMode};
+use decoilfnet::config::{
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, Platform, PreemptMode, ShardMode,
+};
 use decoilfnet::tensor::NdTensor;
 use decoilfnet::util::bench::{BenchConfig, Bencher};
 use decoilfnet::util::json::Json;
@@ -168,6 +170,8 @@ fn main() {
         reshard: None,
         tenants: vec![],
         preempt_restart_cycles: 500,
+        preempt_mode: PreemptMode::Restart,
+        preempt_refill_cycles: 100,
     };
     // Determinism is the gated invariant now that the legacy differential
     // oracle retired: re-running a simulator must reproduce the report

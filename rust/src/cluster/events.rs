@@ -51,6 +51,22 @@ impl DeadlineQueue {
     pub fn pop(&mut self) -> Option<(u64, usize)> {
         self.heap.pop().map(|Reverse(e)| e)
     }
+
+    /// Earliest pending `(cycle, queue)` without popping it.
+    pub fn peek(&self) -> Option<(u64, usize)> {
+        self.heap.peek().map(|&Reverse(e)| e)
+    }
+
+    /// Pending event count (stale entries included — consumers validate at
+    /// fire time).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are pending — the simulators' drain invariant.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
 }
 
 /// Busy-board min-heap key: earliest `free_at` first; ties go to the faster
@@ -152,15 +168,22 @@ mod tests {
     #[test]
     fn deadline_queue_orders_and_bounds() {
         let mut q = DeadlineQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek(), None);
         q.schedule(30, 1);
         q.schedule(10, 2);
         q.schedule(20, 0);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek(), Some((10, 2)));
         assert_eq!(q.next_at_or_before(5), None);
         assert_eq!(q.next_at_or_before(25), Some((10, 2)));
         assert_eq!(q.next_at_or_before(25), Some((20, 0)));
         assert_eq!(q.next_at_or_before(25), None);
+        assert!(!q.is_empty());
         assert_eq!(q.pop(), Some((30, 1)));
         assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
     }
 
     /// One randomized operation against the queue: schedule an event, pop

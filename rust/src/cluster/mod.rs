@@ -25,14 +25,21 @@
 //! * a **re-shard controller** ([`simulate_fleet_dynamic`]): watches window
 //!   p99 and utilization skew under drifting load, re-plans the shard,
 //!   bills the migration, and reports every decision as a [`ReshardEvent`];
-//! * a **multi-tenant layer**: several networks share one fleet —
-//!   [`place_tenants`] packs per-tenant shard plans onto the boards under
-//!   joint fabric feasibility (one shared shell per board plus each
-//!   resident's incremental engine), and
+//! * a **unified multi-tenant control plane**: several networks share one
+//!   fleet — [`place_tenants`] packs per-tenant shard plans onto the boards
+//!   under joint fabric feasibility (one shared shell per board plus each
+//!   resident's incremental engine; the pipelined stage DP takes the boards
+//!   emptiest-first, so a chain routes around an occupied rack prefix), and
 //!   [`simulate_fleet_multi_tenant`] serves the merged per-tenant arrival
-//!   streams under strict priorities, preempting lower-priority batches
-//!   when a higher class is starved and reporting per-tenant
-//!   [`TenantStats`] (p50/p99, SLO attainment, preemption counts).
+//!   streams under strict priorities with deficit-weighted round-robin fair
+//!   sharing inside each class (`SloPolicy::weight`), work-preserving or
+//!   restart preemption (`PreemptMode`), and — with a
+//!   [`crate::config::ReshardPolicy`] armed — tenant-aware mid-run
+//!   re-placement
+//!   ([`place_tenants_biased`], SLO-missing tenants uncapped, coolest
+//!   boards first) with per-tenant migration billing and
+//!   [`ReshardEvent`]s, reporting per-tenant [`TenantStats`] (p50/p99, SLO
+//!   attainment, preemption counts, post-settle tail p99).
 //!
 //! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
 //! heterogeneous two-generation fleet sweep, a load-step re-sharding
@@ -45,7 +52,9 @@ pub mod shard;
 pub mod sim;
 
 pub use link::{InterBoardLink, LinkChannel};
-pub use shard::{balance_min_max, place_tenants, BoardShard, ShardPlan, TenantWorkload};
+pub use shard::{
+    balance_min_max, place_tenants, place_tenants_biased, BoardShard, ShardPlan, TenantWorkload,
+};
 pub use sim::{
     arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic,
     simulate_fleet_multi_tenant, tenant_seed, BoardStats, FleetReport, ReshardEvent, TenantStats,
@@ -162,10 +171,12 @@ pub fn plan_tenants(
 
 /// Convenience: plan the fleet and run the scheduler simulation in one
 /// call. With tenants configured, the multi-tenant placement planner and
-/// the priority-aware simulator run (`net` is ignored — every tenant brings
-/// its own network). Otherwise, with a re-shard policy configured, the
-/// dynamic controller simulator runs (and may migrate shards under load);
-/// else the static scheduler does.
+/// the unified control plane run (`net` is ignored — every tenant brings
+/// its own network); arming `ccfg.reshard` alongside tenants turns on
+/// tenant-aware re-sharding inside that engine (the CLI's combined
+/// `--reshard --tenants` path). Otherwise, with a re-shard policy
+/// configured, the single-network dynamic controller runs (and may migrate
+/// shards under load); else the static scheduler does.
 pub fn run_fleet(
     cfg: &AccelConfig,
     net: &Network,
@@ -173,11 +184,12 @@ pub fn run_fleet(
 ) -> Result<FleetReport, String> {
     if !ccfg.tenants.is_empty() {
         let fleet = ccfg.board_configs(cfg);
-        let (_weights, plans) = plan_tenants(cfg, ccfg)?;
+        let (weights, plans) = plan_tenants(cfg, ccfg)?;
         return Ok(simulate_fleet_multi_tenant(
             cfg,
             &fleet,
             &ccfg.tenants,
+            &weights,
             &plans,
             ccfg,
         ));
@@ -286,6 +298,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 10.0,
                     priority: 2,
+                    weight: 1.0,
                 },
             },
             TenantSpec {
@@ -300,6 +313,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 5000.0,
                     priority: 0,
+                    weight: 1.0,
                 },
             },
         ];
@@ -310,6 +324,39 @@ mod tests {
         assert_eq!(r.tenants[0].name, "hi");
         assert_eq!(r.tenants[0].completed, 24);
         assert_eq!(r.tenants[1].completed, 40);
+    }
+
+    #[test]
+    fn run_fleet_with_tenants_and_reshard_arms_the_unified_engine() {
+        use crate::config::{tiny_vgg, SloPolicy, TenantSpec};
+        let cfg = AccelConfig::paper_default();
+        let mut ccfg = ClusterConfig::fleet_default();
+        ccfg.boards = 2;
+        ccfg.reshard = Some(ReshardPolicy::default_policy());
+        ccfg.tenants = vec![TenantSpec {
+            name: "solo".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 500.0,
+            requests: 24,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 10.0,
+                priority: 1,
+                weight: 1.0,
+            },
+        }];
+        let r = run_fleet(&cfg, &vgg16_prefix(), &ccfg).unwrap();
+        assert_eq!(r.completed, 24);
+        // The armed controller reports the post-settle tail even when it
+        // never needs to move anything.
+        assert!(r.tenants[0].tail_p99_ms.is_some());
+        assert!(
+            r.reshard_events.is_empty(),
+            "an idle well-placed tenant must not churn"
+        );
     }
 
     #[test]

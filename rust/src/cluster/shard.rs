@@ -115,10 +115,13 @@ pub struct ShardPlan {
     /// when the plan has fewer groups).
     pub boards: usize,
     pub plan: FusionPlan,
-    /// One entry per *used* board, in fleet order. Single-tenant plans use a
-    /// board prefix (`shards[i].board == i`); multi-tenant placements
-    /// ([`place_tenants`]) may skip boards another tenant filled, so consumers
-    /// must index boards through `BoardShard::board`, not the shard position.
+    /// One entry per *used* board, in **stage order**. Single-tenant plans
+    /// use a board prefix (`shards[i].board == i`); multi-tenant placements
+    /// ([`place_tenants`]) may skip boards another tenant filled *and* may
+    /// permute pipelined stages off rack order entirely
+    /// ([`place_tenants_biased`] maps stage *s* to the *s*-th
+    /// emptiest/coolest board), so consumers must index boards through
+    /// `BoardShard::board`, not the shard position.
     pub shards: Vec<BoardShard>,
 }
 
@@ -366,12 +369,13 @@ pub struct TenantWorkload<'a> {
 ///   they need at least one, and may skip boards another tenant filled.
 /// * **Pipelined** tenants run the heterogeneity-aware stage DP with the
 ///   joint-residency feasibility predicate: a stage is only a candidate on
-///   a board whose remaining budget covers it. Like the single-tenant
-///   planner, the DP maps stage *i* to board *i* in rack order — a
-///   pipelined tenant cannot route around an occupied board prefix, so if
-///   an earlier tenant filled board 0 its placement fails even when later
-///   boards are free (place high-priority replicated tenants with a
-///   `replicas` cap, or rack-order the fleet, to leave the prefix open).
+///   a board whose remaining budget covers it. The DP is offered a board
+///   *permutation* — emptiest boards first (fewest residents, then lowest
+///   index; an explicit load bias first under
+///   [`place_tenants_biased`]) — so stage *i* maps to the *i*-th emptiest
+///   board instead of being pinned to rack slot *i*: a pipelined tenant now
+///   routes around a board prefix an earlier tenant filled instead of
+///   failing placement while later boards sit free.
 ///
 /// The returned plans are in the *input* tenant order, with
 /// [`BoardShard::board`] indexing the shared fleet (multi-tenant plans may
@@ -384,8 +388,24 @@ pub fn place_tenants(
     fleet: &[AccelConfig],
     tenants: &[TenantWorkload],
 ) -> Result<Vec<ShardPlan>, String> {
+    place_tenants_biased(fleet, tenants, &vec![0u64; fleet.len()])
+}
+
+/// [`place_tenants`] with an explicit per-board load bias: boards with a
+/// smaller `bias` are preferred (then fewer residents, then lower index)
+/// both for spreading replicated tenants and as the stage order offered to
+/// the pipelined DP. The unified control plane passes each board's busy
+/// cycles over the trigger window, so a mid-run re-placement steers new
+/// replicas and stages toward the boards the load actually left cool. A
+/// zero bias reduces to the static emptiest-first order.
+pub fn place_tenants_biased(
+    fleet: &[AccelConfig],
+    tenants: &[TenantWorkload],
+    bias: &[u64],
+) -> Result<Vec<ShardPlan>, String> {
     assert!(!fleet.is_empty());
     let nb = fleet.len();
+    assert_eq!(bias.len(), nb, "one bias entry per board");
     let shell = crate::resources::shell_resources();
     // Incremental fabric already resident per board, and resident count
     // (for the spread-before-stack ordering).
@@ -411,7 +431,7 @@ pub fn place_tenants(
                 let mut fitting: Vec<usize> = (0..nb)
                     .filter(|&b| joint_fits(&used, ctx.range_resources(b, 0..n), b))
                     .collect();
-                fitting.sort_by_key(|&b| (residents[b], b));
+                fitting.sort_by_key(|&b| (bias[b], residents[b], b));
                 let target = t.replicas.unwrap_or(nb).max(1);
                 fitting.truncate(target);
                 fitting.sort_unstable();
@@ -425,14 +445,19 @@ pub fn place_tenants(
             }
             ShardMode::Pipelined => {
                 let k = nb.min(n);
-                let totals: Vec<Vec<u64>> = ctx
-                    .costs
+                // Free placement: the DP sees boards emptiest-first (bias,
+                // residents, index), so stage s runs on perm[s] — an
+                // occupied or hot rack prefix no longer blocks the chain.
+                let mut perm: Vec<usize> = (0..nb).collect();
+                perm.sort_by_key(|&b| (bias[b], residents[b], b));
+                let totals: Vec<Vec<u64>> = perm
                     .iter()
-                    .map(|per_board| per_board.iter().map(|c| c.total()).collect())
+                    .map(|&b| ctx.costs[b].iter().map(|c| c.total()).collect())
                     .collect();
-                let freqs: Vec<f64> = fleet.iter().map(|c| c.platform.freq_mhz).collect();
-                let feasible = |b: usize, r: Range<usize>| {
-                    joint_fits(&used, ctx.range_resources(b, r), b)
+                let freqs: Vec<f64> =
+                    perm.iter().map(|&b| fleet[b].platform.freq_mhz).collect();
+                let feasible = |s: usize, r: Range<usize>| {
+                    joint_fits(&used, ctx.range_resources(perm[s], r), perm[s])
                 };
                 let cuts = balance_fleet(&totals, &freqs, &feasible, k).ok_or_else(|| {
                     format!(
@@ -442,7 +467,7 @@ pub fn place_tenants(
                 })?;
                 cuts.windows(2)
                     .enumerate()
-                    .map(|(b, w)| ctx.cost_range(w[0]..w[1], b))
+                    .map(|(s, w)| ctx.cost_range(w[0]..w[1], perm[s]))
                     .collect()
             }
         };
@@ -1137,6 +1162,133 @@ mod tests {
         for (b, r) in joint_residency(&plans, 3).iter().enumerate() {
             assert!(r.fits(&fleet[b]), "board {b} jointly overflows");
         }
+    }
+
+    #[test]
+    fn place_tenants_pipelined_routes_around_an_occupied_prefix() {
+        // Board 0 is filled by a high-priority fused-VGG replica (capped to
+        // one board). The old stage DP pinned stage i to board i, so the
+        // pipelined tenant's stage 0 had to co-reside on board 0 — which
+        // does not fit — and placement FAILED even though boards 1 and 2
+        // sat completely free. Free placement offers the DP the emptiest
+        // boards first and the chain routes around the occupied prefix.
+        let (cfg, net, w) = setup();
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        // First group fuses two 3×3 convs — wide enough that it can never
+        // co-reside with the anchor (a lone conv1_1 barely could).
+        let split = FusionPlan::from_group_sizes(7, &[2, 2, 3]).unwrap();
+        let w2 = Weights::random(&net, 2);
+        let tenants = [
+            TenantWorkload {
+                name: "anchor",
+                net: &net,
+                weights: &w,
+                plan: &fused,
+                mode: ShardMode::Replicated,
+                priority: 3,
+                replicas: Some(1),
+            },
+            TenantWorkload {
+                name: "piped",
+                net: &net,
+                weights: &w2,
+                plan: &split,
+                mode: ShardMode::Pipelined,
+                priority: 1,
+                replicas: None,
+            },
+        ];
+        let plans = place_tenants(&fleet, &tenants).unwrap();
+        let anchor_boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(anchor_boards, vec![0], "replica cap pins the anchor to board 0");
+
+        // The premise the old pinning tripped on: no stage-0 prefix of the
+        // pipelined plan fits board 0 jointly with the anchor — so a DP
+        // whose stage 0 must run on board 0 has no candidate at all and the
+        // whole placement failed.
+        let shell = crate::resources::shell_resources();
+        let anchor_incr = plans[0].shards[0].resources.saturating_sub(shell);
+        let groups = split.groups();
+        for hi in 1..=groups.len() {
+            let layer_range = groups[0].start..groups[hi - 1].end;
+            let mut joint = shell;
+            joint.add(anchor_incr);
+            joint.add(
+                crate::resources::group_resources(&cfg, &net, layer_range.clone())
+                    .saturating_sub(shell),
+            );
+            assert!(
+                !joint.fits(&fleet[0]),
+                "premise broken: layer range {layer_range:?} co-fits board 0 — the \
+                 old pinned DP would not have failed here"
+            );
+        }
+
+        // Free placement succeeds, off the occupied board, covering every
+        // layer exactly once.
+        assert_eq!(plans[1].mode, ShardMode::Pipelined);
+        assert!(
+            plans[1].shards.iter().all(|s| s.board != 0),
+            "no stage may land on the occupied board: {:?}",
+            plans[1].shards.iter().map(|s| s.board).collect::<Vec<_>>()
+        );
+        let mut covered = Vec::new();
+        for s in &plans[1].shards {
+            covered.extend(s.layers.clone());
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
+        assert!(plans[1].fits());
+    }
+
+    #[test]
+    fn place_tenants_biased_prefers_cool_boards() {
+        // With an explicit load bias, a capped replicated tenant lands on
+        // the coolest board, and a pipelined tenant's first stage starts
+        // there too — the ordering the unified control plane feeds from
+        // window busy cycles.
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 1);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        let capped = [TenantWorkload {
+            name: "t",
+            net: &net,
+            weights: &w,
+            plan: &fused,
+            mode: ShardMode::Replicated,
+            priority: 1,
+            replicas: Some(1),
+        }];
+        // Board 2 is the coolest.
+        let plans = place_tenants_biased(&fleet, &capped, &[500, 300, 100]).unwrap();
+        let boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(boards, vec![2]);
+        // Zero bias reduces to the static emptiest-first order.
+        let plans0 = place_tenants_biased(&fleet, &capped, &[0, 0, 0]).unwrap();
+        let boards0: Vec<usize> = plans0[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(boards0, vec![0]);
+
+        let split = FusionPlan::from_group_sizes(7, &[4, 3]).unwrap();
+        let piped = [TenantWorkload {
+            name: "p",
+            net: &net,
+            weights: &w,
+            plan: &split,
+            mode: ShardMode::Pipelined,
+            priority: 1,
+            replicas: None,
+        }];
+        let plans = place_tenants_biased(&fleet, &piped, &[500, 100, 300]).unwrap();
+        assert_eq!(plans[0].shards[0].board, 1, "stage 0 on the coolest board");
+        let mut covered = Vec::new();
+        for s in &plans[0].shards {
+            covered.extend(s.layers.clone());
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
     }
 
     #[test]

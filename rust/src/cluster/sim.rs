@@ -23,12 +23,17 @@
 //!   charges a migration bill (weights that change boards + in-flight
 //!   activation state, over a link), and continues. Re-shards are reported
 //!   as [`ReshardEvent`]s in the [`FleetReport`].
-//! * [`simulate_fleet_multi_tenant`] — several networks sharing one fleet
-//!   under strict priorities: per-tenant arrival streams merged with board
-//!   completions on one [`DeadlineQueue`], priority-ordered admission, and
-//!   preemption of lower-priority batches (re-queued and billed a restart
-//!   penalty). Per-tenant p50/p99/SLO attainment lands in
-//!   [`FleetReport::tenants`] as [`TenantStats`].
+//! * [`simulate_fleet_multi_tenant`] — the unified control plane: several
+//!   networks sharing one fleet under strict priorities, with
+//!   deficit-weighted round-robin fair sharing *within* a class
+//!   (`SloPolicy::weight`), work-preserving or restart preemption of
+//!   lower-priority batches (`PreemptMode`), and — when `ccfg.reshard` is
+//!   armed — the window triggers of the dynamic controller made
+//!   tenant-aware: per-tenant window p99 against each tenant's own SLO,
+//!   mid-run `place_tenants` re-runs biased toward the coolest boards with
+//!   SLO-missing tenants uncapped, migration billing per tenant, and
+//!   per-tenant [`ReshardEvent`]s. Per-tenant p50/p99/SLO attainment lands
+//!   in [`FleetReport::tenants`] as [`TenantStats`].
 //!
 //! All inner loops are event driven ([`crate::cluster::events`]): batch
 //! flush deadlines drain from a [`DeadlineQueue`] in time order, and the
@@ -45,8 +50,10 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::accel::engine::Weights;
+use crate::accel::fusion::FusionPlan;
 use crate::config::{
-    AccelConfig, ClusterConfig, LoadStep, Network, ReshardPolicy, ShardMode, TenantSpec,
+    AccelConfig, ClusterConfig, LoadStep, Network, PreemptMode, ReshardPolicy, ShardMode,
+    TenantSpec,
 };
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use crate::fpga::ddr::SharedDdr;
@@ -56,7 +63,7 @@ use crate::util::stats::percentile_sorted;
 
 use super::events::{BoardPool, DeadlineQueue};
 use super::link::{InterBoardLink, LinkChannel};
-use super::shard::ShardPlan;
+use super::shard::{place_tenants_biased, ShardPlan, TenantWorkload};
 
 /// Per-board outcome counters.
 #[derive(Debug, Clone)]
@@ -92,19 +99,31 @@ pub struct ReshardEvent {
     /// Migration bill: weight bytes newly hosted per board plus in-flight
     /// activation state, after the policy's `migration_factor`.
     pub migration_bytes: u64,
-    /// Cycles the whole fleet stalled while state moved.
+    /// Cycles the whole fleet stalled while state moved. The unified
+    /// multi-tenant engine emits one event per migrated tenant of a single
+    /// migration; those events share one `at_cycle` and each carries the
+    /// same fleet-wide stall (`migration_bytes` is per tenant) — do not sum
+    /// stalls across events with an equal `at_cycle`.
     pub stall_cycles: u64,
+    /// Tenant whose placement moved (the unified multi-tenant control plane
+    /// emits one event per migrated tenant; the single-network dynamic
+    /// controller leaves this `None` and its JSON shape unchanged).
+    pub tenant: Option<String>,
 }
 
 impl ReshardEvent {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("at_cycle", self.at_cycle)
             .set("from", self.from.as_str())
             .set("to", self.to.as_str())
             .set("reason", self.reason.as_str())
             .set("migration_bytes", self.migration_bytes)
-            .set("stall_cycles", self.stall_cycles)
+            .set("stall_cycles", self.stall_cycles);
+        if let Some(t) = &self.tenant {
+            j = j.set("tenant", t.as_str());
+        }
+        j
     }
 }
 
@@ -131,11 +150,16 @@ pub struct TenantStats {
     pub slo_p99_ms: f64,
     /// Simulated p99 within the SLO target.
     pub slo_met: bool,
+    /// p99 over the final `ReshardPolicy::window` completions — the
+    /// steady-state tail after any re-shards have settled. Only reported by
+    /// the unified control plane (re-shard policy armed); `None` keeps the
+    /// pre-unification report JSON byte-identical.
+    pub tail_p99_ms: Option<f64>,
 }
 
 impl TenantStats {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("name", self.name.as_str())
             .set("priority", self.priority as usize)
             .set("requests", self.requests)
@@ -147,7 +171,11 @@ impl TenantStats {
             .set("p99_ms", self.p99_ms)
             .set("throughput_rps", self.throughput_rps)
             .set("slo_p99_ms", self.slo_p99_ms)
-            .set("slo_met", self.slo_met)
+            .set("slo_met", self.slo_met);
+        if let Some(v) = self.tail_p99_ms {
+            j = j.set("tail_p99_ms", v);
+        }
+        j
     }
 }
 
@@ -733,6 +761,7 @@ pub fn simulate_fleet_dynamic(
                         reason,
                         migration_bytes: bill,
                         stall_cycles: stall,
+                        tenant: None,
                     });
                     links = (0..new_plan.used_boards().saturating_sub(1))
                         .map(|_| LinkChannel::new(link))
@@ -801,6 +830,11 @@ struct Running {
     start: u64,
     done: u64,
     reqs: Vec<usize>,
+    /// Reference-cycle instants at which each item of the batch (in queue
+    /// order) has been fully served, priced at dispatch time. Populated only
+    /// under [`PreemptMode::Resume`], where a preemption completes the
+    /// finished prefix on the spot instead of re-queueing and re-running it.
+    prefix_done: Vec<u64>,
 }
 
 /// Derive the per-tenant arrival seed from the cluster seed: every tenant
@@ -809,45 +843,88 @@ pub fn tenant_seed(cluster_seed: u64, tenant: usize) -> u64 {
     cluster_seed ^ (tenant as u64).wrapping_mul(0x9E3779B97F4A7C15)
 }
 
-/// Simulate several tenants sharing one fleet under strict priorities.
+/// Simulate several tenants sharing one fleet — the unified control plane.
 ///
 /// Each tenant drives its own open-loop stream
 /// ([`arrivals_with_steps`], seeded per tenant via [`tenant_seed`]); all
 /// streams merge with board completions on one [`DeadlineQueue`], so the
 /// whole run is a single time-ordered event drain. Dispatch at every event
-/// instant is greedy and priority-ordered:
+/// instant is greedy, priority-ordered, and weighted-fair within a class:
 ///
-/// 1. **Admission**: tenants take free boards in priority order (descending
-///    class, then tenant index). Within a tenant, boards are picked with
-///    the [`BoardPool`] tie-breaks — fastest clock, then lowest index.
-///    Batches take up to `max_batch` queued requests, greedily at each
-///    event instant — there is no accumulate-up-to-deadline batcher on
-///    this path, so `ClusterConfig::max_wait_us` does not apply (it only
-///    shapes the static scheduler's [`DynamicBatcher`]s).
+/// 1. **Admission**: priority classes are served in descending order.
+///    *Within* a class, admission is deficit-weighted round-robin on
+///    [`crate::config::SloPolicy::weight`]: every tenant carries a deficit
+///    counter of normalized service (billed reference cycles divided by its
+///    weight) and the pending tenant with the smallest deficit is admitted
+///    first (ties to the lower tenant index), so equal-class peers share
+///    boards in proportion to their weights instead of draining in tenant
+///    order — the starvation mode of the previous strict-FIFO admission.
+///    A preempted victim's deficit is refunded for the service it did not
+///    receive (all of it under `Restart`, the unfinished remainder under
+///    `Resume`), so being preempted by a higher class never costs a tenant
+///    its fair share against its own peers.
+///    Within a tenant, boards are picked with the [`BoardPool`] tie-breaks —
+///    fastest clock, then lowest index. Batches take up to `max_batch`
+///    queued requests greedily at each event instant — there is no
+///    accumulate-up-to-deadline batcher on this path, so
+///    `ClusterConfig::max_wait_us` does not apply (it only shapes the
+///    static scheduler's [`DynamicBatcher`]s).
 /// 2. **Preemption**: a *replicated* tenant with queued work and no free
 ///    board may abort a strictly lower-priority replicated batch
 ///    mid-service (lowest victim priority first, then lowest board index).
-///    The victim's items are re-queued at the head of its queue and
-///    marked: their next service is billed the full batch cost again plus
-///    `ClusterConfig::preempt_restart_cycles` (work lost + context
-///    restore). Pipelined chains sit outside the preemption protocol on
-///    both sides: they need their whole stage chain at once, so aborting a
-///    single board's batch could not launch them, and once launched they
-///    occupy stage boards via the shared timeline and run to completion.
+///    What happens to the victim depends on
+///    [`crate::config::PreemptMode`]:
+///    * `Restart` (the original protocol): every item re-queues at the head
+///      of the victim's queue and the next service is billed the full batch
+///      cost again plus `ClusterConfig::preempt_restart_cycles`;
+///    * `Resume` (work-preserving): items whose service had already
+///      completed by the preemption instant finish there and then; only the
+///      unfinished remainder re-queues, and its next service is billed the
+///      remainder's own cost plus `ClusterConfig::preempt_refill_cycles`
+///      (the pipeline refill) — strictly cheaper whenever the refill is not
+///      dearer than a restart.
+///    Pipelined chains sit outside the preemption protocol on both sides:
+///    they need their whole stage chain at once, so aborting a single
+///    board's batch could not launch them, and once launched they occupy
+///    stage boards via the shared timeline and run to completion.
+/// 3. **Tenant-aware re-sharding** (with `ccfg.reshard` armed): after every
+///    [`ReshardPolicy::window`] completions the controller checks each
+///    tenant's window p99 against *that tenant's own*
+///    [`crate::config::SloPolicy::p99_ms`] (the policy's global `p99_ms`
+///    threshold is superseded by the per-tenant targets on this path) and
+///    the fleet's utilization skew against `ReshardPolicy::util_skew`. On a
+///    trigger it re-runs the placement planner
+///    ([`super::shard::place_tenants_biased`]) against the observed load —
+///    boards ordered coolest-first by window busy cycles, and every
+///    SLO-missing tenant's replica cap lifted (scale-out; sticky for the
+///    rest of the run, so an unrelated later trigger cannot shrink a
+///    recovered tenant back and oscillate) — then bills each
+///    migrated tenant's weight + activation state over a link
+///    ([`migration_bytes`]), stalls the fleet for the transfer, and records
+///    one [`ReshardEvent`] per migrated tenant (with
+///    [`ReshardEvent::tenant`] set). In-flight batches drain at their
+///    scheduled completions; new admissions wait for the migration stall.
+///    With `ccfg.reshard = None` the engine is exactly the pre-unification
+///    multi-tenant simulator (the committed fixtures pin this).
 ///
 /// Co-residency is billed through [`SharedDdr`]: the contention demand is
 /// the sum of *every* tenant's provisioned draw, so packing more networks
-/// onto one backplane stretches everyone's off-chip phases.
+/// onto one backplane stretches everyone's off-chip phases. `weights[t]` is
+/// each tenant's weight set — used only to price migrations, so the
+/// no-reshard path never reads it.
 ///
 /// `plans[t]` must come from the fleet-wide placement planner
 /// ([`super::shard::place_tenants`]) — `BoardShard::board` fields index
 /// `fleet`. Reports per-tenant p50/p99/throughput/SLO attainment and
-/// preemption counts in [`FleetReport::tenants`]. Deterministic from
-/// `ccfg.seed`.
+/// preemption counts in [`FleetReport::tenants`] (plus the post-settle
+/// [`TenantStats::tail_p99_ms`] when the controller is armed), and
+/// re-shard decisions in [`FleetReport::reshard_events`]. Deterministic
+/// from `ccfg.seed`.
 pub fn simulate_fleet_multi_tenant(
     cfg: &AccelConfig,
     fleet: &[AccelConfig],
     specs: &[TenantSpec],
+    weights: &[Weights],
     plans: &[ShardPlan],
     ccfg: &ClusterConfig,
 ) -> FleetReport {
@@ -861,6 +938,11 @@ pub fn simulate_fleet_multi_tenant(
         s.validate().expect("invalid tenant spec");
     }
     assert_eq!(specs.len(), plans.len());
+    assert_eq!(
+        specs.len(),
+        weights.len(),
+        "one Weights per tenant (the re-shard controller prices migrations)"
+    );
     let nb = fleet.len();
     let nt = specs.len();
     for p in plans {
@@ -870,13 +952,16 @@ pub fn simulate_fleet_multi_tenant(
 
     let ref_freq = cfg.platform.freq_mhz;
     let ns_per_cycle = 1e3 / ref_freq;
+    let word_bytes = cfg.platform.word_bytes;
     let shared = SharedDdr::new(
         cfg.platform.ddr_bytes_per_cycle,
         ccfg.aggregate_ddr_bytes_per_cycle,
     );
     let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+    // The placement is mutable state now: the controller may swap it.
+    let mut cur_plans: Vec<ShardPlan> = plans.to_vec();
     // Co-residency bill: the whole fleet's provisioned draw, all tenants.
-    let demand: f64 = plans.iter().map(|p| fleet_demand(p, ref_freq)).sum();
+    let mut demand: f64 = cur_plans.iter().map(|p| fleet_demand(p, ref_freq)).sum();
 
     let arrivals: Vec<Vec<u64>> = specs
         .iter()
@@ -892,32 +977,48 @@ pub fn simulate_fleet_multi_tenant(
         })
         .collect();
 
-    // shard_idx[t][b] → index into plans[t].shards hosted on board b.
-    let mut shard_idx: Vec<Vec<Option<usize>>> = vec![vec![None; nb]; nt];
-    for (t, p) in plans.iter().enumerate() {
-        for (i, s) in p.shards.iter().enumerate() {
-            shard_idx[t][s.board] = Some(i);
+    // shard_idx[t][b] → index into cur_plans[t].shards hosted on board b.
+    let build_idx = |plans: &[ShardPlan]| -> Vec<Vec<Option<usize>>> {
+        let mut idx = vec![vec![None; nb]; nt];
+        for (t, p) in plans.iter().enumerate() {
+            for (i, s) in p.shards.iter().enumerate() {
+                idx[t][s.board] = Some(i);
+            }
         }
-    }
+        idx
+    };
+    let mut shard_idx = build_idx(&cur_plans);
     let prio: Vec<u8> = specs.iter().map(|s| s.slo.priority).collect();
+    let w_of: Vec<f64> = specs.iter().map(|s| s.slo.weight).collect();
     let mut t_order: Vec<usize> = (0..nt).collect();
     t_order.sort_by_key(|&t| (std::cmp::Reverse(prio[t]), t));
+    // Consecutive equal-priority runs of `t_order` — the DRR classes.
+    let mut classes: Vec<Vec<usize>> = Vec::new();
+    for &t in &t_order {
+        match classes.last_mut() {
+            Some(c) if prio[c[0]] == prio[t] => c.push(t),
+            _ => classes.push(vec![t]),
+        }
+    }
 
-    let mut links_t: Vec<Vec<LinkChannel>> = plans
-        .iter()
-        .map(|p| {
-            (0..p.used_boards().saturating_sub(1))
-                .map(|_| LinkChannel::new(link))
-                .collect()
-        })
-        .collect();
+    let rebuild_links = |plans: &[ShardPlan]| -> Vec<Vec<LinkChannel>> {
+        plans
+            .iter()
+            .map(|p| {
+                (0..p.used_boards().saturating_sub(1))
+                    .map(|_| LinkChannel::new(link))
+                    .collect()
+            })
+            .collect()
+    };
+    let mut links_t = rebuild_links(&cur_plans);
 
     let mut free_at = vec![0u64; nb];
     let mut busy = vec![0u64; nb];
     let mut items = vec![0u64; nb];
     let mut batches = vec![0u64; nb];
     let mut board_state: Vec<Option<Running>> = vec![None; nb];
-    // Pending queue per tenant: (request index, billed-restart flag). Every
+    // Pending queue per tenant: (request index, billed-penalty flag). Every
     // queued entry is dispatchable now — arrivals enter at their event and
     // preempted work re-enters at the preemption instant.
     let mut pend: Vec<VecDeque<(usize, bool)>> = vec![VecDeque::new(); nt];
@@ -927,11 +1028,14 @@ pub fn simulate_fleet_multi_tenant(
     // from the spec, so the conservation checks in the report are real.
     let mut served = vec![0u64; nt];
     let mut preemptions = vec![0u64; nt];
+    // Deficit counters of the within-class weighted round-robin: billed
+    // reference cycles per tenant, compared normalized by SLO weight.
+    let mut charge = vec![0u64; nt];
     let mut link_bytes_total = 0u64;
 
     // One event queue for everything: ids < nb are board events (batch
-    // completions / stage-release wakes), ids >= nb are per-tenant arrival
-    // cursors (id - nb = tenant).
+    // completions / stage-release / post-migration wakes), ids >= nb are
+    // per-tenant arrival cursors (id - nb = tenant).
     let mut events = DeadlineQueue::new();
     let mut cursor = vec![0usize; nt];
     for (t, a) in arrivals.iter().enumerate() {
@@ -940,39 +1044,108 @@ pub fn simulate_fleet_multi_tenant(
         }
     }
 
+    // Controller state (inert when the policy is absent — the engine is then
+    // byte-identical to the pre-unification multi-tenant simulator).
+    let policy: Option<ReshardPolicy> = ccfg.reshard.clone();
+    let mut reshard_events: Vec<ReshardEvent> = Vec::new();
+    // Completions since the window opened (the trigger cadence); per-tenant
+    // latencies live in `win_t` — no fleet-wide latency vector is needed.
+    let mut win_count = 0usize;
+    let mut win_t: Vec<Vec<f64>> = vec![Vec::new(); nt];
+    let mut done_lat: Vec<Vec<f64>> = vec![Vec::new(); nt];
+    let mut win_start = 0u64;
+    let mut win_busy0 = vec![0u64; nb];
+    let mut cooldown = 0usize;
+    // Scale-out decisions are sticky: once a tenant's replica cap is lifted
+    // it stays lifted for the rest of the run. Without this, an unrelated
+    // later trigger (skew, another tenant's SLO) would re-apply the spec
+    // cap, shrink the recovered tenant back, and oscillate scale-in/out
+    // with a full-fleet migration stall on every flip.
+    let mut uncapped = vec![false; nt];
+
+    // Mark request `req` of tenant `t` complete at cycle `at` (exactly once
+    // per request — the conservation asserts below keep that honest).
+    macro_rules! record_done {
+        ($t:expr, $req:expr, $at:expr) => {{
+            let (t, req, at) = ($t, $req, $at);
+            complete[t][req] = at;
+            done_mask[t][req] = true;
+            served[t] += 1;
+            if policy.is_some() {
+                let lat = at.saturating_sub(arrivals[t][req]) as f64 * ns_per_cycle / 1e6;
+                win_count += 1;
+                win_t[t].push(lat);
+                done_lat[t].push(lat);
+            }
+        }};
+    }
+
     // Dispatch one replicated batch of tenant `t` on free board `b` at `at`.
-    let dispatch_replicated = |t: usize,
-                               b: usize,
-                               at: u64,
-                               pend: &mut [VecDeque<(usize, bool)>],
-                               board_state: &mut [Option<Running>],
-                               free_at: &mut [u64],
-                               batches: &mut [u64],
-                               events: &mut DeadlineQueue| {
-        let k = pend[t].len().min(ccfg.max_batch);
-        let mut reqs = Vec::with_capacity(k);
-        let mut restarted = false;
-        for _ in 0..k {
-            let (r, p) = pend[t].pop_front().expect("non-empty");
-            restarted |= p;
-            reqs.push(r);
-        }
-        let s = &plans[t].shards[shard_idx[t][b].expect("hosted")];
-        let mut svc = s.service_cycles(k as u64, ref_freq, &shared, demand);
-        if restarted {
-            svc += ccfg.preempt_restart_cycles;
-        }
-        let done = at + svc;
-        free_at[b] = done;
-        batches[b] += 1;
-        board_state[b] = Some(Running {
-            tenant: t,
-            start: at,
-            done,
-            reqs,
-        });
-        events.schedule(done, b);
-    };
+    macro_rules! dispatch_replicated {
+        ($t:expr, $b:expr, $at:expr) => {{
+            let (t, b, at) = ($t, $b, $at);
+            let k = pend[t].len().min(ccfg.max_batch);
+            let mut reqs = Vec::with_capacity(k);
+            let mut penalized = false;
+            for _ in 0..k {
+                let (r, p) = pend[t].pop_front().expect("non-empty");
+                penalized |= p;
+                reqs.push(r);
+            }
+            let s = &cur_plans[t].shards[shard_idx[t][b].expect("hosted")];
+            let penalty = if penalized {
+                match ccfg.preempt_mode {
+                    PreemptMode::Restart => ccfg.preempt_restart_cycles,
+                    PreemptMode::Resume => ccfg.preempt_refill_cycles,
+                }
+            } else {
+                0
+            };
+            let svc = s.service_cycles(k as u64, ref_freq, &shared, demand) + penalty;
+            // Per-item completion instants, so a later preemption can keep
+            // the finished prefix (Resume only — Restart re-does the work).
+            let prefix_done: Vec<u64> = if ccfg.preempt_mode == PreemptMode::Resume {
+                (1..=k as u64)
+                    .map(|j| at + penalty + s.service_cycles(j, ref_freq, &shared, demand))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let done = at + svc;
+            free_at[b] = done;
+            batches[b] += 1;
+            board_state[b] = Some(Running {
+                tenant: t,
+                start: at,
+                done,
+                reqs,
+                prefix_done,
+            });
+            events.schedule(done, b);
+            charge[t] += svc;
+        }};
+    }
+
+    // The pending members of one DRR class, ordered by ascending normalized
+    // deficit (billed cycles / weight; cross-multiplied so no division),
+    // ties to the lower tenant index. A singleton class reduces to the old
+    // strict per-tenant drain.
+    macro_rules! class_candidates {
+        ($members:expr) => {{
+            let mut cands: Vec<usize> = $members
+                .iter()
+                .copied()
+                .filter(|&t| !pend[t].is_empty())
+                .collect();
+            cands.sort_by(|&a, &b| {
+                (charge[a] as f64 * w_of[b])
+                    .partial_cmp(&(charge[b] as f64 * w_of[a]))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            cands
+        }};
+    }
 
     // Run every tenant's admission/preemption at event instant `at` until a
     // full pass dispatches nothing.
@@ -981,141 +1154,183 @@ pub fn simulate_fleet_multi_tenant(
             let at = $at;
             loop {
                 let mut dispatched = false;
-                // Phase 1: free-board admission, priority order.
-                for &t in &t_order {
-                    match specs[t].mode {
-                        ShardMode::Replicated => {
-                            while !pend[t].is_empty() {
-                                // Fastest free hosting board, then lowest
-                                // index — the BoardPool idle tie-breaks,
-                                // done as a scan over the tenant's hosting
-                                // set: co-residency invalidates a per-tenant
-                                // heap on every foreign dispatch/preemption,
-                                // and hosting sets are at most `boards` wide,
-                                // so the scan is the simpler O(boards) here.
-                                let mut pick: Option<usize> = None;
-                                for s in &plans[t].shards {
-                                    let b = s.board;
-                                    if board_state[b].is_none() && free_at[b] <= at {
-                                        let better = match pick {
-                                            None => true,
-                                            Some(p) => {
-                                                fleet[b].platform.freq_mhz
-                                                    > fleet[p].platform.freq_mhz
+                // Phase 1: free-board admission — classes in priority order,
+                // deficit-weighted round-robin within a class.
+                for members in &classes {
+                    loop {
+                        let cands = class_candidates!(members);
+                        let mut advanced = false;
+                        for &t in &cands {
+                            match specs[t].mode {
+                                ShardMode::Replicated => {
+                                    // Fastest free hosting board, then lowest
+                                    // index — the BoardPool idle tie-breaks,
+                                    // done as a scan over the tenant's hosting
+                                    // set: co-residency invalidates a per-tenant
+                                    // heap on every foreign dispatch/preemption,
+                                    // and hosting sets are at most `boards` wide,
+                                    // so the scan is the simpler O(boards) here.
+                                    let mut pick: Option<usize> = None;
+                                    for s in &cur_plans[t].shards {
+                                        let b = s.board;
+                                        if board_state[b].is_none() && free_at[b] <= at {
+                                            let better = match pick {
+                                                None => true,
+                                                Some(p) => {
+                                                    fleet[b].platform.freq_mhz
+                                                        > fleet[p].platform.freq_mhz
+                                                }
+                                            };
+                                            if better {
+                                                pick = Some(b);
                                             }
-                                        };
-                                        if better {
-                                            pick = Some(b);
                                         }
                                     }
-                                }
-                                let Some(b) = pick else { break };
-                                dispatch_replicated(
-                                    t,
-                                    b,
-                                    at,
-                                    &mut pend,
-                                    &mut board_state,
-                                    &mut free_at,
-                                    &mut batches,
-                                    &mut events,
-                                );
-                                dispatched = true;
-                            }
-                        }
-                        ShardMode::Pipelined => {
-                            // A chain launches when its entry stage is free;
-                            // later stages serialize on the shared timeline.
-                            while !pend[t].is_empty() {
-                                let first = plans[t].shards[0].board;
-                                if board_state[first].is_some() || free_at[first] > at {
-                                    break;
-                                }
-                                let k = pend[t].len().min(ccfg.max_batch);
-                                let mut reqs = Vec::with_capacity(k);
-                                let mut restarted = false;
-                                for _ in 0..k {
-                                    let (r, p) = pend[t].pop_front().expect("non-empty");
-                                    restarted |= p;
-                                    reqs.push(r);
-                                }
-                                let bsz = k as u64;
-                                let stages = plans[t].used_boards();
-                                let mut tcur = at;
-                                for (si, s) in plans[t].shards.iter().enumerate() {
-                                    let mut svc =
-                                        s.service_cycles(bsz, ref_freq, &shared, demand);
-                                    if si == 0 && restarted {
-                                        svc += ccfg.preempt_restart_cycles;
-                                    }
-                                    let start = tcur.max(free_at[s.board]);
-                                    let done = start + svc;
-                                    free_at[s.board] = done;
-                                    busy[s.board] += svc;
-                                    items[s.board] += bsz;
-                                    batches[s.board] += 1;
-                                    events.schedule(done, s.board);
-                                    tcur = done;
-                                    if si + 1 < stages {
-                                        let bytes = s.egress_bytes * bsz;
-                                        link_bytes_total += bytes;
-                                        tcur = links_t[t][si].transfer(bytes, tcur);
+                                    if let Some(b) = pick {
+                                        dispatch_replicated!(t, b, at);
+                                        advanced = true;
                                     }
                                 }
-                                served[t] += bsz;
-                                for r in reqs {
-                                    complete[t][r] = tcur;
-                                    done_mask[t][r] = true;
+                                ShardMode::Pipelined => {
+                                    // A chain launches when its entry stage is
+                                    // free; later stages serialize on the
+                                    // shared timeline.
+                                    let first = cur_plans[t].shards[0].board;
+                                    if board_state[first].is_none() && free_at[first] <= at {
+                                        let k = pend[t].len().min(ccfg.max_batch);
+                                        let mut reqs = Vec::with_capacity(k);
+                                        let mut penalized = false;
+                                        for _ in 0..k {
+                                            let (r, p) =
+                                                pend[t].pop_front().expect("non-empty");
+                                            penalized |= p;
+                                            reqs.push(r);
+                                        }
+                                        let bsz = k as u64;
+                                        let stages = cur_plans[t].used_boards();
+                                        let mut tcur = at;
+                                        let mut billed = 0u64;
+                                        for (si, s) in cur_plans[t].shards.iter().enumerate() {
+                                            let mut svc =
+                                                s.service_cycles(bsz, ref_freq, &shared, demand);
+                                            if si == 0 && penalized {
+                                                svc += match ccfg.preempt_mode {
+                                                    PreemptMode::Restart => {
+                                                        ccfg.preempt_restart_cycles
+                                                    }
+                                                    PreemptMode::Resume => {
+                                                        ccfg.preempt_refill_cycles
+                                                    }
+                                                };
+                                            }
+                                            let start = tcur.max(free_at[s.board]);
+                                            let done = start + svc;
+                                            free_at[s.board] = done;
+                                            busy[s.board] += svc;
+                                            items[s.board] += bsz;
+                                            batches[s.board] += 1;
+                                            billed += svc;
+                                            events.schedule(done, s.board);
+                                            tcur = done;
+                                            if si + 1 < stages {
+                                                let bytes = s.egress_bytes * bsz;
+                                                link_bytes_total += bytes;
+                                                tcur = links_t[t][si].transfer(bytes, tcur);
+                                            }
+                                        }
+                                        charge[t] += billed;
+                                        for r in reqs {
+                                            record_done!(t, r, tcur);
+                                        }
+                                        advanced = true;
+                                    }
                                 }
-                                dispatched = true;
+                            }
+                            if advanced {
+                                break;
                             }
                         }
+                        if !advanced {
+                            break;
+                        }
+                        dispatched = true;
                     }
                 }
                 // Phase 2: preemption — a still-starved tenant may abort a
-                // strictly lower-priority replicated batch.
-                for &t in &t_order {
-                    if specs[t].mode != ShardMode::Replicated {
-                        continue;
-                    }
-                    while !pend[t].is_empty() {
-                        let mut victim: Option<(u8, usize)> = None;
-                        for s in &plans[t].shards {
-                            let b = s.board;
-                            if let Some(r) = &board_state[b] {
-                                // Only preempt a victim that holds the
-                                // board's LAST reservation: a co-resident
-                                // pipelined chain may already have booked a
-                                // later stage window (free_at > the
-                                // victim's completion), and reclaiming the
-                                // slot then would double-book the board
-                                // under the chain's reservation.
-                                if prio[r.tenant] < prio[t] && free_at[b] == r.done {
-                                    let key = (prio[r.tenant], b);
-                                    if victim.is_none() || key < victim.unwrap() {
-                                        victim = Some(key);
+                // strictly lower-priority replicated batch (same class
+                // ordering as admission; equal classes never preempt each
+                // other, so the DRR order only sequences the seekers).
+                for members in &classes {
+                    loop {
+                        let cands = class_candidates!(members);
+                        let mut advanced = false;
+                        for &t in &cands {
+                            if specs[t].mode != ShardMode::Replicated {
+                                continue;
+                            }
+                            let mut victim: Option<(u8, usize)> = None;
+                            for s in &cur_plans[t].shards {
+                                let b = s.board;
+                                if let Some(r) = &board_state[b] {
+                                    // Only preempt a victim that holds the
+                                    // board's LAST reservation: a co-resident
+                                    // pipelined chain may already have booked a
+                                    // later stage window (free_at > the
+                                    // victim's completion), and reclaiming the
+                                    // slot then would double-book the board
+                                    // under the chain's reservation.
+                                    if prio[r.tenant] < prio[t] && free_at[b] == r.done {
+                                        let key = (prio[r.tenant], b);
+                                        if victim.is_none() || key < victim.unwrap() {
+                                            victim = Some(key);
+                                        }
                                     }
                                 }
                             }
+                            let Some((_, b)) = victim else { continue };
+                            let r = board_state[b].take().expect("victim running");
+                            busy[b] += at - r.start;
+                            preemptions[r.tenant] += 1;
+                            let vt = r.tenant;
+                            let mut rest = r.reqs;
+                            // Refund the victim's DRR deficit for service it
+                            // will not receive from this dispatch: restart
+                            // re-bills everything on re-dispatch, resume
+                            // re-bills only the unfinished remainder.
+                            // Without the refund, a repeatedly-preempted
+                            // tenant's deficit inflates with zero items
+                            // delivered and it loses its fair share against
+                            // equal-class peers.
+                            let refund;
+                            if ccfg.preempt_mode == PreemptMode::Resume {
+                                // Work-preserving: the served prefix finishes
+                                // here; only the remainder re-queues.
+                                let j = r.prefix_done.iter().filter(|&&d| d <= at).count();
+                                for &req in &rest[..j] {
+                                    record_done!(vt, req, at);
+                                }
+                                items[b] += j as u64;
+                                refund = if j == 0 {
+                                    r.done - r.start
+                                } else {
+                                    r.done - r.prefix_done[j - 1]
+                                };
+                                rest.drain(..j);
+                            } else {
+                                refund = r.done - r.start;
+                            }
+                            charge[vt] = charge[vt].saturating_sub(refund);
+                            for &req in rest.iter().rev() {
+                                pend[vt].push_front((req, true));
+                            }
+                            free_at[b] = at;
+                            dispatch_replicated!(t, b, at);
+                            advanced = true;
+                            break;
                         }
-                        let Some((_, b)) = victim else { break };
-                        let r = board_state[b].take().expect("victim running");
-                        busy[b] += at - r.start;
-                        preemptions[r.tenant] += 1;
-                        for &req in r.reqs.iter().rev() {
-                            pend[r.tenant].push_front((req, true));
+                        if !advanced {
+                            break;
                         }
-                        free_at[b] = at;
-                        dispatch_replicated(
-                            t,
-                            b,
-                            at,
-                            &mut pend,
-                            &mut board_state,
-                            &mut free_at,
-                            &mut batches,
-                            &mut events,
-                        );
                         dispatched = true;
                     }
                 }
@@ -1143,10 +1358,163 @@ pub fn simulate_fleet_multi_tenant(
                 busy[id] += r.done - r.start;
                 items[id] += r.reqs.len() as u64;
                 let tn = r.tenant;
-                served[tn] += r.reqs.len() as u64;
                 for req in r.reqs {
-                    complete[tn][req] = at;
-                    done_mask[tn][req] = true;
+                    record_done!(tn, req, at);
+                }
+            }
+            // Post-migration wake events (and stale completions) fall
+            // through: the dispatch pass below re-examines the fleet.
+        }};
+    }
+
+    // Evaluate the controller window at event instant `at`: per-tenant SLO
+    // triggers + utilization skew, then a biased re-placement with SLO-
+    // missing tenants uncapped.
+    macro_rules! controller {
+        ($at:expr) => {{
+            let at = $at;
+            if let Some(pol) = &policy {
+                if win_count >= pol.window {
+                    let span = at.saturating_sub(win_start);
+                    let mut skew = 0.0f64;
+                    if span > 0 {
+                        let mut lo = f64::INFINITY;
+                        let mut hi = 0.0f64;
+                        for b in 0..nb {
+                            if shard_idx.iter().any(|per_t| per_t[b].is_some()) {
+                                let u =
+                                    busy[b].saturating_sub(win_busy0[b]) as f64 / span as f64;
+                                lo = lo.min(u);
+                                hi = hi.max(u);
+                            }
+                        }
+                        if hi >= lo {
+                            skew = hi - lo;
+                        }
+                    }
+                    // Tenant-aware trigger: each tenant's window p99 against
+                    // its own SLO target.
+                    let mut triggered: Vec<(usize, f64)> = Vec::new();
+                    for t in 0..nt {
+                        if win_t[t].is_empty() {
+                            continue;
+                        }
+                        let mut lat = win_t[t].clone();
+                        lat.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                        let p99 = percentile_sorted(&lat, 99.0);
+                        if p99 > specs[t].slo.p99_ms {
+                            triggered.push((t, p99));
+                        }
+                    }
+                    if cooldown > 0 {
+                        cooldown -= 1;
+                    } else if !triggered.is_empty() || skew > pol.util_skew {
+                        for &(t, _) in &triggered {
+                            uncapped[t] = true;
+                        }
+                        let reason = match triggered.iter().max_by(|a, b| {
+                            (a.1 / specs[a.0].slo.p99_ms)
+                                .partial_cmp(&(b.1 / specs[b.0].slo.p99_ms))
+                                .unwrap()
+                        }) {
+                            Some(&(t, p99)) => format!(
+                                "tenant '{}' window p99 {p99:.2} ms > slo {:.2} ms",
+                                specs[t].name, specs[t].slo.p99_ms
+                            ),
+                            None => {
+                                format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
+                            }
+                        };
+                        // Re-place against the observed load: coolest boards
+                        // first, SLO-missing tenants uncapped (scale-out).
+                        let bias: Vec<u64> = (0..nb)
+                            .map(|b| busy[b].saturating_sub(win_busy0[b]))
+                            .collect();
+                        let fplans: Vec<FusionPlan> =
+                            cur_plans.iter().map(|p| p.plan.clone()).collect();
+                        let workloads: Vec<TenantWorkload> = specs
+                            .iter()
+                            .zip(weights)
+                            .zip(&fplans)
+                            .enumerate()
+                            .map(|(t, ((spec, w), fp))| TenantWorkload {
+                                name: &spec.name,
+                                net: &spec.network,
+                                weights: w,
+                                plan: fp,
+                                mode: spec.mode,
+                                priority: spec.slo.priority,
+                                replicas: if uncapped[t] { None } else { spec.replicas },
+                            })
+                            .collect();
+                        if let Ok(new_plans) = place_tenants_biased(fleet, &workloads, &bias) {
+                            let boards_of = |p: &ShardPlan| -> Vec<usize> {
+                                p.shards.iter().map(|s| s.board).collect()
+                            };
+                            let changed: Vec<usize> = (0..nt)
+                                .filter(|&t| {
+                                    boards_of(&cur_plans[t]) != boards_of(&new_plans[t])
+                                        || cur_plans[t].label() != new_plans[t].label()
+                                })
+                                .collect();
+                            if !changed.is_empty() {
+                                // Drain to a sync point, move state, resume
+                                // together after the transfer stall.
+                                let sync =
+                                    free_at.iter().copied().max().unwrap_or(at).max(at);
+                                let mut bills: Vec<(usize, u64)> = Vec::new();
+                                let mut total_bill = 0u64;
+                                for &t in &changed {
+                                    let raw = migration_bytes(
+                                        &cur_plans[t],
+                                        &new_plans[t],
+                                        &weights[t],
+                                        word_bytes,
+                                        specs[t].network.layers.len(),
+                                        nb,
+                                    );
+                                    let bill =
+                                        (raw as f64 * pol.migration_factor).round() as u64;
+                                    total_bill += bill;
+                                    bills.push((t, bill));
+                                }
+                                let stall = link.transfer_cycles(total_bill);
+                                for (t, bill) in bills {
+                                    reshard_events.push(ReshardEvent {
+                                        at_cycle: sync,
+                                        from: cur_plans[t].label(),
+                                        to: new_plans[t].label(),
+                                        reason: reason.clone(),
+                                        migration_bytes: bill,
+                                        stall_cycles: stall,
+                                        tenant: Some(specs[t].name.clone()),
+                                    });
+                                }
+                                for (b, f) in free_at.iter_mut().enumerate() {
+                                    *f = sync + stall;
+                                    // Wake the dispatcher when the fleet
+                                    // resumes — without this, queued work
+                                    // with no future arrival/completion
+                                    // event would strand.
+                                    events.schedule(sync + stall, b);
+                                }
+                                cur_plans = new_plans;
+                                shard_idx = build_idx(&cur_plans);
+                                links_t = rebuild_links(&cur_plans);
+                                demand =
+                                    cur_plans.iter().map(|p| fleet_demand(p, ref_freq)).sum();
+                                cooldown = pol.cooldown_windows;
+                            }
+                        }
+                        // A failed placement keeps the current plans; the
+                        // next window may try again.
+                    }
+                    win_count = 0;
+                    for w in &mut win_t {
+                        w.clear();
+                    }
+                    win_start = at;
+                    win_busy0.copy_from_slice(&busy);
                 }
             }
         }};
@@ -1158,7 +1526,9 @@ pub fn simulate_fleet_multi_tenant(
             handle!(at2, id2);
         }
         dispatch_all!(at);
+        controller!(at);
     }
+    debug_assert!(events.is_empty(), "event drain must exhaust the queue");
 
     for (t, mask) in done_mask.iter().enumerate() {
         assert!(
@@ -1191,6 +1561,15 @@ pub fn simulate_fleet_multi_tenant(
             let p99_ms = percentile_sorted(&lat, 99.0);
             let span = complete[t].iter().copied().max().unwrap_or(0);
             let span_s = span as f64 * ns_per_cycle / 1e9;
+            // Post-settle tail: p99 over the final controller window of
+            // completions, in completion order (armed controller only).
+            let tail_p99_ms = policy.as_ref().map(|pol| {
+                let n = done_lat[t].len();
+                let k = pol.window.min(n).max(1);
+                let mut tail = done_lat[t][n - k..].to_vec();
+                tail.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                percentile_sorted(&tail, 99.0)
+            });
             TenantStats {
                 name: s.name.clone(),
                 priority: s.slo.priority,
@@ -1211,6 +1590,7 @@ pub fn simulate_fleet_multi_tenant(
                 },
                 slo_p99_ms: s.slo.p99_ms,
                 slo_met: p99_ms <= s.slo.p99_ms,
+                tail_p99_ms,
             }
         })
         .collect();
@@ -1245,7 +1625,7 @@ pub fn simulate_fleet_multi_tenant(
     let used_boards = hosted.iter().filter(|&&h| h).count();
 
     FleetReport {
-        mode: plans[0].mode,
+        mode: cur_plans[0].mode,
         boards: nb,
         used_boards,
         idle_boards: nb - used_boards,
@@ -1263,7 +1643,7 @@ pub fn simulate_fleet_multi_tenant(
         per_board,
         link_bytes_total,
         ddr_slowdown: shared.slowdown_of(demand),
-        reshard_events: Vec::new(),
+        reshard_events,
         tenants,
     }
 }
@@ -1305,6 +1685,8 @@ mod tests {
             reshard: None,
             tenants: vec![],
             preempt_restart_cycles: 500,
+            preempt_mode: PreemptMode::Restart,
+            preempt_refill_cycles: 100,
         }
     }
 
@@ -1581,6 +1963,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 1.0,
                     priority: 2,
+                    weight: 1.0,
                 },
             },
             TenantSpec {
@@ -1595,6 +1978,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 1.0,
                     priority: 0,
+                    weight: 1.0,
                 },
             },
         ]
@@ -1639,9 +2023,9 @@ mod tests {
         let cfg = AccelConfig::paper_default();
         let fleet = vec![cfg.clone(), cfg.clone()];
         let specs = two_tenant_specs(2000.0, 24, 64);
-        let (_w, plans) = place_two(&fleet, &specs);
+        let (w, plans) = place_two(&fleet, &specs);
         let ccfg = mt_cfg(2, 8);
-        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
 
         assert_eq!(r.tenants.len(), 2);
         let hi = &r.tenants[0];
@@ -1669,19 +2053,19 @@ mod tests {
         let cfg = AccelConfig::paper_default();
         let fleet = vec![cfg.clone(), cfg.clone()];
         let specs = two_tenant_specs(3000.0, 16, 32);
-        let (_w, plans) = place_two(&fleet, &specs);
+        let (w, plans) = place_two(&fleet, &specs);
         let ccfg = mt_cfg(2, 4);
-        let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg)
+        let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg)
             .to_json()
             .to_string_pretty();
-        let b = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg)
+        let b = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg)
             .to_json()
             .to_string_pretty();
         assert_eq!(a, b, "same seed must produce byte-identical reports");
 
         let mut other = ccfg.clone();
         other.seed = ccfg.seed + 1;
-        let c = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &other)
+        let c = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &other)
             .to_json()
             .to_string_pretty();
         assert_ne!(a, c, "a different seed must sample different arrivals");
@@ -1710,9 +2094,9 @@ mod tests {
         let mut specs = two_tenant_specs(10.0, 8, 8);
         specs[1].arrival_rps = 10.0;
         specs[1].slo.p99_ms = 50.0;
-        let (_w, plans) = place_two(&fleet, &specs);
+        let (w, plans) = place_two(&fleet, &specs);
         let ccfg = mt_cfg(2, 4);
-        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
         for t in &r.tenants {
             assert_eq!(t.preemptions, 0, "{}", t.name);
             assert!(t.slo_met, "{} p99 {}", t.name, t.p99_ms);
@@ -1752,6 +2136,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 5.0,
                     priority: 2,
+                    weight: 1.0,
                 },
             },
             TenantSpec {
@@ -1766,6 +2151,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 5000.0,
                     priority: 1,
+                    weight: 1.0,
                 },
             },
         ];
@@ -1793,11 +2179,12 @@ mod tests {
         assert_eq!(plans[1].mode, ShardMode::Pipelined);
         let stages = plans[1].used_boards() as u64;
         assert_eq!(stages, 2, "2 boards → 2 pipeline stages");
+        let w = vec![w_hi, w_piped];
 
         let mut ccfg = mt_cfg(2, 4);
         ccfg.link_bytes_per_cycle = 16.0;
         ccfg.link_latency_cycles = 0;
-        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
         let hi = &r.tenants[0];
         let piped = &r.tenants[1];
         assert_eq!(hi.completed, 24);
@@ -1817,7 +2204,7 @@ mod tests {
         let board_items: u64 = r.per_board.iter().map(|b| b.items).sum();
         assert_eq!(board_items, 24 + stages * 40);
         // Deterministic too.
-        let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg)
+        let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg)
             .to_json()
             .to_string_pretty();
         assert_eq!(r.to_json().to_string_pretty(), a);
@@ -1831,17 +2218,179 @@ mod tests {
         let cfg = AccelConfig::paper_default();
         let fleet = vec![cfg.clone(), cfg.clone()];
         let specs = two_tenant_specs(2000.0, 16, 48);
-        let (_w, plans) = place_two(&fleet, &specs);
+        let (w, plans) = place_two(&fleet, &specs);
         let mut free = mt_cfg(2, 4);
         free.aggregate_ddr_bytes_per_cycle = None;
         let mut tight = mt_cfg(2, 4);
         // Pool covers the two boards once — but four resident shards draw
         // twice that.
         tight.aggregate_ddr_bytes_per_cycle = Some(2.0 * cfg.platform.ddr_bytes_per_cycle);
-        let r_free = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &free);
-        let r_tight = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &tight);
+        let r_free = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &free);
+        let r_tight = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &tight);
         assert_eq!(r_free.ddr_slowdown, 1.0);
         assert_eq!(r_tight.ddr_slowdown, 2.0, "4 shards / pool of 2 boards");
         assert!(r_tight.throughput_rps < r_free.throughput_rps);
+    }
+
+    // ---- unified control plane ----
+
+    /// Span (cycles to a tenant's last completion) recovered from the
+    /// reported throughput: `throughput_rps = requests / span_s`.
+    fn span_cycles(t: &TenantStats, ref_freq_mhz: f64) -> f64 {
+        t.requests as f64 / t.throughput_rps * ref_freq_mhz * 1e6
+    }
+
+    #[test]
+    fn drr_shares_a_class_by_weight() {
+        // Two equal-priority burst tenants with work proportional to their
+        // weights: deficit-weighted round-robin drains both queues in
+        // proportion, so they finish together and the throughput ratio
+        // tracks the weight ratio. The old strict-FIFO admission drained
+        // tenant 0 completely first.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let mut specs = two_tenant_specs(f64::INFINITY, 48, 24);
+        specs[0].slo.priority = 1;
+        specs[1].slo.priority = 1;
+        specs[0].slo.weight = 2.0;
+        specs[1].slo.weight = 1.0;
+        specs[0].slo.p99_ms = 1e6;
+        specs[1].slo.p99_ms = 1e6;
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 4);
+        ccfg.seed = 5;
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        assert_eq!(r.tenants[0].preemptions + r.tenants[1].preemptions, 0);
+        let ref_freq = cfg.platform.freq_mhz;
+        let (sa, sb) = (
+            span_cycles(&r.tenants[0], ref_freq),
+            span_cycles(&r.tenants[1], ref_freq),
+        );
+        let slack = 3.0 * plans[0].shards[0].ref_cycles(4, ref_freq) as f64;
+        assert!(
+            (sa - sb).abs() <= slack,
+            "proportional work must finish together: spans {sa:.0} vs {sb:.0}"
+        );
+        let tp_ratio = r.tenants[0].throughput_rps / r.tenants[1].throughput_rps;
+        assert!(
+            (tp_ratio - 2.0).abs() < 0.4,
+            "throughput ratio {tp_ratio:.2} must track the 2:1 weight ratio"
+        );
+    }
+
+    #[test]
+    fn drr_prevents_equal_class_starvation() {
+        // Equal class, equal weights, a big burst at tenant 0 and a small
+        // one at tenant 1: the old index-ordered admission starved the
+        // small tenant until the big one drained; DRR finishes it early.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let mut specs = two_tenant_specs(f64::INFINITY, 96, 16);
+        specs[0].slo.priority = 1;
+        specs[1].slo.priority = 1;
+        specs[0].slo.p99_ms = 1e6;
+        specs[1].slo.p99_ms = 1e6;
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 4);
+        ccfg.seed = 5;
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        let ref_freq = cfg.platform.freq_mhz;
+        let big = span_cycles(&r.tenants[0], ref_freq);
+        let small = span_cycles(&r.tenants[1], ref_freq);
+        assert!(
+            small < 0.6 * big,
+            "the small equal-class tenant must not starve: {small:.0} vs {big:.0}"
+        );
+    }
+
+    #[test]
+    fn preemption_refund_keeps_equal_peers_fair() {
+        // A high-priority stream pinned to board 0 preempts whatever runs
+        // there. Two equal-class bulk peers with equal weights and equal
+        // work co-reside on both boards; the one that keeps getting
+        // preempted must not lose its fair share — its discarded service is
+        // refunded from the DRR deficit, so both peers still finish
+        // together (without the refund the victim's deficit inflates with
+        // zero items delivered and it drains last).
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let mut specs = two_tenant_specs(f64::INFINITY, 64, 64);
+        specs[0].slo.priority = 1;
+        specs[1].slo.priority = 1;
+        specs[0].slo.p99_ms = 1e9;
+        specs[1].slo.p99_ms = 1e9;
+        specs.insert(
+            0,
+            TenantSpec {
+                name: "hi".to_string(),
+                network: tiny_vgg(),
+                weights_seed: 3,
+                arrival_rps: 6000.0,
+                requests: 64,
+                load_steps: vec![],
+                mode: ShardMode::Replicated,
+                replicas: Some(1),
+                slo: SloPolicy {
+                    p99_ms: 1e9,
+                    priority: 2,
+                    weight: 1.0,
+                },
+            },
+        );
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 4);
+        ccfg.seed = 4;
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        let (a, b) = (&r.tenants[1], &r.tenants[2]);
+        assert!(
+            a.preemptions + b.preemptions > 0,
+            "the pinned stream must preempt the peers"
+        );
+        let ref_freq = cfg.platform.freq_mhz;
+        let (sa, sb) = (span_cycles(a, ref_freq), span_cycles(b, ref_freq));
+        let slack = 4.0 * plans[1].shards[0].ref_cycles(4, ref_freq) as f64;
+        assert!(
+            (sa - sb).abs() <= slack,
+            "preempted peer lost its share: spans {sa:.0} vs {sb:.0} (slack {slack:.0})"
+        );
+    }
+
+    #[test]
+    fn resume_mode_bills_fewer_cycles_and_conserves() {
+        // Same seed/trace, both preempt modes: work-preserving resume keeps
+        // the victims' finished prefixes, so the fleet burns strictly fewer
+        // busy cycles while serving every item exactly once either way.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let restart_cfg = mt_cfg(2, 8);
+        let mut resume_cfg = restart_cfg.clone();
+        resume_cfg.preempt_mode = PreemptMode::Resume;
+        resume_cfg.preempt_refill_cycles = 100;
+        let ra = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &restart_cfg);
+        let rb = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &resume_cfg);
+        for r in [&ra, &rb] {
+            assert_eq!(r.tenants[0].completed, 24);
+            assert_eq!(r.tenants[1].completed, 64);
+            assert_eq!(r.tenants[0].items, 24);
+            assert_eq!(r.tenants[1].items, 64);
+            let board_items: u64 = r.per_board.iter().map(|b| b.items).sum();
+            assert_eq!(board_items, 88);
+            assert!(r.tenants[1].preemptions > 0, "flood must trigger preemption");
+            assert!(r.tenants[0].slo_met);
+        }
+        let busy = |r: &FleetReport| r.per_board.iter().map(|b| b.busy_cycles).sum::<u64>();
+        assert!(
+            busy(&rb) < busy(&ra),
+            "resume must bill strictly fewer cycles: {} vs {}",
+            busy(&rb),
+            busy(&ra)
+        );
+        // Both reports stay deterministic and distinct.
+        assert_ne!(
+            ra.to_json().to_string_pretty(),
+            rb.to_json().to_string_pretty()
+        );
     }
 }

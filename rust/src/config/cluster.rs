@@ -155,24 +155,75 @@ impl ReshardPolicy {
     }
 }
 
+/// How a preempted batch is re-served.
+///
+/// `Restart` is the original protocol: the victim's items are all re-queued
+/// and their next service pays the full batch cost again plus
+/// [`ClusterConfig::preempt_restart_cycles`] — the board's partial work is
+/// thrown away. `Resume` is work-preserving: items whose service the victim
+/// had already completed at the preemption instant finish there and then,
+/// only the unfinished remainder re-queues, and the next service pays only
+/// [`ClusterConfig::preempt_refill_cycles`] (the pipeline refill /
+/// context-restore) on top of the remainder's own cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMode {
+    Restart,
+    Resume,
+}
+
+impl PreemptMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PreemptMode::Restart => "restart",
+            PreemptMode::Resume => "resume",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<PreemptMode, String> {
+        match s {
+            "restart" => Ok(PreemptMode::Restart),
+            "resume" => Ok(PreemptMode::Resume),
+            other => Err(format!(
+                "unknown preempt mode '{other}' (expected 'restart' or 'resume')"
+            )),
+        }
+    }
+}
+
 /// Service-level objective of one tenant: a latency target plus a priority
-/// class. Priorities are strict: under contention a higher-priority tenant's
-/// batch may preempt a lower-priority tenant's batch mid-service (the
-/// preempted work is re-queued and billed a restart penalty).
+/// class and a fair-share weight. Priorities are strict: under contention a
+/// higher-priority tenant's batch may preempt a lower-priority tenant's
+/// batch mid-service (the preempted work is re-queued and billed a
+/// mode-dependent penalty). *Within* one priority class, admission is
+/// deficit-weighted round-robin on `weight`: each tenant carries a deficit
+/// counter of normalized service (billed cycles / weight) and the
+/// lowest-deficit pending tenant is admitted first, so equal-class peers
+/// share boards in proportion to their weights instead of starving on
+/// tenant order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloPolicy {
     /// Target p99 latency in milliseconds; the per-tenant report compares
-    /// the simulated p99 against this and sets `slo_met`.
+    /// the simulated p99 against this and sets `slo_met`. On the unified
+    /// control plane (re-shard policy armed) this is also the tenant's
+    /// re-shard trigger: a window p99 above it marks the tenant for
+    /// scale-out at the next placement.
     pub p99_ms: f64,
     /// Priority class: larger values preempt smaller ones. Equal priorities
     /// never preempt each other.
     pub priority: u8,
+    /// Fair-share weight within the priority class (> 0; 1.0 = equal
+    /// share). A weight-2 tenant gets twice the service share of a weight-1
+    /// peer of the same class while both have pending work.
+    pub weight: f64,
 }
 
 impl SloPolicy {
     pub fn validate(&self) -> Result<(), String> {
         if !(self.p99_ms > 0.0) {
             return Err("slo: p99_ms must be > 0".into());
+        }
+        if !(self.weight > 0.0) || !self.weight.is_finite() {
+            return Err("slo: weight must be finite and > 0".into());
         }
         Ok(())
     }
@@ -181,6 +232,7 @@ impl SloPolicy {
         Json::obj()
             .set("p99_ms", self.p99_ms)
             .set("priority", self.priority as usize)
+            .set("weight", self.weight)
     }
 
     pub fn from_json(j: &Json) -> Result<SloPolicy, String> {
@@ -198,6 +250,11 @@ impl SloPolicy {
                     .filter(|&p| p <= u8::MAX as usize)
                     .ok_or("slo: 'priority' must be an integer in 0..=255")?
                     as u8,
+            },
+            // Absent means an equal share.
+            weight: match j.get("weight") {
+                Json::Null => 1.0,
+                v => v.as_f64().ok_or("slo: 'weight' must be a number")?,
             },
         })
     }
@@ -415,8 +472,16 @@ pub struct ClusterConfig {
     /// each tenant's own stream.
     pub tenants: Vec<TenantSpec>,
     /// Restart penalty in reference-clock cycles billed when a preempted
-    /// batch is re-served (context restore + pipeline refill).
+    /// batch is re-served under [`PreemptMode::Restart`] (full context
+    /// restore; the victim's partial work is also re-done).
     pub preempt_restart_cycles: u64,
+    /// How preempted batches are re-served. `Restart` reproduces the
+    /// original fixture behavior; `Resume` is work-preserving.
+    pub preempt_mode: PreemptMode,
+    /// Pipeline-refill penalty in reference-clock cycles billed when a
+    /// preempted batch resumes under [`PreemptMode::Resume`] (only the
+    /// refill — completed items are kept).
+    pub preempt_refill_cycles: u64,
 }
 
 impl ClusterConfig {
@@ -439,6 +504,8 @@ impl ClusterConfig {
             reshard: None,
             tenants: Vec::new(),
             preempt_restart_cycles: 500,
+            preempt_mode: PreemptMode::Restart,
+            preempt_refill_cycles: 100,
         }
     }
 
@@ -580,7 +647,9 @@ impl ClusterConfig {
             .set("seed", self.seed)
             .set("max_batch", self.max_batch)
             .set("max_wait_us", self.max_wait_us)
-            .set("preempt_restart_cycles", self.preempt_restart_cycles);
+            .set("preempt_restart_cycles", self.preempt_restart_cycles)
+            .set("preempt_mode", self.preempt_mode.as_str())
+            .set("preempt_refill_cycles", self.preempt_refill_cycles);
         if let Some(a) = self.aggregate_ddr_bytes_per_cycle {
             j = j.set("aggregate_ddr_bytes_per_cycle", a);
         }
@@ -683,6 +752,16 @@ impl ClusterConfig {
                 .get("preempt_restart_cycles")
                 .as_u64()
                 .unwrap_or(base.preempt_restart_cycles),
+            preempt_mode: match j.get("preempt_mode") {
+                Json::Null => base.preempt_mode,
+                v => PreemptMode::from_name(
+                    v.as_str().ok_or("cluster: invalid 'preempt_mode'")?,
+                )?,
+            },
+            preempt_refill_cycles: j
+                .get("preempt_refill_cycles")
+                .as_u64()
+                .unwrap_or(base.preempt_refill_cycles),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -884,6 +963,7 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 80.0,
                     priority: 2,
+                    weight: 1.0,
                 },
             },
             TenantSpec {
@@ -901,9 +981,47 @@ mod tests {
                 slo: SloPolicy {
                     p99_ms: 5000.0,
                     priority: 0,
+                    weight: 1.0,
                 },
             },
         ]
+    }
+
+    #[test]
+    fn json_roundtrip_preempt_mode_and_weight() {
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.preempt_mode = PreemptMode::Resume;
+        c.preempt_refill_cycles = 75;
+        c.tenants[0].slo.weight = 2.5;
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+        assert_eq!(back.preempt_mode, PreemptMode::Resume);
+        assert_eq!(back.preempt_refill_cycles, 75);
+        assert_eq!(back.tenants[0].slo.weight, 2.5);
+        // Unknown mode names are rejected.
+        assert!(PreemptMode::from_name("rewind").is_err());
+        assert_eq!(PreemptMode::from_name("resume"), Ok(PreemptMode::Resume));
+        assert_eq!(PreemptMode::Restart.as_str(), "restart");
+    }
+
+    #[test]
+    fn slo_weight_defaults_to_one_and_rejects_nonpositive() {
+        use crate::util::json::parse;
+        // Absent → equal share; this is what keeps pre-weight tenant JSON
+        // parsing (and the committed fixtures' scenarios) unchanged.
+        let s = SloPolicy::from_json(&parse(r#"{"p99_ms": 5.0}"#).unwrap()).unwrap();
+        assert_eq!(s.weight, 1.0);
+        s.validate().unwrap();
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let bad = SloPolicy {
+                p99_ms: 5.0,
+                priority: 1,
+                weight: w,
+            };
+            assert!(bad.validate().is_err(), "weight {w} must be rejected");
+        }
     }
 
     #[test]
@@ -1023,6 +1141,13 @@ mod tests {
         assert_eq!(
             c.preempt_restart_cycles,
             ClusterConfig::fleet_default().preempt_restart_cycles
+        );
+        // The new knobs default to the fixture-continuity values: restart
+        // semantics, modest refill.
+        assert_eq!(c.preempt_mode, PreemptMode::Restart);
+        assert_eq!(
+            c.preempt_refill_cycles,
+            ClusterConfig::fleet_default().preempt_refill_cycles
         );
     }
 }

@@ -38,9 +38,9 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "rate", takes_value: true, help: "cluster: open-loop arrival rate in req/s (omit for a saturating burst)", default: None },
         OptSpec { name: "aggregate-ddr", takes_value: true, help: "cluster: shared off-chip bandwidth pool in bytes/cycle (omit to disable contention)", default: None },
         OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy, tenants)", default: None },
-        OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities and preemption", default: None },
+        OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities, DRR weights and preemption", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
-        OptSpec { name: "reshard", takes_value: false, help: "cluster: enable the load-driven re-shard controller (default policy)", default: None },
+        OptSpec { name: "reshard", takes_value: false, help: "cluster: enable the load-driven re-shard controller (default policy); combined with --tenants it arms tenant-aware re-sharding in the unified control plane", default: None },
         OptSpec { name: "clients", takes_value: true, help: "serve: concurrent client threads", default: Some("4") },
         OptSpec { name: "batch", takes_value: true, help: "serve: max batch size", default: Some("8") },
         OptSpec { name: "seed", takes_value: true, help: "weight/input seed", default: Some("1") },
@@ -428,9 +428,14 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 );
             }
             for e in &r.reshard_events {
+                let who = match &e.tenant {
+                    Some(t) => format!(" [tenant {t}]"),
+                    None => String::new(),
+                };
                 println!(
-                    "reshard @ cycle {}: {} -> {} ({}; moved {:.2} MB, stalled {} cycles)",
+                    "reshard @ cycle {}{}: {} -> {} ({}; moved {:.2} MB, stalled {} cycles)",
                     e.at_cycle,
+                    who,
                     e.from,
                     e.to,
                     e.reason,
@@ -451,7 +456,13 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                         t.priority.to_string(),
                         format!("{:.1}", t.throughput_rps),
                         format!("{:.2}", t.p50_ms),
-                        format!("{:.2}", t.p99_ms),
+                        // Under the unified control plane the post-settle
+                        // tail p99 rides along — the number that shows a
+                        // re-shard actually recovered the tenant.
+                        match t.tail_p99_ms {
+                            Some(tail) => format!("{:.2} ({tail:.2} tail)", t.p99_ms),
+                            None => format!("{:.2}", t.p99_ms),
+                        },
                         format!("{:.2}", t.slo_p99_ms),
                         if t.slo_met { "MET" } else { "MISSED" }.to_string(),
                         t.preemptions.to_string(),

@@ -11,8 +11,8 @@ use decoilfnet::cluster::{
     InterBoardLink, ShardPlan,
 };
 use decoilfnet::config::{
-    vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Network, Platform, ReshardPolicy,
-    ShardMode,
+    vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Network, Platform, PreemptMode,
+    ReshardPolicy, ShardMode,
 };
 
 fn setup() -> (AccelConfig, Network, Weights) {
@@ -48,6 +48,8 @@ fn ideal_cfg(boards: usize, mode: ShardMode, requests: usize) -> ClusterConfig {
         reshard: None,
         tenants: vec![],
         preempt_restart_cycles: 500,
+        preempt_mode: PreemptMode::Restart,
+        preempt_refill_cycles: 100,
     }
 }
 

@@ -1,0 +1,222 @@
+//! Weighted-fair-sharing property battery for the unified control plane.
+//!
+//! ≥256 randomized two-tenant scenarios per property, all with EQUAL
+//! priority classes — the regime the old strict-FIFO admission handled
+//! worst (tenant 0 drained completely while tenant 1 starved). The
+//! deficit-weighted round-robin admission (`SloPolicy::weight`) must:
+//!
+//! * **track weights**: with work proportional to weight, both tenants
+//!   finish together (within batch-quantization slack) and the throughput
+//!   ratio tracks the weight ratio;
+//! * **never starve an equal-class peer**: a small tenant finishes far
+//!   before a co-resident 6×-larger one — under the old admission its span
+//!   equaled the big tenant's (progress only after the big queue drained);
+//! * **conserve work**: no board idles while same-class work is queued —
+//!   operationalized as "each board's idle tail is at most two batch
+//!   services" (after the queues drain, at most one in-flight batch
+//!   remains anywhere).
+//!
+//! All scenarios run the full placement + simulation stack (tiny-vgg
+//! tenants co-resident on every board, burst arrivals, no contention) and
+//! are deterministic per generated case; failures replay from the reported
+//! (seed, case index).
+
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{place_tenants, simulate_fleet_multi_tenant, ShardPlan, TenantWorkload};
+use decoilfnet::config::{
+    tiny_vgg, AccelConfig, ClusterConfig, PreemptMode, ShardMode, SloPolicy, TenantSpec,
+};
+use decoilfnet::util::prng::Rng;
+use decoilfnet::util::prop;
+
+/// ≥256 randomized scenarios per property, per the issue's floor.
+const FAIRNESS_CASES: usize = 256;
+
+fn prop_cfg() -> prop::PropConfig {
+    prop::PropConfig {
+        cases: FAIRNESS_CASES,
+        ..prop::PropConfig::default()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    boards: usize,
+    max_batch: usize,
+    w1: u32,
+    w2: u32,
+    /// Work unit: tenant t fires `weight_t * base` requests.
+    base: usize,
+    seed: u64,
+}
+
+fn burst_tenant(name: &str, requests: usize, weight: f64) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        network: tiny_vgg(),
+        weights_seed: 1,
+        arrival_rps: f64::INFINITY,
+        requests,
+        load_steps: vec![],
+        mode: ShardMode::Replicated,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 1e9, // fairness scenarios measure shares, not SLOs
+            priority: 1,
+            weight,
+        },
+    }
+}
+
+fn fairness_ccfg(boards: usize, max_batch: usize, seed: u64) -> ClusterConfig {
+    let mut c = ClusterConfig::fleet_default();
+    c.boards = boards;
+    c.aggregate_ddr_bytes_per_cycle = None;
+    c.link_bytes_per_cycle = f64::INFINITY;
+    c.link_latency_cycles = 0;
+    c.max_batch = max_batch;
+    c.max_wait_us = 0.0;
+    c.seed = seed;
+    c.preempt_mode = PreemptMode::Restart;
+    c
+}
+
+fn place(
+    fleet: &[AccelConfig],
+    specs: &[TenantSpec],
+) -> (Vec<Weights>, Vec<ShardPlan>) {
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(fleet, &workloads).unwrap();
+    (weights, plans)
+}
+
+/// Span (cycles to the tenant's last completion) recovered from the
+/// reported throughput.
+fn span_cycles(requests: usize, throughput_rps: f64, ref_freq_mhz: f64) -> f64 {
+    requests as f64 / throughput_rps * ref_freq_mhz * 1e6
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    Case {
+        boards: r.range_usize(1, 3),
+        max_batch: r.range_usize(1, 6),
+        w1: r.range_u64(1, 4) as u32,
+        w2: r.range_u64(1, 4) as u32,
+        base: [16, 24, 32][r.below(3) as usize],
+        seed: r.next_u64(),
+    }
+}
+
+#[test]
+fn weighted_share_tracks_slo_weights() {
+    let cfg = AccelConfig::paper_default();
+    prop::check("fairness-weighted-share", prop_cfg(), gen_case, |c| {
+        let fleet = vec![cfg.clone(); c.boards];
+        let (req1, req2) = (c.w1 as usize * c.base, c.w2 as usize * c.base);
+        let specs = vec![
+            burst_tenant("a", req1, c.w1 as f64),
+            burst_tenant("b", req2, c.w2 as f64),
+        ];
+        let (w, plans) = place(&fleet, &specs);
+        let ccfg = fairness_ccfg(c.boards, c.max_batch, c.seed);
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+
+        // Conservation, and equal classes never preempt each other.
+        let (a, b) = (&r.tenants[0], &r.tenants[1]);
+        if a.completed != req1 || b.completed != req2 {
+            return Err(format!("lost work: {}/{req1} {}/{req2}", a.completed, b.completed));
+        }
+        if a.preemptions + b.preemptions != 0 {
+            return Err("equal-class tenants preempted each other".to_string());
+        }
+
+        let ref_freq = cfg.platform.freq_mhz;
+        let svc_mb = plans[0].shards[0].ref_cycles(c.max_batch as u64, ref_freq) as f64;
+
+        // Proportional work finishes together, within batch quantization:
+        // the lighter tenant's final batch can lag by up to the weight
+        // ratio's worth of heavy batches, plus one in-flight batch per
+        // board.
+        let sa = span_cycles(req1, a.throughput_rps, ref_freq);
+        let sb = span_cycles(req2, b.throughput_rps, ref_freq);
+        let wr = (c.w1 as f64 / c.w2 as f64).max(c.w2 as f64 / c.w1 as f64);
+        let slack = (c.boards as f64 + wr + 1.0) * svc_mb;
+        if (sa - sb).abs() > slack {
+            return Err(format!(
+                "spans diverged beyond quantization: {sa:.0} vs {sb:.0} (slack {slack:.0})"
+            ));
+        }
+
+        // Throughput ratio tracks the weight ratio.
+        let want = c.w1 as f64 / c.w2 as f64;
+        let got = a.throughput_rps / b.throughput_rps;
+        if (got / want - 1.0).abs() > 0.4 {
+            return Err(format!("throughput ratio {got:.3} vs weight ratio {want:.3}"));
+        }
+
+        // Work conservation: no board idles while same-class work queues.
+        // Burst arrivals mean a board only goes idle once the queues are
+        // empty, so its idle tail is bounded by the in-flight batches.
+        for pb in &r.per_board {
+            let idle = r.makespan_cycles.saturating_sub(pb.busy_cycles) as f64;
+            if idle > 2.0 * svc_mb {
+                return Err(format!(
+                    "board {} idled {idle:.0} cycles (> 2 batch services {svc_mb:.0}) \
+                     while work was queued",
+                    pb.board
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_equal_class_tenant_starves() {
+    // The regression the DRR admission exists for: equal class, equal
+    // weights, a 6×-bigger burst at the LOWER tenant index. The old
+    // strict-FIFO admission gave tenant 0 every board until its queue
+    // drained, so the small tenant's span equaled the big one's; under
+    // weighted fair sharing the small tenant makes progress every round
+    // and finishes in well under 60% of the big span (ideal: ~2/7).
+    let cfg = AccelConfig::paper_default();
+    prop::check("fairness-no-starvation", prop_cfg(), gen_case, |c| {
+        let fleet = vec![cfg.clone(); c.boards];
+        let small_req = c.base;
+        let big_req = 6 * c.base;
+        let specs = vec![
+            burst_tenant("big", big_req, 1.0),
+            burst_tenant("small", small_req, 1.0),
+        ];
+        let (w, plans) = place(&fleet, &specs);
+        let ccfg = fairness_ccfg(c.boards, c.max_batch, c.seed);
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        let ref_freq = cfg.platform.freq_mhz;
+        let big = span_cycles(big_req, r.tenants[0].throughput_rps, ref_freq);
+        let small = span_cycles(small_req, r.tenants[1].throughput_rps, ref_freq);
+        if small >= 0.6 * big {
+            return Err(format!(
+                "small tenant starved: span {small:.0} vs big {big:.0} \
+                 (strict-FIFO admission would give ~1.0)"
+            ));
+        }
+        Ok(())
+    });
+}

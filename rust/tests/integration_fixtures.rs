@@ -20,7 +20,17 @@
 //! * `dynamic_loadstep_reshard` — the PR-2 fixture: naive pipelined cuts,
 //!   traffic stepping past capacity, the re-shard controller migrating;
 //! * `multi_tenant_spike` — two tenants under strict priorities with
-//!   preemption (this PR's acceptance scenario).
+//!   preemption (the PR-4 acceptance scenario; `PreemptMode::Restart`
+//!   reproduces it unchanged);
+//! * `mt_resume_spike` — the same inputs under work-preserving
+//!   (`PreemptMode::Resume`) preemption;
+//! * `mt_reshard_loadstep` — the unified control plane: a capped stream's
+//!   load step blows its SLO, the tenant-aware controller uncaps it onto
+//!   both boards and bills the migration (this PR's acceptance scenario).
+//!
+//! New scenarios self-seed: a missing fixture file is written on the first
+//! run and reported, so it can be committed (the bench-baseline arming
+//! pattern); every later run compares against the committed bytes.
 //!
 //! Comparison is structural: integers and strings must match exactly;
 //! floats within 1e-9 relative (the committed values were produced by an
@@ -42,7 +52,7 @@ use decoilfnet::cluster::{
 };
 use decoilfnet::config::{
     tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Network, Platform,
-    ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+    PreemptMode, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
 };
 use decoilfnet::util::json::{parse, Json};
 
@@ -52,14 +62,28 @@ fn fixture_path(name: &str) -> PathBuf {
         .join(name)
 }
 
+/// Fixtures authored in a toolchain-less environment that may self-seed on
+/// their first run (the bench-baseline arming pattern): written, reported,
+/// and expected to be committed from that run's artifact. Only names on
+/// this allowlist may seed — a missing *committed* fixture stays a hard
+/// failure, never a silent regenerate-and-pass.
+const SEEDABLE_FIXTURES: &[&str] = &["mt_resume_spike.json", "mt_reshard_loadstep.json"];
+
 /// Compare a report against its committed fixture, or regenerate it when
-/// `DECOILFNET_UPDATE_FIXTURES=1`.
+/// `DECOILFNET_UPDATE_FIXTURES=1`. A [`SEEDABLE_FIXTURES`] file that does
+/// not exist yet is *seeded*: written and reported, so the brand-new
+/// scenario passes its first run and the generated file can be committed —
+/// every later run compares.
 fn assert_matches_fixture(name: &str, actual: &Json) {
     let path = fixture_path(name);
-    if std::env::var("DECOILFNET_UPDATE_FIXTURES").map(|v| v == "1") == Ok(true) {
+    let update = std::env::var("DECOILFNET_UPDATE_FIXTURES").map(|v| v == "1") == Ok(true);
+    if update || (!path.exists() && SEEDABLE_FIXTURES.contains(&name)) {
         std::fs::write(&path, actual.to_string_pretty() + "\n")
             .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
-        eprintln!("regenerated fixture {name}");
+        eprintln!(
+            "{} fixture {name} — commit the generated file",
+            if update { "regenerated" } else { "seeded" }
+        );
         return;
     }
     let text = std::fs::read_to_string(&path)
@@ -258,39 +282,21 @@ fn fixture_multi_tenant_spike() {
     // a bulk tenant spiking to a burst at request 16.
     let cfg = AccelConfig::paper_default();
     let fleet = vec![cfg.clone(), cfg.clone()];
-    let specs = vec![
-        TenantSpec {
-            name: "interactive".to_string(),
-            network: tiny_vgg(),
-            weights_seed: 1,
-            arrival_rps: 1500.0,
-            requests: 48,
-            load_steps: vec![],
-            mode: ShardMode::Replicated,
-            replicas: None,
-            slo: SloPolicy {
-                p99_ms: 1.0,
-                priority: 2,
-            },
-        },
-        TenantSpec {
-            name: "bulk".to_string(),
-            network: tiny_vgg(),
-            weights_seed: 2,
-            arrival_rps: 800.0,
-            requests: 96,
-            load_steps: vec![LoadStep {
-                at_request: 16,
-                rps: f64::INFINITY,
-            }],
-            mode: ShardMode::Replicated,
-            replicas: None,
-            slo: SloPolicy {
-                p99_ms: 2.0,
-                priority: 0,
-            },
-        },
-    ];
+    let specs = spike_specs_for_fixture();
+    let (weights, plans) = place_mt(&fleet, &specs);
+    // Fleet-level `requests` is ignored on the multi-tenant path (each
+    // tenant drives its own stream), but must still validate.
+    let ccfg = fx_cfg(2, ShardMode::Replicated, 1);
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+    assert_matches_fixture("multi_tenant_spike.json", &r.to_json());
+}
+
+/// Fully-fused placement of replicated tiny tenants, shared by the
+/// multi-tenant fixture scenarios.
+fn place_mt(
+    fleet: &[AccelConfig],
+    specs: &[TenantSpec],
+) -> (Vec<Weights>, Vec<ShardPlan>) {
     let weights: Vec<Weights> = specs
         .iter()
         .map(|s| Weights::random(&s.network, s.weights_seed))
@@ -309,10 +315,128 @@ fn fixture_multi_tenant_spike() {
             replicas: s.replicas,
         })
         .collect();
-    let plans = place_tenants(&fleet, &workloads).unwrap();
-    // Fleet-level `requests` is ignored on the multi-tenant path (each
-    // tenant drives its own stream), but must still validate.
-    let ccfg = fx_cfg(2, ShardMode::Replicated, 1);
-    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
-    assert_matches_fixture("multi_tenant_spike.json", &r.to_json());
+    let plans = place_tenants(fleet, &workloads).unwrap();
+    (weights, plans)
+}
+
+/// The resume-mode spike: the `multi_tenant_spike` inputs bit-for-bit, but
+/// preempted batches keep their finished prefixes and pay only the refill.
+#[test]
+fn fixture_mt_resume_spike() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = spike_specs_for_fixture();
+    let (weights, plans) = place_mt(&fleet, &specs);
+    let mut ccfg = fx_cfg(2, ShardMode::Replicated, 1);
+    ccfg.preempt_mode = PreemptMode::Resume;
+    ccfg.preempt_refill_cycles = 100;
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+    assert!(
+        r.tenants[1].preemptions > 0,
+        "the fixture scenario must exercise work-preserving preemption"
+    );
+    assert_matches_fixture("mt_resume_spike.json", &r.to_json());
+}
+
+/// The unified control plane under a load step: a capped stream blows its
+/// SLO after its rate doubles, the controller uncaps it onto both boards
+/// (one per-tenant `ReshardEvent`), and the tail settles again.
+#[test]
+fn fixture_mt_reshard_loadstep() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = vec![
+        TenantSpec {
+            name: "stream".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 7500.0,
+            requests: 320,
+            load_steps: vec![LoadStep {
+                at_request: 96,
+                rps: 15000.0,
+            }],
+            mode: ShardMode::Replicated,
+            replicas: Some(1),
+            slo: SloPolicy {
+                p99_ms: 0.5,
+                priority: 2,
+                weight: 1.0,
+            },
+        },
+        TenantSpec {
+            name: "bulk".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: f64::INFINITY,
+            requests: 64,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5000.0,
+                priority: 0,
+                weight: 1.0,
+            },
+        },
+    ];
+    let (weights, plans) = place_mt(&fleet, &specs);
+    let mut ccfg = fx_cfg(2, ShardMode::Replicated, 1);
+    ccfg.seed = 11;
+    ccfg.link_bytes_per_cycle = 16.0;
+    ccfg.link_latency_cycles = 64;
+    ccfg.reshard = Some(ReshardPolicy {
+        window: 48,
+        util_skew: 0.9,
+        p99_ms: 50.0,
+        cooldown_windows: 1,
+        migration_factor: 1.0,
+    });
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+    assert!(
+        !r.reshard_events.is_empty(),
+        "the fixture scenario must exercise a tenant-aware re-shard"
+    );
+    assert!(r.reshard_events.iter().all(|e| e.tenant.is_some()));
+    assert_matches_fixture("mt_reshard_loadstep.json", &r.to_json());
+}
+
+/// Spike tenant specs shared by the restart- and resume-mode fixtures
+/// (identical inputs — only `preempt_mode` differs between the scenarios).
+fn spike_specs_for_fixture() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            name: "interactive".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 1500.0,
+            requests: 48,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 1.0,
+                priority: 2,
+                weight: 1.0,
+            },
+        },
+        TenantSpec {
+            name: "bulk".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: 800.0,
+            requests: 96,
+            load_steps: vec![LoadStep {
+                at_request: 16,
+                rps: f64::INFINITY,
+            }],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 2.0,
+                priority: 0,
+                weight: 1.0,
+            },
+        },
+    ]
 }

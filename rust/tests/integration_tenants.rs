@@ -10,7 +10,8 @@
 use decoilfnet::accel::{FusionPlan, Weights};
 use decoilfnet::cluster::{place_tenants, run_fleet, simulate_fleet_multi_tenant, TenantWorkload};
 use decoilfnet::config::{
-    tiny_vgg, AccelConfig, ClusterConfig, LoadStep, ShardMode, SloPolicy, TenantSpec,
+    tiny_vgg, AccelConfig, ClusterConfig, LoadStep, PreemptMode, ReshardPolicy, ShardMode,
+    SloPolicy, TenantSpec,
 };
 
 /// Two tenants sharing one 2-board fleet: a high-priority interactive
@@ -30,6 +31,7 @@ fn spike_specs() -> Vec<TenantSpec> {
             slo: SloPolicy {
                 p99_ms: 1.0,
                 priority: 2,
+                weight: 1.0,
             },
         },
         TenantSpec {
@@ -49,12 +51,16 @@ fn spike_specs() -> Vec<TenantSpec> {
             slo: SloPolicy {
                 p99_ms: 2.0,
                 priority: 0,
+                weight: 1.0,
             },
         },
     ]
 }
 
-fn place(fleet: &[AccelConfig], specs: &[TenantSpec]) -> Vec<decoilfnet::cluster::ShardPlan> {
+fn place(
+    fleet: &[AccelConfig],
+    specs: &[TenantSpec],
+) -> (Vec<Weights>, Vec<decoilfnet::cluster::ShardPlan>) {
     let weights: Vec<Weights> = specs
         .iter()
         .map(|s| Weights::random(&s.network, s.weights_seed))
@@ -73,7 +79,8 @@ fn place(fleet: &[AccelConfig], specs: &[TenantSpec]) -> Vec<decoilfnet::cluster
             replicas: s.replicas,
         })
         .collect();
-    place_tenants(fleet, &workloads).unwrap()
+    let plans = place_tenants(fleet, &workloads).unwrap();
+    (weights, plans)
 }
 
 fn spike_cfg() -> ClusterConfig {
@@ -94,9 +101,9 @@ fn load_spike_preemption_protects_high_priority_slo() {
     let cfg = AccelConfig::paper_default();
     let fleet = vec![cfg.clone(), cfg.clone()];
     let specs = spike_specs();
-    let plans = place(&fleet, &specs);
+    let (w, plans) = place(&fleet, &specs);
     let ccfg = spike_cfg();
-    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg);
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
 
     let hi = &r.tenants[0];
     let lo = &r.tenants[1];
@@ -139,19 +146,19 @@ fn multi_tenant_report_json_is_deterministic_for_a_fixed_seed() {
     let cfg = AccelConfig::paper_default();
     let fleet = vec![cfg.clone(), cfg.clone()];
     let specs = spike_specs();
-    let plans = place(&fleet, &specs);
+    let (w, plans) = place(&fleet, &specs);
     let ccfg = spike_cfg();
-    let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg)
+    let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg)
         .to_json()
         .to_string_pretty();
-    let b = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &ccfg)
+    let b = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg)
         .to_json()
         .to_string_pretty();
     assert_eq!(a, b, "fixed seed must give byte-identical report JSON");
 
     let mut reseeded = spike_cfg();
     reseeded.seed = 8;
-    let c = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &plans, &reseeded)
+    let c = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &reseeded)
         .to_json()
         .to_string_pretty();
     assert_ne!(a, c, "a different seed must sample different arrivals");
@@ -203,5 +210,252 @@ fn tenants_json_drives_run_fleet_end_to_end() {
         tj.at(1).get("slo_p99_ms").as_f64(),
         Some(4000.0),
         "the SLO target is echoed in the report"
+    );
+}
+
+// ---- preemption accounting (PreemptMode) ----
+
+#[test]
+fn resume_bills_strictly_fewer_cycles_than_restart_on_the_same_trace() {
+    // Same seed, same arrivals, same placement — only the preempt mode
+    // differs. Restart re-does every aborted batch in full; resume keeps
+    // the finished prefixes and pays only the refill, so the fleet's total
+    // billed cycles are strictly lower while every item still completes
+    // exactly once on both sides.
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = spike_specs();
+    let (w, plans) = place(&fleet, &specs);
+    let restart_cfg = spike_cfg();
+    assert_eq!(restart_cfg.preempt_mode, PreemptMode::Restart);
+    let mut resume_cfg = spike_cfg();
+    resume_cfg.preempt_mode = PreemptMode::Resume;
+    resume_cfg.preempt_refill_cycles = 100;
+
+    let ra = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &restart_cfg);
+    let rb = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &resume_cfg);
+
+    // Conservation across preempt/resume cycles, both modes.
+    for (mode, r) in [("restart", &ra), ("resume", &rb)] {
+        assert_eq!(r.tenants[0].completed, 48, "{mode}");
+        assert_eq!(r.tenants[1].completed, 96, "{mode}");
+        assert_eq!(r.tenants[0].items, 48, "{mode}");
+        assert_eq!(r.tenants[1].items, 96, "{mode}");
+        let board_items: u64 = r.per_board.iter().map(|b| b.items).sum();
+        assert_eq!(board_items, 144, "{mode}: items conserve per board");
+        assert!(r.tenants[1].preemptions > 0, "{mode}: spike must preempt");
+        assert!(r.tenants[0].slo_met, "{mode}: hi SLO holds either way");
+    }
+
+    let billed = |r: &decoilfnet::cluster::FleetReport| {
+        r.per_board.iter().map(|b| b.busy_cycles).sum::<u64>()
+    };
+    assert!(
+        billed(&rb) < billed(&ra),
+        "resume must bill strictly fewer total cycles: {} vs {}",
+        billed(&rb),
+        billed(&ra)
+    );
+    // The saved work shows up as an equal-or-better bulk tail.
+    assert!(rb.tenants[1].p99_ms <= ra.tenants[1].p99_ms);
+}
+
+#[test]
+fn restart_mode_reproduces_the_committed_spike_fixture_byte_for_byte() {
+    // `PreemptMode::Restart` + no re-shard policy is the pre-unification
+    // engine bit-for-bit; the committed golden fixture pins it. (The
+    // fixture suite compares structurally at 1e-9; this is the stricter
+    // bytes-equal form of the same guarantee.)
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/multi_tenant_spike.json");
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = spike_specs();
+    let (w, plans) = place(&fleet, &specs);
+    let ccfg = spike_cfg();
+    assert_eq!(ccfg.preempt_mode, PreemptMode::Restart);
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+    assert_eq!(
+        r.to_json().to_string_pretty() + "\n",
+        committed,
+        "restart mode must reproduce the committed fixture bytes"
+    );
+}
+
+// ---- tenant-aware re-sharding (the unified control plane) ----
+
+/// The load-step scenario the acceptance criterion names: a capped
+/// interactive stream (one replica of two boards) whose rate doubles
+/// mid-run past its board's capacity, over a low-priority bulk flood.
+fn loadstep_specs(requests: usize, with_step: bool) -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            name: "stream".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 7500.0,
+            requests,
+            load_steps: if with_step {
+                vec![LoadStep {
+                    at_request: 96,
+                    rps: 15000.0,
+                }]
+            } else {
+                vec![]
+            },
+            mode: ShardMode::Replicated,
+            replicas: Some(1),
+            slo: SloPolicy {
+                p99_ms: 0.5,
+                priority: 2,
+                weight: 1.0,
+            },
+        },
+        TenantSpec {
+            name: "bulk".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: f64::INFINITY,
+            requests: 64,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5000.0,
+                priority: 0,
+                weight: 1.0,
+            },
+        },
+    ]
+}
+
+fn loadstep_cfg(reshard: bool) -> ClusterConfig {
+    let mut c = spike_cfg();
+    c.seed = 11;
+    c.link_bytes_per_cycle = 16.0;
+    c.link_latency_cycles = 64;
+    c.reshard = if reshard {
+        Some(ReshardPolicy {
+            window: 48,
+            util_skew: 0.9,
+            p99_ms: 50.0, // superseded by per-tenant SLOs on this path
+            cooldown_windows: 1,
+            migration_factor: 1.0,
+        })
+    } else {
+        None
+    };
+    c
+}
+
+#[test]
+fn tenant_aware_reshard_recovers_post_step_p99() {
+    // Acceptance criterion: under a load-step trace the unified engine's
+    // post-reshard per-tenant p99 recovers to <= 1.1x its pre-step value,
+    // while Resume bills measurably fewer cycles than Restart on the same
+    // seed.
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+
+    // Pre-step reference: the same seed and stream, truncated before the
+    // step (arrivals 0..96 are bit-identical), controller armed but never
+    // triggered.
+    let ref_specs = loadstep_specs(96, false);
+    let (ref_w, ref_plans) = place(&fleet, &ref_specs);
+    let ref_ccfg = loadstep_cfg(true);
+    let ref_run =
+        simulate_fleet_multi_tenant(&cfg, &fleet, &ref_specs, &ref_w, &ref_plans, &ref_ccfg);
+    assert!(
+        ref_run.reshard_events.is_empty(),
+        "the pre-step reference must not trigger: {:?}",
+        ref_run.reshard_events
+    );
+    let pre_step_p99 = ref_run.tenants[0].p99_ms;
+
+    // The stepped run: the stream's window p99 blows its SLO, the
+    // controller uncaps it onto both boards, the tail recovers.
+    let specs = loadstep_specs(320, true);
+    let (w, plans) = place(&fleet, &specs);
+    assert_eq!(
+        plans[0].shards.iter().map(|s| s.board).collect::<Vec<_>>(),
+        vec![0],
+        "the replica cap pins the stream to one board pre-reshard"
+    );
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &loadstep_cfg(true));
+    assert!(
+        !r.reshard_events.is_empty(),
+        "the load step must trigger a tenant-aware re-shard"
+    );
+    for e in &r.reshard_events {
+        assert_eq!(e.tenant.as_deref(), Some("stream"), "per-tenant event");
+        assert!(e.reason.contains("slo"), "SLO trigger named: {}", e.reason);
+        assert!(e.migration_bytes > 0, "scale-out moves weights");
+        assert_eq!(e.from, "replicated:1");
+        assert_eq!(e.to, "replicated:2");
+    }
+    let stream = &r.tenants[0];
+    let tail = stream.tail_p99_ms.expect("armed controller reports the tail");
+    assert!(
+        tail <= 1.1 * pre_step_p99,
+        "post-reshard p99 {tail:.4} ms must recover to <= 1.1x the pre-step \
+         {pre_step_p99:.4} ms"
+    );
+
+    // Frozen baseline: same trace, controller off — the stream's tail
+    // stays blown for the rest of the run.
+    let frozen_ccfg = loadstep_cfg(false);
+    let frozen = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &frozen_ccfg);
+    assert!(frozen.reshard_events.is_empty());
+    assert!(
+        frozen.tenants[0].p99_ms > 2.0 * stream.p99_ms,
+        "without re-sharding the stream tail must stay blown: frozen {} vs {}",
+        frozen.tenants[0].p99_ms,
+        stream.p99_ms
+    );
+
+    // And Resume bills measurably fewer cycles than Restart on this same
+    // seed/trace (the flood preempts in both runs).
+    let mut resume_cfg = loadstep_cfg(true);
+    resume_cfg.preempt_mode = PreemptMode::Resume;
+    let rr = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &resume_cfg);
+    let billed = |r: &decoilfnet::cluster::FleetReport| {
+        r.per_board.iter().map(|b| b.busy_cycles).sum::<u64>()
+    };
+    assert!(r.tenants[1].preemptions > 0);
+    assert!(rr.tenants[1].preemptions > 0);
+    assert!(
+        billed(&rr) < billed(&r),
+        "resume must bill fewer cycles on the load-step trace too: {} vs {}",
+        billed(&rr),
+        billed(&r)
+    );
+}
+
+#[test]
+fn mid_sim_replacement_is_deterministic_and_seed_sensitive() {
+    // The controller's place_tenants re-runs are pure functions of the
+    // observed state: the same seed replays byte-identically (re-shard
+    // events included), a different seed samples a different trace.
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = loadstep_specs(320, true);
+    let (w, plans) = place(&fleet, &specs);
+    let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &loadstep_cfg(true));
+    let b = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &loadstep_cfg(true));
+    assert!(!a.reshard_events.is_empty());
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "same seed must replay the re-sharding run byte-identically"
+    );
+    let mut other = loadstep_cfg(true);
+    other.seed = 12;
+    let c = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &other);
+    assert_ne!(
+        a.to_json().to_string_pretty(),
+        c.to_json().to_string_pretty(),
+        "a different seed must sample a different trace"
     );
 }

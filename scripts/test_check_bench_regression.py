@@ -134,6 +134,57 @@ class SeedMode(CheckPairBase):
         self.assertFalse(self.check(base, cur))
 
 
+class UnifiedControlPlaneRows(CheckPairBase):
+    """The mt_reshard_* rows the unified control plane emits (PR 5): they
+    ride along gate-exempt until armed from a CI artifact, exactly like the
+    earlier mt_* rows — and once armed, they gate like any other metric."""
+
+    MT_RESHARD = {
+        "mt_reshard_recovery_ratio": metric(0.88, "lower", gate=False),
+        "mt_reshard_events": metric(1.0, "lower", gate=False),
+        "mt_reshard_tail_p99_ms_restart": metric(0.368, "lower", gate=False),
+        "mt_reshard_tail_p99_ms_resume": metric(0.368, "lower", gate=False),
+        "mt_reshard_billed_cycles_restart": metric(4152892.0, "lower", gate=False),
+        "mt_reshard_billed_cycles_resume": metric(3984042.0, "lower", gate=False),
+        "mt_reshard_resume_saved_cycles": metric(168850.0, "higher", gate=False),
+        "mt_reshard_frozen_p99_ms": metric(1.758, "lower", gate=False),
+    }
+
+    def test_new_rows_in_current_only_are_untracked_and_pass(self):
+        # First CI run after the bench lands: baseline predates the rows.
+        base = doc({"replicated_fused_ideal_rps_b1": metric(37.07)})
+        cur_metrics = {"replicated_fused_ideal_rps_b1": metric(37.07)}
+        cur_metrics.update(self.MT_RESHARD)
+        self.assertTrue(self.check(base, doc(cur_metrics)))
+
+    def test_exempt_reshard_rows_may_drift_without_failing(self):
+        base = doc(dict(self.MT_RESHARD))
+        drifted = {k: metric(m["value"] * 3.0, m["better"]) for k, m in self.MT_RESHARD.items()}
+        self.assertTrue(self.check(base, doc(drifted)))
+
+    def test_armed_reshard_rows_gate_regressions(self):
+        # Once a maintainer arms the rows (drops "gate": false), a blown
+        # recovery ratio fails the pair like any tracked metric.
+        armed = {k: metric(m["value"], m["better"]) for k, m in self.MT_RESHARD.items()}
+        base = doc(armed)
+        bad = {k: dict(v) for k, v in armed.items()}
+        bad["mt_reshard_recovery_ratio"] = metric(1.5, "lower")
+        self.assertFalse(self.check(base, doc(bad)))
+        good = {k: dict(v) for k, v in armed.items()}
+        self.assertTrue(self.check(base, doc(good)))
+
+    def test_armed_saved_cycles_gates_in_the_higher_direction(self):
+        base = doc({"mt_reshard_resume_saved_cycles": metric(168850.0, "higher")})
+        self.assertFalse(
+            self.check(base, doc({"mt_reshard_resume_saved_cycles": metric(10.0, "higher")}))
+        )
+        self.assertTrue(
+            self.check(
+                base, doc({"mt_reshard_resume_saved_cycles": metric(200000.0, "higher")})
+            )
+        )
+
+
 class MultiPairMain(CheckPairBase):
     def run_main(self, argv):
         old = sys.argv
