@@ -39,17 +39,28 @@
 //!   ([`place_tenants_biased`], SLO-missing tenants uncapped, coolest
 //!   boards first) with per-tenant migration billing and
 //!   [`ReshardEvent`]s, reporting per-tenant [`TenantStats`] (p50/p99, SLO
-//!   attainment, preemption counts, post-settle tail p99).
+//!   attainment, preemption counts, post-settle tail p99);
+//! * a **telemetry layer** ([`telemetry`]): a zero-cost-when-disabled
+//!   [`TraceSink`] threaded through all three simulators (the `*_traced`
+//!   twins) recording typed byte-deterministic [`TraceEvent`]s — admission
+//!   with the DRR deficit, dispatch/flush per board, preemption with the
+//!   refunded deficit, the reshard lifecycle, window rollups — plus
+//!   windowed time-series ([`WindowSample`]) and per-tenant online
+//!   [`QuantileSketch`]es, surfaced as the optional
+//!   [`FleetReport::telemetry`] section, the CLI's `--trace` export and
+//!   ASCII fleet dashboard ([`fleet_dashboard`]).
 //!
 //! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
 //! heterogeneous two-generation fleet sweep, a load-step re-sharding
 //! scenario and a two-tenant priority scene, and emits the
-//! `BENCH_cluster.json` metrics CI tracks.
+//! `BENCH_cluster.json` metrics CI tracks (including the simulator's own
+//! `sim_events_per_sec` self-instrumentation rows).
 
 pub mod events;
 pub mod link;
 pub mod shard;
 pub mod sim;
+pub mod telemetry;
 
 pub use link::{InterBoardLink, LinkChannel};
 pub use shard::{
@@ -57,7 +68,12 @@ pub use shard::{
 };
 pub use sim::{
     arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic,
-    simulate_fleet_multi_tenant, tenant_seed, BoardStats, FleetReport, ReshardEvent, TenantStats,
+    simulate_fleet_dynamic_traced, simulate_fleet_multi_tenant, simulate_fleet_multi_tenant_traced,
+    simulate_fleet_traced, tenant_seed, BoardStats, FleetReport, ReshardEvent, TenantStats,
+};
+pub use telemetry::{
+    fleet_dashboard, flushed_items_per_tenant, last_flush_per_tenant, preemptions_per_tenant,
+    QuantileSketch, TelemetrySummary, TraceEvent, TraceSink, WindowSample,
 };
 
 use crate::accel::engine::Weights;
@@ -182,27 +198,42 @@ pub fn run_fleet(
     net: &Network,
     ccfg: &ClusterConfig,
 ) -> Result<FleetReport, String> {
+    run_fleet_traced(cfg, net, ccfg, &mut TraceSink::disabled())
+}
+
+/// [`run_fleet`] with a caller-supplied [`TraceSink`]: the same three-way
+/// engine dispatch, with the sink threaded into whichever simulator runs.
+/// Pass [`TraceSink::enabled`] to collect the event trace, window samples
+/// and per-tenant latency sketches alongside the report (which then carries
+/// the [`FleetReport::telemetry`] summary).
+pub fn run_fleet_traced(
+    cfg: &AccelConfig,
+    net: &Network,
+    ccfg: &ClusterConfig,
+    sink: &mut TraceSink,
+) -> Result<FleetReport, String> {
     if !ccfg.tenants.is_empty() {
         let fleet = ccfg.board_configs(cfg);
         let (weights, plans) = plan_tenants(cfg, ccfg)?;
-        return Ok(simulate_fleet_multi_tenant(
+        return Ok(simulate_fleet_multi_tenant_traced(
             cfg,
             &fleet,
             &ccfg.tenants,
             &weights,
             &plans,
             ccfg,
+            sink,
         ));
     }
     let weights = Weights::random(net, ccfg.seed);
     let shard = plan_fleet(cfg, net, &weights, ccfg)?;
     if ccfg.reshard.is_some() {
         let fleet = ccfg.board_configs(cfg);
-        Ok(simulate_fleet_dynamic(
-            cfg, &fleet, net, &weights, shard, ccfg,
+        Ok(simulate_fleet_dynamic_traced(
+            cfg, &fleet, net, &weights, shard, ccfg, sink,
         ))
     } else {
-        Ok(simulate_fleet(cfg, &shard, ccfg))
+        Ok(simulate_fleet_traced(cfg, &shard, ccfg, sink))
     }
 }
 

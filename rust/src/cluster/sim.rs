@@ -45,6 +45,15 @@
 //!
 //! Time is measured in reference-clock cycles (u64) and converted to wall
 //! time only for reporting.
+//!
+//! Every simulator has a `*_traced` twin taking a
+//! [`super::telemetry::TraceSink`]; the plain entry points forward a
+//! disabled sink, so tracing costs one branch per record site unless armed
+//! — which is what keeps the committed golden fixtures byte-identical.
+//! With an armed sink the run additionally emits typed [`TraceEvent`]s,
+//! [`WindowSample`] time-series at the controller's window boundaries, and
+//! per-tenant latency sketches, and the report carries a
+//! [`super::telemetry::TelemetrySummary`].
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -64,6 +73,7 @@ use crate::util::stats::percentile_sorted;
 use super::events::{BoardPool, DeadlineQueue};
 use super::link::{InterBoardLink, LinkChannel};
 use super::shard::{place_tenants_biased, ShardPlan, TenantWorkload};
+use super::telemetry::{TelemetrySummary, TraceEvent, TraceSink, WindowSample};
 
 /// Per-board outcome counters.
 #[derive(Debug, Clone)]
@@ -215,6 +225,11 @@ pub struct FleetReport {
     /// Per-tenant outcomes ([`simulate_fleet_multi_tenant`]; empty for the
     /// single-network simulators).
     pub tenants: Vec<TenantStats>,
+    /// Aggregated telemetry when the run was traced with an armed
+    /// [`TraceSink`]. `None` (and the JSON key absent) when tracing is
+    /// disabled — the default for every plain entry point, which keeps the
+    /// committed fixtures byte-identical.
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl FleetReport {
@@ -239,7 +254,7 @@ impl FleetReport {
         for t in &self.tenants {
             tenants = tenants.push(t.to_json());
         }
-        Json::obj()
+        let mut j = Json::obj()
             .set("mode", self.mode.as_str())
             .set("boards", self.boards)
             .set("used_boards", self.used_boards)
@@ -255,7 +270,11 @@ impl FleetReport {
             .set("ddr_slowdown", self.ddr_slowdown)
             .set("reshard_events", events)
             .set("tenants", tenants)
-            .set("per_board", boards)
+            .set("per_board", boards);
+        if let Some(t) = &self.telemetry {
+            j = j.set("telemetry", t.to_json());
+        }
+        j
     }
 }
 
@@ -370,6 +389,19 @@ pub(crate) fn fleet_demand(plan: &ShardPlan, ref_freq: f64) -> f64 {
 /// Simulate `ccfg.requests` requests against a sharded fleet with a fixed
 /// plan for the whole run.
 pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig) -> FleetReport {
+    simulate_fleet_traced(cfg, shard, ccfg, &mut TraceSink::disabled())
+}
+
+/// [`simulate_fleet`] with a caller-supplied [`TraceSink`]. With an armed
+/// sink every batch dispatch and flush is recorded per board and each
+/// request latency feeds the tenant-0 quantile sketch; with
+/// [`TraceSink::disabled`] this is exactly [`simulate_fleet`].
+pub fn simulate_fleet_traced(
+    cfg: &AccelConfig,
+    shard: &ShardPlan,
+    ccfg: &ClusterConfig,
+    sink: &mut TraceSink,
+) -> FleetReport {
     ccfg.validate().expect("invalid cluster config");
     let ref_freq = cfg.platform.freq_mhz;
     let n = ccfg.requests;
@@ -418,6 +450,15 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                     let done = start + svc;
                     free_at[b] = done;
                     busy[b] += svc;
+                    let k = batch.len();
+                    sink.record(|| TraceEvent::Dispatch {
+                        at: start,
+                        tenant: 0,
+                        board: b,
+                        items: k,
+                        done,
+                    });
+                    sink.record(|| TraceEvent::Flush { at: done, tenant: 0, board: b, items: k });
                     for req in batch {
                         complete[req] = done;
                     }
@@ -445,6 +486,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                 &to_cycles,
                 |_, batch, ready| {
                     let bsz = batch.len() as u64;
+                    let k = batch.len();
                     let mut t = ready;
                     for (s, bs) in shard.shards.iter().enumerate() {
                         let svc = service(bs, bsz);
@@ -452,6 +494,13 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                         let done = start + svc;
                         free_at[s] = done;
                         busy[s] += svc;
+                        sink.record(|| TraceEvent::Dispatch {
+                            at: start,
+                            tenant: 0,
+                            board: s,
+                            items: k,
+                            done,
+                        });
                         t = done;
                         if s + 1 < stages {
                             let bytes = bs.egress_bytes * bsz;
@@ -459,6 +508,12 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
                             t = links[s].transfer(bytes, t);
                         }
                     }
+                    sink.record(|| TraceEvent::Flush {
+                        at: t,
+                        tenant: 0,
+                        board: stages - 1,
+                        items: k,
+                    });
                     for req in batch {
                         complete[req] = t;
                     }
@@ -477,6 +532,11 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
         .zip(&arrivals)
         .map(|(&c, &a)| (c.saturating_sub(a)) as f64 * ns_per_cycle / 1e6)
         .collect();
+    if sink.is_enabled() {
+        for &l in &lat_ms {
+            sink.observe_latency_ms(0, l);
+        }
+    }
     lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
     let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
 
@@ -512,6 +572,7 @@ pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events: Vec::new(),
         tenants: Vec::new(),
+        telemetry: sink.summary(),
     }
 }
 
@@ -574,6 +635,25 @@ pub fn simulate_fleet_dynamic(
     weights: &Weights,
     initial: ShardPlan,
     ccfg: &ClusterConfig,
+) -> FleetReport {
+    let mut sink = TraceSink::disabled();
+    simulate_fleet_dynamic_traced(cfg, fleet, net, weights, initial, ccfg, &mut sink)
+}
+
+/// [`simulate_fleet_dynamic`] with a caller-supplied [`TraceSink`]. An armed
+/// sink records every dispatch/flush, a [`TraceEvent::WindowRollup`] plus a
+/// [`WindowSample`] at each controller window boundary, and the full reshard
+/// lifecycle (trigger → stall → wake); with [`TraceSink::disabled`] this is
+/// exactly [`simulate_fleet_dynamic`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_dynamic_traced(
+    cfg: &AccelConfig,
+    fleet: &[AccelConfig],
+    net: &Network,
+    weights: &Weights,
+    initial: ShardPlan,
+    ccfg: &ClusterConfig,
+    sink: &mut TraceSink,
 ) -> FleetReport {
     ccfg.validate().expect("invalid cluster config");
     assert!(!fleet.is_empty());
@@ -645,11 +725,20 @@ pub fn simulate_fleet_dynamic(
                 let bsz = k as u64;
                 let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
                 let done = start + svc;
-                free_at[s.board] = done;
+                let sb = s.board;
+                free_at[sb] = done;
                 pool.release(pick, done);
-                busy[s.board] += svc;
-                items[s.board] += bsz;
-                batches[s.board] += 1;
+                busy[sb] += svc;
+                items[sb] += bsz;
+                batches[sb] += 1;
+                sink.record(|| TraceEvent::Dispatch {
+                    at: start,
+                    tenant: 0,
+                    board: sb,
+                    items: k,
+                    done,
+                });
+                sink.record(|| TraceEvent::Flush { at: done, tenant: 0, board: sb, items: k });
                 for c in complete.iter_mut().skip(i).take(k) {
                     *c = done;
                 }
@@ -670,10 +759,18 @@ pub fn simulate_fleet_dynamic(
                     let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
                     let start = t.max(free_at[s.board]);
                     let done = start + svc;
-                    free_at[s.board] = done;
-                    busy[s.board] += svc;
-                    items[s.board] += bsz;
-                    batches[s.board] += 1;
+                    let sb = s.board;
+                    free_at[sb] = done;
+                    busy[sb] += svc;
+                    items[sb] += bsz;
+                    batches[sb] += 1;
+                    sink.record(|| TraceEvent::Dispatch {
+                        at: start,
+                        tenant: 0,
+                        board: sb,
+                        items: k,
+                        done,
+                    });
                     t = done;
                     if si + 1 < stages {
                         let bytes = s.egress_bytes * bsz;
@@ -681,6 +778,8 @@ pub fn simulate_fleet_dynamic(
                         t = links[si].transfer(bytes, t);
                     }
                 }
+                let lastb = plan.shards[stages - 1].board;
+                sink.record(|| TraceEvent::Flush { at: t, tenant: 0, board: lastb, items: k });
                 for c in complete.iter_mut().skip(i).take(k) {
                     *c = t;
                 }
@@ -716,6 +815,22 @@ pub fn simulate_fleet_dynamic(
             }
             skew = hi - lo;
         }
+        let win_requests = win_lat_ms.len() as u64;
+        sink.record(|| TraceEvent::WindowRollup { at: now, requests: win_requests });
+        sink.sample_window(|| WindowSample {
+            at: now,
+            busy_frac: (0..nb)
+                .map(|b| {
+                    if span == 0 {
+                        0.0
+                    } else {
+                        busy[b].saturating_sub(win_busy0[b]) as f64 / span as f64
+                    }
+                })
+                .collect(),
+            queue_depth: vec![n - i],
+            window_p99_ms: vec![p99],
+        });
         if cooldown > 0 {
             cooldown -= 1;
         } else if p99 > pol.p99_ms || skew > pol.util_skew {
@@ -724,6 +839,7 @@ pub fn simulate_fleet_dynamic(
             } else {
                 format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
             };
+            sink.record(|| TraceEvent::ReshardTrigger { at: now, reason: reason.clone() });
             // Re-plan on the actual fleet: both modes, ranked by predicted
             // capacity; only feasible candidates compete.
             let mut best: Option<(f64, ShardPlan)> = None;
@@ -754,6 +870,13 @@ pub fn simulate_fleet_dynamic(
                     for f in &mut free_at {
                         *f = sync + stall;
                     }
+                    sink.record(|| TraceEvent::ReshardStall {
+                        at: sync,
+                        tenant: None,
+                        bytes: bill,
+                        stall_cycles: stall,
+                    });
+                    sink.record(|| TraceEvent::ReshardWake { at: sync + stall });
                     events.push(ReshardEvent {
                         at_cycle: sync,
                         from: plan.label(),
@@ -785,6 +908,11 @@ pub fn simulate_fleet_dynamic(
         .zip(&arrivals)
         .map(|(&c, &a)| c.saturating_sub(a) as f64 * ns_per_cycle / 1e6)
         .collect();
+    if sink.is_enabled() {
+        for &l in &lat_ms {
+            sink.observe_latency_ms(0, l);
+        }
+    }
     lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
     let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
 
@@ -820,6 +948,7 @@ pub fn simulate_fleet_dynamic(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events: events,
         tenants: Vec::new(),
+        telemetry: sink.summary(),
     }
 }
 
@@ -927,6 +1056,27 @@ pub fn simulate_fleet_multi_tenant(
     weights: &[Weights],
     plans: &[ShardPlan],
     ccfg: &ClusterConfig,
+) -> FleetReport {
+    let mut sink = TraceSink::disabled();
+    simulate_fleet_multi_tenant_traced(cfg, fleet, specs, weights, plans, ccfg, &mut sink)
+}
+
+/// [`simulate_fleet_multi_tenant`] with a caller-supplied [`TraceSink`]. An
+/// armed sink records the full control-plane decision stream — admission
+/// with the DRR deficit at decision time, per-board dispatch/flush,
+/// preemption with the refunded deficit, the reshard lifecycle with
+/// per-tenant migration billing, and window rollups — plus per-tenant
+/// latency sketches and the simulator's own event-loop stats; with
+/// [`TraceSink::disabled`] this is exactly [`simulate_fleet_multi_tenant`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_multi_tenant_traced(
+    cfg: &AccelConfig,
+    fleet: &[AccelConfig],
+    specs: &[TenantSpec],
+    weights: &[Weights],
+    plans: &[ShardPlan],
+    ccfg: &ClusterConfig,
+    sink: &mut TraceSink,
 ) -> FleetReport {
     ccfg.validate().expect("invalid cluster config");
     assert!(!fleet.is_empty());
@@ -1071,11 +1221,14 @@ pub fn simulate_fleet_multi_tenant(
             complete[t][req] = at;
             done_mask[t][req] = true;
             served[t] += 1;
-            if policy.is_some() {
+            if policy.is_some() || sink.is_enabled() {
                 let lat = at.saturating_sub(arrivals[t][req]) as f64 * ns_per_cycle / 1e6;
-                win_count += 1;
-                win_t[t].push(lat);
-                done_lat[t].push(lat);
+                sink.observe_latency_ms(t, lat);
+                if policy.is_some() {
+                    win_count += 1;
+                    win_t[t].push(lat);
+                    done_lat[t].push(lat);
+                }
             }
         }};
     }
@@ -1114,6 +1267,11 @@ pub fn simulate_fleet_multi_tenant(
             let done = at + svc;
             free_at[b] = done;
             batches[b] += 1;
+            // Deficit is logged as it stood when admission was decided —
+            // before this dispatch's own bill lands.
+            let deficit = charge[t];
+            sink.record(|| TraceEvent::Admit { at, tenant: t, board: b, items: k, deficit });
+            sink.record(|| TraceEvent::Dispatch { at, tenant: t, board: b, items: k, done });
             board_state[b] = Some(Running {
                 tenant: t,
                 start: at,
@@ -1208,6 +1366,14 @@ pub fn simulate_fleet_multi_tenant(
                                         }
                                         let bsz = k as u64;
                                         let stages = cur_plans[t].used_boards();
+                                        let deficit = charge[t];
+                                        sink.record(|| TraceEvent::Admit {
+                                            at,
+                                            tenant: t,
+                                            board: first,
+                                            items: k,
+                                            deficit,
+                                        });
                                         let mut tcur = at;
                                         let mut billed = 0u64;
                                         for (si, s) in cur_plans[t].shards.iter().enumerate() {
@@ -1225,12 +1391,20 @@ pub fn simulate_fleet_multi_tenant(
                                             }
                                             let start = tcur.max(free_at[s.board]);
                                             let done = start + svc;
-                                            free_at[s.board] = done;
-                                            busy[s.board] += svc;
-                                            items[s.board] += bsz;
-                                            batches[s.board] += 1;
+                                            let sb = s.board;
+                                            free_at[sb] = done;
+                                            busy[sb] += svc;
+                                            items[sb] += bsz;
+                                            batches[sb] += 1;
                                             billed += svc;
-                                            events.schedule(done, s.board);
+                                            events.schedule(done, sb);
+                                            sink.record(|| TraceEvent::Dispatch {
+                                                at: start,
+                                                tenant: t,
+                                                board: sb,
+                                                items: k,
+                                                done,
+                                            });
                                             tcur = done;
                                             if si + 1 < stages {
                                                 let bytes = s.egress_bytes * bsz;
@@ -1242,6 +1416,13 @@ pub fn simulate_fleet_multi_tenant(
                                         for r in reqs {
                                             record_done!(t, r, tcur);
                                         }
+                                        let lastb = cur_plans[t].shards[stages - 1].board;
+                                        sink.record(|| TraceEvent::Flush {
+                                            at: tcur,
+                                            tenant: t,
+                                            board: lastb,
+                                            items: k,
+                                        });
                                         advanced = true;
                                     }
                                 }
@@ -1310,6 +1491,14 @@ pub fn simulate_fleet_multi_tenant(
                                     record_done!(vt, req, at);
                                 }
                                 items[b] += j as u64;
+                                if j > 0 {
+                                    sink.record(|| TraceEvent::Flush {
+                                        at,
+                                        tenant: vt,
+                                        board: b,
+                                        items: j,
+                                    });
+                                }
                                 refund = if j == 0 {
                                     r.done - r.start
                                 } else {
@@ -1320,6 +1509,18 @@ pub fn simulate_fleet_multi_tenant(
                                 refund = r.done - r.start;
                             }
                             charge[vt] = charge[vt].saturating_sub(refund);
+                            let mode = match ccfg.preempt_mode {
+                                PreemptMode::Restart => "restart",
+                                PreemptMode::Resume => "resume",
+                            };
+                            sink.record(|| TraceEvent::Preempt {
+                                at,
+                                board: b,
+                                victim: vt,
+                                by: t,
+                                mode,
+                                refunded_cycles: refund,
+                            });
                             for &req in rest.iter().rev() {
                                 pend[vt].push_front((req, true));
                             }
@@ -1356,11 +1557,13 @@ pub fn simulate_fleet_multi_tenant(
             } else if matches!(&board_state[id], Some(r) if r.done == at) {
                 let r = board_state[id].take().expect("running");
                 busy[id] += r.done - r.start;
-                items[id] += r.reqs.len() as u64;
+                let k = r.reqs.len();
+                items[id] += k as u64;
                 let tn = r.tenant;
                 for req in r.reqs {
                     record_done!(tn, req, at);
                 }
+                sink.record(|| TraceEvent::Flush { at, tenant: tn, board: id, items: k });
             }
             // Post-migration wake events (and stale completions) fall
             // through: the dispatch pass below re-examines the fleet.
@@ -1395,6 +1598,7 @@ pub fn simulate_fleet_multi_tenant(
                     // Tenant-aware trigger: each tenant's window p99 against
                     // its own SLO target.
                     let mut triggered: Vec<(usize, f64)> = Vec::new();
+                    let mut win_p99 = vec![f64::NAN; nt];
                     for t in 0..nt {
                         if win_t[t].is_empty() {
                             continue;
@@ -1402,10 +1606,27 @@ pub fn simulate_fleet_multi_tenant(
                         let mut lat = win_t[t].clone();
                         lat.sort_by(|x, y| x.partial_cmp(y).unwrap());
                         let p99 = percentile_sorted(&lat, 99.0);
+                        win_p99[t] = p99;
                         if p99 > specs[t].slo.p99_ms {
                             triggered.push((t, p99));
                         }
                     }
+                    let win_requests = win_count as u64;
+                    sink.record(|| TraceEvent::WindowRollup { at, requests: win_requests });
+                    sink.sample_window(|| WindowSample {
+                        at,
+                        busy_frac: (0..nb)
+                            .map(|b| {
+                                if span == 0 {
+                                    0.0
+                                } else {
+                                    busy[b].saturating_sub(win_busy0[b]) as f64 / span as f64
+                                }
+                            })
+                            .collect(),
+                        queue_depth: (0..nt).map(|t| pend[t].len()).collect(),
+                        window_p99_ms: win_p99,
+                    });
                     if cooldown > 0 {
                         cooldown -= 1;
                     } else if !triggered.is_empty() || skew > pol.util_skew {
@@ -1425,6 +1646,7 @@ pub fn simulate_fleet_multi_tenant(
                                 format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
                             }
                         };
+                        sink.record(|| TraceEvent::ReshardTrigger { at, reason: reason.clone() });
                         // Re-place against the observed load: coolest boards
                         // first, SLO-missing tenants uncapped (scale-out).
                         let bias: Vec<u64> = (0..nb)
@@ -1480,6 +1702,12 @@ pub fn simulate_fleet_multi_tenant(
                                 }
                                 let stall = link.transfer_cycles(total_bill);
                                 for (t, bill) in bills {
+                                    sink.record(|| TraceEvent::ReshardStall {
+                                        at: sync,
+                                        tenant: Some(t),
+                                        bytes: bill,
+                                        stall_cycles: stall,
+                                    });
                                     reshard_events.push(ReshardEvent {
                                         at_cycle: sync,
                                         from: cur_plans[t].label(),
@@ -1498,6 +1726,7 @@ pub fn simulate_fleet_multi_tenant(
                                     // event would strand.
                                     events.schedule(sync + stall, b);
                                 }
+                                sink.record(|| TraceEvent::ReshardWake { at: sync + stall });
                                 cur_plans = new_plans;
                                 shard_idx = build_idx(&cur_plans);
                                 links_t = rebuild_links(&cur_plans);
@@ -1521,8 +1750,10 @@ pub fn simulate_fleet_multi_tenant(
     }
 
     while let Some((at, id)) = events.pop() {
+        sink.note_sim_event(events.len());
         handle!(at, id);
         while let Some((at2, id2)) = events.next_at_or_before(at) {
+            sink.note_sim_event(events.len());
             handle!(at2, id2);
         }
         dispatch_all!(at);
@@ -1645,6 +1876,7 @@ pub fn simulate_fleet_multi_tenant(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events,
         tenants,
+        telemetry: sink.summary(),
     }
 }
 
@@ -2392,5 +2624,93 @@ mod tests {
             ra.to_json().to_string_pretty(),
             rb.to_json().to_string_pretty()
         );
+    }
+
+    // ---- telemetry ----
+
+    use crate::cluster::telemetry::{
+        flushed_items_per_tenant, last_flush_per_tenant, preemptions_per_tenant,
+    };
+
+    #[test]
+    fn tracing_never_perturbs_the_simulation() {
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let ccfg = mt_cfg(2, 8);
+        let plain = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        let mut sink = TraceSink::enabled();
+        let traced =
+            simulate_fleet_multi_tenant_traced(&cfg, &fleet, &specs, &w, &plans, &ccfg, &mut sink);
+        // Bit-identical simulation outcome with the sink armed…
+        assert_eq!(plain.makespan_cycles, traced.makespan_cycles);
+        assert_eq!(plain.throughput_rps.to_bits(), traced.throughput_rps.to_bits());
+        assert_eq!(plain.p99_ms.to_bits(), traced.p99_ms.to_bits());
+        // …and the optional `telemetry` key is the only JSON difference:
+        // absent when disabled (fixtures stay byte-identical), present when
+        // armed.
+        assert!(plain.to_json().get("telemetry").is_null());
+        assert!(!traced.to_json().get("telemetry").is_null());
+        assert!(plain.telemetry.is_none());
+        let summary = traced.telemetry.expect("armed sink must summarize");
+        assert!(summary.events_total > 0);
+        assert_eq!(summary.preemptions, plain.tenants.iter().map(|t| t.preemptions).sum::<u64>());
+    }
+
+    #[test]
+    fn static_trace_flushes_conserve_items_and_sketch_matches_p99() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let ccfg = burst_cfg(2, ShardMode::Replicated);
+        let mut sink = TraceSink::enabled();
+        let r = simulate_fleet_traced(&cfg, &shard, &ccfg, &mut sink);
+        let flushed = flushed_items_per_tenant(&sink.events, 1);
+        assert_eq!(flushed[0] as usize, ccfg.requests, "every request flushes exactly once");
+        let sketch_p99 = sink.sketches[0].quantile(99.0);
+        let rel = (sketch_p99 - r.p99_ms).abs() / r.p99_ms;
+        assert!(rel <= 0.01, "sketch p99 {sketch_p99} vs exact {} (rel {rel})", r.p99_ms);
+    }
+
+    #[test]
+    fn mt_trace_recomputes_report_aggregates_exactly() {
+        // The acceptance bar: per-tenant items, spans → throughput, and
+        // preemption counts recomputed from the raw event trace must equal
+        // the report's aggregates exactly (throughput bit-for-bit — the
+        // recompute replays the same f64 operations).
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        for mode in [PreemptMode::Restart, PreemptMode::Resume] {
+            let mut ccfg = mt_cfg(2, 8);
+            ccfg.preempt_mode = mode;
+            ccfg.preempt_refill_cycles = 100;
+            let mut sink = TraceSink::enabled();
+            let r = simulate_fleet_multi_tenant_traced(
+                &cfg, &fleet, &specs, &w, &plans, &ccfg, &mut sink,
+            );
+            let nt = specs.len();
+            let flushed = flushed_items_per_tenant(&sink.events, nt);
+            let spans = last_flush_per_tenant(&sink.events, nt);
+            let preempts = preemptions_per_tenant(&sink.events, nt);
+            let ns_per_cycle = 1e3 / cfg.platform.freq_mhz;
+            for (t, stats) in r.tenants.iter().enumerate() {
+                assert_eq!(flushed[t], stats.items, "tenant {t} flushed items");
+                assert_eq!(preempts[t], stats.preemptions, "tenant {t} preemptions");
+                let span_s = spans[t] as f64 * ns_per_cycle / 1e9;
+                let rps = if span_s > 0.0 {
+                    stats.requests as f64 / span_s
+                } else {
+                    0.0
+                };
+                assert_eq!(
+                    rps.to_bits(),
+                    stats.throughput_rps.to_bits(),
+                    "tenant {t} trace-recomputed throughput must be bit-exact"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,867 @@
+//! Fleet telemetry: deterministic event tracing, windowed time-series, and
+//! online quantile sketches for the cluster simulators.
+//!
+//! The per-layer `accel/trace.rs` timeline proved the idiom at the
+//! single-accelerator level (the Fig 5 staircase); this module lifts it to
+//! the whole fleet and control plane. Three pieces:
+//!
+//! * [`TraceSink`] — a zero-cost-when-disabled event recorder threaded
+//!   through all three simulators. Every record method takes a closure so a
+//!   disabled sink never even constructs the event; `TraceSink::disabled()`
+//!   is the default for every existing entry point, which is what keeps the
+//!   committed `FleetReport` fixtures byte-identical.
+//! * [`TraceEvent`] — the typed, byte-deterministic event vocabulary:
+//!   admission (with the DRR deficit at decision time), per-board batch
+//!   dispatch and flush, preemption (mode, victim, refunded deficit),
+//!   reshard trigger/stall/wake with per-tenant migration billing, and
+//!   window rollups. [`WindowSample`] carries the windowed time-series
+//!   (per-board busy fraction, per-tenant queue depth and window p99)
+//!   sampled at the existing reshard-window boundaries.
+//! * [`QuantileSketch`] — a fixed-bin log-scale histogram (mergeable,
+//!   ≤ 0.5 % relative error by construction, validated against
+//!   `percentile_sorted` to ≤ 1 %) so per-tenant tail latency stays
+//!   computable for 1e6-request traces without retaining every sample.
+//!
+//! Aggregates recomputed from the trace (`flushed_items_per_tenant`,
+//! `last_flush_per_tenant`, `preemptions_per_tenant`) are asserted equal to
+//! `FleetReport`'s in `tests/integration_telemetry.rs`.
+
+use crate::util::json::Json;
+use crate::util::math::ln_det;
+
+/// Number of log-scale bins in a [`QuantileSketch`]. With `SKETCH_EPS`
+/// = 0.005 the bins cover `[1e-9, ~6e8]` ms — far beyond any simulated
+/// latency — before overflow clamping kicks in.
+pub const SKETCH_BINS: usize = 4096;
+/// Lower edge of bin 0 (ms). Everything at or below lands in the underflow
+/// bin; a one-cycle latency at 120 MHz is ~8.3e-6 ms, so nothing real does.
+pub const SKETCH_MIN: f64 = 1e-9;
+/// Per-sample relative-error budget. γ = (1+ε)/(1−ε) makes the midpoint
+/// estimate `2lγ/(γ+1)` of bin `(l, lγ]` exact to ±ε.
+pub const SKETCH_EPS: f64 = 0.005;
+
+fn sketch_gamma() -> f64 {
+    (1.0 + SKETCH_EPS) / (1.0 - SKETCH_EPS)
+}
+
+/// Online log-scale histogram with deterministic binning (`ln_det`, not
+/// platform libm) and linear-interpolated quantiles that mimic
+/// `percentile_sorted`'s rank convention, so the two agree to within the
+/// per-sample error budget on any sample set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            counts: vec![0; SKETCH_BINS],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Record one observation (ms). Non-finite values are a caller bug.
+    pub fn record(&mut self, v: f64) {
+        assert!(v.is_finite(), "QuantileSketch::record({v})");
+        self.total += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        if v <= SKETCH_MIN {
+            self.underflow += 1;
+            return;
+        }
+        let i = (ln_det(v / SKETCH_MIN) / ln_det(sketch_gamma())).floor() as i64;
+        if i < 0 {
+            self.underflow += 1;
+        } else if i as usize >= SKETCH_BINS {
+            self.overflow += 1;
+        } else {
+            self.counts[i as usize] += 1;
+        }
+    }
+
+    /// Merge another sketch into this one (bin-exact: counts add).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Estimated value of the sample at ascending rank `k` (0-indexed).
+    /// Bin `(l, lγ]` is estimated at `2lγ/(γ+1)`, clamped to the observed
+    /// `[min, max]` so the extremes are exact.
+    fn value_at_rank(&self, k: u64) -> f64 {
+        debug_assert!(k < self.total);
+        let clamp = |v: f64| v.max(self.min).min(self.max);
+        if k < self.underflow {
+            return clamp(SKETCH_MIN);
+        }
+        let g = sketch_gamma();
+        let mut cum = self.underflow;
+        let mut l = SKETCH_MIN;
+        for &c in &self.counts {
+            if k < cum + c {
+                return clamp(2.0 * l * g / (g + 1.0));
+            }
+            cum += c;
+            l *= g;
+        }
+        clamp(self.max) // overflow tail
+    }
+
+    /// Linear-interpolated quantile, same rank convention as
+    /// `percentile_sorted`: rank = pct/100·(n−1), interpolate floor/ceil.
+    pub fn quantile(&self, pct: f64) -> f64 {
+        assert!(self.total > 0, "QuantileSketch::quantile on empty sketch");
+        assert!((0.0..=100.0).contains(&pct));
+        // The extremes are tracked exactly — match `percentile_sorted`
+        // bit-for-bit there instead of estimating.
+        if self.total == 1 || pct == 0.0 {
+            return self.min;
+        }
+        if pct == 100.0 {
+            return self.max;
+        }
+        let rank = pct / 100.0 * (self.total - 1) as f64;
+        let lo = rank.floor() as u64;
+        let hi = rank.ceil() as u64;
+        let frac = rank - lo as f64;
+        let vlo = self.value_at_rank(lo);
+        let vhi = self.value_at_rank(hi);
+        vlo + (vhi - vlo) * frac
+    }
+
+    /// Compact JSON: only non-empty bins, plus exact min/max/sum/total and
+    /// the headline estimated percentiles.
+    pub fn to_json(&self) -> Json {
+        let mut bins = Json::Arr(vec![]);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                bins = bins.push(Json::Arr(vec![Json::from(i as u64), Json::from(c)]));
+            }
+        }
+        let mut j = Json::obj()
+            .set("total", self.total)
+            .set("underflow", self.underflow)
+            .set("overflow", self.overflow)
+            .set("bins", bins);
+        if self.total > 0 {
+            j = j
+                .set("min_ms", self.min)
+                .set("max_ms", self.max)
+                .set("mean_ms", self.sum / self.total as f64)
+                .set("p50_ms", self.quantile(50.0))
+                .set("p99_ms", self.quantile(99.0));
+        }
+        j
+    }
+}
+
+/// One typed simulator event. `at` (and `done`) are reference-clock cycle
+/// instants — the same timeline `FleetReport` reports in.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A tenant won admission for a batch (multi-tenant only). `deficit` is
+    /// the tenant's DRR billed-cycle counter at decision time.
+    Admit { at: u64, tenant: usize, board: usize, items: usize, deficit: u64 },
+    /// A batch (or one pipelined stage of a chain) started service.
+    Dispatch { at: u64, tenant: usize, board: usize, items: usize, done: u64 },
+    /// Completed items left a board — the per-tenant completion instant.
+    /// Per-tenant sums/maxima over flushes reproduce `FleetReport` exactly.
+    Flush { at: u64, tenant: usize, board: usize, items: usize },
+    /// A running batch was preempted. `refunded_cycles` is the DRR deficit
+    /// handed back to the victim for undelivered service.
+    Preempt {
+        at: u64,
+        board: usize,
+        victim: usize,
+        by: usize,
+        mode: &'static str,
+        refunded_cycles: u64,
+    },
+    /// The window controller decided to re-shard.
+    ReshardTrigger { at: u64, reason: String },
+    /// Migration billing for one tenant (or the whole fleet when `tenant`
+    /// is `None`, as in the single-tenant dynamic controller).
+    ReshardStall { at: u64, tenant: Option<usize>, bytes: u64, stall_cycles: u64 },
+    /// The fleet resumed after a re-shard stall.
+    ReshardWake { at: u64 },
+    /// A stats window closed (with or without a re-shard).
+    WindowRollup { at: u64, requests: u64 },
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::Dispatch { .. } => "dispatch",
+            TraceEvent::Flush { .. } => "flush",
+            TraceEvent::Preempt { .. } => "preempt",
+            TraceEvent::ReshardTrigger { .. } => "reshard_trigger",
+            TraceEvent::ReshardStall { .. } => "reshard_stall",
+            TraceEvent::ReshardWake { .. } => "reshard_wake",
+            TraceEvent::WindowRollup { .. } => "window",
+        }
+    }
+
+    pub fn at(&self) -> u64 {
+        match *self {
+            TraceEvent::Admit { at, .. }
+            | TraceEvent::Dispatch { at, .. }
+            | TraceEvent::Flush { at, .. }
+            | TraceEvent::Preempt { at, .. }
+            | TraceEvent::ReshardTrigger { at, .. }
+            | TraceEvent::ReshardStall { at, .. }
+            | TraceEvent::ReshardWake { at }
+            | TraceEvent::WindowRollup { at, .. } => at,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj().set("kind", self.kind()).set("at", self.at());
+        match self {
+            TraceEvent::Admit { tenant, board, items, deficit, .. } => j
+                .set("tenant", *tenant as u64)
+                .set("board", *board as u64)
+                .set("items", *items as u64)
+                .set("deficit", *deficit),
+            TraceEvent::Dispatch { tenant, board, items, done, .. } => j
+                .set("tenant", *tenant as u64)
+                .set("board", *board as u64)
+                .set("items", *items as u64)
+                .set("done", *done),
+            TraceEvent::Flush { tenant, board, items, .. } => j
+                .set("tenant", *tenant as u64)
+                .set("board", *board as u64)
+                .set("items", *items as u64),
+            TraceEvent::Preempt { board, victim, by, mode, refunded_cycles, .. } => j
+                .set("board", *board as u64)
+                .set("victim", *victim as u64)
+                .set("by", *by as u64)
+                .set("mode", *mode)
+                .set("refunded_cycles", *refunded_cycles),
+            TraceEvent::ReshardTrigger { reason, .. } => j.set("reason", reason.as_str()),
+            TraceEvent::ReshardStall { tenant, bytes, stall_cycles, .. } => {
+                let j = match tenant {
+                    Some(t) => j.set("tenant", *t as u64),
+                    None => j,
+                };
+                j.set("bytes", *bytes).set("stall_cycles", *stall_cycles)
+            }
+            TraceEvent::ReshardWake { .. } => j,
+            TraceEvent::WindowRollup { requests, .. } => j.set("requests", *requests),
+        }
+    }
+}
+
+/// One windowed time-series sample, taken when a stats window closes at the
+/// existing reshard-window boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowSample {
+    /// Window-close instant (reference cycles).
+    pub at: u64,
+    /// Per-board busy fraction over the window just closed.
+    pub busy_frac: Vec<f64>,
+    /// Per-tenant pending queue depth at the boundary.
+    pub queue_depth: Vec<usize>,
+    /// Per-tenant p99 (ms) over the window's completions; NaN (JSON null)
+    /// when a tenant completed nothing in the window.
+    pub window_p99_ms: Vec<f64>,
+}
+
+impl WindowSample {
+    pub fn to_json(&self) -> Json {
+        let mut busy = Json::Arr(vec![]);
+        for &b in &self.busy_frac {
+            busy = busy.push(Json::from(b));
+        }
+        let mut depth = Json::Arr(vec![]);
+        for &q in &self.queue_depth {
+            depth = depth.push(Json::from(q as u64));
+        }
+        let mut p99 = Json::Arr(vec![]);
+        for &p in &self.window_p99_ms {
+            p99 = p99.push(Json::from(p));
+        }
+        Json::obj()
+            .set("at", self.at)
+            .set("busy_frac", busy)
+            .set("queue_depth", depth)
+            .set("window_p99_ms", p99)
+    }
+}
+
+/// Aggregated telemetry carried on `FleetReport` when tracing is enabled
+/// (the field is absent — not null — when disabled, so committed fixtures
+/// stay byte-identical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySummary {
+    pub events_total: u64,
+    pub admits: u64,
+    pub dispatches: u64,
+    pub flushes: u64,
+    pub preemptions: u64,
+    pub reshard_triggers: u64,
+    pub reshard_stalls: u64,
+    pub reshard_wakes: u64,
+    pub windows: u64,
+    /// Simulator heap events processed (drives `sim_events_per_sec`).
+    pub sim_events: u64,
+    pub heap_depth_max: u64,
+    pub heap_depth_mean: f64,
+    /// Per-tenant sketch-estimated p99 (ms); NaN when a tenant has no
+    /// completions.
+    pub tenant_p99_ms: Vec<f64>,
+}
+
+impl TelemetrySummary {
+    pub fn to_json(&self) -> Json {
+        let mut p99 = Json::Arr(vec![]);
+        for &p in &self.tenant_p99_ms {
+            p99 = p99.push(Json::from(p));
+        }
+        Json::obj()
+            .set("events_total", self.events_total)
+            .set("admits", self.admits)
+            .set("dispatches", self.dispatches)
+            .set("flushes", self.flushes)
+            .set("preemptions", self.preemptions)
+            .set("reshard_triggers", self.reshard_triggers)
+            .set("reshard_stalls", self.reshard_stalls)
+            .set("reshard_wakes", self.reshard_wakes)
+            .set("windows", self.windows)
+            .set("sim_events", self.sim_events)
+            .set("heap_depth_max", self.heap_depth_max)
+            .set("heap_depth_mean", self.heap_depth_mean)
+            .set("tenant_p99_ms", p99)
+    }
+}
+
+/// The recorder the simulators thread through their hot loops. Disabled is
+/// the default everywhere; every record method is `#[inline]` and takes a
+/// closure, so a disabled sink costs one branch and never constructs the
+/// event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSink {
+    enabled: bool,
+    pub events: Vec<TraceEvent>,
+    pub windows: Vec<WindowSample>,
+    /// One latency sketch per tenant (index 0 for the single-tenant sims).
+    pub sketches: Vec<QuantileSketch>,
+    pub sim_events: u64,
+    pub heap_depth_max: u64,
+    heap_depth_sum: u64,
+    heap_depth_samples: u64,
+}
+
+impl TraceSink {
+    pub fn disabled() -> TraceSink {
+        TraceSink {
+            enabled: false,
+            events: Vec::new(),
+            windows: Vec::new(),
+            sketches: Vec::new(),
+            sim_events: 0,
+            heap_depth_max: 0,
+            heap_depth_sum: 0,
+            heap_depth_samples: 0,
+        }
+    }
+
+    pub fn enabled() -> TraceSink {
+        TraceSink { enabled: true, ..TraceSink::disabled() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: impl FnOnce() -> TraceEvent) {
+        if self.enabled {
+            self.events.push(ev());
+        }
+    }
+
+    #[inline]
+    pub fn sample_window(&mut self, w: impl FnOnce() -> WindowSample) {
+        if self.enabled {
+            self.windows.push(w());
+        }
+    }
+
+    /// Feed one completion latency into the tenant's quantile sketch.
+    #[inline]
+    pub fn observe_latency_ms(&mut self, tenant: usize, ms: f64) {
+        if self.enabled {
+            if self.sketches.len() <= tenant {
+                self.sketches.resize_with(tenant + 1, QuantileSketch::new);
+            }
+            self.sketches[tenant].record(ms);
+        }
+    }
+
+    /// Count one simulator heap event and sample the heap depth at the time
+    /// it was processed (self-instrumentation for `sim_events_per_sec`).
+    #[inline]
+    pub fn note_sim_event(&mut self, heap_depth: usize) {
+        if self.enabled {
+            self.sim_events += 1;
+            let d = heap_depth as u64;
+            if d > self.heap_depth_max {
+                self.heap_depth_max = d;
+            }
+            self.heap_depth_sum += d;
+            self.heap_depth_samples += 1;
+        }
+    }
+
+    pub fn heap_depth_mean(&self) -> f64 {
+        if self.heap_depth_samples == 0 {
+            0.0
+        } else {
+            self.heap_depth_sum as f64 / self.heap_depth_samples as f64
+        }
+    }
+
+    /// `None` when disabled — which is what keeps `FleetReport::to_json`
+    /// byte-identical for every committed fixture.
+    pub fn summary(&self) -> Option<TelemetrySummary> {
+        if !self.enabled {
+            return None;
+        }
+        let mut s = TelemetrySummary {
+            events_total: self.events.len() as u64,
+            admits: 0,
+            dispatches: 0,
+            flushes: 0,
+            preemptions: 0,
+            reshard_triggers: 0,
+            reshard_stalls: 0,
+            reshard_wakes: 0,
+            windows: self.windows.len() as u64,
+            sim_events: self.sim_events,
+            heap_depth_max: self.heap_depth_max,
+            heap_depth_mean: self.heap_depth_mean(),
+            tenant_p99_ms: self
+                .sketches
+                .iter()
+                .map(|q| if q.total() > 0 { q.quantile(99.0) } else { f64::NAN })
+                .collect(),
+        };
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Admit { .. } => s.admits += 1,
+                TraceEvent::Dispatch { .. } => s.dispatches += 1,
+                TraceEvent::Flush { .. } => s.flushes += 1,
+                TraceEvent::Preempt { .. } => s.preemptions += 1,
+                TraceEvent::ReshardTrigger { .. } => s.reshard_triggers += 1,
+                TraceEvent::ReshardStall { .. } => s.reshard_stalls += 1,
+                TraceEvent::ReshardWake { .. } => s.reshard_wakes += 1,
+                // Window rollups are counted via the samples vector above.
+                TraceEvent::WindowRollup { .. } => {}
+            }
+        }
+        Some(s)
+    }
+
+    /// Full trace export (the `--trace` payload body).
+    pub fn to_json(&self) -> Json {
+        let mut events = Json::Arr(vec![]);
+        for ev in &self.events {
+            events = events.push(ev.to_json());
+        }
+        let mut windows = Json::Arr(vec![]);
+        for w in &self.windows {
+            windows = windows.push(w.to_json());
+        }
+        let mut sketches = Json::Arr(vec![]);
+        for q in &self.sketches {
+            sketches = sketches.push(q.to_json());
+        }
+        Json::obj()
+            .set("events", events)
+            .set("windows", windows)
+            .set("sketches", sketches)
+            .set("sim_events", self.sim_events)
+            .set("heap_depth_max", self.heap_depth_max)
+            .set("heap_depth_mean", self.heap_depth_mean())
+    }
+}
+
+/// Sum of flushed items per tenant — equals `TenantStats.requests` served.
+pub fn flushed_items_per_tenant(events: &[TraceEvent], tenants: usize) -> Vec<u64> {
+    let mut out = vec![0u64; tenants];
+    for ev in events {
+        if let TraceEvent::Flush { tenant, items, .. } = ev {
+            out[*tenant] += *items as u64;
+        }
+    }
+    out
+}
+
+/// Latest flush instant per tenant — equals the span `FleetReport` divides
+/// by for per-tenant throughput. Zero for tenants that never flushed.
+pub fn last_flush_per_tenant(events: &[TraceEvent], tenants: usize) -> Vec<u64> {
+    let mut out = vec![0u64; tenants];
+    for ev in events {
+        if let TraceEvent::Flush { tenant, at, .. } = ev {
+            if *at > out[*tenant] {
+                out[*tenant] = *at;
+            }
+        }
+    }
+    out
+}
+
+/// Preemption count per victim tenant — equals `TenantStats.preemptions`.
+pub fn preemptions_per_tenant(events: &[TraceEvent], tenants: usize) -> Vec<u64> {
+    let mut out = vec![0u64; tenants];
+    for ev in events {
+        if let TraceEvent::Preempt { victim, .. } = ev {
+            out[*victim] += 1;
+        }
+    }
+    out
+}
+
+/// ASCII fleet dashboard: one occupancy lane per board (shaded by busy
+/// fraction per column, from `Dispatch` spans), `P` markers where a batch
+/// was preempted on that board, and a top `reshard` lane with `R` markers
+/// at trigger instants — the `ascii_gantt` idiom lifted to the fleet.
+pub fn fleet_dashboard(sink: &TraceSink, boards: usize, makespan: u64, width: usize) -> String {
+    let width = width.max(8);
+    let total = makespan.max(1) as f64;
+    let col_of = |at: u64| (((at as f64 / total) * width as f64) as usize).min(width - 1);
+    let mut busy = vec![vec![0.0f64; width]; boards];
+    let mut marks: Vec<Vec<char>> = vec![vec![' '; width]; boards];
+    let mut reshard = vec![' '; width];
+    let col_span = total / width as f64;
+    for ev in &sink.events {
+        match ev {
+            TraceEvent::Dispatch { board, at, done, .. } => {
+                if *board >= boards {
+                    continue;
+                }
+                let (a, b) = (*at as f64, (*done).max(*at) as f64);
+                let (ca, cb) = (col_of(*at), col_of(*done));
+                for col in ca..=cb {
+                    let lo = (col as f64) * col_span;
+                    let hi = lo + col_span;
+                    let overlap = (b.min(hi) - a.max(lo)).max(0.0);
+                    busy[*board][col] += overlap;
+                }
+            }
+            TraceEvent::Preempt { board, at, .. } => {
+                if *board < boards {
+                    marks[*board][col_of(*at)] = 'P';
+                }
+            }
+            TraceEvent::ReshardTrigger { at, .. } => {
+                reshard[col_of(*at)] = 'R';
+            }
+            _ => {}
+        }
+    }
+    let name_w = "reshard".len().max(format!("board {}", boards.saturating_sub(1)).len());
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:name_w$} |{}|\n",
+        "reshard",
+        reshard.iter().collect::<String>(),
+        name_w = name_w
+    ));
+    for b in 0..boards {
+        let mut lane = String::new();
+        let mut busy_cycles = 0.0;
+        for col in 0..width {
+            let frac = (busy[b][col] / col_span).min(1.0);
+            busy_cycles += busy[b][col];
+            lane.push(if marks[b][col] != ' ' {
+                marks[b][col]
+            } else if frac >= 0.95 {
+                '█'
+            } else if frac >= 0.66 {
+                '▓'
+            } else if frac >= 0.33 {
+                '▒'
+            } else if frac > 0.0 {
+                '░'
+            } else {
+                ' '
+            });
+        }
+        out.push_str(&format!(
+            "{:name_w$} |{}| busy {:3.0}%\n",
+            format!("board {b}"),
+            lane,
+            100.0 * (busy_cycles / total).min(1.0),
+            name_w = name_w
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::stats::percentile_sorted;
+
+    fn log_uniform_samples(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                // 1e-3 .. 1e3 ms, log-uniform: the full simulated range.
+                let u = rng.next_f64();
+                let exponent = u * 6.0 - 3.0;
+                (std::f64::consts::LN_10 * exponent).exp()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sketch_matches_percentile_sorted_within_one_percent() {
+        for seed in [1u64, 7, 42] {
+            let xs = log_uniform_samples(seed, 10_000);
+            let mut sketch = QuantileSketch::new();
+            for &x in &xs {
+                sketch.record(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pct in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                let exact = percentile_sorted(&sorted, pct);
+                let est = sketch.quantile(pct);
+                let rel = (est - exact).abs() / exact.abs().max(1e-30);
+                assert!(
+                    rel <= 0.01,
+                    "seed {seed} pct {pct}: exact {exact} est {est} rel {rel}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_extremes_are_exact() {
+        let mut s = QuantileSketch::new();
+        for v in [0.25, 3.5, 17.0, 0.003] {
+            s.record(v);
+        }
+        assert_eq!(s.quantile(0.0), 0.003);
+        assert_eq!(s.quantile(100.0), 17.0);
+        assert_eq!(s.total(), 4);
+    }
+
+    #[test]
+    fn sketch_single_sample_is_exact() {
+        let mut s = QuantileSketch::new();
+        s.record(0.42);
+        for pct in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.quantile(pct), 0.42);
+        }
+    }
+
+    #[test]
+    fn sketch_merge_equals_single_pass() {
+        let xs = log_uniform_samples(9, 4_000);
+        let mut whole = QuantileSketch::new();
+        for &x in &xs {
+            whole.record(x);
+        }
+        let mut merged = QuantileSketch::new();
+        for chunk in xs.chunks(1_000) {
+            let mut part = QuantileSketch::new();
+            for &x in chunk {
+                part.record(x);
+            }
+            merged.merge(&part);
+        }
+        assert_eq!(whole, merged);
+        assert_eq!(whole.quantile(99.0), merged.quantile(99.0));
+    }
+
+    #[test]
+    fn sketch_underflow_bin_catches_tiny_values() {
+        let mut s = QuantileSketch::new();
+        s.record(0.0);
+        s.record(1e-12);
+        s.record(1.0);
+        assert_eq!(s.total(), 3);
+        // Extremes clamp to observed min/max.
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(100.0), 1.0);
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut sink = TraceSink::disabled();
+        sink.record(|| panic!("event constructed on a disabled sink"));
+        sink.sample_window(|| panic!("window sampled on a disabled sink"));
+        sink.observe_latency_ms(0, 1.0);
+        sink.note_sim_event(3);
+        assert!(sink.events.is_empty());
+        assert!(sink.windows.is_empty());
+        assert!(sink.sketches.is_empty());
+        assert_eq!(sink.sim_events, 0);
+        assert!(sink.summary().is_none());
+    }
+
+    #[test]
+    fn enabled_sink_counts_by_kind() {
+        let mut sink = TraceSink::enabled();
+        sink.record(|| TraceEvent::Admit { at: 1, tenant: 0, board: 0, items: 2, deficit: 7 });
+        sink.record(|| TraceEvent::Dispatch { at: 1, tenant: 0, board: 0, items: 2, done: 9 });
+        sink.record(|| TraceEvent::Flush { at: 9, tenant: 0, board: 0, items: 2 });
+        sink.record(|| TraceEvent::Preempt {
+            at: 5,
+            board: 0,
+            victim: 1,
+            by: 0,
+            mode: "resume",
+            refunded_cycles: 4,
+        });
+        sink.record(|| TraceEvent::ReshardTrigger { at: 6, reason: "p99".into() });
+        sink.record(|| TraceEvent::ReshardStall {
+            at: 6,
+            tenant: Some(1),
+            bytes: 64,
+            stall_cycles: 8,
+        });
+        sink.record(|| TraceEvent::ReshardWake { at: 14 });
+        sink.record(|| TraceEvent::WindowRollup { at: 14, requests: 2 });
+        sink.observe_latency_ms(0, 0.5);
+        sink.note_sim_event(4);
+        sink.note_sim_event(2);
+        let s = sink.summary().unwrap();
+        assert_eq!(s.events_total, 8);
+        assert_eq!(s.admits, 1);
+        assert_eq!(s.dispatches, 1);
+        assert_eq!(s.flushes, 1);
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.reshard_triggers, 1);
+        assert_eq!(s.reshard_stalls, 1);
+        assert_eq!(s.reshard_wakes, 1);
+        assert_eq!(s.sim_events, 2);
+        assert_eq!(s.heap_depth_max, 4);
+        assert_eq!(s.heap_depth_mean, 3.0);
+        assert_eq!(s.tenant_p99_ms, vec![0.5]);
+    }
+
+    #[test]
+    fn recompute_helpers_aggregate_flushes_and_preemptions() {
+        let events = vec![
+            TraceEvent::Flush { at: 10, tenant: 0, board: 0, items: 3 },
+            TraceEvent::Flush { at: 25, tenant: 0, board: 1, items: 2 },
+            TraceEvent::Flush { at: 12, tenant: 1, board: 0, items: 4 },
+            TraceEvent::Preempt {
+                at: 8,
+                board: 0,
+                victim: 1,
+                by: 0,
+                mode: "restart",
+                refunded_cycles: 9,
+            },
+            TraceEvent::Preempt {
+                at: 9,
+                board: 1,
+                victim: 1,
+                by: 0,
+                mode: "restart",
+                refunded_cycles: 9,
+            },
+        ];
+        assert_eq!(flushed_items_per_tenant(&events, 2), vec![5, 4]);
+        assert_eq!(last_flush_per_tenant(&events, 2), vec![25, 12]);
+        assert_eq!(preemptions_per_tenant(&events, 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn event_json_is_deterministic_and_typed() {
+        let ev = TraceEvent::ReshardStall { at: 3, tenant: None, bytes: 10, stall_cycles: 2 };
+        let j = ev.to_json().to_string_compact();
+        assert!(j.contains("reshard_stall"));
+        assert!(!j.contains("tenant")); // None ⇒ key omitted, like ReshardEvent
+        let ev2 = TraceEvent::ReshardStall { at: 3, tenant: Some(4), bytes: 10, stall_cycles: 2 };
+        assert!(ev2.to_json().to_string_compact().contains("tenant"));
+    }
+
+    #[test]
+    fn dashboard_renders_lanes_and_markers() {
+        let mut sink = TraceSink::enabled();
+        sink.record(|| TraceEvent::Dispatch { at: 0, tenant: 0, board: 0, items: 4, done: 500 });
+        sink.record(|| TraceEvent::Dispatch { at: 500, tenant: 0, board: 1, items: 4, done: 1000 });
+        sink.record(|| TraceEvent::Preempt {
+            at: 250,
+            board: 1,
+            victim: 0,
+            by: 1,
+            mode: "restart",
+            refunded_cycles: 0,
+        });
+        sink.record(|| TraceEvent::ReshardTrigger { at: 750, reason: "skew".into() });
+        let dash = fleet_dashboard(&sink, 2, 1000, 32);
+        let lines: Vec<&str> = dash.lines().collect();
+        assert_eq!(lines.len(), 3); // reshard lane + 2 boards
+        assert!(lines[0].contains('R'));
+        assert!(lines[2].contains('P'));
+        assert!(lines[1].contains('█') || lines[1].contains('▓'));
+        assert!(lines[1].contains("busy"));
+    }
+
+    #[test]
+    fn dashboard_handles_empty_trace() {
+        let sink = TraceSink::enabled();
+        let dash = fleet_dashboard(&sink, 1, 0, 16);
+        assert_eq!(dash.lines().count(), 2);
+    }
+}

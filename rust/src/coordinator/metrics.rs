@@ -2,10 +2,18 @@
 
 use std::time::Duration;
 
+use crate::cluster::telemetry::QuantileSketch;
 use crate::util::json::Json;
 use crate::util::stats::{percentile_sorted, Summary};
 
 /// Rolling metrics for the serving path.
+///
+/// The latency/batch-size windows are cursor-based rings: once full, the
+/// next sample overwrites the oldest slot in O(1) (the previous
+/// `Vec::remove(0)` shifted the whole window per sample). The ring holds
+/// the *recent* window for p50/p95/max; the [`QuantileSketch`] runs over
+/// *every* response since start, so `latency_p99_ms` reflects the full
+/// history at bounded memory.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: u64,
@@ -14,9 +22,13 @@ pub struct Metrics {
     pub errors: u64,
     /// Per-request end-to-end latencies (seconds). Bounded ring.
     latencies: Vec<f64>,
-    /// Batch sizes observed.
+    lat_cursor: usize,
+    /// Batch sizes observed. Bounded ring.
     batch_sizes: Vec<usize>,
+    batch_cursor: usize,
     cap: usize,
+    /// Full-history latency sketch (ms), mergeable across servers.
+    sketch: QuantileSketch,
 }
 
 impl Metrics {
@@ -33,18 +45,14 @@ impl Metrics {
 
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
-        if self.batch_sizes.len() >= self.cap {
-            self.batch_sizes.remove(0);
-        }
-        self.batch_sizes.push(size);
+        ring_push(&mut self.batch_sizes, &mut self.batch_cursor, self.cap, size);
     }
 
     pub fn record_response(&mut self, latency: Duration) {
         self.responses += 1;
-        if self.latencies.len() >= self.cap {
-            self.latencies.remove(0);
-        }
-        self.latencies.push(latency.as_secs_f64());
+        let secs = latency.as_secs_f64();
+        ring_push(&mut self.latencies, &mut self.lat_cursor, self.cap, secs);
+        self.sketch.record(secs * 1e3);
     }
 
     pub fn record_error(&mut self) {
@@ -56,6 +64,16 @@ impl Metrics {
             None
         } else {
             Some(Summary::of(&self.latencies))
+        }
+    }
+
+    /// p99 over every response since start (sketch estimate, ≤1% relative
+    /// error) — not just the ring window.
+    pub fn latency_p99_ms(&self) -> Option<f64> {
+        if self.sketch.total() == 0 {
+            None
+        } else {
+            Some(self.sketch.quantile(99.0))
         }
     }
 
@@ -82,7 +100,32 @@ impl Metrics {
                 .set("latency_p95_ms", percentile_sorted(&xs, 95.0) * 1e3)
                 .set("latency_max_ms", xs[xs.len() - 1] * 1e3);
         }
+        if let Some(p99) = self.latency_p99_ms() {
+            j = j.set("latency_p99_ms", p99);
+        }
         j
+    }
+}
+
+/// O(1) bounded-window insert: grow until `cap`, then overwrite the oldest
+/// slot. A `cap` of zero keeps the window empty (counters still advance).
+fn ring_push<T>(buf: &mut Vec<T>, cursor: &mut usize, cap: usize, v: T) {
+    if cap == 0 {
+        buf.clear();
+        return;
+    }
+    if buf.len() > cap {
+        // The cap shrank after samples landed: drop down to the new bound
+        // once, keeping the most recent tail.
+        let excess = buf.len() - cap;
+        buf.drain(..excess);
+        *cursor = 0;
+    }
+    if buf.len() < cap {
+        buf.push(v);
+    } else {
+        buf[*cursor] = v;
+        *cursor = (*cursor + 1) % cap;
     }
 }
 
@@ -114,6 +157,7 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("requests").as_u64(), Some(1));
         assert!(j.get("latency_p50_ms").as_f64().unwrap() > 0.0);
+        assert!(j.get("latency_p99_ms").as_f64().unwrap() > 0.0);
     }
 
     #[test]
@@ -128,7 +172,42 @@ mod tests {
     }
 
     #[test]
+    fn ring_keeps_the_most_recent_window() {
+        let mut m = Metrics::new();
+        m.cap = 4;
+        for i in 0..10 {
+            m.record_response(Duration::from_millis(i));
+        }
+        // Survivors are the last four samples (6..=9 ms), in ring order.
+        let mut win = m.latencies.clone();
+        win.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f64> = (6..10).map(|i| i as f64 * 1e-3).collect();
+        for (w, e) in win.iter().zip(&want) {
+            assert!((w - e).abs() < 1e-12, "window {win:?} != {want:?}");
+        }
+    }
+
+    #[test]
+    fn sketch_p99_covers_evicted_history() {
+        let mut m = Metrics::new();
+        m.cap = 4;
+        // An early 100 ms tail decile, then a flood of 1 ms responses
+        // evicts it from the ring — the sketch remembers the full history.
+        for _ in 0..10 {
+            m.record_response(Duration::from_millis(100));
+        }
+        for _ in 0..90 {
+            m.record_response(Duration::from_millis(1));
+        }
+        let p99 = m.latency_p99_ms().unwrap();
+        assert!(p99 > 50.0, "full-history p99 {p99} must see the outlier");
+        let win = m.latency_summary().unwrap();
+        assert!(win.n <= 4, "ring stays bounded");
+    }
+
+    #[test]
     fn empty_summary_none() {
         assert!(Metrics::new().latency_summary().is_none());
+        assert!(Metrics::new().latency_p99_ms().is_none());
     }
 }

@@ -10,4 +10,4 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use planner::{best_plan, cost_all_plans, Objective, PlanCost};
-pub use server::{simulate_cluster, Server, ServerConfig, ServerHandle};
+pub use server::{simulate_cluster, simulate_cluster_traced, Server, ServerConfig, ServerHandle};

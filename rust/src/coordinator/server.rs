@@ -266,6 +266,18 @@ pub fn simulate_cluster(
     crate::cluster::run_fleet(cfg, net, ccfg)
 }
 
+/// [`simulate_cluster`] with a telemetry sink: same fleet-mode front end,
+/// but the caller keeps the event trace, window samples and latency
+/// sketches the run produced (the CLI's `--trace`/dashboard path).
+pub fn simulate_cluster_traced(
+    cfg: &crate::config::AccelConfig,
+    net: &crate::config::Network,
+    ccfg: &crate::config::ClusterConfig,
+    sink: &mut crate::cluster::TraceSink,
+) -> std::result::Result<crate::cluster::FleetReport, String> {
+    crate::cluster::run_fleet_traced(cfg, net, ccfg, sink)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -40,6 +40,8 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy, tenants)", default: None },
         OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities, DRR weights and preemption", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
+        OptSpec { name: "trace", takes_value: true, help: "cluster: arm the telemetry sink and write the full trace (events, window samples, latency sketches) plus the report to this JSON file", default: None },
+        OptSpec { name: "dashboard", takes_value: false, help: "cluster: arm the telemetry sink and print the ASCII fleet dashboard — per-board occupancy lanes with reshard/preemption markers", default: None },
         OptSpec { name: "reshard", takes_value: false, help: "cluster: enable the load-driven re-shard controller (default policy); combined with --tenants it arms tenant-aware re-sharding in the unified control plane", default: None },
         OptSpec { name: "clients", takes_value: true, help: "serve: concurrent client threads", default: Some("4") },
         OptSpec { name: "batch", takes_value: true, help: "serve: max batch size", default: Some("8") },
@@ -380,12 +382,23 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             "saturating burst".to_string()
         }
     ));
+    // `--trace`/`--dashboard` arm the telemetry sink; a sweep keeps the
+    // final run's trace (the full-fleet configuration).
+    let tracing = args.opt("trace").is_some() || args.has_flag("dashboard");
+    let mut last_sink: Option<decoilfnet::cluster::TraceSink> = None;
     let mut reports = Vec::new();
     for boards in board_counts {
         // `with_boards` resizes heterogeneous fleets validly (truncating or
         // extending board_specs in rack order), so sweeps work there too.
         let c = ccfg.with_boards(boards);
-        let r = decoilfnet::coordinator::simulate_cluster(&cfg, &net, &c)?;
+        let r = if tracing {
+            let mut sink = decoilfnet::cluster::TraceSink::enabled();
+            let r = decoilfnet::coordinator::simulate_cluster_traced(&cfg, &net, &c, &mut sink)?;
+            last_sink = Some(sink);
+            r
+        } else {
+            decoilfnet::coordinator::simulate_cluster(&cfg, &net, &c)?
+        };
         // The dynamic engine reports idle provisioned boards too; average
         // utilization over boards that actually served work.
         let active = r.per_board.iter().filter(|b| b.busy_cycles > 0).count();
@@ -470,6 +483,25 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 }
                 println!("{}", tt.to_ascii());
             }
+        }
+    }
+    if let Some(sink) = &last_sink {
+        let last = reports.last().expect("at least one report");
+        if args.has_flag("dashboard") && !args.has_flag("json") {
+            println!();
+            print!(
+                "{}",
+                decoilfnet::cluster::fleet_dashboard(sink, last.boards, last.makespan_cycles, 64)
+            );
+        }
+        if let Some(path) = args.opt("trace") {
+            let doc = decoilfnet::util::json::Json::obj()
+                .set("schema", "decoilfnet-fleet-trace/v1")
+                .set("report", last.to_json())
+                .set("trace", sink.to_json());
+            std::fs::write(path, doc.to_string_pretty())
+                .map_err(|e| format!("writing trace '{path}': {e}"))?;
+            println!("wrote fleet trace to {path}");
         }
     }
     Ok(())

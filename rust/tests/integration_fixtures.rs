@@ -30,7 +30,10 @@
 //!
 //! New scenarios self-seed: a missing fixture file is written on the first
 //! run and reported, so it can be committed (the bench-baseline arming
-//! pattern); every later run compares against the committed bytes.
+//! pattern); every later run compares against the committed bytes. On CI
+//! (`GITHUB_ACTIONS` set) self-seeding is disabled and a missing fixture
+//! fails with commit instructions — a seedable scenario can never stay
+//! green on main without its committed oracle.
 //!
 //! Comparison is structural: integers and strings must match exactly;
 //! floats within 1e-9 relative (the committed values were produced by an
@@ -74,9 +77,20 @@ const SEEDABLE_FIXTURES: &[&str] = &["mt_resume_spike.json", "mt_reshard_loadste
 /// not exist yet is *seeded*: written and reported, so the brand-new
 /// scenario passes its first run and the generated file can be committed —
 /// every later run compares.
+///
+/// Seeding is a local-authoring affordance only: on CI (`GITHUB_ACTIONS`
+/// set) an allowlisted-but-uncommitted fixture is a hard failure, so a
+/// seedable scenario can never ride green on main without its oracle.
 fn assert_matches_fixture(name: &str, actual: &Json) {
     let path = fixture_path(name);
     let update = std::env::var("DECOILFNET_UPDATE_FIXTURES").map(|v| v == "1") == Ok(true);
+    if !update && !path.exists() && std::env::var_os("GITHUB_ACTIONS").is_some() {
+        panic!(
+            "fixture {name} is not committed (self-seeding is disabled on CI): \
+             run `cargo test --test integration_fixtures` locally and commit \
+             rust/tests/fixtures/{name}"
+        );
+    }
     if update || (!path.exists() && SEEDABLE_FIXTURES.contains(&name)) {
         std::fs::write(&path, actual.to_string_pretty() + "\n")
             .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));

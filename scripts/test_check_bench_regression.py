@@ -185,6 +185,61 @@ class UnifiedControlPlaneRows(CheckPairBase):
         )
 
 
+class TelemetryRows(CheckPairBase):
+    """The telemetry self-instrumentation rows (PR 6): the bench times the
+    armed trace sink and emits `sim_events_per_sec` plus heap-depth stats.
+    They follow the same untracked -> exempt -> armed lifecycle as the
+    mt_* rows; events/s is wall-clock (machine-dependent), so arming it
+    only makes sense against a baseline produced on the same CI runner
+    class — until then it is a trend row."""
+
+    TELEMETRY = {
+        "sim_events_per_sec": metric(2.4e6, "higher", gate=False),
+        "sim_heap_depth_max": metric(14.0, "lower", gate=False),
+        "sim_heap_depth_mean": metric(3.7, "lower", gate=False),
+    }
+
+    def test_new_rows_in_current_only_are_untracked_and_pass(self):
+        # First CI run after the telemetry bench lands: the committed
+        # baseline predates the rows, so they report as untracked.
+        base = doc({"replicated_fused_ideal_rps_b1": metric(37.07)})
+        cur_metrics = {"replicated_fused_ideal_rps_b1": metric(37.07)}
+        cur_metrics.update(self.TELEMETRY)
+        self.assertTrue(self.check(base, doc(cur_metrics)))
+
+    def test_exempt_telemetry_rows_may_drift_without_failing(self):
+        # A slow runner halving events/s (or a deeper heap) must never
+        # fail the gate while the rows ride exempt.
+        base = doc(dict(self.TELEMETRY))
+        drifted = {
+            "sim_events_per_sec": metric(1.1e6, "higher"),
+            "sim_heap_depth_max": metric(40.0, "lower"),
+            "sim_heap_depth_mean": metric(9.9, "lower"),
+        }
+        self.assertTrue(self.check(base, doc(drifted)))
+
+    def test_exempt_telemetry_rows_may_disappear(self):
+        # e.g. a bench invocation without the traced act.
+        base = doc(dict(self.TELEMETRY))
+        self.assertTrue(self.check(base, doc({"other": metric(1.0)})))
+
+    def test_armed_events_per_sec_gates_throughput_regressions(self):
+        # Once armed (pinned-runner baseline), a collapse in simulator
+        # event throughput fails the pair like any tracked metric.
+        base = doc({"sim_events_per_sec": metric(2.4e6, "higher")})
+        self.assertFalse(
+            self.check(base, doc({"sim_events_per_sec": metric(1.0e6, "higher")}))
+        )
+        self.assertTrue(
+            self.check(base, doc({"sim_events_per_sec": metric(2.6e6, "higher")}))
+        )
+
+    def test_armed_heap_depth_gates_in_the_lower_direction(self):
+        base = doc({"sim_heap_depth_max": metric(14.0, "lower")})
+        self.assertFalse(self.check(base, doc({"sim_heap_depth_max": metric(28.0, "lower")})))
+        self.assertTrue(self.check(base, doc({"sim_heap_depth_max": metric(12.0, "lower")})))
+
+
 class MultiPairMain(CheckPairBase):
     def run_main(self, argv):
         old = sys.argv
