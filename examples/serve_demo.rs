@@ -1,4 +1,4 @@
-//! Serving demo, five tiers:
+//! Serving demo, six tiers:
 //!
 //! 1. **Fleet simulation** (always runs): the cluster subsystem plans a
 //!    multi-board shard of the VGG prefix, drives it with open-loop traffic,
@@ -17,7 +17,13 @@
 //!    stream's rate doubles mid-run; the tenant-aware re-shard controller
 //!    scales it onto both boards and the tail settles — shown in both
 //!    restart and work-preserving (resume) preemption modes.
-//! 5. **Live threaded server** (needs `make artifacts`): the coordinator
+//! 5. **Fault tolerance** (always runs): a 3-board fleet loses the board
+//!    hosting a pipelined chain's entry stage mid-run. In-flight work is
+//!    re-queued under work-preserving preemption accounting, the severed
+//!    chain is emergency-re-sharded onto the survivors, and the board is
+//!    re-admitted when it recovers — nothing is lost, and the report shows
+//!    per-tenant SLO attainment through the outage.
+//! 6. **Live threaded server** (needs `make artifacts`): the coordinator
 //!    batching concurrent clients over the PJRT artifacts, with per-request
 //!    plan routing and live metrics.
 //!
@@ -33,8 +39,8 @@ use decoilfnet::cluster::{
     InterBoardLink, ShardPlan, TenantWorkload,
 };
 use decoilfnet::config::{
-    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, PreemptMode,
-    ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, FaultEvent, FaultScript, LoadStep,
+    Platform, PreemptMode, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
 };
 use decoilfnet::coordinator::{simulate_cluster, BatchPolicy, Server, ServerConfig};
 use decoilfnet::runtime::Runtime;
@@ -334,11 +340,138 @@ fn unified_control_plane_demo() -> Result<(), String> {
     Ok(())
 }
 
+/// Fault tolerance: a 3-board fleet, a replicated interactive tenant and a
+/// pipelined bulk chain. The board hosting the chain's entry stage dies a
+/// third of the way in and recovers later: its in-flight items are thrown
+/// back to their queues, the severed chain is emergency-re-sharded onto
+/// the two survivors, and the recovered board is re-admitted at the next
+/// controller window — with every request still completing.
+fn fault_tolerance_demo() -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+    let specs = vec![
+        TenantSpec {
+            name: "interactive".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 800.0,
+            requests: 48,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 2.0,
+                priority: 2,
+                weight: 1.0,
+            },
+        },
+        TenantSpec {
+            name: "bulk-chain".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: 300.0,
+            requests: 32,
+            load_steps: vec![],
+            mode: ShardMode::Pipelined,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5.0,
+                priority: 1,
+                weight: 1.0,
+            },
+        },
+    ];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let unfused = FusionPlan::unfused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: match s.mode {
+                ShardMode::Replicated => &fused,
+                ShardMode::Pipelined => &unfused,
+            },
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads)?;
+    // Kill the board the chain enters on — the worst case for the chain.
+    let chain_entry = plans[1].shards[0].board;
+
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.boards = 3;
+    ccfg.aggregate_ddr_bytes_per_cycle = None;
+    ccfg.link_bytes_per_cycle = 16.0;
+    ccfg.link_latency_cycles = 0;
+    ccfg.max_batch = 4;
+    ccfg.max_wait_us = 0.0;
+    ccfg.seed = 11;
+    ccfg.preempt_mode = PreemptMode::Resume;
+    ccfg.reshard = Some(ReshardPolicy {
+        window: 16,
+        util_skew: 0.9,
+        p99_ms: 50.0,
+        cooldown_windows: 1,
+        migration_factor: 0.0,
+    });
+    ccfg.tenants = specs.clone();
+    ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::BoardDown {
+            board: chain_entry,
+            at_ms: 30.0,
+            recover_ms: Some(60.0),
+        }],
+    });
+
+    println!(
+        "== fault tolerance: board {chain_entry} (chain entry stage) down 30 -> 60 ms =="
+    );
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+    let f = r.faults.as_ref().expect("script armed");
+    println!(
+        "  {} failure(s), {} recovery(ies), {} emergency reshard(s), \
+         {} item(s) requeued, downtime {} cycles",
+        f.board_failures, f.board_recoveries, f.emergency_reshards, f.items_requeued,
+        f.downtime_cycles,
+    );
+    if let (Some(pre), Some(post)) = (f.pre_fault_p99_ms, f.recovery_p99_ms) {
+        println!(
+            "  pre-fault p99 {pre:.3} ms -> post-recovery p99 {post:.3} ms ({:.2}x)",
+            post / pre
+        );
+    }
+    for t in &r.tenants {
+        println!(
+            "  {:>12}: {}/{} completed  p99 {:7.3} ms  slo [{}]  \
+             {:.0}% within SLO through the outage",
+            t.name,
+            t.completed,
+            t.requests,
+            t.p99_ms,
+            if t.slo_met { "MET" } else { "MISSED" },
+            100.0 * t.slo_attainment_outage.unwrap_or(1.0),
+        );
+    }
+    assert_eq!(r.completed, 48 + 32, "the outage loses nothing");
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     fleet_demo().map_err(anyhow::Error::msg)?;
     hetero_reshard_demo().map_err(anyhow::Error::msg)?;
     multi_tenant_demo().map_err(anyhow::Error::msg)?;
     unified_control_plane_demo().map_err(anyhow::Error::msg)?;
+    fault_tolerance_demo().map_err(anyhow::Error::msg)?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {

@@ -25,6 +25,10 @@
 //! 6. **Telemetry self-instrumentation**: act 5's load step re-run with
 //!    the trace sink armed — `sim_events_per_sec` plus heap-depth stats
 //!    land in `BENCH_cluster.json` as gate-exempt trend rows.
+//! 7. **Chaos recovery**: a scripted mid-run board outage on a 3-board
+//!    fleet — in-flight work re-queued, tenants drained to the survivors,
+//!    the board re-admitted on recovery; the post-recovery p99 ratio and
+//!    re-queue volume ship as gate-exempt `chaos_*` rows.
 //!
 //! Deterministic by construction (seeded arrivals, closed-form service
 //! times), so the emitted metrics are bit-reproducible across machines —
@@ -41,8 +45,8 @@ use decoilfnet::cluster::{
     TenantWorkload, TraceSink,
 };
 use decoilfnet::config::{
-    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, LoadStep, Platform, PreemptMode,
-    ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, FaultEvent, FaultScript, LoadStep,
+    Platform, PreemptMode, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
 };
 use decoilfnet::coordinator::{best_plan, Objective};
 use decoilfnet::util::json::Json;
@@ -78,6 +82,7 @@ fn sweep_cfg(boards: usize, mode: ShardMode, aggregate: Option<f64>) -> ClusterC
         preempt_restart_cycles: 500,
         preempt_mode: PreemptMode::Restart,
         preempt_refill_cycles: 100,
+        faults: None,
     }
 }
 
@@ -638,6 +643,96 @@ fn main() {
     );
 
     // ------------------------------------------------------------------
+    // Act 7: chaos recovery — a scripted board outage mid-run on a
+    // 3-board fleet. The control plane re-queues the dead board's
+    // in-flight items under work-preserving preemption accounting,
+    // drains both tenants to the survivors, and re-admits the board at
+    // the next controller window after recovery. The headline numbers
+    // (post-recovery p99 / pre-fault p99, and the re-queue volume) ride
+    // gate-exempt as `chaos_*` rows.
+    // ------------------------------------------------------------------
+    let chaos_fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+    let chaos_tenant = |name: &str, seed: u64| TenantSpec {
+        name: name.to_string(),
+        network: tiny.clone(),
+        weights_seed: seed,
+        arrival_rps: 400.0,
+        requests: 256,
+        load_steps: vec![],
+        mode: ShardMode::Replicated,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 5.0,
+            priority: 1,
+            weight: 1.0,
+        },
+    };
+    let chaos_specs = vec![chaos_tenant("alpha", 1), chaos_tenant("bravo", 2)];
+    let chaos_w: Vec<Weights> = chaos_specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let chaos_workloads: Vec<TenantWorkload> = chaos_specs
+        .iter()
+        .zip(&chaos_w)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &tiny_fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let chaos_plans = place_tenants(&chaos_fleet, &chaos_workloads).expect("tenants place");
+    let mut chaos_ccfg = sweep_cfg(3, ShardMode::Replicated, None);
+    chaos_ccfg.max_batch = 4;
+    chaos_ccfg.max_wait_us = 0.0;
+    chaos_ccfg.seed = 13;
+    chaos_ccfg.preempt_mode = PreemptMode::Resume;
+    chaos_ccfg.reshard = Some(ReshardPolicy {
+        window: 32,
+        util_skew: 0.9,
+        p99_ms: 50.0,
+        cooldown_windows: 1,
+        migration_factor: 0.0,
+    });
+    chaos_ccfg.tenants = chaos_specs.clone();
+    // ~640 ms span at 400 req/s per tenant: board 1 dies at 35% of the
+    // run and comes back at 55%.
+    chaos_ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::BoardDown {
+            board: 1,
+            at_ms: 224.0,
+            recover_ms: Some(352.0),
+        }],
+    });
+    let r_chaos = simulate_fleet_multi_tenant(
+        &cfg,
+        &chaos_fleet,
+        &chaos_specs,
+        &chaos_w,
+        &chaos_plans,
+        &chaos_ccfg,
+    );
+    assert_eq!(r_chaos.completed, 512, "the outage loses nothing");
+    let f_chaos = r_chaos.faults.as_ref().expect("script armed");
+    let chaos_ratio = match (f_chaos.pre_fault_p99_ms, f_chaos.recovery_p99_ms) {
+        (Some(pre), Some(post)) => post / pre,
+        _ => panic!("pre/post p99 populations must both be non-empty"),
+    };
+    println!(
+        "chaos recovery (board 1 down 224→352 ms, 3 boards, 2 × 256 Poisson requests):\n\
+         {} requeued item(s), {} emergency reshard(s), downtime {} cycles, \
+         recovery p99 ratio {:.3}",
+        f_chaos.items_requeued,
+        f_chaos.emergency_reshards,
+        f_chaos.downtime_cycles,
+        chaos_ratio,
+    );
+
+    // ------------------------------------------------------------------
     // BENCH_cluster.json: the tracked trajectory point. Every value here is
     // a deterministic model output (cycles → seconds at a fixed clock), so
     // a >10% move is a real model change, not noise.
@@ -755,6 +850,18 @@ fn main() {
                 exempt(tel.heap_depth_max as f64, "lower"),
             )
             .set("sim_heap_depth_mean", exempt(tel.heap_depth_mean, "lower"));
+        // Chaos recovery headline rows (act 7) — gate-exempt like the
+        // other fleet trend rows until a CI artifact arms them.
+        m = m
+            .set("chaos_recovery_p99_ratio", exempt(chaos_ratio, "lower"))
+            .set(
+                "chaos_items_requeued",
+                exempt(f_chaos.items_requeued as f64, "lower"),
+            )
+            .set(
+                "chaos_downtime_cycles",
+                exempt(f_chaos.downtime_cycles as f64, "lower"),
+            );
         let out = Json::obj()
             .set("schema", "decoilfnet-cluster-bench/v1")
             .set("seeded", true)

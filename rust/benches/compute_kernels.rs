@@ -172,6 +172,7 @@ fn main() {
         preempt_restart_cycles: 500,
         preempt_mode: PreemptMode::Restart,
         preempt_refill_cycles: 100,
+        faults: None,
     };
     // Determinism is the gated invariant now that the legacy differential
     // oracle retired: re-running a simulator must reproduce the report

@@ -50,6 +50,13 @@ pub struct LinkChannel {
     pub link: InterBoardLink,
     busy_until: u64,
     pub bytes_moved: u64,
+    /// Absolute-time degrade windows `(start, end, factor)`: while the data
+    /// phase of a transfer overlaps `[start, end)` the wire runs at
+    /// `factor` × its nominal bandwidth (fault injection — see
+    /// [`crate::config::FaultEvent::LinkDegrade`]). Empty on every healthy
+    /// channel, which keeps the healthy arithmetic byte-identical to the
+    /// pre-fault model.
+    degrades: Vec<(u64, u64, f64)>,
 }
 
 impl LinkChannel {
@@ -58,7 +65,16 @@ impl LinkChannel {
             link,
             busy_until: 0,
             bytes_moved: 0,
+            degrades: Vec::new(),
         }
+    }
+
+    /// Arm degrade windows on this channel (sorted by start; overlapping
+    /// windows compound by taking the slowest factor). Passing an empty
+    /// vector restores the exact healthy model.
+    pub fn set_degrades(&mut self, mut windows: Vec<(u64, u64, f64)>) {
+        windows.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        self.degrades = windows;
     }
 
     /// Move `bytes` starting no earlier than `earliest`; returns the
@@ -69,10 +85,51 @@ impl LinkChannel {
             return earliest;
         }
         let start = earliest.max(self.busy_until);
-        let end = start + self.link.transfer_cycles(bytes);
+        let end = if self.degrades.is_empty() {
+            start + self.link.transfer_cycles(bytes)
+        } else {
+            start + self.degraded_transfer_cycles(bytes, start)
+        };
         self.busy_until = end;
         self.bytes_moved += bytes;
         end
+    }
+
+    /// Piecewise serialization through the degrade windows: the data phase
+    /// (after the fixed latency) drains at the nominal rate outside every
+    /// window and at `factor` × nominal inside — only the overlapping span
+    /// is billed slow. Reduces to `latency + ceil(bytes / rate)` when no
+    /// window overlaps, because the phase start is integral.
+    fn degraded_transfer_cycles(&self, bytes: u64, start: u64) -> u64 {
+        let bpc = self.link.bytes_per_cycle;
+        if !bpc.is_finite() {
+            return self.link.latency_cycles;
+        }
+        let mut t = (start + self.link.latency_cycles) as f64;
+        let mut left = bytes as f64;
+        loop {
+            let factor = self
+                .degrades
+                .iter()
+                .filter(|w| (w.0 as f64) <= t && t < w.1 as f64)
+                .map(|w| w.2)
+                .fold(1.0f64, f64::min);
+            let boundary = self
+                .degrades
+                .iter()
+                .flat_map(|w| [w.0 as f64, w.1 as f64])
+                .filter(|&b| b > t)
+                .fold(f64::INFINITY, f64::min);
+            let rate = bpc * factor;
+            let need = left / rate;
+            if t + need <= boundary {
+                t += need;
+                break;
+            }
+            left -= (boundary - t) * rate;
+            t = boundary;
+        }
+        t.ceil() as u64 - start
     }
 
     pub fn busy_until(&self) -> u64 {
@@ -124,5 +181,68 @@ mod tests {
         assert_eq!(ch.transfer(1 << 40, 7), 7);
         // Instantaneous transfers occupy no wire time beyond their instant.
         assert_eq!(ch.transfer(1 << 40, 9), 9);
+    }
+
+    #[test]
+    fn degrade_bills_only_the_overlapping_span() {
+        // Nominal: latency 10, then 320 B at 16 B/cyc = data phase [10, 30).
+        // A 0.5x window over [20, 40) halves the second half of the phase:
+        // 160 B drain in [10, 20), the remaining 160 B take 20 cycles at
+        // 8 B/cyc — completion at 40 instead of 30. The slow span is
+        // exactly the overlap; cycles before the window stay full rate.
+        let mut ch = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        ch.set_degrades(vec![(20, 40, 0.5)]);
+        assert_eq!(ch.transfer(320, 0), 40);
+
+        // A transfer entirely outside the window is billed at the healthy
+        // formula (phase [50, 70) vs window [20, 40)).
+        let mut ch = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        ch.set_degrades(vec![(20, 40, 0.5)]);
+        assert_eq!(ch.transfer(320, 40), 40 + 10 + 20);
+    }
+
+    #[test]
+    fn back_to_back_flap_windows_compose() {
+        // Flap: [20, 30) at 0.5x then [30, 40) at 0.25x, recovery after 40.
+        // 320 B from t = 0: [10, 20) drains 160 B, [20, 30) drains 80 B,
+        // [30, 40) drains 40 B, the last 40 B at full rate need 2.5 cycles
+        // → completes at ceil(42.5) = 43.
+        let mut ch = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        ch.set_degrades(vec![(20, 30, 0.5), (30, 40, 0.25)]);
+        assert_eq!(ch.transfer(320, 0), 43);
+    }
+
+    #[test]
+    fn overlapping_windows_take_the_slowest_factor() {
+        // [10, 30) at 0.5x and [15, 20) at 0.25x overlap; the overlap runs
+        // at min = 0.25x. 160 B from t = 0 (latency 10): [10, 15) at 8 B/c
+        // drains 40 B, [15, 20) at 4 B/c drains 20 B, [20, 30) at 8 B/c
+        // drains 80 B, and the last 20 B at full rate need 1.25 cycles →
+        // completes at ceil(31.25) = 32.
+        let mut ch = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        ch.set_degrades(vec![(10, 30, 0.5), (15, 20, 0.25)]);
+        assert_eq!(ch.transfer(160, 0), 32);
+    }
+
+    #[test]
+    fn empty_degrades_keep_the_healthy_model_exact() {
+        // set_degrades(vec![]) must leave every number identical to a
+        // never-degraded channel — the byte-compat contract the committed
+        // fixtures rely on.
+        let mut healthy = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        let mut cleared = LinkChannel::new(InterBoardLink::new(16.0, 10));
+        cleared.set_degrades(vec![]);
+        for (bytes, earliest) in [(160, 0), (160, 5), (16, 100), (1, 101)] {
+            assert_eq!(
+                healthy.transfer(bytes, earliest),
+                cleared.transfer(bytes, earliest)
+            );
+        }
+        assert_eq!(healthy.busy_until(), cleared.busy_until());
+
+        // Degraded ideal links still cost nothing (infinite bandwidth).
+        let mut ideal = LinkChannel::new(InterBoardLink::ideal());
+        ideal.set_degrades(vec![(0, 1 << 30, 0.01)]);
+        assert_eq!(ideal.transfer(1 << 40, 7), 7);
     }
 }

@@ -48,7 +48,20 @@
 //!   windowed time-series ([`WindowSample`]) and per-tenant online
 //!   [`QuantileSketch`]es, surfaced as the optional
 //!   [`FleetReport::telemetry`] section, the CLI's `--trace` export and
-//!   ASCII fleet dashboard ([`fleet_dashboard`]).
+//!   ASCII fleet dashboard ([`fleet_dashboard`]);
+//! * a **fault-injection layer**: a seeded, deterministic
+//!   [`crate::config::FaultScript`] (board failures with optional recovery,
+//!   link-degrade windows, clock derates) threads through the multi-tenant
+//!   engine's own event heap, so fault timing composes exactly with
+//!   arrivals, batch flushes and controller windows. A dead board's
+//!   in-flight batch re-queues under the preemption protocol's accounting,
+//!   replicated tenants drain to surviving replicas, severed pipelined
+//!   chains trigger an **emergency re-shard** on the live boards
+//!   ([`place_tenants_alive`]), and recovery re-admits the board
+//!   coolest-first at the next controller window. Outcomes surface as
+//!   fault-typed [`TraceEvent`]s and the optional [`FleetReport::faults`]
+//!   summary ([`FaultSummary`]); without a script every fault path is
+//!   branch-gated off and reports stay byte-identical.
 //!
 //! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
 //! heterogeneous two-generation fleet sweep, a load-step re-sharding
@@ -64,12 +77,14 @@ pub mod telemetry;
 
 pub use link::{InterBoardLink, LinkChannel};
 pub use shard::{
-    balance_min_max, place_tenants, place_tenants_biased, BoardShard, ShardPlan, TenantWorkload,
+    balance_min_max, place_tenants, place_tenants_alive, place_tenants_biased, BoardShard,
+    ShardPlan, TenantWorkload,
 };
 pub use sim::{
     arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic,
     simulate_fleet_dynamic_traced, simulate_fleet_multi_tenant, simulate_fleet_multi_tenant_traced,
-    simulate_fleet_traced, tenant_seed, BoardStats, FleetReport, ReshardEvent, TenantStats,
+    simulate_fleet_traced, tenant_seed, BoardStats, FaultSummary, FleetReport, ReshardEvent,
+    TenantStats,
 };
 pub use telemetry::{
     fleet_dashboard, flushed_items_per_tenant, last_flush_per_tenant, preemptions_per_tenant,
@@ -148,6 +163,31 @@ fn fusion_plan_for_fleet(
 /// (from each tenant's seed), per-tenant fusion plans (searched on the base
 /// config, same policy as [`plan_fleet`]), then the joint placement over the
 /// shared fleet. Returns `(weights, plans)` in tenant order.
+///
+/// # Examples
+///
+/// ```
+/// use decoilfnet::cluster::plan_tenants;
+/// use decoilfnet::config::{tiny_vgg, AccelConfig, ClusterConfig, ShardMode, SloPolicy, TenantSpec};
+///
+/// let cfg = AccelConfig::paper_default();
+/// let mut ccfg = ClusterConfig::fleet_default();
+/// ccfg.boards = 2;
+/// ccfg.tenants = vec![TenantSpec {
+///     name: "solo".to_string(),
+///     network: tiny_vgg(),
+///     weights_seed: 1,
+///     arrival_rps: f64::INFINITY, // burst at t = 0
+///     requests: 8,
+///     load_steps: vec![],
+///     mode: ShardMode::Replicated,
+///     replicas: None,
+///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0 },
+/// }];
+/// let (weights, plans) = plan_tenants(&cfg, &ccfg).unwrap();
+/// assert_eq!(weights.len(), 1);
+/// assert!(plans[0].used_boards() >= 1);
+/// ```
 pub fn plan_tenants(
     cfg: &AccelConfig,
     ccfg: &ClusterConfig,
@@ -193,6 +233,57 @@ pub fn plan_tenants(
 /// `--reshard --tenants` path). Otherwise, with a re-shard policy
 /// configured, the single-network dynamic controller runs (and may migrate
 /// shards under load); else the static scheduler does.
+///
+/// # Examples
+///
+/// Single-network static fleet:
+///
+/// ```
+/// use decoilfnet::cluster::run_fleet;
+/// use decoilfnet::config::{vgg16_prefix, AccelConfig, ClusterConfig};
+///
+/// let cfg = AccelConfig::paper_default();
+/// let mut ccfg = ClusterConfig::fleet_default();
+/// ccfg.requests = 16;
+/// let report = run_fleet(&cfg, &vgg16_prefix(), &ccfg).unwrap();
+/// assert_eq!(report.completed, 16);
+/// assert!(report.faults.is_none(), "no script, no fault section");
+/// ```
+///
+/// Multi-tenant with a scripted outage — the `tenants` path is the only
+/// engine that injects faults, and the report then carries
+/// [`FleetReport::faults`]:
+///
+/// ```
+/// use decoilfnet::cluster::run_fleet;
+/// use decoilfnet::config::{
+///     tiny_vgg, AccelConfig, ClusterConfig, FaultEvent, FaultScript, ShardMode, SloPolicy,
+///     TenantSpec,
+/// };
+///
+/// let cfg = AccelConfig::paper_default();
+/// let mut ccfg = ClusterConfig::fleet_default();
+/// ccfg.boards = 2;
+/// ccfg.tenants = vec![TenantSpec {
+///     name: "burst".to_string(),
+///     network: tiny_vgg(),
+///     weights_seed: 1,
+///     arrival_rps: f64::INFINITY,
+///     requests: 32,
+///     load_steps: vec![],
+///     mode: ShardMode::Replicated,
+///     replicas: None,
+///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0 },
+/// }];
+/// ccfg.faults = Some(FaultScript {
+///     events: vec![FaultEvent::BoardDown { board: 1, at_ms: 0.2, recover_ms: Some(1.0) }],
+/// });
+/// let report = run_fleet(&cfg, &tiny_vgg(), &ccfg).unwrap();
+/// assert_eq!(report.completed, 32, "the survivor absorbs the outage");
+/// let faults = report.faults.unwrap();
+/// assert_eq!(faults.board_failures, 1);
+/// assert_eq!(faults.board_recoveries, 1);
+/// ```
 pub fn run_fleet(
     cfg: &AccelConfig,
     net: &Network,

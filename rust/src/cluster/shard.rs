@@ -403,9 +403,29 @@ pub fn place_tenants_biased(
     tenants: &[TenantWorkload],
     bias: &[u64],
 ) -> Result<Vec<ShardPlan>, String> {
+    place_tenants_alive(fleet, tenants, bias, &vec![true; fleet.len()])
+}
+
+/// [`place_tenants_biased`] restricted to the boards marked alive — the
+/// fault-tolerant placement the chaos control plane re-plans with after a
+/// [`crate::config::FaultEvent::BoardDown`]. Dead boards are excluded from
+/// the replicated candidate set and from the permutation offered to the
+/// pipelined stage DP, so an emergency re-shard routes every tenant onto
+/// surviving fabric. With every board alive this is exactly
+/// [`place_tenants_biased`] (same candidate order, same plans).
+pub fn place_tenants_alive(
+    fleet: &[AccelConfig],
+    tenants: &[TenantWorkload],
+    bias: &[u64],
+    alive: &[bool],
+) -> Result<Vec<ShardPlan>, String> {
     assert!(!fleet.is_empty());
     let nb = fleet.len();
     assert_eq!(bias.len(), nb, "one bias entry per board");
+    assert_eq!(alive.len(), nb, "one liveness entry per board");
+    if !alive.iter().any(|&a| a) {
+        return Err("placement: no board is alive".into());
+    }
     let shell = crate::resources::shell_resources();
     // Incremental fabric already resident per board, and resident count
     // (for the spread-before-stack ordering).
@@ -429,7 +449,7 @@ pub fn place_tenants_biased(
         let shards: Vec<BoardShard> = match t.mode {
             ShardMode::Replicated => {
                 let mut fitting: Vec<usize> = (0..nb)
-                    .filter(|&b| joint_fits(&used, ctx.range_resources(b, 0..n), b))
+                    .filter(|&b| alive[b] && joint_fits(&used, ctx.range_resources(b, 0..n), b))
                     .collect();
                 fitting.sort_by_key(|&b| (bias[b], residents[b], b));
                 let target = t.replicas.unwrap_or(nb).max(1);
@@ -444,12 +464,14 @@ pub fn place_tenants_biased(
                 fitting.into_iter().map(|b| ctx.cost_range(0..n, b)).collect()
             }
             ShardMode::Pipelined => {
-                let k = nb.min(n);
                 // Free placement: the DP sees boards emptiest-first (bias,
                 // residents, index), so stage s runs on perm[s] — an
                 // occupied or hot rack prefix no longer blocks the chain.
-                let mut perm: Vec<usize> = (0..nb).collect();
+                // Dead boards never enter the permutation, so an emergency
+                // re-plan restores the chain on surviving fabric only.
+                let mut perm: Vec<usize> = (0..nb).filter(|&b| alive[b]).collect();
                 perm.sort_by_key(|&b| (bias[b], residents[b], b));
+                let k = perm.len().min(n);
                 let totals: Vec<Vec<u64>> = perm
                     .iter()
                     .map(|&b| ctx.costs[b].iter().map(|c| c.total()).collect())
@@ -1289,6 +1311,64 @@ mod tests {
         }
         covered.sort_unstable();
         assert_eq!(covered, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn place_tenants_alive_excludes_dead_boards() {
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 1);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        let repl = [TenantWorkload {
+            name: "t",
+            net: &net,
+            weights: &w,
+            plan: &fused,
+            mode: ShardMode::Replicated,
+            priority: 1,
+            replicas: None,
+        }];
+        // Board 1 dead: replicas land only on the survivors.
+        let plans =
+            place_tenants_alive(&fleet, &repl, &[0, 0, 0], &[true, false, true]).unwrap();
+        let boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(boards, vec![0, 2]);
+
+        // A pipelined chain re-plans onto the surviving permutation (its
+        // stage count shrinks to the alive-board count if needed).
+        let split = FusionPlan::from_group_sizes(7, &[4, 3]).unwrap();
+        let piped = [TenantWorkload {
+            name: "p",
+            net: &net,
+            weights: &w,
+            plan: &split,
+            mode: ShardMode::Pipelined,
+            priority: 1,
+            replicas: None,
+        }];
+        let plans =
+            place_tenants_alive(&fleet, &piped, &[0, 0, 0], &[false, true, true]).unwrap();
+        for s in &plans[0].shards {
+            assert!(s.board != 0, "no stage may land on the dead board");
+        }
+        let mut covered = Vec::new();
+        for s in &plans[0].shards {
+            covered.extend(s.layers.clone());
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
+
+        // All-alive reduces exactly to place_tenants_biased.
+        let a = place_tenants_alive(&fleet, &repl, &[7, 0, 3], &[true, true, true]).unwrap();
+        let b = place_tenants_biased(&fleet, &repl, &[7, 0, 3]).unwrap();
+        assert_eq!(
+            a[0].shards.iter().map(|s| s.board).collect::<Vec<_>>(),
+            b[0].shards.iter().map(|s| s.board).collect::<Vec<_>>()
+        );
+
+        // A fully dead fleet is an error, not a panic.
+        assert!(place_tenants_alive(&fleet, &repl, &[0, 0, 0], &[false, false, false]).is_err());
     }
 
     #[test]

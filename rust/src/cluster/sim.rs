@@ -61,8 +61,8 @@ use std::time::{Duration, Instant};
 use crate::accel::engine::Weights;
 use crate::accel::fusion::FusionPlan;
 use crate::config::{
-    AccelConfig, ClusterConfig, LoadStep, Network, PreemptMode, ReshardPolicy, ShardMode,
-    TenantSpec,
+    AccelConfig, ClusterConfig, FaultEvent, LoadStep, Network, PreemptMode, ReshardPolicy,
+    ShardMode, TenantSpec,
 };
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use crate::fpga::ddr::SharedDdr;
@@ -72,7 +72,7 @@ use crate::util::stats::percentile_sorted;
 
 use super::events::{BoardPool, DeadlineQueue};
 use super::link::{InterBoardLink, LinkChannel};
-use super::shard::{place_tenants_biased, ShardPlan, TenantWorkload};
+use super::shard::{place_tenants_alive, ShardPlan, TenantWorkload};
 use super::telemetry::{TelemetrySummary, TraceEvent, TraceSink, WindowSample};
 
 /// Per-board outcome counters.
@@ -165,6 +165,13 @@ pub struct TenantStats {
     /// the unified control plane (re-shard policy armed); `None` keeps the
     /// pre-unification report JSON byte-identical.
     pub tail_p99_ms: Option<f64>,
+    /// Fraction of this tenant's requests that completed inside an outage
+    /// window (board down → recovery or end of run) with latency within the
+    /// SLO target — the SLO-attainment-through-outage metric. `1.0` when no
+    /// completion overlapped an outage; `None` (key absent) when no
+    /// [`crate::config::FaultScript`] was configured, which keeps the
+    /// fault-free report JSON byte-identical.
+    pub slo_attainment_outage: Option<f64>,
 }
 
 impl TenantStats {
@@ -184,6 +191,64 @@ impl TenantStats {
             .set("slo_met", self.slo_met);
         if let Some(v) = self.tail_p99_ms {
             j = j.set("tail_p99_ms", v);
+        }
+        if let Some(v) = self.slo_attainment_outage {
+            j = j.set("slo_attainment_outage", v);
+        }
+        j
+    }
+}
+
+/// Fleet-wide fault-tolerance summary of a run with a configured
+/// [`crate::config::FaultScript`]. Lives on [`FleetReport::faults`]; `None`
+/// (and the JSON key absent) when no script was configured — faults are
+/// strictly opt-in and the healthy report stays byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSummary {
+    /// Boards taken down by the script (deduplicated per `BoardDown` that
+    /// actually fired against an up board).
+    pub board_failures: u64,
+    pub board_recoveries: u64,
+    /// Link degrade windows that opened.
+    pub link_degrades: u64,
+    /// Clock derate events applied (including factor-1.0 restores).
+    pub clock_derates: u64,
+    /// Emergency re-shards: placements re-run outside the controller window
+    /// because a board death severed a chain or drained a tenant to zero
+    /// replicas (or a recovery restored a stranded tenant).
+    pub emergency_reshards: u64,
+    /// In-flight items thrown back to their tenants' queues by board
+    /// failures (the unfinished remainder under `Resume`, whole batches
+    /// under `Restart`).
+    pub items_requeued: u64,
+    /// Sum over failures of (recovery instant − failure instant); an
+    /// unrecovered board bills to the end of the run.
+    pub downtime_cycles: u64,
+    /// Fleet-wide p99 latency over completions strictly before the first
+    /// fault instant (`None` when nothing completed that early).
+    pub pre_fault_p99_ms: Option<f64>,
+    /// Fleet-wide p99 latency over completions at/after the last fault
+    /// instant in the script — failure, recovery, or degrade end, whichever
+    /// is latest (`None` when nothing completed that late). The chaos
+    /// battery bounds `recovery_p99_ms / pre_fault_p99_ms`.
+    pub recovery_p99_ms: Option<f64>,
+}
+
+impl FaultSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("board_failures", self.board_failures)
+            .set("board_recoveries", self.board_recoveries)
+            .set("link_degrades", self.link_degrades)
+            .set("clock_derates", self.clock_derates)
+            .set("emergency_reshards", self.emergency_reshards)
+            .set("items_requeued", self.items_requeued)
+            .set("downtime_cycles", self.downtime_cycles);
+        if let Some(v) = self.pre_fault_p99_ms {
+            j = j.set("pre_fault_p99_ms", v);
+        }
+        if let Some(v) = self.recovery_p99_ms {
+            j = j.set("recovery_p99_ms", v);
         }
         j
     }
@@ -225,6 +290,10 @@ pub struct FleetReport {
     /// Per-tenant outcomes ([`simulate_fleet_multi_tenant`]; empty for the
     /// single-network simulators).
     pub tenants: Vec<TenantStats>,
+    /// Fault-tolerance summary when a [`crate::config::FaultScript`] was
+    /// configured (multi-tenant engine only); `None` and the JSON key
+    /// absent otherwise — faults are strictly opt-in.
+    pub faults: Option<FaultSummary>,
     /// Aggregated telemetry when the run was traced with an armed
     /// [`TraceSink`]. `None` (and the JSON key absent) when tracing is
     /// disabled — the default for every plain entry point, which keeps the
@@ -271,6 +340,9 @@ impl FleetReport {
             .set("reshard_events", events)
             .set("tenants", tenants)
             .set("per_board", boards);
+        if let Some(f) = &self.faults {
+            j = j.set("faults", f.to_json());
+        }
         if let Some(t) = &self.telemetry {
             j = j.set("telemetry", t.to_json());
         }
@@ -572,6 +644,7 @@ pub fn simulate_fleet_traced(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events: Vec::new(),
         tenants: Vec::new(),
+        faults: None,
         telemetry: sink.summary(),
     }
 }
@@ -948,6 +1021,7 @@ pub fn simulate_fleet_dynamic_traced(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events: events,
         tenants: Vec::new(),
+        faults: None,
         telemetry: sink.summary(),
     }
 }
@@ -1068,6 +1142,37 @@ pub fn simulate_fleet_multi_tenant(
 /// per-tenant migration billing, and window rollups — plus per-tenant
 /// latency sketches and the simulator's own event-loop stats; with
 /// [`TraceSink::disabled`] this is exactly [`simulate_fleet_multi_tenant`].
+///
+/// # Examples
+///
+/// ```
+/// use decoilfnet::cluster::{plan_tenants, simulate_fleet_multi_tenant_traced, TraceSink};
+/// use decoilfnet::config::{tiny_vgg, AccelConfig, ClusterConfig, ShardMode, SloPolicy, TenantSpec};
+///
+/// let cfg = AccelConfig::paper_default();
+/// let mut ccfg = ClusterConfig::fleet_default();
+/// ccfg.boards = 2;
+/// ccfg.tenants = vec![TenantSpec {
+///     name: "burst".to_string(),
+///     network: tiny_vgg(),
+///     weights_seed: 1,
+///     arrival_rps: f64::INFINITY,
+///     requests: 16,
+///     load_steps: vec![],
+///     mode: ShardMode::Replicated,
+///     replicas: None,
+///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0 },
+/// }];
+/// let fleet = ccfg.board_configs(&cfg);
+/// let (weights, plans) = plan_tenants(&cfg, &ccfg).unwrap();
+/// let mut sink = TraceSink::enabled();
+/// let report = simulate_fleet_multi_tenant_traced(
+///     &cfg, &fleet, &ccfg.tenants, &weights, &plans, &ccfg, &mut sink,
+/// );
+/// assert_eq!(report.completed, 16);
+/// assert!(report.telemetry.is_some(), "armed sink → telemetry summary");
+/// assert!(!sink.events.is_empty(), "the decision stream was recorded");
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_fleet_multi_tenant_traced(
     cfg: &AccelConfig,
@@ -1108,6 +1213,70 @@ pub fn simulate_fleet_multi_tenant_traced(
         ccfg.aggregate_ddr_bytes_per_cycle,
     );
     let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
+
+    // ---- fault injection (inert when `ccfg.faults` is None) ----
+    // The script's wall-clock instants convert onto the reference timeline
+    // once, up front; each timeline entry is scheduled as its own event in
+    // the third id space of the shared queue (ids >= nb + nt), so fault
+    // timing composes with arrivals, completions, and reshard wakes.
+    enum FaultAction {
+        Fail(usize),
+        Recover(usize),
+        /// (source board, factor, until-cycle) — the slow windows are baked
+        /// into the link channels at build time; this event only emits the
+        /// trace record and wakes the dispatcher.
+        Degrade(usize, f64, u64),
+        Derate(usize, f64),
+    }
+    let faults_armed = ccfg.faults.is_some();
+    let ms_to_cycles = |ms: f64| (ms * ref_freq * 1e3).round() as u64;
+    let mut fault_timeline: Vec<(u64, FaultAction)> = Vec::new();
+    // Degrade windows by source board, absolute cycles: (start, end, factor).
+    let mut link_degrades: Vec<(u64, u64, f64, usize)> = Vec::new();
+    if let Some(script) = &ccfg.faults {
+        for ev in &script.events {
+            match ev {
+                FaultEvent::BoardDown { board, at_ms, recover_ms } => {
+                    fault_timeline.push((ms_to_cycles(*at_ms), FaultAction::Fail(*board)));
+                    if let Some(rec) = recover_ms {
+                        fault_timeline.push((ms_to_cycles(*rec), FaultAction::Recover(*board)));
+                    }
+                }
+                FaultEvent::LinkDegrade { link, factor, at_ms, until_ms } => {
+                    let (a, u) = (ms_to_cycles(*at_ms), ms_to_cycles(*until_ms));
+                    fault_timeline.push((a, FaultAction::Degrade(*link, *factor, u)));
+                    link_degrades.push((a, u, *factor, *link));
+                }
+                FaultEvent::ClockDerate { board, factor, at_ms } => {
+                    fault_timeline.push((ms_to_cycles(*at_ms), FaultAction::Derate(*board, *factor)));
+                }
+            }
+        }
+        // Scripts are ordered by start instant, but recovery instants
+        // interleave freely; the event queue needs the global order.
+        fault_timeline.sort_by_key(|e| e.0);
+    }
+    let first_fault_at: Option<u64> = fault_timeline.first().map(|e| e.0);
+    // The battery's recovery measurement starts once every scripted
+    // disturbance is over: the latest of all failure, recovery, derate, and
+    // degrade-end instants.
+    let recovery_boundary: u64 = ccfg
+        .faults
+        .as_ref()
+        .and_then(|s| {
+            s.events
+                .iter()
+                .map(|ev| match ev {
+                    FaultEvent::BoardDown { at_ms, recover_ms, .. } => {
+                        ms_to_cycles(recover_ms.unwrap_or(*at_ms))
+                    }
+                    FaultEvent::LinkDegrade { until_ms, .. } => ms_to_cycles(*until_ms),
+                    FaultEvent::ClockDerate { at_ms, .. } => ms_to_cycles(*at_ms),
+                })
+                .max()
+        })
+        .unwrap_or(0);
+
     // The placement is mutable state now: the controller may swap it.
     let mut cur_plans: Vec<ShardPlan> = plans.to_vec();
     // Co-residency bill: the whole fleet's provisioned draw, all tenants.
@@ -1156,7 +1325,25 @@ pub fn simulate_fleet_multi_tenant_traced(
             .iter()
             .map(|p| {
                 (0..p.used_boards().saturating_sub(1))
-                    .map(|_| LinkChannel::new(link))
+                    .map(|si| {
+                        let mut ch = LinkChannel::new(link);
+                        // Bake the script's absolute-time degrade windows
+                        // into every channel whose source board matches —
+                        // the no-faults path leaves the channel untouched
+                        // (and the healthy arithmetic byte-identical).
+                        if !link_degrades.is_empty() {
+                            let src = p.shards[si].board;
+                            let windows: Vec<(u64, u64, f64)> = link_degrades
+                                .iter()
+                                .filter(|d| d.3 == src)
+                                .map(|d| (d.0, d.1, d.2))
+                                .collect();
+                            if !windows.is_empty() {
+                                ch.set_degrades(windows);
+                            }
+                        }
+                        ch
+                    })
                     .collect()
             })
             .collect()
@@ -1184,8 +1371,9 @@ pub fn simulate_fleet_multi_tenant_traced(
     let mut link_bytes_total = 0u64;
 
     // One event queue for everything: ids < nb are board events (batch
-    // completions / stage-release / post-migration wakes), ids >= nb are
-    // per-tenant arrival cursors (id - nb = tenant).
+    // completions / stage-release / post-migration wakes), ids in
+    // [nb, nb + nt) are per-tenant arrival cursors (id - nb = tenant), and
+    // ids >= nb + nt index the fault timeline (id - nb - nt = fault entry).
     let mut events = DeadlineQueue::new();
     let mut cursor = vec![0usize; nt];
     for (t, a) in arrivals.iter().enumerate() {
@@ -1193,6 +1381,28 @@ pub fn simulate_fleet_multi_tenant_traced(
             events.schedule(a[0], nb + t);
         }
     }
+    for (fi, e) in fault_timeline.iter().enumerate() {
+        events.schedule(e.0, nb + nt + fi);
+    }
+
+    // Live fault state. All-up / factor-1.0 are the healthy identities the
+    // hot paths short-circuit on, so a run without a script executes the
+    // pre-fault arithmetic exactly.
+    let mut board_up = vec![true; nb];
+    let mut clock_factor = vec![1.0f64; nb];
+    // A recovered board waits for the next controller window to be re-fed
+    // coolest-first; this flag arms that trigger (always false without a
+    // script, keeping the controller's fault-free behavior byte-identical).
+    let mut readmit_pending = false;
+    // FaultSummary accounting.
+    let mut n_board_failures = 0u64;
+    let mut n_board_recoveries = 0u64;
+    let mut n_link_degrades = 0u64;
+    let mut n_clock_derates = 0u64;
+    let mut n_emergency_reshards = 0u64;
+    let mut items_requeued = 0u64;
+    // (failure instant, recovery instant if any, board).
+    let mut fault_log: Vec<(u64, Option<u64>, usize)> = Vec::new();
 
     // Controller state (inert when the policy is absent — the engine is then
     // byte-identical to the pre-unification multi-tenant simulator).
@@ -1233,6 +1443,21 @@ pub fn simulate_fleet_multi_tenant_traced(
         }};
     }
 
+    // Service cycles on board `b` after clock derating: a derated clock
+    // stretches the board's service time by 1/factor. The factor-1.0 check
+    // keeps the healthy path's integer arithmetic exact (no float rounding
+    // on an undisturbed run).
+    macro_rules! svc_on {
+        ($b:expr, $raw:expr) => {{
+            let (b, raw): (usize, u64) = ($b, $raw);
+            if clock_factor[b] == 1.0 {
+                raw
+            } else {
+                (raw as f64 / clock_factor[b]).ceil() as u64
+            }
+        }};
+    }
+
     // Dispatch one replicated batch of tenant `t` on free board `b` at `at`.
     macro_rules! dispatch_replicated {
         ($t:expr, $b:expr, $at:expr) => {{
@@ -1254,12 +1479,14 @@ pub fn simulate_fleet_multi_tenant_traced(
             } else {
                 0
             };
-            let svc = s.service_cycles(k as u64, ref_freq, &shared, demand) + penalty;
+            let svc = svc_on!(b, s.service_cycles(k as u64, ref_freq, &shared, demand)) + penalty;
             // Per-item completion instants, so a later preemption can keep
             // the finished prefix (Resume only — Restart re-does the work).
             let prefix_done: Vec<u64> = if ccfg.preempt_mode == PreemptMode::Resume {
                 (1..=k as u64)
-                    .map(|j| at + penalty + s.service_cycles(j, ref_freq, &shared, demand))
+                    .map(|j| {
+                        at + penalty + svc_on!(b, s.service_cycles(j, ref_freq, &shared, demand))
+                    })
                     .collect()
             } else {
                 Vec::new()
@@ -1331,7 +1558,10 @@ pub fn simulate_fleet_multi_tenant_traced(
                                     let mut pick: Option<usize> = None;
                                     for s in &cur_plans[t].shards {
                                         let b = s.board;
-                                        if board_state[b].is_none() && free_at[b] <= at {
+                                        if board_up[b]
+                                            && board_state[b].is_none()
+                                            && free_at[b] <= at
+                                        {
                                             let better = match pick {
                                                 None => true,
                                                 Some(p) => {
@@ -1352,9 +1582,18 @@ pub fn simulate_fleet_multi_tenant_traced(
                                 ShardMode::Pipelined => {
                                     // A chain launches when its entry stage is
                                     // free; later stages serialize on the
-                                    // shared timeline.
+                                    // shared timeline. Every stage board must
+                                    // be up: a chain needs its whole board set
+                                    // at once, so a dead stage blocks new
+                                    // launches until recovery or an emergency
+                                    // re-shard moves the chain.
                                     let first = cur_plans[t].shards[0].board;
-                                    if board_state[first].is_none() && free_at[first] <= at {
+                                    let chain_up =
+                                        cur_plans[t].shards.iter().all(|s| board_up[s.board]);
+                                    if chain_up
+                                        && board_state[first].is_none()
+                                        && free_at[first] <= at
+                                    {
                                         let k = pend[t].len().min(ccfg.max_batch);
                                         let mut reqs = Vec::with_capacity(k);
                                         let mut penalized = false;
@@ -1377,8 +1616,10 @@ pub fn simulate_fleet_multi_tenant_traced(
                                         let mut tcur = at;
                                         let mut billed = 0u64;
                                         for (si, s) in cur_plans[t].shards.iter().enumerate() {
-                                            let mut svc =
-                                                s.service_cycles(bsz, ref_freq, &shared, demand);
+                                            let mut svc = svc_on!(
+                                                s.board,
+                                                s.service_cycles(bsz, ref_freq, &shared, demand)
+                                            );
                                             if si == 0 && penalized {
                                                 svc += match ccfg.preempt_mode {
                                                     PreemptMode::Restart => {
@@ -1542,12 +1783,201 @@ pub fn simulate_fleet_multi_tenant_traced(
         }};
     }
 
+    // Re-place the stranded tenants outside the controller window: a board
+    // death severed a pipelined chain (or drained a replicated tenant to
+    // zero replicas), or a recovery restored a tenant whose earlier replan
+    // failed. Placement runs on the live boards only, biased coolest-first
+    // by cumulative busy cycles; only the stranded tenants adopt new plans.
+    // No fleet-wide stall is billed — the survivors never stop.
+    macro_rules! emergency_replan {
+        ($at:expr, $b:expr, $stranded:expr, $reason:expr) => {{
+            let (at, b, stranded, reason): (u64, usize, &[usize], String) =
+                ($at, $b, $stranded, $reason);
+            let fplans: Vec<FusionPlan> = cur_plans.iter().map(|p| p.plan.clone()).collect();
+            let workloads: Vec<TenantWorkload> = specs
+                .iter()
+                .zip(weights)
+                .zip(&fplans)
+                .enumerate()
+                .map(|(t, ((spec, w), fp))| TenantWorkload {
+                    name: &spec.name,
+                    net: &spec.network,
+                    weights: w,
+                    plan: fp,
+                    mode: spec.mode,
+                    priority: spec.slo.priority,
+                    replicas: if uncapped[t] { None } else { spec.replicas },
+                })
+                .collect();
+            if let Ok(new_plans) = place_tenants_alive(fleet, &workloads, &busy, &board_up) {
+                let moved: Vec<(usize, String)> =
+                    stranded.iter().map(|&t| (t, cur_plans[t].label())).collect();
+                for &t in stranded {
+                    cur_plans[t] = new_plans[t].clone();
+                }
+                shard_idx = build_idx(&cur_plans);
+                links_t = rebuild_links(&cur_plans);
+                demand = cur_plans.iter().map(|p| fleet_demand(p, ref_freq)).sum();
+                n_emergency_reshards += 1;
+                let nst = moved.len();
+                sink.record(|| TraceEvent::EmergencyReshard { at, board: b, tenants: nst });
+                for (t, from) in moved {
+                    reshard_events.push(ReshardEvent {
+                        at_cycle: at,
+                        from,
+                        to: cur_plans[t].label(),
+                        reason: reason.clone(),
+                        migration_bytes: 0,
+                        stall_cycles: 0,
+                        tenant: Some(specs[t].name.clone()),
+                    });
+                }
+            }
+            // A failed placement leaves the stranded tenants' queues
+            // waiting; recovery (or a later controller window) retries.
+        }};
+    }
+
     // Handle one event; dispatching happens once per instant, after every
     // event at that instant has been folded in.
     macro_rules! handle {
         ($at:expr, $id:expr) => {{
             let (at, id) = ($at, $id);
-            if id >= nb {
+            if id >= nb + nt {
+                // ---- scripted fault ----
+                match &fault_timeline[id - nb - nt].1 {
+                    FaultAction::Fail(fb) => {
+                        let b = *fb;
+                        if board_up[b] {
+                            board_up[b] = false;
+                            n_board_failures += 1;
+                            fault_log.push((at, None, b));
+                            // Abort the board's in-flight replicated batch
+                            // with the preemption protocol's accounting:
+                            // under Resume the finished prefix completes on
+                            // the spot, the remainder re-queues at the head
+                            // with the penalty flag; under Restart the whole
+                            // batch re-queues.
+                            let mut requeued = 0usize;
+                            if let Some(r) = board_state[b].take() {
+                                busy[b] += at - r.start;
+                                let vt = r.tenant;
+                                let mut rest = r.reqs;
+                                let refund;
+                                if ccfg.preempt_mode == PreemptMode::Resume {
+                                    let j =
+                                        r.prefix_done.iter().filter(|&&d| d <= at).count();
+                                    for &req in &rest[..j] {
+                                        record_done!(vt, req, at);
+                                    }
+                                    items[b] += j as u64;
+                                    if j > 0 {
+                                        sink.record(|| TraceEvent::Flush {
+                                            at,
+                                            tenant: vt,
+                                            board: b,
+                                            items: j,
+                                        });
+                                    }
+                                    refund = if j == 0 {
+                                        r.done - r.start
+                                    } else {
+                                        r.done - r.prefix_done[j - 1]
+                                    };
+                                    rest.drain(..j);
+                                } else {
+                                    refund = r.done - r.start;
+                                }
+                                charge[vt] = charge[vt].saturating_sub(refund);
+                                requeued = rest.len();
+                                for &req in rest.iter().rev() {
+                                    pend[vt].push_front((req, true));
+                                }
+                                free_at[b] = at;
+                            }
+                            items_requeued += requeued as u64;
+                            sink.record(|| TraceEvent::BoardFail { at, board: b, requeued });
+                            // Replicated tenants drain to surviving peers by
+                            // dropping the dead replica; a tenant losing its
+                            // last replica — or any pipelined chain with a
+                            // stage here — is stranded and needs an
+                            // emergency re-shard excluding the dead board.
+                            let mut stranded: Vec<usize> = Vec::new();
+                            for t in 0..nt {
+                                if shard_idx[t][b].is_none() {
+                                    continue;
+                                }
+                                match specs[t].mode {
+                                    ShardMode::Replicated => {
+                                        cur_plans[t].shards.retain(|s| s.board != b);
+                                        if cur_plans[t].shards.is_empty() {
+                                            stranded.push(t);
+                                        }
+                                    }
+                                    ShardMode::Pipelined => stranded.push(t),
+                                }
+                            }
+                            // The retain above shifted shard indexes; keep
+                            // the hosting map honest even when the replan
+                            // below fails (survivors' link channels keep
+                            // their occupancy state on this path).
+                            shard_idx = build_idx(&cur_plans);
+                            demand = cur_plans.iter().map(|p| fleet_demand(p, ref_freq)).sum();
+                            if !stranded.is_empty() {
+                                emergency_replan!(at, b, &stranded, format!("board {b} down"));
+                            }
+                        }
+                    }
+                    FaultAction::Recover(fb) => {
+                        let b = *fb;
+                        if !board_up[b] {
+                            board_up[b] = true;
+                            n_board_recoveries += 1;
+                            if let Some(e) =
+                                fault_log.iter_mut().rev().find(|e| e.2 == b && e.1.is_none())
+                            {
+                                e.1 = Some(at);
+                            }
+                            free_at[b] = free_at[b].max(at);
+                            // Re-admission into the rotation happens at the
+                            // next controller window (coolest-first bias
+                            // favors the idle returner); tenants stranded by
+                            // a failed replan while the board was down are
+                            // restored immediately.
+                            readmit_pending = true;
+                            sink.record(|| TraceEvent::BoardRecover { at, board: b });
+                            let stranded: Vec<usize> = (0..nt)
+                                .filter(|&t| cur_plans[t].shards.is_empty())
+                                .collect();
+                            if !stranded.is_empty() {
+                                emergency_replan!(
+                                    at,
+                                    b,
+                                    &stranded,
+                                    format!("board {b} recovered")
+                                );
+                            }
+                        }
+                    }
+                    FaultAction::Degrade(src, factor, until) => {
+                        // The slow windows are pre-baked into the link
+                        // channels; this event marks the start in the trace
+                        // and wakes the dispatcher.
+                        n_link_degrades += 1;
+                        let (src, factor, until) = (*src, *factor, *until);
+                        sink.record(|| TraceEvent::LinkDegrade {
+                            at,
+                            board: src,
+                            factor,
+                            until,
+                        });
+                    }
+                    FaultAction::Derate(fb, factor) => {
+                        clock_factor[*fb] = *factor;
+                        n_clock_derates += 1;
+                    }
+                }
+            } else if id >= nb {
                 let t = id - nb;
                 pend[t].push_back((cursor[t], false));
                 cursor[t] += 1;
@@ -1629,7 +2059,7 @@ pub fn simulate_fleet_multi_tenant_traced(
                     });
                     if cooldown > 0 {
                         cooldown -= 1;
-                    } else if !triggered.is_empty() || skew > pol.util_skew {
+                    } else if readmit_pending || !triggered.is_empty() || skew > pol.util_skew {
                         for &(t, _) in &triggered {
                             uncapped[t] = true;
                         }
@@ -1642,10 +2072,12 @@ pub fn simulate_fleet_multi_tenant_traced(
                                 "tenant '{}' window p99 {p99:.2} ms > slo {:.2} ms",
                                 specs[t].name, specs[t].slo.p99_ms
                             ),
-                            None => {
+                            None if skew > pol.util_skew => {
                                 format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
                             }
+                            None => "board recovered - re-admission".to_string(),
                         };
+                        readmit_pending = false;
                         sink.record(|| TraceEvent::ReshardTrigger { at, reason: reason.clone() });
                         // Re-place against the observed load: coolest boards
                         // first, SLO-missing tenants uncapped (scale-out).
@@ -1669,7 +2101,9 @@ pub fn simulate_fleet_multi_tenant_traced(
                                 replicas: if uncapped[t] { None } else { spec.replicas },
                             })
                             .collect();
-                        if let Ok(new_plans) = place_tenants_biased(fleet, &workloads, &bias) {
+                        if let Ok(new_plans) =
+                            place_tenants_alive(fleet, &workloads, &bias, &board_up)
+                        {
                             let boards_of = |p: &ShardPlan| -> Vec<usize> {
                                 p.shards.iter().map(|s| s.board).collect()
                             };
@@ -1801,6 +2235,32 @@ pub fn simulate_fleet_multi_tenant_traced(
                 tail.sort_by(|x, y| x.partial_cmp(y).unwrap());
                 percentile_sorted(&tail, 99.0)
             });
+            // SLO attainment through outages: of the requests completing
+            // while any board was down, the fraction within this tenant's
+            // SLO target (1.0 when no completion overlapped an outage).
+            let slo_attainment_outage = if faults_armed {
+                let mut in_outage = 0usize;
+                let mut within = 0usize;
+                for (i, &c) in complete[t].iter().enumerate() {
+                    let overlaps = fault_log
+                        .iter()
+                        .any(|&(f, r, _)| c >= f && c < r.unwrap_or(u64::MAX));
+                    if overlaps {
+                        in_outage += 1;
+                        let l = c.saturating_sub(arrivals[t][i]) as f64 * ns_per_cycle / 1e6;
+                        if l <= s.slo.p99_ms {
+                            within += 1;
+                        }
+                    }
+                }
+                Some(if in_outage == 0 {
+                    1.0
+                } else {
+                    within as f64 / in_outage as f64
+                })
+            } else {
+                None
+            };
             TenantStats {
                 name: s.name.clone(),
                 priority: s.slo.priority,
@@ -1822,6 +2282,7 @@ pub fn simulate_fleet_multi_tenant_traced(
                 slo_p99_ms: s.slo.p99_ms,
                 slo_met: p99_ms <= s.slo.p99_ms,
                 tail_p99_ms,
+                slo_attainment_outage,
             }
         })
         .collect();
@@ -1855,6 +2316,52 @@ pub fn simulate_fleet_multi_tenant_traced(
         .collect();
     let used_boards = hosted.iter().filter(|&&h| h).count();
 
+    let faults = if faults_armed {
+        // Pre-fault and post-recovery latency populations, fleet-wide.
+        let mut pre: Vec<f64> = Vec::new();
+        let mut post: Vec<f64> = Vec::new();
+        for t in 0..nt {
+            for (i, &c) in complete[t].iter().enumerate() {
+                let l = c.saturating_sub(arrivals[t][i]) as f64 * ns_per_cycle / 1e6;
+                if let Some(ff) = first_fault_at {
+                    if c < ff {
+                        pre.push(l);
+                    }
+                }
+                if c >= recovery_boundary {
+                    post.push(l);
+                }
+            }
+        }
+        pre.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        post.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let downtime_cycles = fault_log
+            .iter()
+            .map(|&(f, r, _)| r.unwrap_or(makespan_cycles).saturating_sub(f))
+            .sum();
+        Some(FaultSummary {
+            board_failures: n_board_failures,
+            board_recoveries: n_board_recoveries,
+            link_degrades: n_link_degrades,
+            clock_derates: n_clock_derates,
+            emergency_reshards: n_emergency_reshards,
+            items_requeued,
+            downtime_cycles,
+            pre_fault_p99_ms: if pre.is_empty() {
+                None
+            } else {
+                Some(percentile_sorted(&pre, 99.0))
+            },
+            recovery_p99_ms: if post.is_empty() {
+                None
+            } else {
+                Some(percentile_sorted(&post, 99.0))
+            },
+        })
+    } else {
+        None
+    };
+
     FleetReport {
         mode: cur_plans[0].mode,
         boards: nb,
@@ -1876,6 +2383,7 @@ pub fn simulate_fleet_multi_tenant_traced(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events,
         tenants,
+        faults,
         telemetry: sink.summary(),
     }
 }
@@ -1919,6 +2427,7 @@ mod tests {
             preempt_restart_cycles: 500,
             preempt_mode: PreemptMode::Restart,
             preempt_refill_cycles: 100,
+            faults: None,
         }
     }
 
@@ -2712,5 +3221,212 @@ mod tests {
                 );
             }
         }
+    }
+
+    // ---- fault injection ----
+
+    use crate::config::{FaultEvent, FaultScript};
+
+    #[test]
+    fn no_fault_script_keeps_report_json_free_of_fault_keys() {
+        // Faults are strictly opt-in: without a script the report must not
+        // grow any key — the committed golden fixtures rely on this.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &mt_cfg(2, 8));
+        assert!(r.faults.is_none());
+        let s = r.to_json().to_string_compact();
+        assert!(!s.contains("\"faults\""), "no faults key without a script");
+        assert!(
+            !s.contains("slo_attainment_outage"),
+            "no per-tenant outage key without a script"
+        );
+    }
+
+    #[test]
+    fn board_down_requeues_in_flight_work_and_recovers() {
+        // Board 1 dies mid-burst and recovers later: the aborted batch
+        // re-queues (Restart mode re-runs it whole), the survivors keep
+        // serving, and every request still completes exactly once. The
+        // trace's BoardFail events must agree with the FaultSummary.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 8);
+        ccfg.tenants = specs.clone();
+        ccfg.faults = Some(FaultScript {
+            events: vec![FaultEvent::BoardDown {
+                board: 1,
+                at_ms: 0.2,
+                recover_ms: Some(1.0),
+            }],
+        });
+        let mut sink = TraceSink::enabled();
+        let r =
+            simulate_fleet_multi_tenant_traced(&cfg, &fleet, &specs, &w, &plans, &ccfg, &mut sink);
+        assert_eq!(r.tenants[0].completed, 24);
+        assert_eq!(r.tenants[1].completed, 64);
+        assert_eq!(r.tenants[0].items, 24);
+        assert_eq!(r.tenants[1].items, 64);
+        let f = r.faults.as_ref().expect("script armed → summary present");
+        assert_eq!(f.board_failures, 1);
+        assert_eq!(f.board_recoveries, 1);
+        // Downtime is exactly the scripted window (0.2 ms → 1.0 ms).
+        let ref_freq = cfg.platform.freq_mhz;
+        let expect_down = (1.0 * ref_freq * 1e3).round() as u64 - (0.2 * ref_freq * 1e3).round() as u64;
+        assert_eq!(f.downtime_cycles, expect_down);
+        // Trace ↔ summary consistency.
+        let requeued_in_trace: u64 = sink
+            .events
+            .iter()
+            .map(|ev| match ev {
+                TraceEvent::BoardFail { requeued, .. } => *requeued as u64,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(f.items_requeued, requeued_in_trace);
+        let fails = sink.events.iter().filter(|e| e.kind() == "board_fail").count();
+        let recs = sink.events.iter().filter(|e| e.kind() == "board_recover").count();
+        assert_eq!(fails, 1);
+        assert_eq!(recs, 1);
+        // Every tenant reports the outage-attainment metric under faults.
+        for t in &r.tenants {
+            assert!(t.slo_attainment_outage.is_some(), "{}", t.name);
+        }
+        // Deterministic, faults and all.
+        let mut sink2 = TraceSink::enabled();
+        let r2 =
+            simulate_fleet_multi_tenant_traced(&cfg, &fleet, &specs, &w, &plans, &ccfg, &mut sink2);
+        assert_eq!(r.to_json().to_string_pretty(), r2.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn permanent_board_loss_drains_to_the_survivor() {
+        // No recovery: the fleet finishes the run on board 0 alone and the
+        // downtime bills to the end of the run.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 8);
+        ccfg.tenants = specs.clone();
+        ccfg.faults = Some(FaultScript {
+            events: vec![FaultEvent::BoardDown {
+                board: 1,
+                at_ms: 0.2,
+                recover_ms: None,
+            }],
+        });
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        assert_eq!(r.completed, 88, "survivor absorbs everything");
+        let f = r.faults.as_ref().unwrap();
+        assert_eq!(f.board_failures, 1);
+        assert_eq!(f.board_recoveries, 0);
+        let fail_at = (0.2 * cfg.platform.freq_mhz * 1e3).round() as u64;
+        assert_eq!(f.downtime_cycles, r.makespan_cycles - fail_at);
+        // Board 1 serves nothing after the failure: its items stay below
+        // the even split.
+        assert!(r.per_board[1].items < r.per_board[0].items);
+    }
+
+    #[test]
+    fn clock_derate_stretches_the_run_until_restored() {
+        // Both boards at half clock from t = 0: the burst takes roughly
+        // twice as long as the healthy run. A restoring factor-1.0 event
+        // counts as a derate too (the summary tallies applications).
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        // Both tenants burst at t = 0 so the makespan is service-bound —
+        // a Poisson stream would hide the derate behind arrival gaps.
+        let specs = two_tenant_specs(f64::INFINITY, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let healthy = mt_cfg(2, 8);
+        let mut derated = mt_cfg(2, 8);
+        derated.tenants = specs.clone();
+        derated.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: 0.0 },
+                FaultEvent::ClockDerate { board: 1, factor: 0.5, at_ms: 0.0 },
+                FaultEvent::ClockDerate { board: 0, factor: 1.0, at_ms: 50.0 },
+                FaultEvent::ClockDerate { board: 1, factor: 1.0, at_ms: 50.0 },
+            ],
+        });
+        let rh = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &healthy);
+        let rd = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &derated);
+        assert_eq!(rd.completed, rh.completed);
+        assert!(
+            rd.makespan_cycles as f64 > 1.5 * rh.makespan_cycles as f64,
+            "half clock must stretch the run: {} vs {}",
+            rd.makespan_cycles,
+            rh.makespan_cycles
+        );
+        assert_eq!(rd.faults.as_ref().unwrap().clock_derates, 4);
+        assert!(rh.faults.is_none());
+    }
+
+    #[test]
+    fn link_flaps_within_one_window_slow_a_pipelined_chain() {
+        // Back-to-back degrade windows (a flap) on the stage-0 egress link
+        // of a pipelined tenant: transfers overlapping the windows bill at
+        // the degraded rate, so the faulted run is strictly slower than the
+        // healthy one on a link-bound chain — and byte-deterministic.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let tiny = tiny_vgg();
+        let w_piped = Weights::random(&tiny, 2);
+        let unfused = FusionPlan::unfused(7);
+        let specs = vec![TenantSpec {
+            name: "piped".to_string(),
+            network: tiny.clone(),
+            weights_seed: 2,
+            arrival_rps: f64::INFINITY,
+            requests: 40,
+            load_steps: vec![],
+            mode: ShardMode::Pipelined,
+            replicas: None,
+            slo: SloPolicy { p99_ms: 5000.0, priority: 1, weight: 1.0 },
+        }];
+        let workloads = [TenantWorkload {
+            name: "piped",
+            net: &tiny,
+            weights: &w_piped,
+            plan: &unfused,
+            mode: ShardMode::Pipelined,
+            priority: 1,
+            replicas: None,
+        }];
+        let plans = place_tenants(&fleet, &workloads).unwrap();
+        assert_eq!(plans[0].used_boards(), 2);
+        let src = plans[0].shards[0].board;
+        let w = vec![w_piped];
+        let mut healthy = mt_cfg(2, 4);
+        healthy.link_bytes_per_cycle = 1.0; // starved wire → link-bound
+        healthy.link_latency_cycles = 0;
+        let mut flapped = healthy.clone();
+        flapped.tenants = specs.clone();
+        flapped.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::LinkDegrade { link: src, factor: 0.5, at_ms: 0.0, until_ms: 5.0 },
+                FaultEvent::LinkDegrade { link: src, factor: 0.25, at_ms: 5.0, until_ms: 50.0 },
+            ],
+        });
+        let rh = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &healthy);
+        let rf = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &flapped);
+        assert_eq!(rf.completed, 40);
+        assert_eq!(rf.link_bytes_total, rh.link_bytes_total, "bytes conserve");
+        assert!(
+            rf.makespan_cycles > rh.makespan_cycles,
+            "degraded link must slow a link-bound chain: {} vs {}",
+            rf.makespan_cycles,
+            rh.makespan_cycles
+        );
+        assert_eq!(rf.faults.as_ref().unwrap().link_degrades, 2);
+        let a = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &flapped)
+            .to_json()
+            .to_string_pretty();
+        assert_eq!(rf.to_json().to_string_pretty(), a, "faulted runs stay deterministic");
     }
 }

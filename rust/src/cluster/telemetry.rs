@@ -237,6 +237,19 @@ pub enum TraceEvent {
     ReshardWake { at: u64 },
     /// A stats window closed (with or without a re-shard).
     WindowRollup { at: u64, requests: u64 },
+    /// A scripted board failure fired. `requeued` counts the in-flight
+    /// items of the batch the board was serving that went back to the head
+    /// of their tenant's queue (the finished prefix completed in place).
+    BoardFail { at: u64, board: usize, requeued: usize },
+    /// A failed board came back and rejoined the candidate set.
+    BoardRecover { at: u64, board: usize },
+    /// A scripted link-degrade window opened on `board`'s egress link
+    /// (`factor` × nominal bandwidth until cycle `until`).
+    LinkDegrade { at: u64, board: usize, factor: f64, until: u64 },
+    /// A board death severed a tenant placement (pipelined chain stage or
+    /// last replica) and the control plane re-planned `tenants` tenants
+    /// onto the surviving boards outside the normal window cadence.
+    EmergencyReshard { at: u64, board: usize, tenants: usize },
 }
 
 impl TraceEvent {
@@ -250,6 +263,10 @@ impl TraceEvent {
             TraceEvent::ReshardStall { .. } => "reshard_stall",
             TraceEvent::ReshardWake { .. } => "reshard_wake",
             TraceEvent::WindowRollup { .. } => "window",
+            TraceEvent::BoardFail { .. } => "board_fail",
+            TraceEvent::BoardRecover { .. } => "board_recover",
+            TraceEvent::LinkDegrade { .. } => "link_degrade",
+            TraceEvent::EmergencyReshard { .. } => "emergency_reshard",
         }
     }
 
@@ -262,7 +279,11 @@ impl TraceEvent {
             | TraceEvent::ReshardTrigger { at, .. }
             | TraceEvent::ReshardStall { at, .. }
             | TraceEvent::ReshardWake { at }
-            | TraceEvent::WindowRollup { at, .. } => at,
+            | TraceEvent::WindowRollup { at, .. }
+            | TraceEvent::BoardFail { at, .. }
+            | TraceEvent::BoardRecover { at, .. }
+            | TraceEvent::LinkDegrade { at, .. }
+            | TraceEvent::EmergencyReshard { at, .. } => at,
         }
     }
 
@@ -299,6 +320,17 @@ impl TraceEvent {
             }
             TraceEvent::ReshardWake { .. } => j,
             TraceEvent::WindowRollup { requests, .. } => j.set("requests", *requests),
+            TraceEvent::BoardFail { board, requeued, .. } => j
+                .set("board", *board as u64)
+                .set("requeued", *requeued as u64),
+            TraceEvent::BoardRecover { board, .. } => j.set("board", *board as u64),
+            TraceEvent::LinkDegrade { board, factor, until, .. } => j
+                .set("board", *board as u64)
+                .set("factor", *factor)
+                .set("until", *until),
+            TraceEvent::EmergencyReshard { board, tenants, .. } => j
+                .set("board", *board as u64)
+                .set("tenants", *tenants as u64),
         }
     }
 }
@@ -354,6 +386,11 @@ pub struct TelemetrySummary {
     pub reshard_stalls: u64,
     pub reshard_wakes: u64,
     pub windows: u64,
+    /// Fault-injection counters (all zero on a healthy run).
+    pub board_failures: u64,
+    pub board_recoveries: u64,
+    pub link_degrades: u64,
+    pub emergency_reshards: u64,
     /// Simulator heap events processed (drives `sim_events_per_sec`).
     pub sim_events: u64,
     pub heap_depth_max: u64,
@@ -379,6 +416,10 @@ impl TelemetrySummary {
             .set("reshard_stalls", self.reshard_stalls)
             .set("reshard_wakes", self.reshard_wakes)
             .set("windows", self.windows)
+            .set("board_failures", self.board_failures)
+            .set("board_recoveries", self.board_recoveries)
+            .set("link_degrades", self.link_degrades)
+            .set("emergency_reshards", self.emergency_reshards)
             .set("sim_events", self.sim_events)
             .set("heap_depth_max", self.heap_depth_max)
             .set("heap_depth_mean", self.heap_depth_mean)
@@ -489,6 +530,10 @@ impl TraceSink {
             reshard_stalls: 0,
             reshard_wakes: 0,
             windows: self.windows.len() as u64,
+            board_failures: 0,
+            board_recoveries: 0,
+            link_degrades: 0,
+            emergency_reshards: 0,
             sim_events: self.sim_events,
             heap_depth_max: self.heap_depth_max,
             heap_depth_mean: self.heap_depth_mean(),
@@ -509,6 +554,10 @@ impl TraceSink {
                 TraceEvent::ReshardWake { .. } => s.reshard_wakes += 1,
                 // Window rollups are counted via the samples vector above.
                 TraceEvent::WindowRollup { .. } => {}
+                TraceEvent::BoardFail { .. } => s.board_failures += 1,
+                TraceEvent::BoardRecover { .. } => s.board_recoveries += 1,
+                TraceEvent::LinkDegrade { .. } => s.link_degrades += 1,
+                TraceEvent::EmergencyReshard { .. } => s.emergency_reshards += 1,
             }
         }
         Some(s)
@@ -779,11 +828,15 @@ mod tests {
         });
         sink.record(|| TraceEvent::ReshardWake { at: 14 });
         sink.record(|| TraceEvent::WindowRollup { at: 14, requests: 2 });
+        sink.record(|| TraceEvent::BoardFail { at: 20, board: 2, requeued: 3 });
+        sink.record(|| TraceEvent::LinkDegrade { at: 21, board: 0, factor: 0.5, until: 40 });
+        sink.record(|| TraceEvent::EmergencyReshard { at: 22, board: 2, tenants: 1 });
+        sink.record(|| TraceEvent::BoardRecover { at: 44, board: 2 });
         sink.observe_latency_ms(0, 0.5);
         sink.note_sim_event(4);
         sink.note_sim_event(2);
         let s = sink.summary().unwrap();
-        assert_eq!(s.events_total, 8);
+        assert_eq!(s.events_total, 12);
         assert_eq!(s.admits, 1);
         assert_eq!(s.dispatches, 1);
         assert_eq!(s.flushes, 1);
@@ -791,6 +844,10 @@ mod tests {
         assert_eq!(s.reshard_triggers, 1);
         assert_eq!(s.reshard_stalls, 1);
         assert_eq!(s.reshard_wakes, 1);
+        assert_eq!(s.board_failures, 1);
+        assert_eq!(s.board_recoveries, 1);
+        assert_eq!(s.link_degrades, 1);
+        assert_eq!(s.emergency_reshards, 1);
         assert_eq!(s.sim_events, 2);
         assert_eq!(s.heap_depth_max, 4);
         assert_eq!(s.heap_depth_mean, 3.0);

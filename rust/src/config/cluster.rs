@@ -155,6 +155,265 @@ impl ReshardPolicy {
     }
 }
 
+/// One scripted fault. Times are wall-clock milliseconds on the simulated
+/// timeline (converted to reference-clock cycles by the simulator), so a
+/// script composes with any arrival rate without re-deriving cycle counts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Board `board` dies at `at_ms`. In-flight items re-queue at the head
+    /// of their tenant's queue reusing the [`PreemptMode::Resume`] prefix
+    /// accounting (finished prefixes complete, the remainder re-bills);
+    /// replicated tenants drain to surviving peers and a severed pipelined
+    /// chain triggers an emergency re-shard excluding the dead board.
+    /// `recover_ms` (`None` = permanent) re-admits the board: it rejoins
+    /// the candidate set coolest-first at the next controller window.
+    BoardDown {
+        board: usize,
+        at_ms: f64,
+        recover_ms: Option<f64>,
+    },
+    /// The egress link of board `link` runs at `factor` × its nominal
+    /// bandwidth between `at_ms` and `until_ms`. Back-to-back windows on
+    /// one link model a flap. Applies to any boundary/migration transfer
+    /// whose source board is `link`.
+    LinkDegrade {
+        link: usize,
+        factor: f64,
+        at_ms: f64,
+        until_ms: f64,
+    },
+    /// Board `board`'s clock runs at `factor` × nominal from `at_ms`
+    /// onward (thermal derating). A later event with `factor: 1.0`
+    /// restores full speed.
+    ClockDerate {
+        board: usize,
+        factor: f64,
+        at_ms: f64,
+    },
+}
+
+impl FaultEvent {
+    /// The instant the fault begins (scripts are ordered by this).
+    pub fn at_ms(&self) -> f64 {
+        match self {
+            FaultEvent::BoardDown { at_ms, .. }
+            | FaultEvent::LinkDegrade { at_ms, .. }
+            | FaultEvent::ClockDerate { at_ms, .. } => *at_ms,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            FaultEvent::BoardDown {
+                board,
+                at_ms,
+                recover_ms,
+            } => {
+                let mut j = Json::obj()
+                    .set("kind", "board_down")
+                    .set("board", *board)
+                    .set("at_ms", *at_ms);
+                if let Some(r) = recover_ms {
+                    j = j.set("recover_ms", *r);
+                }
+                j
+            }
+            FaultEvent::LinkDegrade {
+                link,
+                factor,
+                at_ms,
+                until_ms,
+            } => Json::obj()
+                .set("kind", "link_degrade")
+                .set("link", *link)
+                .set("factor", *factor)
+                .set("at_ms", *at_ms)
+                .set("until_ms", *until_ms),
+            FaultEvent::ClockDerate {
+                board,
+                factor,
+                at_ms,
+            } => Json::obj()
+                .set("kind", "clock_derate")
+                .set("board", *board)
+                .set("factor", *factor)
+                .set("at_ms", *at_ms),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultEvent, String> {
+        let at_ms = j
+            .get("at_ms")
+            .as_f64()
+            .ok_or("fault: missing/invalid 'at_ms'")?;
+        match j.get("kind").as_str().ok_or("fault: missing 'kind'")? {
+            "board_down" => Ok(FaultEvent::BoardDown {
+                board: j
+                    .get("board")
+                    .as_usize()
+                    .ok_or("fault board_down: missing/invalid 'board'")?,
+                at_ms,
+                recover_ms: match j.get("recover_ms") {
+                    Json::Null => None,
+                    v => Some(
+                        v.as_f64()
+                            .ok_or("fault board_down: invalid 'recover_ms'")?,
+                    ),
+                },
+            }),
+            "link_degrade" => Ok(FaultEvent::LinkDegrade {
+                link: j
+                    .get("link")
+                    .as_usize()
+                    .ok_or("fault link_degrade: missing/invalid 'link'")?,
+                factor: j
+                    .get("factor")
+                    .as_f64()
+                    .ok_or("fault link_degrade: missing/invalid 'factor'")?,
+                at_ms,
+                until_ms: j
+                    .get("until_ms")
+                    .as_f64()
+                    .ok_or("fault link_degrade: missing/invalid 'until_ms'")?,
+            }),
+            "clock_derate" => Ok(FaultEvent::ClockDerate {
+                board: j
+                    .get("board")
+                    .as_usize()
+                    .ok_or("fault clock_derate: missing/invalid 'board'")?,
+                factor: j
+                    .get("factor")
+                    .as_f64()
+                    .ok_or("fault clock_derate: missing/invalid 'factor'")?,
+                at_ms,
+            }),
+            other => Err(format!(
+                "fault: unknown kind '{other}' (expected 'board_down', \
+                 'link_degrade' or 'clock_derate')"
+            )),
+        }
+    }
+}
+
+/// A deterministic, time-ordered fault schedule injected into the
+/// multi-tenant fleet simulator through the same event heap as arrivals
+/// and completions — fault timing composes exactly with batching windows
+/// and controller instants. Strictly opt-in: with no script configured
+/// every simulator runs pre-existing code byte-for-byte.
+///
+/// # Examples
+///
+/// The CLI `--faults` file format round-trips through JSON:
+///
+/// ```
+/// use decoilfnet::config::{FaultEvent, FaultScript};
+///
+/// let script = FaultScript::from_json_str(
+///     r#"[
+///         {"kind": "board_down", "board": 1, "at_ms": 0.5, "recover_ms": 2.0},
+///         {"kind": "link_degrade", "link": 0, "factor": 0.25, "at_ms": 1.0, "until_ms": 3.0},
+///         {"kind": "clock_derate", "board": 0, "factor": 0.8, "at_ms": 1.5}
+///     ]"#,
+/// )
+/// .unwrap();
+/// assert_eq!(script.events.len(), 3);
+/// assert!(matches!(script.events[0], FaultEvent::BoardDown { board: 1, .. }));
+/// let back = FaultScript::from_json_str(&script.to_json().to_string_pretty()).unwrap();
+/// assert_eq!(back, script);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultScript {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultScript {
+    /// Script-local validation (board/link indices are checked against the
+    /// fleet size in [`ClusterConfig::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.events.is_empty() {
+            return Err("faults: events must be non-empty when a script is set".into());
+        }
+        let mut last_at = f64::NEG_INFINITY;
+        for (i, ev) in self.events.iter().enumerate() {
+            let at = ev.at_ms();
+            if !(at >= 0.0) || !at.is_finite() {
+                return Err(format!("faults: events[{i}].at_ms must be finite and >= 0"));
+            }
+            if at < last_at {
+                return Err("faults: events must be ordered by at_ms".into());
+            }
+            last_at = at;
+            match ev {
+                FaultEvent::BoardDown { recover_ms, .. } => {
+                    if let Some(r) = recover_ms {
+                        if !(r > &at) || !r.is_finite() {
+                            return Err(format!(
+                                "faults: events[{i}].recover_ms must be finite and > at_ms"
+                            ));
+                        }
+                    }
+                }
+                FaultEvent::LinkDegrade {
+                    factor, until_ms, ..
+                } => {
+                    if !(*factor > 0.0 && *factor <= 1.0) {
+                        return Err(format!(
+                            "faults: events[{i}].factor must be in (0, 1]"
+                        ));
+                    }
+                    if !(until_ms > &at) || !until_ms.is_finite() {
+                        return Err(format!(
+                            "faults: events[{i}].until_ms must be finite and > at_ms"
+                        ));
+                    }
+                }
+                FaultEvent::ClockDerate { factor, .. } => {
+                    if !(*factor > 0.0 && *factor <= 1.0) {
+                        return Err(format!(
+                            "faults: events[{i}].factor must be in (0, 1]"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::Arr(vec![]);
+        for e in &self.events {
+            arr = arr.push(e.to_json());
+        }
+        Json::obj().set("events", arr)
+    }
+
+    /// Accepts either `{"events": [...]}` or a bare JSON array of events
+    /// (the CLI `--faults` file format).
+    pub fn from_json(j: &Json) -> Result<FaultScript, String> {
+        let list = match j {
+            Json::Arr(_) => j,
+            _ => match j.get("events") {
+                Json::Null => return Err("faults: missing 'events' array".into()),
+                v => v,
+            },
+        };
+        let events = list
+            .as_arr()
+            .ok_or("faults: 'events' must be an array")?
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let script = FaultScript { events };
+        script.validate()?;
+        Ok(script)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<FaultScript, String> {
+        let j = parse(s).map_err(|e| format!("faults json: {e}"))?;
+        FaultScript::from_json(&j)
+    }
+}
+
 /// How a preempted batch is re-served.
 ///
 /// `Restart` is the original protocol: the victim's items are all re-queued
@@ -482,6 +741,13 @@ pub struct ClusterConfig {
     /// preempted batch resumes under [`PreemptMode::Resume`] (only the
     /// refill — completed items are kept).
     pub preempt_refill_cycles: u64,
+    /// Deterministic fault schedule (board death/recovery, link
+    /// degradation, clock derating) injected into the multi-tenant
+    /// simulator's event stream. `None` (the default, and the JSON key
+    /// absent) runs a perfectly healthy fleet byte-for-byte identically to
+    /// the pre-fault engine. Requires a non-empty `tenants` array — the
+    /// single-network simulators never see faults.
+    pub faults: Option<FaultScript>,
 }
 
 impl ClusterConfig {
@@ -506,6 +772,7 @@ impl ClusterConfig {
             preempt_restart_cycles: 500,
             preempt_mode: PreemptMode::Restart,
             preempt_refill_cycles: 100,
+            faults: None,
         }
     }
 
@@ -634,6 +901,30 @@ impl ClusterConfig {
                 return Err(format!("cluster: duplicate tenant name '{}'", t.name));
             }
         }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+            if self.tenants.is_empty() {
+                return Err(
+                    "cluster: faults require a non-empty 'tenants' array (the \
+                     single-network simulators do not inject faults)"
+                        .into(),
+                );
+            }
+            for (i, ev) in f.events.iter().enumerate() {
+                let (label, b) = match ev {
+                    FaultEvent::BoardDown { board, .. } => ("board", *board),
+                    FaultEvent::LinkDegrade { link, .. } => ("link", *link),
+                    FaultEvent::ClockDerate { board, .. } => ("board", *board),
+                };
+                if b >= self.boards {
+                    return Err(format!(
+                        "cluster: faults events[{i}].{label} = {b} out of range \
+                         (boards = {})",
+                        self.boards
+                    ));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -685,6 +976,9 @@ impl ClusterConfig {
             }
             j = j.set("tenants", arr);
         }
+        if let Some(f) = &self.faults {
+            j = j.set("faults", f.to_json());
+        }
         j
     }
 
@@ -712,6 +1006,10 @@ impl ClusterConfig {
                 .iter()
                 .map(TenantSpec::from_json)
                 .collect::<Result<Vec<_>, _>>()?,
+        };
+        let faults = match j.get("faults") {
+            Json::Null => None,
+            v => Some(FaultScript::from_json(v)?),
         };
         let cfg = ClusterConfig {
             boards: j
@@ -762,6 +1060,7 @@ impl ClusterConfig {
                 .get("preempt_refill_cycles")
                 .as_u64()
                 .unwrap_or(base.preempt_refill_cycles),
+            faults,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1149,5 +1448,153 @@ mod tests {
             c.preempt_refill_cycles,
             ClusterConfig::fleet_default().preempt_refill_cycles
         );
+        // Faults are strictly opt-in: absent key parses to None and the
+        // serialized form has no "faults" key.
+        assert!(c.faults.is_none());
+        assert!(!c.to_json().to_string_compact().contains("faults"));
+    }
+
+    fn demo_script() -> FaultScript {
+        FaultScript {
+            events: vec![
+                FaultEvent::LinkDegrade {
+                    link: 0,
+                    factor: 0.25,
+                    at_ms: 0.5,
+                    until_ms: 0.8,
+                },
+                FaultEvent::ClockDerate {
+                    board: 1,
+                    factor: 0.5,
+                    at_ms: 1.0,
+                },
+                FaultEvent::BoardDown {
+                    board: 2,
+                    at_ms: 2.0,
+                    recover_ms: Some(5.0),
+                },
+                FaultEvent::ClockDerate {
+                    board: 1,
+                    factor: 1.0,
+                    at_ms: 3.0,
+                },
+                FaultEvent::BoardDown {
+                    board: 0,
+                    at_ms: 9.0,
+                    recover_ms: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_fault_script() {
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.faults = Some(demo_script());
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+        // A bare array is the CLI --faults form.
+        let arr = match demo_script().to_json().get("events") {
+            Json::Null => panic!("script serializes an 'events' array"),
+            v => v.to_string_pretty(),
+        };
+        assert_eq!(FaultScript::from_json_str(&arr).unwrap(), demo_script());
+    }
+
+    #[test]
+    fn fault_script_validation() {
+        // Valid against a big-enough fleet.
+        demo_script().validate().unwrap();
+
+        // Out-of-order events.
+        let bad = FaultScript {
+            events: vec![
+                FaultEvent::ClockDerate {
+                    board: 0,
+                    factor: 0.5,
+                    at_ms: 2.0,
+                },
+                FaultEvent::ClockDerate {
+                    board: 0,
+                    factor: 1.0,
+                    at_ms: 1.0,
+                },
+            ],
+        };
+        assert!(bad.validate().unwrap_err().contains("ordered"));
+
+        // Bad factors / windows / recovery instants.
+        for (name, ev) in [
+            (
+                "zero factor",
+                FaultEvent::ClockDerate {
+                    board: 0,
+                    factor: 0.0,
+                    at_ms: 1.0,
+                },
+            ),
+            (
+                "factor above 1",
+                FaultEvent::LinkDegrade {
+                    link: 0,
+                    factor: 1.5,
+                    at_ms: 1.0,
+                    until_ms: 2.0,
+                },
+            ),
+            (
+                "empty degrade window",
+                FaultEvent::LinkDegrade {
+                    link: 0,
+                    factor: 0.5,
+                    at_ms: 2.0,
+                    until_ms: 2.0,
+                },
+            ),
+            (
+                "recover before failure",
+                FaultEvent::BoardDown {
+                    board: 0,
+                    at_ms: 2.0,
+                    recover_ms: Some(1.0),
+                },
+            ),
+            (
+                "negative at_ms",
+                FaultEvent::ClockDerate {
+                    board: 0,
+                    factor: 0.5,
+                    at_ms: -1.0,
+                },
+            ),
+        ] {
+            let s = FaultScript { events: vec![ev] };
+            assert!(s.validate().is_err(), "{name} must be rejected");
+        }
+        assert!(FaultScript { events: vec![] }.validate().is_err());
+
+        // Fleet-level checks: indices in range, tenants required.
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.faults = Some(FaultScript {
+            events: vec![FaultEvent::BoardDown {
+                board: 4,
+                at_ms: 1.0,
+                recover_ms: None,
+            }],
+        });
+        assert!(c.validate().unwrap_err().contains("out of range"));
+
+        let mut c = ClusterConfig::fleet_default();
+        c.faults = Some(demo_script());
+        assert!(c.validate().unwrap_err().contains("tenants"));
+
+        // Unknown kind rejected at parse time.
+        assert!(FaultScript::from_json_str(
+            r#"{"events":[{"kind":"gamma_ray","at_ms":1.0}]}"#
+        )
+        .is_err());
     }
 }

@@ -39,6 +39,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "aggregate-ddr", takes_value: true, help: "cluster: shared off-chip bandwidth pool in bytes/cycle (omit to disable contention)", default: None },
         OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy, tenants)", default: None },
         OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities, DRR weights and preemption", default: None },
+        OptSpec { name: "faults", takes_value: true, help: "cluster: path to a FaultScript JSON (board_down / link_degrade / clock_derate events) injected into the multi-tenant engine; requires --tenants (or a config with tenants)", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
         OptSpec { name: "trace", takes_value: true, help: "cluster: arm the telemetry sink and write the full trace (events, window samples, latency sketches) plus the report to this JSON file", default: None },
         OptSpec { name: "dashboard", takes_value: false, help: "cluster: arm the telemetry sink and print the ASCII fleet dashboard — per-board occupancy lanes with reshard/preemption markers", default: None },
@@ -361,6 +362,11 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             .map(decoilfnet::config::TenantSpec::from_json)
             .collect::<Result<Vec<_>, _>>()?;
     }
+    if let Some(path) = args.opt("faults") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading fault script '{path}': {e}"))?;
+        ccfg.faults = Some(decoilfnet::config::FaultScript::from_json_str(&text)?);
+    }
     ccfg.validate()?;
 
     let board_counts: Vec<usize> = if args.has_flag("sweep") {
@@ -456,6 +462,27 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                     e.stall_cycles
                 );
             }
+            if let Some(f) = &r.faults {
+                println!(
+                    "faults: {} board failure(s), {} recover(ies), {} link degrade(s), \
+                     {} clock derate(s), {} emergency re-shard(s); {} item(s) re-queued, \
+                     {} downtime cycles",
+                    f.board_failures,
+                    f.board_recoveries,
+                    f.link_degrades,
+                    f.clock_derates,
+                    f.emergency_reshards,
+                    f.items_requeued,
+                    f.downtime_cycles
+                );
+                if let (Some(pre), Some(post)) = (f.pre_fault_p99_ms, f.recovery_p99_ms) {
+                    println!(
+                        "        pre-fault p99 {pre:.3} ms -> post-recovery p99 {post:.3} ms \
+                         ({:.2}x)",
+                        post / pre
+                    );
+                }
+            }
             if !r.tenants.is_empty() {
                 let mut tt = Table::new(&[
                     "tenant", "prio", "req/s", "p50 ms", "p99 ms", "slo p99 ms", "slo",
@@ -477,7 +504,16 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                             None => format!("{:.2}", t.p99_ms),
                         },
                         format!("{:.2}", t.slo_p99_ms),
-                        if t.slo_met { "MET" } else { "MISSED" }.to_string(),
+                        // With a fault script armed, show how the tenant
+                        // held its SLO for requests completing mid-outage.
+                        match t.slo_attainment_outage {
+                            Some(a) => format!(
+                                "{} ({:.0}% in outage)",
+                                if t.slo_met { "MET" } else { "MISSED" },
+                                100.0 * a
+                            ),
+                            None => if t.slo_met { "MET" } else { "MISSED" }.to_string(),
+                        },
                         t.preemptions.to_string(),
                     ]);
                 }

@@ -50,6 +50,7 @@ fn ideal_cfg(boards: usize, mode: ShardMode, requests: usize) -> ClusterConfig {
         preempt_restart_cycles: 500,
         preempt_mode: PreemptMode::Restart,
         preempt_refill_cycles: 100,
+        faults: None,
     }
 }
 

@@ -240,6 +240,56 @@ class TelemetryRows(CheckPairBase):
         self.assertTrue(self.check(base, doc({"sim_heap_depth_max": metric(12.0, "lower")})))
 
 
+class ChaosRows(CheckPairBase):
+    """The chaos-recovery rows (PR 7): the cluster bench's scripted board
+    outage emits the post-recovery p99 ratio, the re-queue volume, and the
+    billed downtime. Same untracked -> exempt -> armed lifecycle as the
+    mt_* and telemetry rows; once armed, a blown recovery ratio (the fleet
+    not returning to its pre-fault tail) gates like any tracked metric."""
+
+    CHAOS = {
+        "chaos_recovery_p99_ratio": metric(1.0, "lower", gate=False),
+        "chaos_items_requeued": metric(2.0, "lower", gate=False),
+        "chaos_downtime_cycles": metric(15360000.0, "lower", gate=False),
+    }
+
+    def test_new_rows_in_current_only_are_untracked_and_pass(self):
+        # First CI run after the chaos act lands: the committed baseline
+        # predates the rows, so they report as untracked.
+        base = doc({"replicated_fused_ideal_rps_b1": metric(37.07)})
+        cur_metrics = {"replicated_fused_ideal_rps_b1": metric(37.07)}
+        cur_metrics.update(self.CHAOS)
+        self.assertTrue(self.check(base, doc(cur_metrics)))
+
+    def test_exempt_chaos_rows_may_drift_without_failing(self):
+        # A fault-model change tripling the re-queue volume or stretching
+        # recovery must never fail the gate while the rows ride exempt.
+        base = doc(dict(self.CHAOS))
+        drifted = {k: metric(m["value"] * 3.0, m["better"]) for k, m in self.CHAOS.items()}
+        self.assertTrue(self.check(base, doc(drifted)))
+
+    def test_exempt_chaos_rows_may_disappear(self):
+        # e.g. a bench invocation without the chaos act.
+        base = doc(dict(self.CHAOS))
+        self.assertTrue(self.check(base, doc({"other": metric(1.0)})))
+
+    def test_armed_recovery_ratio_gates_regressions(self):
+        # Once armed, a fleet that no longer returns to its pre-fault
+        # tail after recovery fails the pair like any tracked metric.
+        base = doc({"chaos_recovery_p99_ratio": metric(1.0, "lower")})
+        self.assertFalse(
+            self.check(base, doc({"chaos_recovery_p99_ratio": metric(1.4, "lower")}))
+        )
+        self.assertTrue(
+            self.check(base, doc({"chaos_recovery_p99_ratio": metric(1.0, "lower")}))
+        )
+
+    def test_armed_requeue_volume_gates_in_the_lower_direction(self):
+        base = doc({"chaos_items_requeued": metric(2.0, "lower")})
+        self.assertFalse(self.check(base, doc({"chaos_items_requeued": metric(6.0, "lower")})))
+        self.assertTrue(self.check(base, doc({"chaos_items_requeued": metric(1.0, "lower")})))
+
+
 class MultiPairMain(CheckPairBase):
     def run_main(self, argv):
         old = sys.argv
