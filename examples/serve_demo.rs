@@ -23,7 +23,14 @@
 //!    chain is emergency-re-sharded onto the survivors, and the board is
 //!    re-admitted when it recovers — nothing is lost, and the report shows
 //!    per-tenant SLO attainment through the outage.
-//! 6. **Live threaded server** (needs `make artifacts`): the coordinator
+//! 6. **Graceful degradation** (always runs): a best-effort tenant floods
+//!    a fleet that is simultaneously browned out (one board at 30% compute
+//!    capacity). Overload admission sheds what cannot meet the best-effort
+//!    deadline, shed clients retry with jittered exponential backoff and
+//!    eventually abandon — while the policy-less interactive tenant is
+//!    never shed and rides out both disturbances. Offered always equals
+//!    completed + abandoned.
+//! 7. **Live threaded server** (needs `make artifacts`): the coordinator
 //!    batching concurrent clients over the PJRT artifacts, with per-request
 //!    plan routing and live metrics.
 //!
@@ -40,7 +47,8 @@ use decoilfnet::cluster::{
 };
 use decoilfnet::config::{
     tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, FaultEvent, FaultScript, LoadStep,
-    Platform, PreemptMode, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+    OverloadPolicy, Platform, PreemptMode, ReshardPolicy, RetryPolicy, ShardMode, SloPolicy,
+    TenantSpec,
 };
 use decoilfnet::coordinator::{simulate_cluster, BatchPolicy, Server, ServerConfig};
 use decoilfnet::runtime::Runtime;
@@ -153,6 +161,7 @@ fn multi_tenant_demo() -> Result<(), String> {
                 p99_ms: 1.0,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -171,6 +180,7 @@ fn multi_tenant_demo() -> Result<(), String> {
                 p99_ms: 2.0,
                 priority: 0,
                 weight: 1.0,
+                overload: None,
             },
         },
     ];
@@ -254,6 +264,7 @@ fn unified_control_plane_demo() -> Result<(), String> {
                 p99_ms: 0.5,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -269,6 +280,7 @@ fn unified_control_plane_demo() -> Result<(), String> {
                 p99_ms: 5000.0,
                 priority: 0,
                 weight: 1.0,
+                overload: None,
             },
         },
     ];
@@ -363,6 +375,7 @@ fn fault_tolerance_demo() -> Result<(), String> {
                 p99_ms: 2.0,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -378,6 +391,7 @@ fn fault_tolerance_demo() -> Result<(), String> {
                 p99_ms: 5.0,
                 priority: 1,
                 weight: 1.0,
+                overload: None,
             },
         },
     ];
@@ -466,12 +480,140 @@ fn fault_tolerance_demo() -> Result<(), String> {
     Ok(())
 }
 
+/// Graceful degradation: a 256-request best-effort burst hits a 2-board
+/// fleet whose board 0 browns out to 30% compute capacity mid-flood. The
+/// flooder carries an overload policy — admission predicts each request's
+/// wait from the DRR deficit and board occupancy and sheds what cannot
+/// make the deadline; shed clients retry on jittered exponential backoff
+/// and abandon once the budget is spent. The interactive tenant carries no
+/// policy, is never shed, and keeps its SLO through flood + brownout.
+fn overload_demo() -> Result<(), String> {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let specs = vec![
+        TenantSpec {
+            name: "interactive".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: 2000.0,
+            requests: 64,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 1.0,
+                priority: 2,
+                weight: 1.0,
+                overload: None,
+            },
+        },
+        TenantSpec {
+            name: "best-effort".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 2,
+            arrival_rps: f64::INFINITY,
+            requests: 256,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5000.0,
+                priority: 0,
+                weight: 1.0,
+                overload: Some(OverloadPolicy {
+                    deadline_ms: 2.0,
+                    max_queue: 8,
+                    retry: RetryPolicy {
+                        max_attempts: 3,
+                        backoff_base_ms: 0.2,
+                        jitter: 0.5,
+                    },
+                }),
+            },
+        },
+    ];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads)?;
+
+    let mut ccfg = ClusterConfig::fleet_default();
+    ccfg.boards = 2;
+    ccfg.aggregate_ddr_bytes_per_cycle = None;
+    ccfg.link_bytes_per_cycle = f64::INFINITY;
+    ccfg.link_latency_cycles = 0;
+    ccfg.max_batch = 8;
+    ccfg.max_wait_us = 0.0;
+    ccfg.seed = 7;
+    ccfg.tenants = specs.clone();
+    ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::ComputeDegrade {
+            board: 0,
+            capacity_fraction: 0.3,
+            at_ms: 0.5,
+            recover_ms: Some(3.0),
+        }],
+    });
+
+    println!(
+        "== graceful degradation: 256-req best-effort flood, board 0 at 30% capacity \
+         0.5 -> 3 ms =="
+    );
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+    for t in &r.tenants {
+        println!(
+            "  {:>12}: {:3}/{:3} completed  shed {:3}  retried {:3}  abandoned {:3}  \
+             goodput {:7.1} req/s  p99 {:7.3} ms [{}]",
+            t.name,
+            t.completed,
+            t.requests,
+            t.shed.unwrap_or(0),
+            t.retried.unwrap_or(0),
+            t.abandoned.unwrap_or(0),
+            t.goodput_rps.unwrap_or(0.0),
+            t.p99_ms,
+            if t.slo_met { "MET" } else { "MISSED" },
+        );
+        assert_eq!(
+            t.completed as u64 + t.abandoned.unwrap_or(0),
+            t.requests as u64,
+            "offered == completed + abandoned"
+        );
+    }
+    let f = r.faults.as_ref().expect("script armed");
+    println!(
+        "  fleet: {} shed, {} abandoned, goodput {:.1} req/s; {} compute degrade(s)",
+        r.shed_total.unwrap_or(0),
+        r.abandoned_total.unwrap_or(0),
+        r.goodput_rps.unwrap_or(0.0),
+        f.compute_degrades,
+    );
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     fleet_demo().map_err(anyhow::Error::msg)?;
     hetero_reshard_demo().map_err(anyhow::Error::msg)?;
     multi_tenant_demo().map_err(anyhow::Error::msg)?;
     unified_control_plane_demo().map_err(anyhow::Error::msg)?;
     fault_tolerance_demo().map_err(anyhow::Error::msg)?;
+    overload_demo().map_err(anyhow::Error::msg)?;
 
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {

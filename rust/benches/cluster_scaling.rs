@@ -27,8 +27,14 @@
 //!    land in `BENCH_cluster.json` as gate-exempt trend rows.
 //! 7. **Chaos recovery**: a scripted mid-run board outage on a 3-board
 //!    fleet — in-flight work re-queued, tenants drained to the survivors,
-//!    the board re-admitted on recovery; the post-recovery p99 ratio and
-//!    re-queue volume ship as gate-exempt `chaos_*` rows.
+//!    the board re-admitted on recovery; the post-recovery p99 ratio,
+//!    re-queue volume, and recovery-time objective ship as gate-exempt
+//!    `chaos_*` rows.
+//! 8. **Graceful degradation**: a best-effort flood with an overload
+//!    policy (shed → retry/backoff → abandon) through a mid-run
+//!    compute-degrade brownout — the shed-aware goodput and the abandon
+//!    rate ship as gate-exempt `shed_*` rows while the protected
+//!    interactive tenant's SLO holds.
 //!
 //! Deterministic by construction (seeded arrivals, closed-form service
 //! times), so the emitted metrics are bit-reproducible across machines —
@@ -46,7 +52,8 @@ use decoilfnet::cluster::{
 };
 use decoilfnet::config::{
     tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, FaultEvent, FaultScript, LoadStep,
-    Platform, PreemptMode, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+    OverloadPolicy, Platform, PreemptMode, ReshardPolicy, RetryPolicy, ShardMode, SloPolicy,
+    TenantSpec,
 };
 use decoilfnet::coordinator::{best_plan, Objective};
 use decoilfnet::util::json::Json;
@@ -414,6 +421,7 @@ fn main() {
                     p99_ms: 1.0,
                     priority: 2,
                     weight: 1.0,
+                    overload: None,
                 },
             },
             TenantSpec {
@@ -429,6 +437,7 @@ fn main() {
                     p99_ms: 2.0,
                     priority: 0,
                     weight: 1.0,
+                    overload: None,
                 },
             },
         ];
@@ -509,6 +518,7 @@ fn main() {
             p99_ms: 0.5,
             priority: 2,
             weight: 1.0,
+            overload: None,
         },
     };
     let mk_bulk = || TenantSpec {
@@ -524,6 +534,7 @@ fn main() {
             p99_ms: 5000.0,
             priority: 0,
             weight: 1.0,
+            overload: None,
         },
     };
     let run_unified = |specs: &[TenantSpec], mode: PreemptMode, reshard: bool, trace: bool| {
@@ -665,6 +676,7 @@ fn main() {
             p99_ms: 5.0,
             priority: 1,
             weight: 1.0,
+            overload: None,
         },
     };
     let chaos_specs = vec![chaos_tenant("alpha", 1), chaos_tenant("bravo", 2)];
@@ -730,6 +742,125 @@ fn main() {
         f_chaos.emergency_reshards,
         f_chaos.downtime_cycles,
         chaos_ratio,
+    );
+
+    // ------------------------------------------------------------------
+    // Act 8: graceful degradation — a best-effort burst with an overload
+    // policy floods two boards while board 0 browns out to 30% capacity
+    // mid-flood. Admission sheds the flood first (retry/backoff, then
+    // abandon) and strict-priority preemption keeps the interactive
+    // tenant's SLO intact; the shed-aware goodput and the abandon rate
+    // ride gate-exempt as `shed_*` rows.
+    // ------------------------------------------------------------------
+    let shed_fleet = vec![cfg.clone(), cfg.clone()];
+    let shed_specs = vec![
+        TenantSpec {
+            name: "interactive".to_string(),
+            network: tiny.clone(),
+            weights_seed: 1,
+            arrival_rps: 2000.0,
+            requests: 64,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 2.0,
+                priority: 2,
+                weight: 1.0,
+                overload: None,
+            },
+        },
+        TenantSpec {
+            name: "best-effort".to_string(),
+            network: tiny.clone(),
+            weights_seed: 2,
+            arrival_rps: f64::INFINITY,
+            requests: 256,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5000.0,
+                priority: 0,
+                weight: 1.0,
+                overload: Some(OverloadPolicy {
+                    deadline_ms: 2.0,
+                    max_queue: 8,
+                    retry: RetryPolicy {
+                        max_attempts: 3,
+                        backoff_base_ms: 0.2,
+                        jitter: 0.5,
+                    },
+                }),
+            },
+        },
+    ];
+    let shed_w: Vec<Weights> = shed_specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let shed_workloads: Vec<TenantWorkload> = shed_specs
+        .iter()
+        .zip(&shed_w)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &tiny_fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let shed_plans = place_tenants(&shed_fleet, &shed_workloads).expect("tenants place");
+    let mut shed_ccfg = sweep_cfg(2, ShardMode::Replicated, None);
+    shed_ccfg.max_batch = 8;
+    shed_ccfg.max_wait_us = 0.0;
+    shed_ccfg.seed = 7;
+    shed_ccfg.tenants = shed_specs.clone();
+    shed_ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::ComputeDegrade {
+            board: 0,
+            capacity_fraction: 0.3,
+            at_ms: 0.5,
+            recover_ms: Some(3.0),
+        }],
+    });
+    let r_shed = simulate_fleet_multi_tenant(
+        &cfg,
+        &shed_fleet,
+        &shed_specs,
+        &shed_w,
+        &shed_plans,
+        &shed_ccfg,
+    );
+    let shed_hi = &r_shed.tenants[0];
+    let shed_lo = &r_shed.tenants[1];
+    assert_eq!(shed_hi.completed, 64, "the flood never touches the interactive tenant");
+    assert!(
+        shed_hi.slo_met,
+        "interactive p99 {} must hold through flood + brownout",
+        shed_hi.p99_ms
+    );
+    let shed_abandoned = shed_lo.abandoned.expect("policy armed") as f64;
+    assert_eq!(
+        shed_lo.completed as u64 + shed_abandoned as u64,
+        256,
+        "offered == completed + abandoned"
+    );
+    let shed_goodput = shed_lo.goodput_rps.expect("policy armed");
+    let shed_abandon_rate = shed_abandoned / 256.0;
+    println!(
+        "graceful degradation (256-req flood, board 0 at 30% capacity 0.5→3.0 ms, 2 boards):\n\
+         {} shed, {} retried, {} abandoned (rate {:.3}); best-effort goodput {:.1} req/s; \
+         interactive p99 {:.3} ms (SLO {} ms, met)",
+        shed_lo.shed.unwrap(),
+        shed_lo.retried.unwrap(),
+        shed_lo.abandoned.unwrap(),
+        shed_abandon_rate,
+        shed_goodput,
+        shed_hi.p99_ms,
+        shed_hi.slo_p99_ms,
     );
 
     // ------------------------------------------------------------------
@@ -862,6 +993,22 @@ fn main() {
                 "chaos_downtime_cycles",
                 exempt(f_chaos.downtime_cycles as f64, "lower"),
             );
+        // Recovery-time objective of the act 7 outage (fault onset → first
+        // controller window back within 1.25× the pre-fault p99) plus the
+        // act 8 graceful-degradation headline rows — gate-exempt on the
+        // same arming path as the other fleet trend rows.
+        m = m
+            .set(
+                "chaos_rto_ms",
+                exempt(
+                    f_chaos
+                        .recovery_time_ms
+                        .expect("armed controller stamps the RTO"),
+                    "lower",
+                ),
+            )
+            .set("shed_goodput_rps", exempt(shed_goodput, "higher"))
+            .set("shed_abandon_rate", exempt(shed_abandon_rate, "lower"));
         let out = Json::obj()
             .set("schema", "decoilfnet-cluster-bench/v1")
             .set("seeded", true)

@@ -58,10 +58,23 @@
 //!   replicated tenants drain to surviving replicas, severed pipelined
 //!   chains trigger an **emergency re-shard** on the live boards
 //!   ([`place_tenants_alive`]), and recovery re-admits the board
-//!   coolest-first at the next controller window. Outcomes surface as
+//!   coolest-first at the next controller window. Partial-capacity
+//!   brownouts (`compute_degrade`) stretch the compute phase of the cost
+//!   model and demote the board in the capacity-aware placement rank
+//!   ([`place_tenants_capacity`]); `board_down` and `clock_derate` scripts
+//!   also drive the single-network simulators. Outcomes surface as
 //!   fault-typed [`TraceEvent`]s and the optional [`FleetReport::faults`]
-//!   summary ([`FaultSummary`]); without a script every fault path is
-//!   branch-gated off and reports stay byte-identical.
+//!   summary ([`FaultSummary`]), including a recovery-time objective;
+//!   without a script every fault path is branch-gated off and reports
+//!   stay byte-identical.
+//! * an **overload-shedding layer**: a per-tenant
+//!   [`crate::config::OverloadPolicy`] makes admission predict each
+//!   request's completion from board occupancy and the DRR deficit and
+//!   shed what cannot meet its deadline; shed requests retry on a
+//!   deterministic exponential backoff ([`crate::config::RetryPolicy`])
+//!   and count as abandoned once the budget is spent — conserved as
+//!   `offered == completed + abandoned` per tenant and rolled up in
+//!   [`FleetReport`].
 //!
 //! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
 //! heterogeneous two-generation fleet sweep, a load-step re-sharding
@@ -77,8 +90,8 @@ pub mod telemetry;
 
 pub use link::{InterBoardLink, LinkChannel};
 pub use shard::{
-    balance_min_max, place_tenants, place_tenants_alive, place_tenants_biased, BoardShard,
-    ShardPlan, TenantWorkload,
+    balance_min_max, place_tenants, place_tenants_alive, place_tenants_biased,
+    place_tenants_capacity, BoardShard, ShardPlan, TenantWorkload,
 };
 pub use sim::{
     arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic,
@@ -182,7 +195,7 @@ fn fusion_plan_for_fleet(
 ///     load_steps: vec![],
 ///     mode: ShardMode::Replicated,
 ///     replicas: None,
-///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0 },
+///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0, overload: None },
 /// }];
 /// let (weights, plans) = plan_tenants(&cfg, &ccfg).unwrap();
 /// assert_eq!(weights.len(), 1);
@@ -273,7 +286,7 @@ pub fn plan_tenants(
 ///     load_steps: vec![],
 ///     mode: ShardMode::Replicated,
 ///     replicas: None,
-///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0 },
+///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0, overload: None },
 /// }];
 /// ccfg.faults = Some(FaultScript {
 ///     events: vec![FaultEvent::BoardDown { board: 1, at_ms: 0.2, recover_ms: Some(1.0) }],
@@ -421,6 +434,7 @@ mod tests {
                     p99_ms: 10.0,
                     priority: 2,
                     weight: 1.0,
+                    overload: None,
                 },
             },
             TenantSpec {
@@ -436,6 +450,7 @@ mod tests {
                     p99_ms: 5000.0,
                     priority: 0,
                     weight: 1.0,
+                    overload: None,
                 },
             },
         ];
@@ -468,6 +483,7 @@ mod tests {
                 p99_ms: 10.0,
                 priority: 1,
                 weight: 1.0,
+                overload: None,
             },
         }];
         let r = run_fleet(&cfg, &vgg16_prefix(), &ccfg).unwrap();

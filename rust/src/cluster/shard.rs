@@ -105,6 +105,36 @@ impl BoardShard {
                 demand,
             )
     }
+
+    /// [`Self::service_cycles`] on a board running at a fraction of its
+    /// compute capacity (a `ComputeDegrade` fault: lost columns / DSP
+    /// slices, not a slower clock). Only the compute phase stretches by
+    /// `1 / capacity` — the off-chip phase is bandwidth-bound, not
+    /// column-bound, so its stall keeps the healthy arithmetic. This is
+    /// what distinguishes a brownout from a `ClockDerate`, which stretches
+    /// both phases. `capacity == 1.0` is bit-exactly
+    /// [`Self::service_cycles`].
+    pub fn service_cycles_capped(
+        &self,
+        batch: u64,
+        ref_freq_mhz: f64,
+        shared: &SharedDdr,
+        demand: f64,
+        capacity: f64,
+    ) -> u64 {
+        let compute = self.ref_cycles(batch, ref_freq_mhz);
+        let compute = if capacity == 1.0 {
+            compute
+        } else {
+            (compute as f64 / capacity).ceil() as u64
+        };
+        compute
+            + shared.stall_cycles_of(
+                self.traffic_bytes * batch,
+                self.ddr_bytes_per_cycle * self.freq_mhz / ref_freq_mhz,
+                demand,
+            )
+    }
 }
 
 /// A fusion plan distributed across a fleet.
@@ -419,13 +449,41 @@ pub fn place_tenants_alive(
     bias: &[u64],
     alive: &[bool],
 ) -> Result<Vec<ShardPlan>, String> {
+    place_tenants_capacity(fleet, tenants, bias, alive, &vec![1.0; fleet.len()])
+}
+
+/// [`place_tenants_alive`] with a per-board effective-capacity fraction —
+/// the brownout-aware placement the control plane re-plans with while a
+/// [`crate::config::FaultEvent::ComputeDegrade`] is active. A board at
+/// `cap[b] < 1.0` is neither healthy nor dead: it stays in the candidate
+/// set but ranks *behind* every less-degraded board for replicated
+/// spreading, and the pipelined stage DP sees its compute throughput
+/// scaled by `cap[b]` — so stage boundaries shift work off the brownout
+/// board in proportion to what it lost. With every entry at 1.0 this is
+/// exactly [`place_tenants_alive`] (same candidate order, same plans).
+pub fn place_tenants_capacity(
+    fleet: &[AccelConfig],
+    tenants: &[TenantWorkload],
+    bias: &[u64],
+    alive: &[bool],
+    cap: &[f64],
+) -> Result<Vec<ShardPlan>, String> {
     assert!(!fleet.is_empty());
     let nb = fleet.len();
     assert_eq!(bias.len(), nb, "one bias entry per board");
     assert_eq!(alive.len(), nb, "one liveness entry per board");
+    assert_eq!(cap.len(), nb, "one capacity entry per board");
+    assert!(
+        cap.iter().all(|&c| c > 0.0 && c <= 1.0),
+        "capacity fractions must be in (0, 1]"
+    );
     if !alive.iter().any(|&a| a) {
         return Err("placement: no board is alive".into());
     }
+    // Degradation rank ahead of the load bias: healthy boards first, then
+    // the least-degraded. Constant (so order-preserving) at all-1.0 — the
+    // identity the committed fixtures lean on.
+    let degr = |b: usize| (1e6 / cap[b]).round() as u64;
     let shell = crate::resources::shell_resources();
     // Incremental fabric already resident per board, and resident count
     // (for the spread-before-stack ordering).
@@ -451,7 +509,7 @@ pub fn place_tenants_alive(
                 let mut fitting: Vec<usize> = (0..nb)
                     .filter(|&b| alive[b] && joint_fits(&used, ctx.range_resources(b, 0..n), b))
                     .collect();
-                fitting.sort_by_key(|&b| (bias[b], residents[b], b));
+                fitting.sort_by_key(|&b| (degr(b), bias[b], residents[b], b));
                 let target = t.replicas.unwrap_or(nb).max(1);
                 fitting.truncate(target);
                 fitting.sort_unstable();
@@ -470,14 +528,18 @@ pub fn place_tenants_alive(
                 // Dead boards never enter the permutation, so an emergency
                 // re-plan restores the chain on surviving fabric only.
                 let mut perm: Vec<usize> = (0..nb).filter(|&b| alive[b]).collect();
-                perm.sort_by_key(|&b| (bias[b], residents[b], b));
+                perm.sort_by_key(|&b| (degr(b), bias[b], residents[b], b));
                 let k = perm.len().min(n);
                 let totals: Vec<Vec<u64>> = perm
                     .iter()
                     .map(|&b| ctx.costs[b].iter().map(|c| c.total()).collect())
                     .collect();
-                let freqs: Vec<f64> =
-                    perm.iter().map(|&b| fleet[b].platform.freq_mhz).collect();
+                // A brownout board looks proportionally slower to the
+                // time-balancing DP (× 1.0 is bit-exact for healthy boards).
+                let freqs: Vec<f64> = perm
+                    .iter()
+                    .map(|&b| fleet[b].platform.freq_mhz * cap[b])
+                    .collect();
                 let feasible = |s: usize, r: Range<usize>| {
                     joint_fits(&used, ctx.range_resources(perm[s], r), perm[s])
                 };
@@ -1369,6 +1431,85 @@ mod tests {
 
         // A fully dead fleet is an error, not a panic.
         assert!(place_tenants_alive(&fleet, &repl, &[0, 0, 0], &[false, false, false]).is_err());
+    }
+
+    #[test]
+    fn place_tenants_capacity_routes_around_a_brownout_board() {
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 1);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        let alive = [true, true, true];
+        let capped = [TenantWorkload {
+            name: "t",
+            net: &net,
+            weights: &w,
+            plan: &fused,
+            mode: ShardMode::Replicated,
+            priority: 1,
+            replicas: Some(2),
+        }];
+        // Board 0 at 30% capacity: the two replicas land on the healthy
+        // boards even though board 0 leads the index/bias order.
+        let plans = place_tenants_capacity(
+            &fleet, &capped, &[0, 0, 0], &alive, &[0.3, 1.0, 1.0],
+        )
+        .unwrap();
+        let boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(boards, vec![1, 2], "brownout board ranks last");
+        // Degradation outranks the load bias: a cool-but-degraded board
+        // still loses to a warm healthy one.
+        let plans = place_tenants_capacity(
+            &fleet, &capped, &[0, 900, 900], &alive, &[0.3, 1.0, 1.0],
+        )
+        .unwrap();
+        let boards: Vec<usize> = plans[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(boards, vec![1, 2]);
+
+        // Pipelined: the DP sees the brownout board at a third of its
+        // clock, so the stage that lands there shrinks — its cycle share
+        // drops versus the all-healthy split of the same chain.
+        let split = FusionPlan::from_group_sizes(7, &[4, 3]).unwrap();
+        let piped = [TenantWorkload {
+            name: "p",
+            net: &net,
+            weights: &w,
+            plan: &split,
+            mode: ShardMode::Pipelined,
+            priority: 1,
+            replicas: None,
+        }];
+        let healthy = place_tenants_capacity(
+            &fleet, &piped, &[0, 0, 0], &alive, &[1.0, 1.0, 1.0],
+        )
+        .unwrap();
+        let browned = place_tenants_capacity(
+            &fleet, &piped, &[0, 0, 0], &alive, &[0.3, 1.0, 1.0],
+        )
+        .unwrap();
+        // The degraded board is pushed to the back of the permutation, so
+        // stage 0 moves off it entirely.
+        assert_eq!(healthy[0].shards[0].board, 0);
+        assert_ne!(browned[0].shards[0].board, 0);
+        let mut covered = Vec::new();
+        for s in &browned[0].shards {
+            covered.extend(s.layers.clone());
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
+
+        // All-1.0 capacity is exactly place_tenants_alive (same plans).
+        let a = place_tenants_capacity(
+            &fleet, &piped, &[7, 0, 3], &alive, &[1.0, 1.0, 1.0],
+        )
+        .unwrap();
+        let b = place_tenants_alive(&fleet, &piped, &[7, 0, 3], &alive).unwrap();
+        assert_eq!(a[0].label(), b[0].label());
+        assert_eq!(
+            a[0].shards.iter().map(|s| s.board).collect::<Vec<_>>(),
+            b[0].shards.iter().map(|s| s.board).collect::<Vec<_>>()
+        );
     }
 
     #[test]

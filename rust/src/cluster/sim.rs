@@ -72,7 +72,7 @@ use crate::util::stats::percentile_sorted;
 
 use super::events::{BoardPool, DeadlineQueue};
 use super::link::{InterBoardLink, LinkChannel};
-use super::shard::{place_tenants_alive, ShardPlan, TenantWorkload};
+use super::shard::{place_tenants_capacity, ShardPlan, TenantWorkload};
 use super::telemetry::{TelemetrySummary, TraceEvent, TraceSink, WindowSample};
 
 /// Per-board outcome counters.
@@ -172,6 +172,22 @@ pub struct TenantStats {
     /// [`crate::config::FaultScript`] was configured, which keeps the
     /// fault-free report JSON byte-identical.
     pub slo_attainment_outage: Option<f64>,
+    /// Presentations rejected by this tenant's
+    /// [`crate::config::OverloadPolicy`] admission check (a request sheds
+    /// once per attempt, so this counts attempts, not distinct requests).
+    /// `None` (key absent) when no tenant carries an overload policy — the
+    /// policy-free report JSON stays byte-identical.
+    pub shed: Option<u64>,
+    /// Retry re-arrivals that fired (the client backoff model re-presents a
+    /// shed request after a deterministic exponential backoff).
+    pub retried: Option<u64>,
+    /// Requests dropped after exhausting
+    /// [`crate::config::RetryPolicy::max_attempts`] retries.
+    pub abandoned: Option<u64>,
+    /// Completed requests over the span to this tenant's last completion —
+    /// the shed-aware companion to `throughput_rps` (which echoes offered
+    /// load). Differs from `throughput_rps` exactly when abandons occurred.
+    pub goodput_rps: Option<f64>,
 }
 
 impl TenantStats {
@@ -195,6 +211,18 @@ impl TenantStats {
         if let Some(v) = self.slo_attainment_outage {
             j = j.set("slo_attainment_outage", v);
         }
+        if let Some(v) = self.shed {
+            j = j.set("shed", v);
+        }
+        if let Some(v) = self.retried {
+            j = j.set("retried", v);
+        }
+        if let Some(v) = self.abandoned {
+            j = j.set("abandoned", v);
+        }
+        if let Some(v) = self.goodput_rps {
+            j = j.set("goodput_rps", v);
+        }
         j
     }
 }
@@ -213,6 +241,10 @@ pub struct FaultSummary {
     pub link_degrades: u64,
     /// Clock derate events applied (including factor-1.0 restores).
     pub clock_derates: u64,
+    /// `ComputeDegrade` onsets applied — partial-capacity brownouts that
+    /// stretch the compute phase of the cost model while the off-chip phase
+    /// keeps its healthy arithmetic.
+    pub compute_degrades: u64,
     /// Emergency re-shards: placements re-run outside the controller window
     /// because a board death severed a chain or drained a tenant to zero
     /// replicas (or a recovery restored a stranded tenant).
@@ -232,6 +264,14 @@ pub struct FaultSummary {
     /// is latest (`None` when nothing completed that late). The chaos
     /// battery bounds `recovery_p99_ms / pre_fault_p99_ms`.
     pub recovery_p99_ms: Option<f64>,
+    /// Recovery-time objective: wall-clock from the first fault instant to
+    /// the first controller window whose fleet-wide window p99 returned
+    /// within 1.25× the pre-fault p99. Needs an armed
+    /// [`crate::config::ReshardPolicy`] (windows are the measurement
+    /// cadence) and at least one pre-fault completion; `None` (key absent)
+    /// otherwise, or when no window re-attained the bar before the run
+    /// drained.
+    pub recovery_time_ms: Option<f64>,
 }
 
 impl FaultSummary {
@@ -241,6 +281,7 @@ impl FaultSummary {
             .set("board_recoveries", self.board_recoveries)
             .set("link_degrades", self.link_degrades)
             .set("clock_derates", self.clock_derates)
+            .set("compute_degrades", self.compute_degrades)
             .set("emergency_reshards", self.emergency_reshards)
             .set("items_requeued", self.items_requeued)
             .set("downtime_cycles", self.downtime_cycles);
@@ -249,6 +290,9 @@ impl FaultSummary {
         }
         if let Some(v) = self.recovery_p99_ms {
             j = j.set("recovery_p99_ms", v);
+        }
+        if let Some(v) = self.recovery_time_ms {
+            j = j.set("recovery_time_ms", v);
         }
         j
     }
@@ -290,6 +334,15 @@ pub struct FleetReport {
     /// Per-tenant outcomes ([`simulate_fleet_multi_tenant`]; empty for the
     /// single-network simulators).
     pub tenants: Vec<TenantStats>,
+    /// Fleet-wide overload rollups: sums of the per-tenant shed / retry /
+    /// abandon counters, and completed requests per second over the
+    /// makespan. All `None` (keys absent) when no tenant carries an
+    /// [`crate::config::OverloadPolicy`] — the policy-free report JSON
+    /// stays byte-identical.
+    pub shed_total: Option<u64>,
+    pub retried_total: Option<u64>,
+    pub abandoned_total: Option<u64>,
+    pub goodput_rps: Option<f64>,
     /// Fault-tolerance summary when a [`crate::config::FaultScript`] was
     /// configured (multi-tenant engine only); `None` and the JSON key
     /// absent otherwise — faults are strictly opt-in.
@@ -340,6 +393,18 @@ impl FleetReport {
             .set("reshard_events", events)
             .set("tenants", tenants)
             .set("per_board", boards);
+        if let Some(v) = self.shed_total {
+            j = j.set("shed_total", v);
+        }
+        if let Some(v) = self.retried_total {
+            j = j.set("retried_total", v);
+        }
+        if let Some(v) = self.abandoned_total {
+            j = j.set("abandoned_total", v);
+        }
+        if let Some(v) = self.goodput_rps {
+            j = j.set("goodput_rps", v);
+        }
         if let Some(f) = &self.faults {
             j = j.set("faults", f.to_json());
         }
@@ -458,6 +523,171 @@ pub(crate) fn fleet_demand(plan: &ShardPlan, ref_freq: f64) -> f64 {
         .sum()
 }
 
+/// Script-driven fault state for the single-network simulators: admission
+/// blackout windows plus stepwise clock factors per fleet board. Only
+/// `board_down` and `clock_derate` are supported here — the batcher-driven
+/// loops have no re-routing or preemption, so an outage blocks *new* batch
+/// starts on the board (a batch already in service runs to completion) and
+/// `board_down` must carry `recover_ms` (a permanent loss would strand the
+/// board's share of the round-robin forever). The multi-tenant engine has
+/// its own event-driven implementation with aborts and re-shards.
+struct SingleNetFaults {
+    /// Per fleet board: `(down_at, recover_at)` cycles, sorted by onset.
+    outages: Vec<Vec<(u64, u64)>>,
+    /// Per fleet board: `(at, factor)` derate steps, sorted by instant.
+    derates: Vec<Vec<(u64, f64)>>,
+    n_down: u64,
+    n_recover: u64,
+    n_derate: u64,
+    first_at: Option<u64>,
+    /// Latest end instant across all scripted disturbances.
+    boundary: u64,
+}
+
+impl SingleNetFaults {
+    /// `None` when the config has no script — the healthy paths stay
+    /// byte-identical. Panics on events the single-network semantics cannot
+    /// honor (the config layer already rejects them for tenant-less
+    /// configs; this guards the multi-tenant-config-through-single-sim
+    /// path).
+    fn from_config(ccfg: &ClusterConfig, nb: usize, ref_freq: f64) -> Option<SingleNetFaults> {
+        let script = ccfg.faults.as_ref()?;
+        let ms_to_cycles = |ms: f64| (ms * ref_freq * 1e3).round() as u64;
+        let mut f = SingleNetFaults {
+            outages: vec![Vec::new(); nb],
+            derates: vec![Vec::new(); nb],
+            n_down: 0,
+            n_recover: 0,
+            n_derate: 0,
+            first_at: None,
+            boundary: 0,
+        };
+        for ev in &script.events {
+            let at = ms_to_cycles(ev.at_ms());
+            f.first_at = Some(f.first_at.map_or(at, |x: u64| x.min(at)));
+            match ev {
+                FaultEvent::BoardDown { board, at_ms, recover_ms } => {
+                    let rec = recover_ms.expect(
+                        "single-network simulators cannot re-route: board_down needs recover_ms",
+                    );
+                    assert!(
+                        *board < nb,
+                        "board_down board {board} out of range for this plan/fleet"
+                    );
+                    let (a, r) = (ms_to_cycles(*at_ms), ms_to_cycles(rec));
+                    f.outages[*board].push((a, r));
+                    f.n_down += 1;
+                    f.n_recover += 1;
+                    f.boundary = f.boundary.max(r);
+                }
+                FaultEvent::ClockDerate { board, factor, at_ms } => {
+                    assert!(
+                        *board < nb,
+                        "clock_derate board {board} out of range for this plan/fleet"
+                    );
+                    f.derates[*board].push((ms_to_cycles(*at_ms), *factor));
+                    f.n_derate += 1;
+                    f.boundary = f.boundary.max(ms_to_cycles(*at_ms));
+                }
+                FaultEvent::LinkDegrade { .. } | FaultEvent::ComputeDegrade { .. } => {
+                    panic!(
+                        "single-network simulators support board_down and clock_derate only"
+                    );
+                }
+            }
+        }
+        for w in &mut f.outages {
+            w.sort_unstable();
+        }
+        for d in &mut f.derates {
+            d.sort_by(|a, b| a.0.cmp(&b.0));
+        }
+        Some(f)
+    }
+
+    /// Push a batch start out of any outage window on `board`. Windows may
+    /// chain (a recovery can land inside the next outage), so apply until a
+    /// fixed point.
+    fn admit_at(&self, board: usize, mut start: u64) -> u64 {
+        loop {
+            let mut moved = false;
+            for &(a, r) in &self.outages[board] {
+                if start >= a && start < r {
+                    start = r;
+                    moved = true;
+                }
+            }
+            if !moved {
+                return start;
+            }
+        }
+    }
+
+    /// Service cycles on `board` for a batch starting at `start`: the last
+    /// derate step at or before the start instant applies (factor 1.0 —
+    /// including "no step yet" — keeps the integer arithmetic exact).
+    fn scale(&self, board: usize, start: u64, raw: u64) -> u64 {
+        let f = self.derates[board]
+            .iter()
+            .rev()
+            .find(|&&(at, _)| at <= start)
+            .map_or(1.0, |&(_, f)| f);
+        if f == 1.0 {
+            raw
+        } else {
+            (raw as f64 / f).ceil() as u64
+        }
+    }
+
+    /// Mirror of the multi-tenant [`FaultSummary`], restricted to what the
+    /// single-network semantics can observe: no re-shards, no requeues, no
+    /// RTO (there is no controller window here unless the dynamic policy
+    /// is armed, and even then windows measure one network only).
+    fn summary(&self, complete: &[u64], arrivals: &[u64], ns_per_cycle: f64) -> FaultSummary {
+        let mut pre: Vec<f64> = Vec::new();
+        let mut post: Vec<f64> = Vec::new();
+        for (&c, &a) in complete.iter().zip(arrivals) {
+            let l = c.saturating_sub(a) as f64 * ns_per_cycle / 1e6;
+            if let Some(ff) = self.first_at {
+                if c < ff {
+                    pre.push(l);
+                }
+            }
+            if c >= self.boundary {
+                post.push(l);
+            }
+        }
+        pre.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        post.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        FaultSummary {
+            board_failures: self.n_down,
+            board_recoveries: self.n_recover,
+            link_degrades: 0,
+            clock_derates: self.n_derate,
+            compute_degrades: 0,
+            emergency_reshards: 0,
+            items_requeued: 0,
+            downtime_cycles: self
+                .outages
+                .iter()
+                .flatten()
+                .map(|&(a, r)| r.saturating_sub(a))
+                .sum(),
+            pre_fault_p99_ms: if pre.is_empty() {
+                None
+            } else {
+                Some(percentile_sorted(&pre, 99.0))
+            },
+            recovery_p99_ms: if post.is_empty() {
+                None
+            } else {
+                Some(percentile_sorted(&post, 99.0))
+            },
+            recovery_time_ms: None,
+        }
+    }
+}
+
 /// Simulate `ccfg.requests` requests against a sharded fleet with a fixed
 /// plan for the whole run.
 pub fn simulate_fleet(cfg: &AccelConfig, shard: &ShardPlan, ccfg: &ClusterConfig) -> FleetReport {
@@ -484,6 +714,10 @@ pub fn simulate_fleet_traced(
     );
     let link = InterBoardLink::new(ccfg.link_bytes_per_cycle, ccfg.link_latency_cycles);
     let demand = fleet_demand(shard, ref_freq);
+    // Fault script (board_down + clock_derate only): admission blackouts
+    // and derate steps applied per batch start. `None` without a script —
+    // every branch below short-circuits and the run is byte-identical.
+    let snf = SingleNetFaults::from_config(ccfg, shard.boards, ref_freq);
 
     // Synthetic clock: the DynamicBatcher speaks `Instant`, the simulator
     // speaks cycles. One fixed origin maps between them deterministically.
@@ -517,8 +751,13 @@ pub fn simulate_fleet_traced(
                 &to_cycles,
                 |b, batch, ready| {
                     let bsz = batch.len() as u64;
-                    let svc = service(&shard.shards[b], bsz);
-                    let start = ready.max(free_at[b]);
+                    let mut start = ready.max(free_at[b]);
+                    let mut svc = service(&shard.shards[b], bsz);
+                    if let Some(f) = &snf {
+                        let fb = shard.shards[b].board;
+                        start = f.admit_at(fb, start);
+                        svc = f.scale(fb, start, svc);
+                    }
                     let done = start + svc;
                     free_at[b] = done;
                     busy[b] += svc;
@@ -561,8 +800,12 @@ pub fn simulate_fleet_traced(
                     let k = batch.len();
                     let mut t = ready;
                     for (s, bs) in shard.shards.iter().enumerate() {
-                        let svc = service(bs, bsz);
-                        let start = t.max(free_at[s]);
+                        let mut svc = service(bs, bsz);
+                        let mut start = t.max(free_at[s]);
+                        if let Some(f) = &snf {
+                            start = f.admit_at(bs.board, start);
+                            svc = f.scale(bs.board, start, svc);
+                        }
                         let done = start + svc;
                         free_at[s] = done;
                         busy[s] += svc;
@@ -644,7 +887,11 @@ pub fn simulate_fleet_traced(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events: Vec::new(),
         tenants: Vec::new(),
-        faults: None,
+        shed_total: None,
+        retried_total: None,
+        abandoned_total: None,
+        goodput_rps: None,
+        faults: snf.as_ref().map(|f| f.summary(&complete, &arrivals, ns_per_cycle)),
         telemetry: sink.summary(),
     }
 }
@@ -746,6 +993,10 @@ pub fn simulate_fleet_dynamic_traced(
     let nb = fleet.len();
     let word_bytes = cfg.platform.word_bytes;
     let n_layers = net.layers.len();
+    // Fault script (board_down + clock_derate only), same semantics as the
+    // static scheduler: outages block new batch starts, derates stretch
+    // batches starting at/after their instant. Inert without a script.
+    let snf = SingleNetFaults::from_config(ccfg, nb, ref_freq);
 
     let mut plan = initial;
     let mut links: Vec<LinkChannel> = (0..plan.used_boards().saturating_sub(1))
@@ -789,14 +1040,18 @@ pub fn simulate_fleet_dynamic_traced(
                 // The board that can start soonest; ties go to the faster
                 // clock, then the lower index (the pool reproduces the old
                 // linear scan's tie-breaks exactly).
-                let (pick, start) = pool.pick(a);
+                let (pick, mut start) = pool.pick(a);
                 let s = &plan.shards[pick];
                 let mut k = 1usize;
                 while i + k < n && k < ccfg.max_batch && arrivals[i + k] <= start {
                     k += 1;
                 }
                 let bsz = k as u64;
-                let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                let mut svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                if let Some(f) = &snf {
+                    start = f.admit_at(s.board, start);
+                    svc = f.scale(s.board, start, svc);
+                }
                 let done = start + svc;
                 let sb = s.board;
                 free_at[sb] = done;
@@ -829,8 +1084,12 @@ pub fn simulate_fleet_dynamic_traced(
                 let stages = plan.used_boards();
                 let mut t = start0;
                 for (si, s) in plan.shards.iter().enumerate() {
-                    let svc = s.service_cycles(bsz, ref_freq, &shared, demand);
-                    let start = t.max(free_at[s.board]);
+                    let mut svc = s.service_cycles(bsz, ref_freq, &shared, demand);
+                    let mut start = t.max(free_at[s.board]);
+                    if let Some(f) = &snf {
+                        start = f.admit_at(s.board, start);
+                        svc = f.scale(s.board, start, svc);
+                    }
                     let done = start + svc;
                     let sb = s.board;
                     free_at[sb] = done;
@@ -1021,7 +1280,11 @@ pub fn simulate_fleet_dynamic_traced(
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events: events,
         tenants: Vec::new(),
-        faults: None,
+        shed_total: None,
+        retried_total: None,
+        abandoned_total: None,
+        goodput_rps: None,
+        faults: snf.as_ref().map(|f| f.summary(&complete, &arrivals, ns_per_cycle)),
         telemetry: sink.summary(),
     }
 }
@@ -1161,7 +1424,7 @@ pub fn simulate_fleet_multi_tenant(
 ///     load_steps: vec![],
 ///     mode: ShardMode::Replicated,
 ///     replicas: None,
-///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0 },
+///     slo: SloPolicy { p99_ms: 10.0, priority: 1, weight: 1.0, overload: None },
 /// }];
 /// let fleet = ccfg.board_configs(&cfg);
 /// let (weights, plans) = plan_tenants(&cfg, &ccfg).unwrap();
@@ -1227,6 +1490,12 @@ pub fn simulate_fleet_multi_tenant_traced(
         /// trace record and wakes the dispatcher.
         Degrade(usize, f64, u64),
         Derate(usize, f64),
+        /// (board, capacity fraction, recovery cycle if any): a partial-
+        /// capacity brownout. The fraction scales the compute phase of the
+        /// cost model and demotes the board in the capacity-aware
+        /// placement rank.
+        CapDegrade(usize, f64, Option<u64>),
+        CapRestore(usize),
     }
     let faults_armed = ccfg.faults.is_some();
     let ms_to_cycles = |ms: f64| (ms * ref_freq * 1e3).round() as u64;
@@ -1250,6 +1519,16 @@ pub fn simulate_fleet_multi_tenant_traced(
                 FaultEvent::ClockDerate { board, factor, at_ms } => {
                     fault_timeline.push((ms_to_cycles(*at_ms), FaultAction::Derate(*board, *factor)));
                 }
+                FaultEvent::ComputeDegrade { board, capacity_fraction, at_ms, recover_ms } => {
+                    let rec = recover_ms.map(ms_to_cycles);
+                    fault_timeline.push((
+                        ms_to_cycles(*at_ms),
+                        FaultAction::CapDegrade(*board, *capacity_fraction, rec),
+                    ));
+                    if let Some(r) = rec {
+                        fault_timeline.push((r, FaultAction::CapRestore(*board)));
+                    }
+                }
             }
         }
         // Scripts are ordered by start instant, but recovery instants
@@ -1272,6 +1551,9 @@ pub fn simulate_fleet_multi_tenant_traced(
                     }
                     FaultEvent::LinkDegrade { until_ms, .. } => ms_to_cycles(*until_ms),
                     FaultEvent::ClockDerate { at_ms, .. } => ms_to_cycles(*at_ms),
+                    FaultEvent::ComputeDegrade { at_ms, recover_ms, .. } => {
+                        ms_to_cycles(recover_ms.unwrap_or(*at_ms))
+                    }
                 })
                 .max()
         })
@@ -1364,6 +1646,24 @@ pub fn simulate_fleet_multi_tenant_traced(
     // Items actually served to completion per tenant — measured, not echoed
     // from the spec, so the conservation checks in the report are real.
     let mut served = vec![0u64; nt];
+
+    // ---- overload shedding (inert unless some tenant carries a policy) ----
+    // Admission happens at arrival and retry re-arrival only: a request the
+    // policy predicts will miss its deadline (or that finds the queue at
+    // max_queue) is shed and re-presented by the client model after a
+    // deterministic exponential backoff; exhausting the retry budget
+    // abandons it. Conservation becomes
+    // `served + abandoned == requests` per tenant.
+    let overload_armed = specs.iter().any(|s| s.slo.overload.is_some());
+    let mut abandon_mask: Vec<Vec<bool>> =
+        specs.iter().map(|s| vec![false; s.requests]).collect();
+    let mut n_shed = vec![0u64; nt];
+    let mut n_retried = vec![0u64; nt];
+    let mut n_abandoned = vec![0u64; nt];
+    // The fourth id space of the shared event queue grows as sheds happen:
+    // entry i = (tenant, request, retry attempt) re-arriving as event id
+    // `nb + nt + nf + i`.
+    let mut retry_table: Vec<(usize, usize, u32)> = Vec::new();
     let mut preemptions = vec![0u64; nt];
     // Deficit counters of the within-class weighted round-robin: billed
     // reference cycles per tenant, compared normalized by SLO weight.
@@ -1372,8 +1672,12 @@ pub fn simulate_fleet_multi_tenant_traced(
 
     // One event queue for everything: ids < nb are board events (batch
     // completions / stage-release / post-migration wakes), ids in
-    // [nb, nb + nt) are per-tenant arrival cursors (id - nb = tenant), and
-    // ids >= nb + nt index the fault timeline (id - nb - nt = fault entry).
+    // [nb, nb + nt) are per-tenant arrival cursors (id - nb = tenant), ids
+    // in [nb + nt, nb + nt + nf) index the fault timeline, and ids >=
+    // nb + nt + nf index `retry_table` (shed requests re-arriving after
+    // backoff — that table grows during the run, the other ranges are
+    // fixed).
+    let nf = fault_timeline.len();
     let mut events = DeadlineQueue::new();
     let mut cursor = vec![0usize; nt];
     for (t, a) in arrivals.iter().enumerate() {
@@ -1390,15 +1694,24 @@ pub fn simulate_fleet_multi_tenant_traced(
     // pre-fault arithmetic exactly.
     let mut board_up = vec![true; nb];
     let mut clock_factor = vec![1.0f64; nb];
+    // Partial-capacity brownouts: fraction of the board's compute columns
+    // still alive. 1.0 is the healthy identity the cost-model scaling and
+    // the capacity-aware placement both short-circuit on.
+    let mut capacity_factor = vec![1.0f64; nb];
     // A recovered board waits for the next controller window to be re-fed
     // coolest-first; this flag arms that trigger (always false without a
     // script, keeping the controller's fault-free behavior byte-identical).
     let mut readmit_pending = false;
+    // A capacity change (brownout onset or restore) also wants the next
+    // controller window to re-place — around the degraded board, or back
+    // onto the restored one. Always false without a script.
+    let mut capacity_pending = false;
     // FaultSummary accounting.
     let mut n_board_failures = 0u64;
     let mut n_board_recoveries = 0u64;
     let mut n_link_degrades = 0u64;
     let mut n_clock_derates = 0u64;
+    let mut n_compute_degrades = 0u64;
     let mut n_emergency_reshards = 0u64;
     let mut items_requeued = 0u64;
     // (failure instant, recovery instant if any, board).
@@ -1422,6 +1735,12 @@ pub fn simulate_fleet_multi_tenant_traced(
     // cap, shrink the recovered tenant back, and oscillate scale-in/out
     // with a full-fleet migration stall on every flip.
     let mut uncapped = vec![false; nt];
+    // Recovery-time objective: completions before the first fault seed the
+    // baseline; after the fault, the first controller window whose
+    // fleet-wide p99 is back within 1.25× that baseline stamps the
+    // recovery instant. Inert unless both a script and a policy are armed.
+    let mut pre_fault_lat: Vec<f64> = Vec::new();
+    let mut recovery_at: Option<u64> = None;
 
     // Mark request `req` of tenant `t` complete at cycle `at` (exactly once
     // per request — the conservation asserts below keep that honest).
@@ -1438,6 +1757,9 @@ pub fn simulate_fleet_multi_tenant_traced(
                     win_count += 1;
                     win_t[t].push(lat);
                     done_lat[t].push(lat);
+                    if faults_armed && first_fault_at.map_or(false, |ff| at < ff) {
+                        pre_fault_lat.push(lat);
+                    }
                 }
             }
         }};
@@ -1454,6 +1776,110 @@ pub fn simulate_fleet_multi_tenant_traced(
                 raw
             } else {
                 (raw as f64 / clock_factor[b]).ceil() as u64
+            }
+        }};
+    }
+
+    // Admission for one presentation of request `req` of tenant `t` at
+    // instant `at` (attempt 0 = fresh arrival, attempt n = n-th retry).
+    // Without an `OverloadPolicy` this is exactly the old unconditional
+    // enqueue. With one, the predicted completion — the earliest up
+    // hosting board's availability, plus draining the queue ahead of this
+    // request in `max_batch` batches, plus the DRR deficit this tenant
+    // must burn down relative to its class's least-charged member, plus
+    // one batch of its own service — is checked against the policy
+    // deadline, and `max_queue` bounds the queue unconditionally. A shed
+    // request re-arrives after `backoff_base_ms · 2^attempt · (1+jitter·u)`
+    // with `u` deterministic in (seed, tenant, request, attempt); past
+    // `max_attempts` retries it is abandoned.
+    macro_rules! admit {
+        ($t:expr, $req:expr, $attempt:expr, $at:expr) => {{
+            let (t, req, attempt, at): (usize, usize, u32, u64) = ($t, $req, $attempt, $at);
+            match &specs[t].slo.overload {
+                None => pend[t].push_back((req, false)),
+                Some(opol) => {
+                    let depth = pend[t].len();
+                    // Earliest up hosting board and its full-batch service.
+                    let mut avail: Option<(u64, u64)> = None;
+                    for s in &cur_plans[t].shards {
+                        let b = s.board;
+                        if !board_up[b] {
+                            continue;
+                        }
+                        let ready = free_at[b].max(at);
+                        if avail.map_or(true, |(r, _)| ready < r) {
+                            let per = svc_on!(
+                                b,
+                                s.service_cycles_capped(
+                                    ccfg.max_batch as u64,
+                                    ref_freq,
+                                    &shared,
+                                    demand,
+                                    capacity_factor[b]
+                                )
+                            );
+                            avail = Some((ready, per));
+                        }
+                    }
+                    // Cycles of service the class grants its least-charged
+                    // member before this tenant's DRR turn comes around
+                    // again (weight-normalized deficit gap).
+                    let gap = {
+                        let members = classes
+                            .iter()
+                            .find(|c| c.iter().any(|&m| m == t))
+                            .expect("every tenant is in a class");
+                        let min_norm = members
+                            .iter()
+                            .map(|&m| charge[m] as f64 / w_of[m])
+                            .fold(f64::INFINITY, f64::min);
+                        ((charge[t] as f64 / w_of[t]) - min_norm).max(0.0)
+                    };
+                    let predicted_ms = match avail {
+                        // No live replica: no deadline can be met.
+                        None => f64::INFINITY,
+                        Some((ready, per)) => {
+                            let batches_ahead = (depth / ccfg.max_batch) as u64;
+                            let done = ready + batches_ahead.saturating_mul(per) + per;
+                            (done.saturating_sub(at) as f64 + gap) * ns_per_cycle / 1e6
+                        }
+                    };
+                    if depth < opol.max_queue && predicted_ms <= opol.deadline_ms {
+                        pend[t].push_back((req, false));
+                    } else {
+                        n_shed[t] += 1;
+                        sink.record(|| TraceEvent::Shed {
+                            at,
+                            tenant: t,
+                            attempt,
+                            queue_depth: depth,
+                        });
+                        if attempt >= opol.retry.max_attempts {
+                            n_abandoned[t] += 1;
+                            abandon_mask[t][req] = true;
+                            sink.record(|| TraceEvent::Abandon {
+                                at,
+                                tenant: t,
+                                attempts: attempt,
+                            });
+                        } else {
+                            let next = attempt + 1;
+                            let u = Rng::new(
+                                tenant_seed(ccfg.seed, t)
+                                    ^ (req as u64).wrapping_mul(0xA24BAED4963EE407)
+                                    ^ (next as u64).wrapping_mul(0x9FB21C651E98DF25),
+                            )
+                            .next_f64();
+                            let backoff_ms = opol.retry.backoff_base_ms
+                                * (1u64 << attempt.min(20)) as f64
+                                * (1.0 + opol.retry.jitter * u);
+                            let idx = retry_table.len();
+                            retry_table.push((t, req, next));
+                            events
+                                .schedule(at + ms_to_cycles(backoff_ms).max(1), nb + nt + nf + idx);
+                        }
+                    }
+                }
             }
         }};
     }
@@ -1479,13 +1905,26 @@ pub fn simulate_fleet_multi_tenant_traced(
             } else {
                 0
             };
-            let svc = svc_on!(b, s.service_cycles(k as u64, ref_freq, &shared, demand)) + penalty;
+            let svc = svc_on!(
+                b,
+                s.service_cycles_capped(k as u64, ref_freq, &shared, demand, capacity_factor[b])
+            ) + penalty;
             // Per-item completion instants, so a later preemption can keep
             // the finished prefix (Resume only — Restart re-does the work).
             let prefix_done: Vec<u64> = if ccfg.preempt_mode == PreemptMode::Resume {
                 (1..=k as u64)
                     .map(|j| {
-                        at + penalty + svc_on!(b, s.service_cycles(j, ref_freq, &shared, demand))
+                        at + penalty
+                            + svc_on!(
+                                b,
+                                s.service_cycles_capped(
+                                    j,
+                                    ref_freq,
+                                    &shared,
+                                    demand,
+                                    capacity_factor[b]
+                                )
+                            )
                     })
                     .collect()
             } else {
@@ -1618,7 +2057,13 @@ pub fn simulate_fleet_multi_tenant_traced(
                                         for (si, s) in cur_plans[t].shards.iter().enumerate() {
                                             let mut svc = svc_on!(
                                                 s.board,
-                                                s.service_cycles(bsz, ref_freq, &shared, demand)
+                                                s.service_cycles_capped(
+                                                    bsz,
+                                                    ref_freq,
+                                                    &shared,
+                                                    demand,
+                                                    capacity_factor[s.board]
+                                                )
                                             );
                                             if si == 0 && penalized {
                                                 svc += match ccfg.preempt_mode {
@@ -1809,7 +2254,9 @@ pub fn simulate_fleet_multi_tenant_traced(
                     replicas: if uncapped[t] { None } else { spec.replicas },
                 })
                 .collect();
-            if let Ok(new_plans) = place_tenants_alive(fleet, &workloads, &busy, &board_up) {
+            if let Ok(new_plans) =
+                place_tenants_capacity(fleet, &workloads, &busy, &board_up, &capacity_factor)
+            {
                 let moved: Vec<(usize, String)> =
                     stranded.iter().map(|&t| (t, cur_plans[t].label())).collect();
                 for &t in stranded {
@@ -1843,7 +2290,13 @@ pub fn simulate_fleet_multi_tenant_traced(
     macro_rules! handle {
         ($at:expr, $id:expr) => {{
             let (at, id) = ($at, $id);
-            if id >= nb + nt {
+            if id >= nb + nt + nf {
+                // ---- retry re-arrival (client backoff model) ----
+                let (t, req, attempt) = retry_table[id - nb - nt - nf];
+                n_retried[t] += 1;
+                sink.record(|| TraceEvent::Retry { at, tenant: t, attempt });
+                admit!(t, req, attempt, at);
+            } else if id >= nb + nt {
                 // ---- scripted fault ----
                 match &fault_timeline[id - nb - nt].1 {
                     FaultAction::Fail(fb) => {
@@ -1976,14 +2429,31 @@ pub fn simulate_fleet_multi_tenant_traced(
                         clock_factor[*fb] = *factor;
                         n_clock_derates += 1;
                     }
+                    FaultAction::CapDegrade(fb, frac, until) => {
+                        capacity_factor[*fb] = *frac;
+                        n_compute_degrades += 1;
+                        capacity_pending = true;
+                        let (b, f, u) = (*fb, *frac, *until);
+                        sink.record(|| TraceEvent::ComputeDegrade {
+                            at,
+                            board: b,
+                            fraction: f,
+                            until: u,
+                        });
+                    }
+                    FaultAction::CapRestore(fb) => {
+                        capacity_factor[*fb] = 1.0;
+                        capacity_pending = true;
+                    }
                 }
             } else if id >= nb {
                 let t = id - nb;
-                pend[t].push_back((cursor[t], false));
+                let req = cursor[t];
                 cursor[t] += 1;
                 if cursor[t] < arrivals[t].len() {
                     events.schedule(arrivals[t][cursor[t]], nb + t);
                 }
+                admit!(t, req, 0, at);
             } else if matches!(&board_state[id], Some(r) if r.done == at) {
                 let r = board_state[id].take().expect("running");
                 busy[id] += r.done - r.start;
@@ -2041,6 +2511,27 @@ pub fn simulate_fleet_multi_tenant_traced(
                             triggered.push((t, p99));
                         }
                     }
+                    // Recovery-time objective: first window past the fault
+                    // onset whose fleet-wide p99 is back within 1.25× the
+                    // pre-fault baseline.
+                    if faults_armed && recovery_at.is_none() && !pre_fault_lat.is_empty() {
+                        if let Some(ff) = first_fault_at {
+                            if at > ff {
+                                let mut all: Vec<f64> =
+                                    win_t.iter().flatten().copied().collect();
+                                if !all.is_empty() {
+                                    all.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                                    let mut base = pre_fault_lat.clone();
+                                    base.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                                    if percentile_sorted(&all, 99.0)
+                                        <= 1.25 * percentile_sorted(&base, 99.0)
+                                    {
+                                        recovery_at = Some(at);
+                                    }
+                                }
+                            }
+                        }
+                    }
                     let win_requests = win_count as u64;
                     sink.record(|| TraceEvent::WindowRollup { at, requests: win_requests });
                     sink.sample_window(|| WindowSample {
@@ -2059,7 +2550,11 @@ pub fn simulate_fleet_multi_tenant_traced(
                     });
                     if cooldown > 0 {
                         cooldown -= 1;
-                    } else if readmit_pending || !triggered.is_empty() || skew > pol.util_skew {
+                    } else if readmit_pending
+                        || capacity_pending
+                        || !triggered.is_empty()
+                        || skew > pol.util_skew
+                    {
                         for &(t, _) in &triggered {
                             uncapped[t] = true;
                         }
@@ -2075,9 +2570,13 @@ pub fn simulate_fleet_multi_tenant_traced(
                             None if skew > pol.util_skew => {
                                 format!("utilization skew {skew:.2} > {:.2}", pol.util_skew)
                             }
+                            None if capacity_pending => {
+                                "compute capacity changed - re-placement".to_string()
+                            }
                             None => "board recovered - re-admission".to_string(),
                         };
                         readmit_pending = false;
+                        capacity_pending = false;
                         sink.record(|| TraceEvent::ReshardTrigger { at, reason: reason.clone() });
                         // Re-place against the observed load: coolest boards
                         // first, SLO-missing tenants uncapped (scale-out).
@@ -2101,9 +2600,13 @@ pub fn simulate_fleet_multi_tenant_traced(
                                 replicas: if uncapped[t] { None } else { spec.replicas },
                             })
                             .collect();
-                        if let Ok(new_plans) =
-                            place_tenants_alive(fleet, &workloads, &bias, &board_up)
-                        {
+                        if let Ok(new_plans) = place_tenants_capacity(
+                            fleet,
+                            &workloads,
+                            &bias,
+                            &board_up,
+                            &capacity_factor,
+                        ) {
                             let boards_of = |p: &ShardPlan| -> Vec<usize> {
                                 p.shards.iter().map(|s| s.board).collect()
                             };
@@ -2196,24 +2699,35 @@ pub fn simulate_fleet_multi_tenant_traced(
     debug_assert!(events.is_empty(), "event drain must exhaust the queue");
 
     for (t, mask) in done_mask.iter().enumerate() {
+        // Conservation: every request either completed or was abandoned,
+        // exactly one of the two. Without an overload policy the abandon
+        // mask is all-false and this is the old all-done assertion.
         assert!(
-            mask.iter().all(|&d| d),
+            mask.iter()
+                .zip(&abandon_mask[t])
+                .all(|(&d, &a)| d ^ a),
             "tenant '{}' lost requests — scheduler bug",
             specs[t].name
         );
         assert_eq!(
-            served[t], specs[t].requests as u64,
-            "tenant '{}' served-item count diverged — double service",
+            served[t] + n_abandoned[t],
+            specs[t].requests as u64,
+            "tenant '{}' offered != completed + abandoned — double service or leak",
             specs[t].name
         );
     }
 
     // ---- reporting ----
+    // Abandoned requests have no completion; the latency populations carry
+    // completed requests only (identical to the old all-requests walk when
+    // no overload policy is armed).
     let lat_of = |t: usize| -> Vec<f64> {
         complete[t]
             .iter()
             .zip(&arrivals[t])
-            .map(|(&c, &a)| c.saturating_sub(a) as f64 * ns_per_cycle / 1e6)
+            .enumerate()
+            .filter(|&(i, _)| !abandon_mask[t][i])
+            .map(|(_, (&c, &a))| c.saturating_sub(a) as f64 * ns_per_cycle / 1e6)
             .collect()
     };
     let tenants: Vec<TenantStats> = specs
@@ -2222,18 +2736,32 @@ pub fn simulate_fleet_multi_tenant_traced(
         .map(|(t, s)| {
             let mut lat = lat_of(t);
             lat.sort_by(|x, y| x.partial_cmp(y).unwrap());
-            let mean_ms = lat.iter().sum::<f64>() / lat.len() as f64;
-            let p99_ms = percentile_sorted(&lat, 99.0);
+            // An all-abandoned tenant has no latency population; zeros
+            // beat NaN (unreachable without an overload policy, so the
+            // healthy numbers are untouched).
+            let (mean_ms, p50_ms, p99_ms) = if lat.is_empty() {
+                (0.0, 0.0, 0.0)
+            } else {
+                (
+                    lat.iter().sum::<f64>() / lat.len() as f64,
+                    percentile_sorted(&lat, 50.0),
+                    percentile_sorted(&lat, 99.0),
+                )
+            };
             let span = complete[t].iter().copied().max().unwrap_or(0);
             let span_s = span as f64 * ns_per_cycle / 1e9;
+            let completed_n = done_mask[t].iter().filter(|&&d| d).count();
             // Post-settle tail: p99 over the final controller window of
             // completions, in completion order (armed controller only).
-            let tail_p99_ms = policy.as_ref().map(|pol| {
+            let tail_p99_ms = policy.as_ref().and_then(|pol| {
                 let n = done_lat[t].len();
+                if n == 0 {
+                    return None;
+                }
                 let k = pol.window.min(n).max(1);
                 let mut tail = done_lat[t][n - k..].to_vec();
                 tail.sort_by(|x, y| x.partial_cmp(y).unwrap());
-                percentile_sorted(&tail, 99.0)
+                Some(percentile_sorted(&tail, 99.0))
             });
             // SLO attainment through outages: of the requests completing
             // while any board was down, the fraction within this tenant's
@@ -2242,6 +2770,9 @@ pub fn simulate_fleet_multi_tenant_traced(
                 let mut in_outage = 0usize;
                 let mut within = 0usize;
                 for (i, &c) in complete[t].iter().enumerate() {
+                    if abandon_mask[t][i] {
+                        continue;
+                    }
                     let overlaps = fault_log
                         .iter()
                         .any(|&(f, r, _)| c >= f && c < r.unwrap_or(u64::MAX));
@@ -2268,11 +2799,11 @@ pub fn simulate_fleet_multi_tenant_traced(
                 // Measured (each request flagged done exactly once; `served`
                 // counts completions), not echoed from the spec — the
                 // conservation assertions above make these real checks.
-                completed: done_mask[t].iter().filter(|&&d| d).count(),
+                completed: completed_n,
                 items: served[t],
                 preemptions: preemptions[t],
                 mean_ms,
-                p50_ms: percentile_sorted(&lat, 50.0),
+                p50_ms,
                 p99_ms,
                 throughput_rps: if span_s > 0.0 {
                     s.requests as f64 / span_s
@@ -2283,6 +2814,18 @@ pub fn simulate_fleet_multi_tenant_traced(
                 slo_met: p99_ms <= s.slo.p99_ms,
                 tail_p99_ms,
                 slo_attainment_outage,
+                shed: if overload_armed { Some(n_shed[t]) } else { None },
+                retried: if overload_armed { Some(n_retried[t]) } else { None },
+                abandoned: if overload_armed { Some(n_abandoned[t]) } else { None },
+                goodput_rps: if overload_armed {
+                    Some(if span_s > 0.0 {
+                        completed_n as f64 / span_s
+                    } else {
+                        0.0
+                    })
+                } else {
+                    None
+                },
             }
         })
         .collect();
@@ -2294,8 +2837,17 @@ pub fn simulate_fleet_multi_tenant_traced(
     let makespan_s = makespan_cycles as f64 * ns_per_cycle / 1e9;
     let mut all_lat: Vec<f64> = (0..nt).flat_map(lat_of).collect();
     all_lat.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let mean_ms = all_lat.iter().sum::<f64>() / all_lat.len() as f64;
+    let (mean_ms, all_p50, all_p99) = if all_lat.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            all_lat.iter().sum::<f64>() / all_lat.len() as f64,
+            percentile_sorted(&all_lat, 50.0),
+            percentile_sorted(&all_lat, 99.0),
+        )
+    };
     let total_requests: usize = specs.iter().map(|s| s.requests).sum();
+    let total_completed: usize = served.iter().map(|&s| s as usize).sum();
 
     let per_board: Vec<BoardStats> = (0..nb)
         .map(|b| BoardStats {
@@ -2344,6 +2896,7 @@ pub fn simulate_fleet_multi_tenant_traced(
             board_recoveries: n_board_recoveries,
             link_degrades: n_link_degrades,
             clock_derates: n_clock_derates,
+            compute_degrades: n_compute_degrades,
             emergency_reshards: n_emergency_reshards,
             items_requeued,
             downtime_cycles,
@@ -2357,6 +2910,9 @@ pub fn simulate_fleet_multi_tenant_traced(
             } else {
                 Some(percentile_sorted(&post, 99.0))
             },
+            recovery_time_ms: recovery_at.and_then(|r| {
+                first_fault_at.map(|ff| r.saturating_sub(ff) as f64 * ns_per_cycle / 1e6)
+            }),
         })
     } else {
         None
@@ -2368,7 +2924,7 @@ pub fn simulate_fleet_multi_tenant_traced(
         used_boards,
         idle_boards: nb - used_boards,
         requests: total_requests,
-        completed: total_requests,
+        completed: total_completed,
         makespan_cycles,
         throughput_rps: if makespan_s > 0.0 {
             total_requests as f64 / makespan_s
@@ -2376,13 +2932,37 @@ pub fn simulate_fleet_multi_tenant_traced(
             0.0
         },
         mean_ms,
-        p50_ms: percentile_sorted(&all_lat, 50.0),
-        p99_ms: percentile_sorted(&all_lat, 99.0),
+        p50_ms: all_p50,
+        p99_ms: all_p99,
         per_board,
         link_bytes_total,
         ddr_slowdown: shared.slowdown_of(demand),
         reshard_events,
         tenants,
+        shed_total: if overload_armed {
+            Some(n_shed.iter().sum())
+        } else {
+            None
+        },
+        retried_total: if overload_armed {
+            Some(n_retried.iter().sum())
+        } else {
+            None
+        },
+        abandoned_total: if overload_armed {
+            Some(n_abandoned.iter().sum())
+        } else {
+            None
+        },
+        goodput_rps: if overload_armed {
+            Some(if makespan_s > 0.0 {
+                total_completed as f64 / makespan_s
+            } else {
+                0.0
+            })
+        } else {
+            None
+        },
         faults,
         telemetry: sink.summary(),
     }
@@ -2705,6 +3285,7 @@ mod tests {
                     p99_ms: 1.0,
                     priority: 2,
                     weight: 1.0,
+                    overload: None,
                 },
             },
             TenantSpec {
@@ -2720,6 +3301,7 @@ mod tests {
                     p99_ms: 1.0,
                     priority: 0,
                     weight: 1.0,
+                    overload: None,
                 },
             },
         ]
@@ -2878,6 +3460,7 @@ mod tests {
                     p99_ms: 5.0,
                     priority: 2,
                     weight: 1.0,
+                    overload: None,
                 },
             },
             TenantSpec {
@@ -2893,6 +3476,7 @@ mod tests {
                     p99_ms: 5000.0,
                     priority: 1,
                     weight: 1.0,
+                    overload: None,
                 },
             },
         ];
@@ -3075,6 +3659,7 @@ mod tests {
                     p99_ms: 1e9,
                     priority: 2,
                     weight: 1.0,
+                    overload: None,
                 },
             },
         );
@@ -3243,6 +3828,22 @@ mod tests {
             !s.contains("slo_attainment_outage"),
             "no per-tenant outage key without a script"
         );
+        // The overload-shedding and brownout fields are equally opt-in:
+        // with no `OverloadPolicy` and no `ComputeDegrade` the report JSON
+        // must not grow a single new key.
+        for key in [
+            "\"shed\"",
+            "\"retried\"",
+            "\"abandoned\"",
+            "\"goodput_rps\"",
+            "\"compute_degrades\"",
+            "\"recovery_time_ms\"",
+            "\"shed_total\"",
+            "\"retried_total\"",
+            "\"abandoned_total\"",
+        ] {
+            assert!(!s.contains(key), "no-policy run must not grow {key}");
+        }
     }
 
     #[test]
@@ -3387,7 +3988,7 @@ mod tests {
             load_steps: vec![],
             mode: ShardMode::Pipelined,
             replicas: None,
-            slo: SloPolicy { p99_ms: 5000.0, priority: 1, weight: 1.0 },
+            slo: SloPolicy { p99_ms: 5000.0, priority: 1, weight: 1.0, overload: None },
         }];
         let workloads = [TenantWorkload {
             name: "piped",
@@ -3428,5 +4029,460 @@ mod tests {
             .to_json()
             .to_string_pretty();
         assert_eq!(rf.to_json().to_string_pretty(), a, "faulted runs stay deterministic");
+    }
+
+    // ---- single-network fault semantics (satellite: FaultScript on the
+    // static/dynamic simulators) ----
+
+    #[test]
+    fn static_sim_board_down_blocks_new_batches_until_recovery() {
+        // Board 0 is dark from t = 0 until past the healthy makespan: its
+        // round-robin share only starts after recovery, so the faulted run
+        // ends strictly later and at least at the recovery instant. The
+        // single-network semantics never abort in-flight work, so nothing
+        // requeues.
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let healthy = burst_cfg(2, ShardMode::Replicated);
+        let rh = simulate_fleet(&cfg, &shard, &healthy);
+        assert!(rh.faults.is_none(), "no script → no summary");
+        let ref_freq = cfg.platform.freq_mhz;
+        let recover_ms = rh.makespan_cycles as f64 / (ref_freq * 1e3) * 1.5;
+        let mut faulted = healthy.clone();
+        faulted.faults = Some(FaultScript {
+            events: vec![FaultEvent::BoardDown {
+                board: 0,
+                at_ms: 0.0,
+                recover_ms: Some(recover_ms),
+            }],
+        });
+        let rf = simulate_fleet(&cfg, &shard, &faulted);
+        assert_eq!(rf.completed, 96, "every request still completes");
+        let rec = (recover_ms * ref_freq * 1e3).round() as u64;
+        assert!(rf.makespan_cycles > rh.makespan_cycles);
+        assert!(
+            rf.makespan_cycles >= rec,
+            "board 0's share cannot finish before the board returns"
+        );
+        let f = rf.faults.as_ref().expect("script armed → summary present");
+        assert_eq!(f.board_failures, 1);
+        assert_eq!(f.board_recoveries, 1);
+        assert_eq!(f.downtime_cycles, rec);
+        assert_eq!(f.items_requeued, 0, "single-network outages never abort in-flight work");
+        assert_eq!(f.emergency_reshards, 0);
+        // Deterministic under faults.
+        let rf2 = simulate_fleet(&cfg, &shard, &faulted);
+        assert_eq!(rf.to_json().to_string_pretty(), rf2.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn dynamic_sim_clock_derate_stretches_the_run() {
+        // Both boards at half clock from t = 0 under the dynamic greedy
+        // dispatcher: every batch bills at 2x, so the makespan roughly
+        // doubles and the summary tallies both derate applications.
+        let (cfg, net, w) = setup();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated_fleet(&fleet, &net, &w, &plan);
+        let mut healthy = burst_cfg(2, ShardMode::Replicated);
+        healthy.requests = 64;
+        healthy.max_batch = 4;
+        let mut derated = healthy.clone();
+        derated.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: 0.0 },
+                FaultEvent::ClockDerate { board: 1, factor: 0.5, at_ms: 0.0 },
+            ],
+        });
+        let rh = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard.clone(), &healthy);
+        let rd = simulate_fleet_dynamic(&cfg, &fleet, &net, &w, shard, &derated);
+        assert_eq!(rd.completed, 64);
+        assert!(
+            rd.makespan_cycles as f64 > 1.5 * rh.makespan_cycles as f64,
+            "half clock must stretch the dynamic run: {} vs {}",
+            rd.makespan_cycles,
+            rh.makespan_cycles
+        );
+        let f = rd.faults.as_ref().unwrap();
+        assert_eq!(f.clock_derates, 2);
+        assert_eq!(f.board_failures, 0);
+        assert_eq!(f.compute_degrades, 0);
+        assert!(f.recovery_time_ms.is_none(), "no controller window → no RTO here");
+        assert!(rh.faults.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "board_down needs recover_ms")]
+    fn static_sim_rejects_permanent_board_loss() {
+        // The batcher-driven loops cannot re-route a board's round-robin
+        // share; a permanent outage would strand it forever.
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let mut ccfg = burst_cfg(2, ShardMode::Replicated);
+        ccfg.faults = Some(FaultScript {
+            events: vec![FaultEvent::BoardDown { board: 0, at_ms: 0.1, recover_ms: None }],
+        });
+        let _ = simulate_fleet(&cfg, &shard, &ccfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "board_down and clock_derate only")]
+    fn static_sim_rejects_unsupported_fault_kinds() {
+        let (cfg, net, w) = setup();
+        let plan = FusionPlan::fully_fused(7);
+        let shard = ShardPlan::replicated(&cfg, &net, &w, &plan, 2);
+        let mut ccfg = burst_cfg(2, ShardMode::Replicated);
+        ccfg.faults = Some(FaultScript {
+            events: vec![FaultEvent::ComputeDegrade {
+                board: 0,
+                capacity_fraction: 0.5,
+                at_ms: 0.1,
+                recover_ms: Some(1.0),
+            }],
+        });
+        let _ = simulate_fleet(&cfg, &shard, &ccfg);
+    }
+
+    // ---- clock-derate stacking edges (satellite: overlap, same-instant
+    // restore, mid-batch onset) ----
+
+    #[test]
+    fn overlapping_derates_last_one_wins() {
+        // Two derates overlap on the only board: 0.5 from t = 0, then 0.25
+        // landing mid-run. Steps REPLACE the factor (they do not multiply):
+        // the stacked run is slower than pure-0.5 (its tail runs at 4x) but
+        // faster than pure-0.25 (its head ran at only 2x). A multiplicative
+        // bug (0.5 * 0.25 = 0.125 tail) would push it past the pure-0.25
+        // run.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone()];
+        let specs = two_tenant_specs(f64::INFINITY, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let healthy = mt_cfg(1, 8);
+        let rh = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &healthy);
+        let script = |events| {
+            let mut c = mt_cfg(1, 8);
+            c.tenants = specs.clone();
+            c.faults = Some(FaultScript { events });
+            c
+        };
+        let half = script(vec![FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: 0.0 }]);
+        let rs = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &half);
+        let mid_ms = rs.makespan_cycles as f64 / (cfg.platform.freq_mhz * 1e3) * 0.5;
+        let stacked = script(vec![
+            FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: 0.0 },
+            FaultEvent::ClockDerate { board: 0, factor: 0.25, at_ms: mid_ms },
+        ]);
+        let rk = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &stacked);
+        let quarter =
+            script(vec![FaultEvent::ClockDerate { board: 0, factor: 0.25, at_ms: 0.0 }]);
+        let rq = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &quarter);
+        assert_eq!(rk.completed, 88);
+        assert!(rh.makespan_cycles < rs.makespan_cycles);
+        assert!(
+            rs.makespan_cycles < rk.makespan_cycles,
+            "deepening the derate mid-run must slow the tail: {} vs {}",
+            rs.makespan_cycles,
+            rk.makespan_cycles
+        );
+        assert!(
+            rk.makespan_cycles < rq.makespan_cycles,
+            "overlapping derates replace, not multiply: stacked {} vs pure-quarter {}",
+            rk.makespan_cycles,
+            rq.makespan_cycles
+        );
+        assert_eq!(rs.faults.as_ref().unwrap().clock_derates, 1);
+        assert_eq!(rk.faults.as_ref().unwrap().clock_derates, 2);
+        assert_eq!(rq.faults.as_ref().unwrap().clock_derates, 1);
+    }
+
+    #[test]
+    fn restore_racing_a_same_instant_dispatch_is_clean() {
+        // A factor-1.0 restore scheduled at the very same instant as the
+        // derate it undoes: the engine folds every event at an instant in
+        // before pricing any dispatch, so the board never serves a cycle at
+        // the derated clock and the run matches the healthy one exactly —
+        // while the summary still tallies both applications.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(f64::INFINITY, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let healthy = mt_cfg(2, 8);
+        let mut raced = mt_cfg(2, 8);
+        raced.tenants = specs.clone();
+        raced.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: 0.1 },
+                FaultEvent::ClockDerate { board: 0, factor: 1.0, at_ms: 0.1 },
+            ],
+        });
+        let rh = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &healthy);
+        let rr = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &raced);
+        assert_eq!(rr.completed, rh.completed);
+        assert_eq!(
+            rr.makespan_cycles, rh.makespan_cycles,
+            "a same-instant derate/restore pair must not perturb the run"
+        );
+        assert_eq!(rr.p99_ms.to_bits(), rh.p99_ms.to_bits());
+        assert_eq!(rr.faults.as_ref().unwrap().clock_derates, 2);
+    }
+
+    #[test]
+    fn derate_landing_mid_batch_spares_inflight_work() {
+        // One board, 8 burst requests, max_batch 4 → exactly two batches.
+        // A half-clock derate landing halfway through the first batch must
+        // not re-price it (in-flight work keeps its dispatch-time cost):
+        // the run takes ~1 healthy batch + 1 derated batch = ~3 batch
+        // services, strictly between the healthy 2 and the derate-from-
+        // dispatch 4.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone()];
+        // One full batch alone measures the healthy batch service D.
+        let probe = vec![TenantSpec {
+            name: "solo".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: f64::INFINITY,
+            requests: 4,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy { p99_ms: 1e9, priority: 1, weight: 1.0, overload: None },
+        }];
+        let (wp, pp) = place_two(&fleet, &probe);
+        let d = simulate_fleet_multi_tenant(&cfg, &fleet, &probe, &wp, &pp, &mt_cfg(1, 4))
+            .makespan_cycles;
+        let mut specs = probe.clone();
+        specs[0].requests = 8;
+        let (w, plans) = place_two(&fleet, &specs);
+        let healthy = mt_cfg(1, 4);
+        let rh = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &healthy);
+        let mid_ms = d as f64 * 0.5 / (cfg.platform.freq_mhz * 1e3);
+        let mut derated = mt_cfg(1, 4);
+        derated.tenants = specs.clone();
+        derated.faults = Some(FaultScript {
+            events: vec![FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: mid_ms }],
+        });
+        let rd = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &derated);
+        assert_eq!(rd.completed, 8);
+        assert!(rd.makespan_cycles > rh.makespan_cycles);
+        let (lo, hi) = ((2.6 * d as f64) as u64, (3.4 * d as f64) as u64);
+        assert!(
+            rd.makespan_cycles > lo && rd.makespan_cycles < hi,
+            "mid-batch derate must spare the in-flight batch (~3 services, D = {d}): got {}",
+            rd.makespan_cycles
+        );
+    }
+
+    // ---- overload shedding & partial-capacity faults ----
+
+    use crate::config::{OverloadPolicy, RetryPolicy};
+
+    #[test]
+    fn overload_shedding_conserves_requests_and_spares_the_quiet_tenant() {
+        // A best-effort flooder bursts 200 requests into a 4-deep admission
+        // queue while a policy-less interactive tenant streams alongside.
+        // The flooder sheds and retries; the quiet tenant is never touched
+        // by the overload machinery. Offered == completed + abandoned on
+        // both sides, the fleet rollups match the per-tenant sums, and the
+        // trace carries exactly the counted events.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let mut specs = two_tenant_specs(2000.0, 24, 200);
+        specs[1].slo.overload = Some(OverloadPolicy {
+            deadline_ms: 50.0,
+            max_queue: 4,
+            retry: RetryPolicy { max_attempts: 3, backoff_base_ms: 0.05, jitter: 0.5 },
+        });
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 4);
+        ccfg.tenants = specs.clone();
+        let mut sink = TraceSink::enabled();
+        let r =
+            simulate_fleet_multi_tenant_traced(&cfg, &fleet, &specs, &w, &plans, &ccfg, &mut sink);
+        let (hi, lo) = (&r.tenants[0], &r.tenants[1]);
+        // The policy-less tenant never sheds, retries, or abandons.
+        assert_eq!(hi.completed, 24);
+        assert_eq!(hi.shed, Some(0));
+        assert_eq!(hi.retried, Some(0));
+        assert_eq!(hi.abandoned, Some(0));
+        // The flooder sheds (burst ≫ max_queue) and its clients retry.
+        assert!(lo.shed.unwrap() > 0, "a 200-burst into a 4-deep queue must shed");
+        assert!(lo.retried.unwrap() > 0, "shed requests must come back");
+        assert_eq!(
+            lo.completed as u64 + lo.abandoned.unwrap(),
+            200,
+            "offered == completed + abandoned"
+        );
+        // Fleet rollups are the per-tenant sums; goodput counts completions
+        // only and can never exceed the offered-based throughput.
+        assert_eq!(r.shed_total.unwrap(), hi.shed.unwrap() + lo.shed.unwrap());
+        assert_eq!(r.retried_total.unwrap(), lo.retried.unwrap());
+        assert_eq!(r.abandoned_total.unwrap(), lo.abandoned.unwrap());
+        assert_eq!(r.completed as u64, 24 + lo.completed as u64);
+        assert!(r.goodput_rps.unwrap() > 0.0);
+        assert!(lo.goodput_rps.unwrap() <= lo.throughput_rps);
+        // Trace ↔ counter consistency.
+        let count = |k: &str| sink.events.iter().filter(|e| e.kind() == k).count() as u64;
+        assert_eq!(count("shed"), r.shed_total.unwrap());
+        assert_eq!(count("retry"), r.retried_total.unwrap());
+        assert_eq!(count("abandon"), r.abandoned_total.unwrap());
+        // Deterministic, retry jitter and all — two plain runs agree to the
+        // byte, and the armed sink never perturbs the shed outcome.
+        let r2 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        let r3 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        assert_eq!(r2.to_json().to_string_pretty(), r3.to_json().to_string_pretty());
+        assert_eq!(r2.tenants[1].shed, lo.shed);
+        assert_eq!(r2.tenants[1].retried, lo.retried);
+        assert_eq!(r2.tenants[1].abandoned, lo.abandoned);
+        assert_eq!(r2.makespan_cycles, r.makespan_cycles);
+    }
+
+    #[test]
+    fn zero_retry_budget_abandons_on_first_shed() {
+        // max_attempts = 0: every shed abandons on the spot. With a 64-req
+        // burst into a 2-deep queue the math is exact — 2 admitted, 62
+        // shed-and-abandoned, no retries ever scheduled.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = vec![TenantSpec {
+            name: "impatient".to_string(),
+            network: tiny_vgg(),
+            weights_seed: 1,
+            arrival_rps: f64::INFINITY,
+            requests: 64,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 1e9,
+                priority: 1,
+                weight: 1.0,
+                overload: Some(OverloadPolicy {
+                    deadline_ms: 50.0,
+                    max_queue: 2,
+                    retry: RetryPolicy { max_attempts: 0, backoff_base_ms: 1.0, jitter: 0.0 },
+                }),
+            },
+        }];
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 8);
+        ccfg.tenants = specs.clone();
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        let t = &r.tenants[0];
+        assert_eq!(t.completed, 2, "only the queue's worth gets served");
+        assert_eq!(t.shed, Some(62));
+        assert_eq!(t.abandoned, Some(62), "no retry budget → every shed abandons");
+        assert_eq!(t.retried, Some(0));
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.abandoned_total, Some(62));
+        // Latency population is completions-only: a p99 over 2 served
+        // requests is near one batch service, not poisoned by zeros from
+        // the 62 that never ran.
+        assert!(t.p99_ms > 0.0);
+    }
+
+    #[test]
+    fn compute_degrade_prices_through_the_cost_model_and_recovers() {
+        // A brownout (25% capacity) on board 0: service stretches while it
+        // holds, so a permanent degrade is slower than one that recovers
+        // mid-run, and both are slower than healthy. The summary counts the
+        // degrade and the trace carries the event.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(f64::INFINITY, 24, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let healthy = mt_cfg(2, 8);
+        let rh = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &healthy);
+        let script = |recover_ms| {
+            let mut c = mt_cfg(2, 8);
+            c.tenants = specs.clone();
+            c.faults = Some(FaultScript {
+                events: vec![FaultEvent::ComputeDegrade {
+                    board: 0,
+                    capacity_fraction: 0.25,
+                    at_ms: 0.0,
+                    recover_ms,
+                }],
+            });
+            c
+        };
+        let perm = script(None);
+        let rec_ms = rh.makespan_cycles as f64 / (cfg.platform.freq_mhz * 1e3) * 0.5;
+        let rec = script(Some(rec_ms));
+        let rp = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &perm);
+        let mut sink = TraceSink::enabled();
+        let rr =
+            simulate_fleet_multi_tenant_traced(&cfg, &fleet, &specs, &w, &plans, &rec, &mut sink);
+        assert_eq!(rp.completed, 88, "a brownout sheds capacity, not requests");
+        assert_eq!(rr.completed, 88);
+        assert!(
+            rp.makespan_cycles > rh.makespan_cycles,
+            "quarter capacity must stretch the run: {} vs {}",
+            rp.makespan_cycles,
+            rh.makespan_cycles
+        );
+        assert!(
+            rr.makespan_cycles < rp.makespan_cycles,
+            "recovering mid-run must beat a permanent brownout: {} vs {}",
+            rr.makespan_cycles,
+            rp.makespan_cycles
+        );
+        assert_eq!(rp.faults.as_ref().unwrap().compute_degrades, 1);
+        assert_eq!(rr.faults.as_ref().unwrap().compute_degrades, 1);
+        assert_eq!(rp.faults.as_ref().unwrap().board_failures, 0);
+        let degr = sink.events.iter().filter(|e| e.kind() == "compute_degrade").count();
+        assert_eq!(degr, 1);
+        // Deterministic under brownouts: two plain runs agree to the byte
+        // (the traced run differs by exactly the `telemetry` key).
+        let rr2 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &rec);
+        let rr3 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &rec);
+        assert_eq!(rr2.to_json().to_string_pretty(), rr3.to_json().to_string_pretty());
+        assert_eq!(rr2.makespan_cycles, rr.makespan_cycles);
+    }
+
+    #[test]
+    fn recovery_time_objective_stamped_after_a_mid_run_fault() {
+        // Controller armed + scripted derate window: once the fault clears,
+        // the first controller window whose fleet-wide p99 falls back
+        // within 1.25x the pre-fault baseline stamps the recovery instant,
+        // and the summary reports it as milliseconds since fault onset.
+        let cfg = AccelConfig::paper_default();
+        let fleet = vec![cfg.clone(), cfg.clone()];
+        let specs = two_tenant_specs(2000.0, 400, 64);
+        let (w, plans) = place_two(&fleet, &specs);
+        let mut ccfg = mt_cfg(2, 8);
+        ccfg.tenants = specs.clone();
+        ccfg.reshard = Some(ReshardPolicy {
+            window: 16,
+            util_skew: 0.9,
+            p99_ms: 50.0,
+            cooldown_windows: 1,
+            migration_factor: 0.0,
+        });
+        ccfg.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::ClockDerate { board: 0, factor: 0.5, at_ms: 5.0 },
+                FaultEvent::ClockDerate { board: 0, factor: 1.0, at_ms: 10.0 },
+            ],
+        });
+        let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        assert_eq!(r.completed, 464);
+        let f = r.faults.as_ref().unwrap();
+        assert_eq!(f.clock_derates, 2);
+        let rto = f
+            .recovery_time_ms
+            .expect("windows keep rolling long after the fault → recovery must be stamped");
+        assert!(rto > 0.0, "recovery cannot predate the fault");
+        let makespan_ms = r.makespan_cycles as f64 / (cfg.platform.freq_mhz * 1e3);
+        assert!(rto <= makespan_ms, "RTO {rto} must fit inside the run {makespan_ms}");
+        // Bit-deterministic, RTO included.
+        let r2 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &w, &plans, &ccfg);
+        assert_eq!(
+            r2.faults.as_ref().unwrap().recovery_time_ms.unwrap().to_bits(),
+            rto.to_bits()
+        );
     }
 }

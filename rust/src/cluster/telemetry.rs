@@ -250,6 +250,19 @@ pub enum TraceEvent {
     /// last replica) and the control plane re-planned `tenants` tenants
     /// onto the surviving boards outside the normal window cadence.
     EmergencyReshard { at: u64, board: usize, tenants: usize },
+    /// Admission shed a request (overload policy armed): its predicted
+    /// wait broke the tenant's deadline or the queue hit `max_queue`.
+    /// `attempt` is 0 for the first presentation, k for the k-th retry.
+    Shed { at: u64, tenant: usize, attempt: u32, queue_depth: usize },
+    /// A previously shed request re-arrived after its backoff.
+    Retry { at: u64, tenant: usize, attempt: u32 },
+    /// A shed request exhausted its retry budget and left the system
+    /// unserved (counted toward `TenantStats::abandoned`).
+    Abandon { at: u64, tenant: usize, attempts: u32 },
+    /// A scripted partial-capacity brownout began on `board`: it serves
+    /// with `fraction` × nominal compute throughput until cycle `until`
+    /// (`None` = permanent).
+    ComputeDegrade { at: u64, board: usize, fraction: f64, until: Option<u64> },
 }
 
 impl TraceEvent {
@@ -267,6 +280,10 @@ impl TraceEvent {
             TraceEvent::BoardRecover { .. } => "board_recover",
             TraceEvent::LinkDegrade { .. } => "link_degrade",
             TraceEvent::EmergencyReshard { .. } => "emergency_reshard",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::Abandon { .. } => "abandon",
+            TraceEvent::ComputeDegrade { .. } => "compute_degrade",
         }
     }
 
@@ -283,7 +300,11 @@ impl TraceEvent {
             | TraceEvent::BoardFail { at, .. }
             | TraceEvent::BoardRecover { at, .. }
             | TraceEvent::LinkDegrade { at, .. }
-            | TraceEvent::EmergencyReshard { at, .. } => at,
+            | TraceEvent::EmergencyReshard { at, .. }
+            | TraceEvent::Shed { at, .. }
+            | TraceEvent::Retry { at, .. }
+            | TraceEvent::Abandon { at, .. }
+            | TraceEvent::ComputeDegrade { at, .. } => at,
         }
     }
 
@@ -331,6 +352,25 @@ impl TraceEvent {
             TraceEvent::EmergencyReshard { board, tenants, .. } => j
                 .set("board", *board as u64)
                 .set("tenants", *tenants as u64),
+            TraceEvent::Shed { tenant, attempt, queue_depth, .. } => j
+                .set("tenant", *tenant as u64)
+                .set("attempt", *attempt as u64)
+                .set("queue_depth", *queue_depth as u64),
+            TraceEvent::Retry { tenant, attempt, .. } => j
+                .set("tenant", *tenant as u64)
+                .set("attempt", *attempt as u64),
+            TraceEvent::Abandon { tenant, attempts, .. } => j
+                .set("tenant", *tenant as u64)
+                .set("attempts", *attempts as u64),
+            TraceEvent::ComputeDegrade { board, fraction, until, .. } => {
+                let j = j
+                    .set("board", *board as u64)
+                    .set("fraction", *fraction);
+                match until {
+                    Some(u) => j.set("until", *u),
+                    None => j,
+                }
+            }
         }
     }
 }
@@ -391,6 +431,11 @@ pub struct TelemetrySummary {
     pub board_recoveries: u64,
     pub link_degrades: u64,
     pub emergency_reshards: u64,
+    pub compute_degrades: u64,
+    /// Overload counters (all zero without an `OverloadPolicy`).
+    pub sheds: u64,
+    pub retries: u64,
+    pub abandons: u64,
     /// Simulator heap events processed (drives `sim_events_per_sec`).
     pub sim_events: u64,
     pub heap_depth_max: u64,
@@ -420,6 +465,10 @@ impl TelemetrySummary {
             .set("board_recoveries", self.board_recoveries)
             .set("link_degrades", self.link_degrades)
             .set("emergency_reshards", self.emergency_reshards)
+            .set("compute_degrades", self.compute_degrades)
+            .set("sheds", self.sheds)
+            .set("retries", self.retries)
+            .set("abandons", self.abandons)
             .set("sim_events", self.sim_events)
             .set("heap_depth_max", self.heap_depth_max)
             .set("heap_depth_mean", self.heap_depth_mean)
@@ -534,6 +583,10 @@ impl TraceSink {
             board_recoveries: 0,
             link_degrades: 0,
             emergency_reshards: 0,
+            compute_degrades: 0,
+            sheds: 0,
+            retries: 0,
+            abandons: 0,
             sim_events: self.sim_events,
             heap_depth_max: self.heap_depth_max,
             heap_depth_mean: self.heap_depth_mean(),
@@ -558,6 +611,10 @@ impl TraceSink {
                 TraceEvent::BoardRecover { .. } => s.board_recoveries += 1,
                 TraceEvent::LinkDegrade { .. } => s.link_degrades += 1,
                 TraceEvent::EmergencyReshard { .. } => s.emergency_reshards += 1,
+                TraceEvent::Shed { .. } => s.sheds += 1,
+                TraceEvent::Retry { .. } => s.retries += 1,
+                TraceEvent::Abandon { .. } => s.abandons += 1,
+                TraceEvent::ComputeDegrade { .. } => s.compute_degrades += 1,
             }
         }
         Some(s)
@@ -832,11 +889,20 @@ mod tests {
         sink.record(|| TraceEvent::LinkDegrade { at: 21, board: 0, factor: 0.5, until: 40 });
         sink.record(|| TraceEvent::EmergencyReshard { at: 22, board: 2, tenants: 1 });
         sink.record(|| TraceEvent::BoardRecover { at: 44, board: 2 });
+        sink.record(|| TraceEvent::Shed { at: 50, tenant: 1, attempt: 0, queue_depth: 9 });
+        sink.record(|| TraceEvent::Retry { at: 55, tenant: 1, attempt: 1 });
+        sink.record(|| TraceEvent::Abandon { at: 60, tenant: 1, attempts: 3 });
+        sink.record(|| TraceEvent::ComputeDegrade {
+            at: 61,
+            board: 1,
+            fraction: 0.5,
+            until: Some(99),
+        });
         sink.observe_latency_ms(0, 0.5);
         sink.note_sim_event(4);
         sink.note_sim_event(2);
         let s = sink.summary().unwrap();
-        assert_eq!(s.events_total, 12);
+        assert_eq!(s.events_total, 16);
         assert_eq!(s.admits, 1);
         assert_eq!(s.dispatches, 1);
         assert_eq!(s.flushes, 1);
@@ -848,6 +914,10 @@ mod tests {
         assert_eq!(s.board_recoveries, 1);
         assert_eq!(s.link_degrades, 1);
         assert_eq!(s.emergency_reshards, 1);
+        assert_eq!(s.sheds, 1);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.abandons, 1);
+        assert_eq!(s.compute_degrades, 1);
         assert_eq!(s.sim_events, 2);
         assert_eq!(s.heap_depth_max, 4);
         assert_eq!(s.heap_depth_mean, 3.0);
@@ -890,6 +960,15 @@ mod tests {
         assert!(!j.contains("tenant")); // None ⇒ key omitted, like ReshardEvent
         let ev2 = TraceEvent::ReshardStall { at: 3, tenant: Some(4), bytes: 10, stall_cycles: 2 };
         assert!(ev2.to_json().to_string_compact().contains("tenant"));
+        // A permanent brownout omits `until`, like ReshardStall's tenant.
+        let ev3 = TraceEvent::ComputeDegrade { at: 5, board: 1, fraction: 0.5, until: None };
+        let j3 = ev3.to_json().to_string_compact();
+        assert!(j3.contains("compute_degrade") && !j3.contains("until"));
+        let ev4 = TraceEvent::ComputeDegrade { at: 5, board: 1, fraction: 0.5, until: Some(9) };
+        assert!(ev4.to_json().to_string_compact().contains("until"));
+        let shed = TraceEvent::Shed { at: 2, tenant: 0, attempt: 1, queue_depth: 4 };
+        assert_eq!(shed.kind(), "shed");
+        assert_eq!(shed.at(), 2);
     }
 
     #[test]

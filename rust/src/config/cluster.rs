@@ -190,6 +190,20 @@ pub enum FaultEvent {
         factor: f64,
         at_ms: f64,
     },
+    /// Board `board` loses compute columns (ECC-disabled DSP banks, a
+    /// partially failed SLR): from `at_ms` it serves with only
+    /// `capacity_fraction` × its nominal compute throughput. Unlike
+    /// [`FaultEvent::ClockDerate`] this scales the *cost model's* service
+    /// cycles (the board computes less per cycle, it does not tick
+    /// slower), and the placement planner sees the brownout board as
+    /// fractionally smaller rather than healthy or dead. `recover_ms`
+    /// (`None` = permanent) restores full capacity.
+    ComputeDegrade {
+        board: usize,
+        capacity_fraction: f64,
+        at_ms: f64,
+        recover_ms: Option<f64>,
+    },
 }
 
 impl FaultEvent {
@@ -198,7 +212,8 @@ impl FaultEvent {
         match self {
             FaultEvent::BoardDown { at_ms, .. }
             | FaultEvent::LinkDegrade { at_ms, .. }
-            | FaultEvent::ClockDerate { at_ms, .. } => *at_ms,
+            | FaultEvent::ClockDerate { at_ms, .. }
+            | FaultEvent::ComputeDegrade { at_ms, .. } => *at_ms,
         }
     }
 
@@ -238,6 +253,22 @@ impl FaultEvent {
                 .set("board", *board)
                 .set("factor", *factor)
                 .set("at_ms", *at_ms),
+            FaultEvent::ComputeDegrade {
+                board,
+                capacity_fraction,
+                at_ms,
+                recover_ms,
+            } => {
+                let mut j = Json::obj()
+                    .set("kind", "compute_degrade")
+                    .set("board", *board)
+                    .set("capacity_fraction", *capacity_fraction)
+                    .set("at_ms", *at_ms);
+                if let Some(r) = recover_ms {
+                    j = j.set("recover_ms", *r);
+                }
+                j
+            }
         }
     }
 
@@ -287,9 +318,27 @@ impl FaultEvent {
                     .ok_or("fault clock_derate: missing/invalid 'factor'")?,
                 at_ms,
             }),
+            "compute_degrade" => Ok(FaultEvent::ComputeDegrade {
+                board: j
+                    .get("board")
+                    .as_usize()
+                    .ok_or("fault compute_degrade: missing/invalid 'board'")?,
+                capacity_fraction: j
+                    .get("capacity_fraction")
+                    .as_f64()
+                    .ok_or("fault compute_degrade: missing/invalid 'capacity_fraction'")?,
+                at_ms,
+                recover_ms: match j.get("recover_ms") {
+                    Json::Null => None,
+                    v => Some(
+                        v.as_f64()
+                            .ok_or("fault compute_degrade: invalid 'recover_ms'")?,
+                    ),
+                },
+            }),
             other => Err(format!(
                 "fault: unknown kind '{other}' (expected 'board_down', \
-                 'link_degrade' or 'clock_derate')"
+                 'link_degrade', 'clock_derate' or 'compute_degrade')"
             )),
         }
     }
@@ -374,6 +423,24 @@ impl FaultScript {
                         ));
                     }
                 }
+                FaultEvent::ComputeDegrade {
+                    capacity_fraction,
+                    recover_ms,
+                    ..
+                } => {
+                    if !(*capacity_fraction > 0.0 && *capacity_fraction <= 1.0) {
+                        return Err(format!(
+                            "faults: events[{i}].capacity_fraction must be in (0, 1]"
+                        ));
+                    }
+                    if let Some(r) = recover_ms {
+                        if !(r > &at) || !r.is_finite() {
+                            return Err(format!(
+                                "faults: events[{i}].recover_ms must be finite and > at_ms"
+                            ));
+                        }
+                    }
+                }
             }
         }
         Ok(())
@@ -449,6 +516,123 @@ impl PreemptMode {
     }
 }
 
+/// Client retry behavior for shed requests: a shed request re-arrives
+/// after an exponentially growing, deterministically jittered backoff
+/// until its attempts are exhausted, at which point it is **abandoned**
+/// (counted, never served — conservation holds as
+/// `offered == completed + abandoned`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Retry attempts after the initial shed (0 = shed once then abandon).
+    pub max_attempts: u32,
+    /// Backoff before retry *k* (1-based) is `backoff_base_ms × 2^(k−1)`,
+    /// stretched by the jitter draw.
+    pub backoff_base_ms: f64,
+    /// Jitter fraction in [0, 1]: each backoff is multiplied by
+    /// `1 + jitter × u` with `u ∈ [0, 1)` drawn from a deterministic
+    /// per-(tenant, request, attempt) stream — retries de-synchronize
+    /// without perturbing reproducibility.
+    pub jitter: f64,
+}
+
+impl RetryPolicy {
+    /// Defaults: 3 attempts, 1 ms base backoff, no jitter.
+    pub fn default_policy() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff_base_ms: 1.0,
+            jitter: 0.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.backoff_base_ms > 0.0) || !self.backoff_base_ms.is_finite() {
+            return Err("retry: backoff_base_ms must be finite and > 0".into());
+        }
+        if !(self.jitter >= 0.0 && self.jitter <= 1.0) {
+            return Err("retry: jitter must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("max_attempts", self.max_attempts as usize)
+            .set("backoff_base_ms", self.backoff_base_ms)
+            .set("jitter", self.jitter)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RetryPolicy, String> {
+        let base = RetryPolicy::default_policy();
+        Ok(RetryPolicy {
+            max_attempts: j
+                .get("max_attempts")
+                .as_usize()
+                .map(|v| v as u32)
+                .unwrap_or(base.max_attempts),
+            backoff_base_ms: j
+                .get("backoff_base_ms")
+                .as_f64()
+                .unwrap_or(base.backoff_base_ms),
+            jitter: j.get("jitter").as_f64().unwrap_or(base.jitter),
+        })
+    }
+}
+
+/// Overload shedding policy of one tenant. When set, admission stops being
+/// unconditional: each arrival's wait is predicted from the tenant's queue
+/// depth and its hosting boards' occupancy, and a request that cannot meet
+/// `deadline_ms` (or that lands on a queue already `max_queue` deep) is
+/// **shed** — bounced back to the client, who retries per `retry`. Strictly
+/// opt-in: with no policy every request is admitted and the engine runs the
+/// pre-overload code byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadPolicy {
+    /// Admission deadline in milliseconds: shed when the predicted
+    /// queue + service wait exceeds this.
+    pub deadline_ms: f64,
+    /// Hard cap on the tenant's pending-request queue depth; arrivals
+    /// beyond it are shed regardless of the deadline prediction.
+    pub max_queue: usize,
+    pub retry: RetryPolicy,
+}
+
+impl OverloadPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.deadline_ms > 0.0) {
+            return Err("overload: deadline_ms must be > 0".into());
+        }
+        if self.max_queue == 0 {
+            return Err("overload: max_queue must be >= 1".into());
+        }
+        self.retry.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("deadline_ms", self.deadline_ms)
+            .set("max_queue", self.max_queue)
+            .set("retry", self.retry.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> Result<OverloadPolicy, String> {
+        Ok(OverloadPolicy {
+            deadline_ms: j
+                .get("deadline_ms")
+                .as_f64()
+                .ok_or("overload: missing/invalid 'deadline_ms'")?,
+            max_queue: j
+                .get("max_queue")
+                .as_usize()
+                .ok_or("overload: missing/invalid 'max_queue'")?,
+            retry: match j.get("retry") {
+                Json::Null => RetryPolicy::default_policy(),
+                v => RetryPolicy::from_json(v)?,
+            },
+        })
+    }
+}
+
 /// Service-level objective of one tenant: a latency target plus a priority
 /// class and a fair-share weight. Priorities are strict: under contention a
 /// higher-priority tenant's batch may preempt a lower-priority tenant's
@@ -474,6 +658,10 @@ pub struct SloPolicy {
     /// share). A weight-2 tenant gets twice the service share of a weight-1
     /// peer of the same class while both have pending work.
     pub weight: f64,
+    /// Overload shedding + client retry/backoff. `None` (the default, and
+    /// the JSON key absent) admits every request unconditionally — the
+    /// pre-overload engine byte-for-byte.
+    pub overload: Option<OverloadPolicy>,
 }
 
 impl SloPolicy {
@@ -484,14 +672,21 @@ impl SloPolicy {
         if !(self.weight > 0.0) || !self.weight.is_finite() {
             return Err("slo: weight must be finite and > 0".into());
         }
+        if let Some(o) = &self.overload {
+            o.validate()?;
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("p99_ms", self.p99_ms)
             .set("priority", self.priority as usize)
-            .set("weight", self.weight)
+            .set("weight", self.weight);
+        if let Some(o) = &self.overload {
+            j = j.set("overload", o.to_json());
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<SloPolicy, String> {
@@ -514,6 +709,12 @@ impl SloPolicy {
             weight: match j.get("weight") {
                 Json::Null => 1.0,
                 v => v.as_f64().ok_or("slo: 'weight' must be a number")?,
+            },
+            // Absent means unconditional admission (the pre-overload
+            // engine, and what every committed fixture scenario uses).
+            overload: match j.get("overload") {
+                Json::Null => None,
+                v => Some(OverloadPolicy::from_json(v)?),
             },
         })
     }
@@ -742,11 +943,12 @@ pub struct ClusterConfig {
     /// refill — completed items are kept).
     pub preempt_refill_cycles: u64,
     /// Deterministic fault schedule (board death/recovery, link
-    /// degradation, clock derating) injected into the multi-tenant
-    /// simulator's event stream. `None` (the default, and the JSON key
-    /// absent) runs a perfectly healthy fleet byte-for-byte identically to
-    /// the pre-fault engine. Requires a non-empty `tenants` array — the
-    /// single-network simulators never see faults.
+    /// degradation, clock derating, partial-capacity brownouts) injected
+    /// into the simulator's event stream. `None` (the default, and the
+    /// JSON key absent) runs a perfectly healthy fleet byte-for-byte
+    /// identically to the pre-fault engine. The single-network simulators
+    /// accept `board_down` and `clock_derate` only; `link_degrade` and
+    /// `compute_degrade` require a non-empty `tenants` array.
     pub faults: Option<FaultScript>,
 }
 
@@ -903,18 +1105,27 @@ impl ClusterConfig {
         }
         if let Some(f) = &self.faults {
             f.validate()?;
-            if self.tenants.is_empty() {
-                return Err(
-                    "cluster: faults require a non-empty 'tenants' array (the \
-                     single-network simulators do not inject faults)"
-                        .into(),
-                );
-            }
             for (i, ev) in f.events.iter().enumerate() {
+                // The single-network simulators understand board death and
+                // clock derating; link degradation and partial-capacity
+                // brownouts are multi-tenant-only semantics.
+                if self.tenants.is_empty()
+                    && matches!(
+                        ev,
+                        FaultEvent::LinkDegrade { .. } | FaultEvent::ComputeDegrade { .. }
+                    )
+                {
+                    return Err(format!(
+                        "cluster: faults events[{i}] requires a non-empty 'tenants' \
+                         array (the single-network simulators only inject \
+                         'board_down' and 'clock_derate')"
+                    ));
+                }
                 let (label, b) = match ev {
                     FaultEvent::BoardDown { board, .. } => ("board", *board),
                     FaultEvent::LinkDegrade { link, .. } => ("link", *link),
                     FaultEvent::ClockDerate { board, .. } => ("board", *board),
+                    FaultEvent::ComputeDegrade { board, .. } => ("board", *board),
                 };
                 if b >= self.boards {
                     return Err(format!(
@@ -1263,6 +1474,7 @@ mod tests {
                     p99_ms: 80.0,
                     priority: 2,
                     weight: 1.0,
+                    overload: None,
                 },
             },
             TenantSpec {
@@ -1281,6 +1493,7 @@ mod tests {
                     p99_ms: 5000.0,
                     priority: 0,
                     weight: 1.0,
+                    overload: None,
                 },
             },
         ]
@@ -1318,6 +1531,7 @@ mod tests {
                 p99_ms: 5.0,
                 priority: 1,
                 weight: w,
+                overload: None,
             };
             assert!(bad.validate().is_err(), "weight {w} must be rejected");
         }
@@ -1596,5 +1810,177 @@ mod tests {
             r#"{"events":[{"kind":"gamma_ray","at_ms":1.0}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_overload_policy() {
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[1].slo.overload = Some(OverloadPolicy {
+            deadline_ms: 2.0,
+            max_queue: 32,
+            retry: RetryPolicy {
+                max_attempts: 4,
+                backoff_base_ms: 0.5,
+                jitter: 0.25,
+            },
+        });
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+        // Absence is encoded by key omission: the no-overload tenant's
+        // serialized slo has no "overload" key (fixture byte-identity
+        // leans on this).
+        let t0 = c.tenants[0].to_json().to_string_compact();
+        assert!(!t0.contains("overload"));
+        // Retry block omitted → defaults.
+        let o = OverloadPolicy::from_json(
+            &parse(r#"{"deadline_ms": 1.0, "max_queue": 8}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(o.retry, RetryPolicy::default_policy());
+        o.validate().unwrap();
+    }
+
+    #[test]
+    fn overload_policy_validation() {
+        let good = OverloadPolicy {
+            deadline_ms: 1.0,
+            max_queue: 8,
+            retry: RetryPolicy::default_policy(),
+        };
+        good.validate().unwrap();
+        // max_attempts: 0 is legal — shed once, abandon immediately.
+        let mut once = good.clone();
+        once.retry.max_attempts = 0;
+        once.validate().unwrap();
+
+        let mut bad = good.clone();
+        bad.deadline_ms = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.max_queue = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.retry.backoff_base_ms = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.retry.jitter = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = good;
+        bad.retry.jitter = -0.1;
+        assert!(bad.validate().is_err());
+
+        // An invalid nested policy fails the whole tenant validation.
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.tenants[0].slo.overload = Some(OverloadPolicy {
+            deadline_ms: -1.0,
+            max_queue: 8,
+            retry: RetryPolicy::default_policy(),
+        });
+        assert!(c.validate().unwrap_err().contains("deadline_ms"));
+    }
+
+    #[test]
+    fn json_roundtrip_compute_degrade() {
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::ComputeDegrade {
+                    board: 1,
+                    capacity_fraction: 0.4,
+                    at_ms: 1.0,
+                    recover_ms: Some(4.0),
+                },
+                FaultEvent::ComputeDegrade {
+                    board: 2,
+                    capacity_fraction: 0.75,
+                    at_ms: 2.0,
+                    recover_ms: None,
+                },
+            ],
+        });
+        c.validate().unwrap();
+        let s = c.to_json().to_string_pretty();
+        let back = ClusterConfig::from_json_str(&s).unwrap();
+        assert_eq!(c, back);
+        // Permanent brownout serializes with no recover_ms key.
+        let ev = c.faults.as_ref().unwrap().events[1].to_json();
+        assert!(!ev.to_string_compact().contains("recover_ms"));
+    }
+
+    #[test]
+    fn compute_degrade_validation() {
+        for (name, frac, recover) in [
+            ("zero fraction", 0.0, None),
+            ("fraction above 1", 1.5, None),
+            ("recover before onset", 0.5, Some(0.5)),
+        ] {
+            let s = FaultScript {
+                events: vec![FaultEvent::ComputeDegrade {
+                    board: 0,
+                    capacity_fraction: frac,
+                    at_ms: 1.0,
+                    recover_ms: recover,
+                }],
+            };
+            assert!(s.validate().is_err(), "{name} must be rejected");
+        }
+        // Index check covers the new kind too.
+        let mut c = ClusterConfig::fleet_default();
+        c.tenants = two_tenants();
+        c.faults = Some(FaultScript {
+            events: vec![FaultEvent::ComputeDegrade {
+                board: 9,
+                capacity_fraction: 0.5,
+                at_ms: 1.0,
+                recover_ms: None,
+            }],
+        });
+        assert!(c.validate().unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn single_network_faults_allow_board_down_and_derate_only() {
+        // The ROADMAP follow-up: board_down + clock_derate scripts are now
+        // legal without tenants (the single-network simulators inject
+        // them)…
+        let mut c = ClusterConfig::fleet_default();
+        c.faults = Some(FaultScript {
+            events: vec![
+                FaultEvent::ClockDerate {
+                    board: 0,
+                    factor: 0.5,
+                    at_ms: 0.5,
+                },
+                FaultEvent::BoardDown {
+                    board: 1,
+                    at_ms: 1.0,
+                    recover_ms: Some(3.0),
+                },
+            ],
+        });
+        c.validate().unwrap();
+        // …while link_degrade and compute_degrade still require tenants.
+        for ev in [
+            FaultEvent::LinkDegrade {
+                link: 0,
+                factor: 0.5,
+                at_ms: 1.0,
+                until_ms: 2.0,
+            },
+            FaultEvent::ComputeDegrade {
+                board: 0,
+                capacity_fraction: 0.5,
+                at_ms: 1.0,
+                recover_ms: None,
+            },
+        ] {
+            let mut c = ClusterConfig::fleet_default();
+            c.faults = Some(FaultScript { events: vec![ev] });
+            assert!(c.validate().unwrap_err().contains("tenants"));
+        }
     }
 }

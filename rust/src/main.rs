@@ -39,7 +39,8 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "aggregate-ddr", takes_value: true, help: "cluster: shared off-chip bandwidth pool in bytes/cycle (omit to disable contention)", default: None },
         OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy, tenants)", default: None },
         OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities, DRR weights and preemption", default: None },
-        OptSpec { name: "faults", takes_value: true, help: "cluster: path to a FaultScript JSON (board_down / link_degrade / clock_derate events) injected into the multi-tenant engine; requires --tenants (or a config with tenants)", default: None },
+        OptSpec { name: "faults", takes_value: true, help: "cluster: path to a FaultScript JSON (board_down / link_degrade / clock_derate / compute_degrade events); board_down-with-recovery and clock_derate also work single-network, the rest require --tenants (or a config with tenants)", default: None },
+        OptSpec { name: "shed", takes_value: false, help: "cluster: print the per-tenant overload-shedding summary (offered / shed / retried / abandoned / goodput) — meaningful when a tenant carries an overload policy", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
         OptSpec { name: "trace", takes_value: true, help: "cluster: arm the telemetry sink and write the full trace (events, window samples, latency sketches) plus the report to this JSON file", default: None },
         OptSpec { name: "dashboard", takes_value: false, help: "cluster: arm the telemetry sink and print the ASCII fleet dashboard — per-board occupancy lanes with reshard/preemption markers", default: None },
@@ -465,12 +466,13 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             if let Some(f) = &r.faults {
                 println!(
                     "faults: {} board failure(s), {} recover(ies), {} link degrade(s), \
-                     {} clock derate(s), {} emergency re-shard(s); {} item(s) re-queued, \
-                     {} downtime cycles",
+                     {} clock derate(s), {} compute degrade(s), {} emergency re-shard(s); \
+                     {} item(s) re-queued, {} downtime cycles",
                     f.board_failures,
                     f.board_recoveries,
                     f.link_degrades,
                     f.clock_derates,
+                    f.compute_degrades,
                     f.emergency_reshards,
                     f.items_requeued,
                     f.downtime_cycles
@@ -480,6 +482,12 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                         "        pre-fault p99 {pre:.3} ms -> post-recovery p99 {post:.3} ms \
                          ({:.2}x)",
                         post / pre
+                    );
+                }
+                if let Some(rto) = f.recovery_time_ms {
+                    println!(
+                        "        recovery time: {rto:.3} ms from fault onset to the first \
+                         controller window back within 1.25x the pre-fault p99"
                     );
                 }
             }
@@ -518,6 +526,47 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                     ]);
                 }
                 println!("{}", tt.to_ascii());
+                // `--shed`: graceful-degradation ledger. Offered always
+                // equals completed + abandoned (the engine asserts it); the
+                // table shows where the lost work went.
+                if args.has_flag("shed") {
+                    if r.tenants.iter().any(|t| t.shed.is_some()) {
+                        let mut st = Table::new(&[
+                            "tenant", "offered", "completed", "shed", "retried", "abandoned",
+                            "goodput req/s",
+                        ])
+                        .title(&format!("overload shedding ({} boards)", r.boards))
+                        .label_col();
+                        for ts in &r.tenants {
+                            st.row(&[
+                                ts.name.clone(),
+                                ts.requests.to_string(),
+                                ts.completed.to_string(),
+                                ts.shed.unwrap_or(0).to_string(),
+                                ts.retried.unwrap_or(0).to_string(),
+                                ts.abandoned.unwrap_or(0).to_string(),
+                                format!("{:.1}", ts.goodput_rps.unwrap_or(0.0)),
+                            ]);
+                        }
+                        println!("{}", st.to_ascii());
+                        if let (Some(sh), Some(re), Some(ab), Some(g)) = (
+                            r.shed_total,
+                            r.retried_total,
+                            r.abandoned_total,
+                            r.goodput_rps,
+                        ) {
+                            println!(
+                                "fleet: {sh} shed, {re} retried, {ab} abandoned; goodput \
+                                 {g:.1} req/s"
+                            );
+                        }
+                    } else {
+                        println!(
+                            "note: --shed requested but no tenant carries an overload \
+                             policy — admission never sheds"
+                        );
+                    }
+                }
             }
         }
     }

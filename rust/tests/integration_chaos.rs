@@ -137,6 +137,7 @@ fn tenant(name: &str, seed: u64, rps: f64, requests: usize, mode: ShardMode) -> 
             p99_ms: 5.0,
             priority: 1,
             weight: 1.0,
+            overload: None,
         },
     }
 }
@@ -490,4 +491,19 @@ fn no_script_means_no_fault_keys_anywhere() {
     assert!(!s.contains("\"faults\""));
     assert!(!s.contains("slo_attainment_outage"));
     assert!(!s.contains("board_fail"));
+    // The graceful-degradation additions are equally opt-in: no overload
+    // policy and no compute-degrade script means none of their keys either.
+    for key in [
+        "\"shed\"",
+        "\"retried\"",
+        "\"abandoned\"",
+        "\"goodput_rps\"",
+        "\"compute_degrades\"",
+        "\"recovery_time_ms\"",
+        "\"shed_total\"",
+        "\"retried_total\"",
+        "\"abandoned_total\"",
+    ] {
+        assert!(!s.contains(key), "script-free run must not grow {key}");
+    }
 }

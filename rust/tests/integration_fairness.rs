@@ -64,6 +64,7 @@ fn burst_tenant(name: &str, requests: usize, weight: f64) -> TenantSpec {
             p99_ms: 1e9, // fairness scenarios measure shares, not SLOs
             priority: 1,
             weight,
+            overload: None,
         },
     }
 }

@@ -376,6 +376,7 @@ fn fixture_mt_reshard_loadstep() {
                 p99_ms: 0.5,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -391,6 +392,7 @@ fn fixture_mt_reshard_loadstep() {
                 p99_ms: 5000.0,
                 priority: 0,
                 weight: 1.0,
+                overload: None,
             },
         },
     ];
@@ -432,6 +434,7 @@ fn spike_specs_for_fixture() -> Vec<TenantSpec> {
                 p99_ms: 1.0,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -450,6 +453,7 @@ fn spike_specs_for_fixture() -> Vec<TenantSpec> {
                 p99_ms: 2.0,
                 priority: 0,
                 weight: 1.0,
+                overload: None,
             },
         },
     ]

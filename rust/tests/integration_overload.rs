@@ -1,0 +1,616 @@
+//! Graceful-degradation battery: overload shedding with client
+//! retry/backoff, partial-capacity (brownout) faults, and their
+//! composition — seeded, deterministic, and replayable per case.
+//!
+//! Properties held across ≥64 randomized scenarios:
+//!
+//! * **Shed conservation** — with an `OverloadPolicy` armed, every offered
+//!   request either completes or is abandoned, exactly once:
+//!   `offered == completed + abandoned` per tenant, and the fleet rollups
+//!   equal the per-tenant sums. The shed/retry/abandon trace events agree
+//!   with the report's counters one for one.
+//! * **Co-tenant protection** — a best-effort tenant flooding its own
+//!   admission queue never touches the policy-less interactive tenant: it
+//!   is never shed, never abandons, completes in full, and holds its p99
+//!   SLO through the flood (priority preemption plus shedding keep the
+//!   queues it shares shallow).
+//! * **Degrade-then-recover accounting** — a `ComputeDegrade` brownout
+//!   scales service through the cost model while it holds and counts in
+//!   the `FaultSummary`; at the battery's low load the post-recovery p99
+//!   returns to within 1.25× of the pre-fault baseline, and the armed
+//!   controller stamps a `recovery_time_ms` once its window p99 falls back
+//!   inside that band.
+//! * **No-policy byte-identity** — with no overload policy and no
+//!   `ComputeDegrade`, the report JSON must not grow a single new key:
+//!   the invariant that keeps every previously committed golden fixture
+//!   byte-identical.
+//!
+//! The golden fixture (`overload_shed_brownout.json`) pins the full
+//! `decoilfnet-fleet-trace/v1` document for a fixed flood-plus-brownout
+//! scene, with the same self-seeding allowlist discipline as the other
+//! fixture suites (never on CI).
+
+use std::path::PathBuf;
+
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{
+    place_tenants, simulate_fleet_multi_tenant, simulate_fleet_multi_tenant_traced, ShardPlan,
+    TenantWorkload, TraceSink,
+};
+use decoilfnet::config::{
+    tiny_vgg, AccelConfig, ClusterConfig, FaultEvent, FaultScript, OverloadPolicy, PreemptMode,
+    ReshardPolicy, RetryPolicy, ShardMode, SloPolicy, TenantSpec,
+};
+use decoilfnet::util::json::{parse, Json};
+use decoilfnet::util::prop::{check, PropConfig};
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// Fixtures authored in a toolchain-less environment that may self-seed on
+/// their first run — same allowlist discipline as `integration_fixtures.rs`:
+/// only named files may seed, and never on CI.
+const SEEDABLE_FIXTURES: &[&str] = &["overload_shed_brownout.json"];
+
+/// Structural fixture comparison (exact except floats at 1e-9 relative),
+/// with the same seed/update/CI semantics as `integration_fixtures.rs`.
+fn assert_matches_fixture(name: &str, actual: &Json) {
+    let path = fixture_path(name);
+    let update = std::env::var("DECOILFNET_UPDATE_FIXTURES").map(|v| v == "1") == Ok(true);
+    if !update && !path.exists() && std::env::var_os("GITHUB_ACTIONS").is_some() {
+        panic!(
+            "fixture {name} is not committed (self-seeding is disabled on CI): \
+             run `cargo test --test integration_overload` locally and commit \
+             rust/tests/fixtures/{name}"
+        );
+    }
+    if update || (!path.exists() && SEEDABLE_FIXTURES.contains(&name)) {
+        std::fs::write(&path, actual.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+        eprintln!(
+            "{} fixture {name} — commit the generated file",
+            if update { "regenerated" } else { "seeded" }
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()));
+    let expected = parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()));
+    let mut diffs = Vec::new();
+    diff_json("$", &expected, actual, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "overload run diverged from fixture {name} at:\n  {}\n\
+         (intentional model change? regenerate with \
+         DECOILFNET_UPDATE_FIXTURES=1 and commit the diff)",
+        diffs.join("\n  ")
+    );
+}
+
+/// Structural comparison: exact except floats at 1e-9 relative tolerance.
+fn diff_json(path: &str, want: &Json, got: &Json, out: &mut Vec<String>) {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if (a - b).abs() > tol {
+                out.push(format!("{path}: {a} vs {b}"));
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            for k in a.keys().chain(b.keys().filter(|k| !a.contains_key(*k))) {
+                match (a.get(k), b.get(k)) {
+                    (Some(x), Some(y)) => diff_json(&format!("{path}.{k}"), x, y, out),
+                    (Some(_), None) => out.push(format!("{path}.{k}: missing from report")),
+                    (None, Some(_)) => out.push(format!("{path}.{k}: not in fixture")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                out.push(format!("{path}: array len {} vs {}", a.len(), b.len()));
+            } else {
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    diff_json(&format!("{path}[{i}]"), x, y, out);
+                }
+            }
+        }
+        (a, b) => {
+            if a != b {
+                out.push(format!("{path}: {a:?} vs {b:?}"));
+            }
+        }
+    }
+}
+
+/// The protected tenant: a Poisson interactive stream, high priority, a
+/// real p99 SLO, and — crucially — no overload policy: the shedding
+/// machinery must never touch it.
+fn interactive(requests: usize, rps: f64) -> TenantSpec {
+    TenantSpec {
+        name: "interactive".to_string(),
+        network: tiny_vgg(),
+        weights_seed: 1,
+        arrival_rps: rps,
+        requests,
+        load_steps: vec![],
+        mode: ShardMode::Replicated,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 1.0,
+            priority: 2,
+            weight: 1.0,
+            overload: None,
+        },
+    }
+}
+
+/// The flooding tenant: a saturating best-effort burst carrying the
+/// overload policy under test.
+fn flooder(requests: usize, policy: OverloadPolicy) -> TenantSpec {
+    TenantSpec {
+        name: "best-effort".to_string(),
+        network: tiny_vgg(),
+        weights_seed: 2,
+        arrival_rps: f64::INFINITY,
+        requests,
+        load_steps: vec![],
+        mode: ShardMode::Replicated,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 5000.0,
+            priority: 0,
+            weight: 1.0,
+            overload: Some(policy),
+        },
+    }
+}
+
+fn place(fleet: &[AccelConfig], specs: &[TenantSpec]) -> (Vec<Weights>, Vec<ShardPlan>) {
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(fleet, &workloads).unwrap();
+    (weights, plans)
+}
+
+/// The battery's fleet config, shaped like the deterministic preemption
+/// tests that pin the hi-priority protection bound: restart-mode
+/// preemption, infinite wire, a single shared batch cap.
+fn base_cfg(boards: usize, max_batch: usize, seed: u64) -> ClusterConfig {
+    let mut c = ClusterConfig::fleet_default();
+    c.boards = boards;
+    c.mode = ShardMode::Replicated;
+    c.board_specs = vec![];
+    c.link_bytes_per_cycle = f64::INFINITY;
+    c.link_latency_cycles = 0;
+    c.aggregate_ddr_bytes_per_cycle = None;
+    c.arrival_rps = f64::INFINITY;
+    c.load_steps = vec![];
+    c.requests = 1;
+    c.max_batch = max_batch;
+    c.max_wait_us = 0.0;
+    c.seed = seed;
+    c.reshard = None;
+    c.tenants = vec![];
+    c.preempt_mode = PreemptMode::Restart;
+    c.preempt_restart_cycles = 500;
+    c.preempt_refill_cycles = 100;
+    c.faults = None;
+    c
+}
+
+#[derive(Debug)]
+struct ShedCase {
+    boards: usize,
+    max_batch: usize,
+    flood: usize,
+    max_queue: usize,
+    max_attempts: u32,
+    backoff_base_ms: f64,
+    jitter: f64,
+    seed: u64,
+}
+
+/// ≥64 seeded flood scenarios: shed conservation, rollup/trace agreement,
+/// and co-tenant p99 protection.
+#[test]
+fn prop_shedding_conserves_offered_work_and_protects_the_co_tenant() {
+    let cfg = AccelConfig::paper_default();
+    check(
+        "overload-shed-battery",
+        PropConfig { cases: 64, seed: 0x5EDCA5E },
+        |r| ShedCase {
+            boards: r.range_usize(2, 3),
+            max_batch: r.range_usize(2, 8),
+            flood: [96, 160, 256][r.below(3) as usize],
+            max_queue: r.range_usize(2, 8),
+            max_attempts: r.range_u64(0, 3) as u32,
+            backoff_base_ms: 0.05 + 0.05 * r.range_usize(0, 3) as f64,
+            jitter: 0.25 * r.range_usize(0, 2) as f64,
+            seed: r.range_u64(1, 1u64 << 40),
+        },
+        |case| {
+            let fleet = vec![cfg.clone(); case.boards];
+            let specs = vec![
+                interactive(24, 2000.0),
+                flooder(
+                    case.flood,
+                    OverloadPolicy {
+                        // Generous deadline: queue depth is the shedding
+                        // driver, so the case split (retry vs abandon) is
+                        // controlled by max_attempts alone.
+                        deadline_ms: 50.0,
+                        max_queue: case.max_queue,
+                        retry: RetryPolicy {
+                            max_attempts: case.max_attempts,
+                            backoff_base_ms: case.backoff_base_ms,
+                            jitter: case.jitter,
+                        },
+                    },
+                ),
+            ];
+            let (weights, plans) = place(&fleet, &specs);
+            let mut ccfg = base_cfg(case.boards, case.max_batch, case.seed);
+            ccfg.tenants = specs.clone();
+            let mut sink = TraceSink::enabled();
+            let r = simulate_fleet_multi_tenant_traced(
+                &cfg, &fleet, &specs, &weights, &plans, &ccfg, &mut sink,
+            );
+            let (hi, lo) = (&r.tenants[0], &r.tenants[1]);
+
+            // Co-tenant protection: the policy-less tenant is untouched.
+            if hi.completed != 24 {
+                return Err(format!("interactive lost work: {}/24", hi.completed));
+            }
+            if hi.shed != Some(0) || hi.retried != Some(0) || hi.abandoned != Some(0) {
+                return Err(format!(
+                    "policy-less tenant touched by shedding: {:?}/{:?}/{:?}",
+                    hi.shed, hi.retried, hi.abandoned
+                ));
+            }
+            if !hi.slo_met {
+                return Err(format!(
+                    "flood broke the protected p99: {} > slo {}",
+                    hi.p99_ms, hi.slo_p99_ms
+                ));
+            }
+
+            // Shed conservation on the flooder.
+            let (shed, retried, abandoned) = (
+                lo.shed.ok_or("shed missing")?,
+                lo.retried.ok_or("retried missing")?,
+                lo.abandoned.ok_or("abandoned missing")?,
+            );
+            if lo.completed as u64 + abandoned != case.flood as u64 {
+                return Err(format!(
+                    "offered != completed + abandoned: {} + {abandoned} != {}",
+                    lo.completed, case.flood
+                ));
+            }
+            if shed == 0 {
+                return Err(format!(
+                    "a {}-burst into a {}-deep queue must shed",
+                    case.flood, case.max_queue
+                ));
+            }
+            if case.max_attempts == 0 {
+                // No retry budget: every shed abandons on the spot.
+                if retried != 0 || shed != abandoned {
+                    return Err(format!(
+                        "attempts=0 must abandon per shed: shed {shed} retried {retried} \
+                         abandoned {abandoned}"
+                    ));
+                }
+            } else if retried == 0 {
+                return Err("shed requests with retry budget never came back".into());
+            }
+            let gp = lo.goodput_rps.ok_or("goodput missing")?;
+            if gp > lo.throughput_rps + 1e-9 {
+                return Err(format!(
+                    "goodput {gp} exceeds offered-based throughput {}",
+                    lo.throughput_rps
+                ));
+            }
+
+            // Rollups and trace agree with the per-tenant counters.
+            if r.shed_total != Some(shed)
+                || r.retried_total != Some(retried)
+                || r.abandoned_total != Some(abandoned)
+            {
+                return Err(format!(
+                    "rollups diverge: {:?}/{:?}/{:?} vs {shed}/{retried}/{abandoned}",
+                    r.shed_total, r.retried_total, r.abandoned_total
+                ));
+            }
+            let count =
+                |k: &str| sink.events.iter().filter(|e| e.kind() == k).count() as u64;
+            for (label, want, got) in [
+                ("shed", shed, count("shed")),
+                ("retry", retried, count("retry")),
+                ("abandon", abandoned, count("abandon")),
+            ] {
+                if want != got {
+                    return Err(format!("{label}: counter {want} != trace {got}"));
+                }
+            }
+            if r.completed != hi.completed + lo.completed {
+                return Err(format!(
+                    "fleet completed {} != tenant sum {}",
+                    r.completed,
+                    hi.completed + lo.completed
+                ));
+            }
+
+            // Deterministic, jittered backoff and all: two plain runs agree
+            // to the byte, and the armed sink never perturbed the outcome
+            // (the `telemetry` key is the traced report's only delta).
+            let r2 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+            let r3 = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+            if r2.to_json().to_string_pretty() != r3.to_json().to_string_pretty() {
+                return Err("shedding run is not byte-deterministic".into());
+            }
+            if r2.makespan_cycles != r.makespan_cycles
+                || (r2.tenants[1].shed, r2.tenants[1].retried, r2.tenants[1].abandoned)
+                    != (Some(shed), Some(retried), Some(abandoned))
+            {
+                return Err("armed trace sink perturbed the shed outcome".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct DegradeCase {
+    boards: usize,
+    degraded: usize,
+    fraction: f64,
+    fail_frac: f64,
+    recover_frac: f64,
+    max_batch: usize,
+    seed: u64,
+}
+
+/// ≥32 seeded brownout scenarios at structural low load: capacity
+/// accounting (`compute_degrades`), full conservation, bounded recovery of
+/// the post-fault p99, and a stamped recovery time from the armed
+/// controller.
+#[test]
+fn prop_degrade_then_recover_accounts_capacity() {
+    let cfg = AccelConfig::paper_default();
+    const REQUESTS: usize = 128;
+    const RPS: f64 = 400.0;
+    let span_ms = REQUESTS as f64 / RPS * 1e3;
+    check(
+        "overload-degrade-battery",
+        PropConfig { cases: 32, seed: 0xB70_0D },
+        |r| DegradeCase {
+            boards: r.range_usize(2, 3),
+            degraded: r.range_usize(0, 2),
+            fraction: 0.2 + 0.1 * r.range_usize(0, 6) as f64,
+            fail_frac: 0.30 + 0.01 * r.range_usize(0, 8) as f64,
+            recover_frac: 0.52 + 0.01 * r.range_usize(0, 8) as f64,
+            max_batch: r.range_usize(2, 8),
+            seed: r.range_u64(1, 1u64 << 40),
+        },
+        |case| {
+            let fleet = vec![cfg.clone(); case.boards];
+            let degraded = case.degraded % case.boards;
+            let specs = vec![interactive(REQUESTS, RPS), {
+                let mut s = interactive(REQUESTS, RPS);
+                s.name = "second".to_string();
+                s.weights_seed = 2;
+                s.slo.priority = 1;
+                s
+            }];
+            let (weights, plans) = place(&fleet, &specs);
+            let mut ccfg = base_cfg(case.boards, case.max_batch, case.seed);
+            // Armed controller: brownouts trigger capacity-aware
+            // re-placement and the recovery-time accounting.
+            ccfg.reshard = Some(ReshardPolicy {
+                window: 32,
+                util_skew: 0.9,
+                p99_ms: 50.0,
+                cooldown_windows: 1,
+                migration_factor: 0.0,
+            });
+            ccfg.tenants = specs.clone();
+            ccfg.faults = Some(FaultScript {
+                events: vec![FaultEvent::ComputeDegrade {
+                    board: degraded,
+                    capacity_fraction: case.fraction,
+                    at_ms: span_ms * case.fail_frac,
+                    recover_ms: Some(span_ms * case.recover_frac),
+                }],
+            });
+            let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+
+            // A brownout sheds capacity, never requests.
+            for t in &r.tenants {
+                if t.completed != REQUESTS {
+                    return Err(format!("{}: {}/{REQUESTS} completed", t.name, t.completed));
+                }
+            }
+            let f = r.faults.as_ref().ok_or("faults summary missing")?;
+            if f.compute_degrades != 1 {
+                return Err(format!("compute_degrades {} != 1", f.compute_degrades));
+            }
+            if f.board_failures != 0 || f.items_requeued != 0 {
+                return Err("a brownout is not an outage: nothing fails or requeues".into());
+            }
+
+            // Bounded recovery at structural low load, and the controller
+            // stamps how long it took.
+            let (pre, post) = match (f.pre_fault_p99_ms, f.recovery_p99_ms) {
+                (Some(a), Some(b)) => (a, b),
+                other => return Err(format!("pre/post p99 must both exist, got {other:?}")),
+            };
+            if post > 1.25 * pre {
+                return Err(format!(
+                    "recovery p99 {post:.4} ms > 1.25 × pre-fault p99 {pre:.4} ms"
+                ));
+            }
+            let rto = f.recovery_time_ms.ok_or("recovery_time_ms missing")?;
+            let makespan_ms =
+                r.makespan_cycles as f64 / (cfg.platform.freq_mhz * 1e3);
+            if !(rto > 0.0 && rto <= makespan_ms) {
+                return Err(format!("RTO {rto} outside (0, {makespan_ms}]"));
+            }
+
+            // No overload policy in this scenario: the shed keys stay out
+            // of the report even though a fault script is armed.
+            let s = r.to_json().to_string_compact();
+            for key in ["\"shed\"", "\"retried\"", "\"abandoned\"", "\"goodput_rps\""] {
+                if s.contains(key) {
+                    return Err(format!("degrade-only run grew {key}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fixed flood-plus-brownout scene behind the golden fixture: a
+/// 256-request best-effort burst with retry/backoff, board 0 at 30%
+/// capacity through the middle of the flood, controller armed.
+fn shed_brownout_scene(
+    fleet: &[AccelConfig],
+) -> (Vec<TenantSpec>, Vec<Weights>, Vec<ShardPlan>, ClusterConfig) {
+    let mut hi = interactive(64, 2000.0);
+    hi.slo.p99_ms = 2.0; // brownout headroom: ~2 batch services at 30%
+    let specs = vec![
+        hi,
+        flooder(
+            256,
+            OverloadPolicy {
+                deadline_ms: 2.0,
+                max_queue: 8,
+                retry: RetryPolicy {
+                    max_attempts: 3,
+                    backoff_base_ms: 0.2,
+                    jitter: 0.5,
+                },
+            },
+        ),
+    ];
+    let (weights, plans) = place(fleet, &specs);
+    let mut ccfg = base_cfg(2, 8, 7);
+    ccfg.reshard = Some(ReshardPolicy {
+        window: 16,
+        util_skew: 0.9,
+        p99_ms: 50.0,
+        cooldown_windows: 1,
+        migration_factor: 0.0,
+    });
+    ccfg.tenants = specs.clone();
+    ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::ComputeDegrade {
+            board: 0,
+            capacity_fraction: 0.3,
+            at_ms: 0.5,
+            recover_ms: Some(3.0),
+        }],
+    });
+    (specs, weights, plans, ccfg)
+}
+
+/// Overload shedding composes with a brownout: best-effort work sheds
+/// first while the protected tenant completes in full with its SLO intact,
+/// and the whole `decoilfnet-fleet-trace/v1` document is byte-stable and
+/// pinned by the golden fixture.
+#[test]
+fn fixture_overload_shed_brownout() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let (specs, weights, plans, ccfg) = shed_brownout_scene(&fleet);
+    let mut sink = TraceSink::enabled();
+    let r = simulate_fleet_multi_tenant_traced(
+        &cfg, &fleet, &specs, &weights, &plans, &ccfg, &mut sink,
+    );
+    let (hi, lo) = (&r.tenants[0], &r.tenants[1]);
+    assert_eq!(hi.completed, 64, "protected tenant completes in full");
+    assert_eq!(hi.abandoned, Some(0));
+    assert!(hi.slo_met, "hi p99 {} > slo {}", hi.p99_ms, hi.slo_p99_ms);
+    assert!(lo.shed.unwrap() > 0, "the flood must shed");
+    assert_eq!(
+        lo.completed as u64 + lo.abandoned.unwrap(),
+        256,
+        "offered == completed + abandoned through the brownout"
+    );
+    let f = r.faults.as_ref().expect("script armed");
+    assert_eq!(f.compute_degrades, 1);
+    assert_eq!(f.board_failures, 0);
+
+    let doc = Json::obj()
+        .set("schema", "decoilfnet-fleet-trace/v1")
+        .set("report", r.to_json())
+        .set("trace", sink.to_json());
+    // Byte-stability first: an identical in-process re-run must reproduce
+    // the document exactly.
+    let mut sink2 = TraceSink::enabled();
+    let r2 = simulate_fleet_multi_tenant_traced(
+        &cfg, &fleet, &specs, &weights, &plans, &ccfg, &mut sink2,
+    );
+    let doc2 = Json::obj()
+        .set("schema", "decoilfnet-fleet-trace/v1")
+        .set("report", r2.to_json())
+        .set("trace", sink2.to_json());
+    assert_eq!(
+        doc.to_string_pretty(),
+        doc2.to_string_pretty(),
+        "flood + brownout runs must be byte-deterministic"
+    );
+    assert_matches_fixture("overload_shed_brownout.json", &doc);
+}
+
+/// Overload is strictly opt-in: the same scene with the policy stripped
+/// and no fault script reports none of the new keys — the invariant that
+/// keeps every previously committed golden fixture byte-identical.
+#[test]
+fn no_policy_means_no_shed_keys_anywhere() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let (mut specs, weights, plans, mut ccfg) = shed_brownout_scene(&fleet);
+    for s in &mut specs {
+        s.slo.overload = None;
+    }
+    ccfg.tenants = specs.clone();
+    ccfg.faults = None;
+    let r = simulate_fleet_multi_tenant(&cfg, &fleet, &specs, &weights, &plans, &ccfg);
+    assert!(r.faults.is_none());
+    let s = r.to_json().to_string_compact();
+    for key in [
+        "\"faults\"",
+        "slo_attainment_outage",
+        "\"shed\"",
+        "\"retried\"",
+        "\"abandoned\"",
+        "\"goodput_rps\"",
+        "\"compute_degrades\"",
+        "\"recovery_time_ms\"",
+        "\"shed_total\"",
+        "\"retried_total\"",
+        "\"abandoned_total\"",
+    ] {
+        assert!(!s.contains(key), "no-policy run must not grow {key}");
+    }
+}

@@ -157,6 +157,7 @@ fn tenant(name: &str, seed: u64, rps: f64, requests: usize, priority: u8) -> Ten
             p99_ms: if priority > 0 { 1.0 } else { 2.0 },
             priority,
             weight: 1.0,
+            overload: None,
         },
     }
 }

@@ -32,6 +32,7 @@ fn spike_specs() -> Vec<TenantSpec> {
                 p99_ms: 1.0,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -52,6 +53,7 @@ fn spike_specs() -> Vec<TenantSpec> {
                 p99_ms: 2.0,
                 priority: 0,
                 weight: 1.0,
+                overload: None,
             },
         },
     ]
@@ -311,6 +313,7 @@ fn loadstep_specs(requests: usize, with_step: bool) -> Vec<TenantSpec> {
                 p99_ms: 0.5,
                 priority: 2,
                 weight: 1.0,
+                overload: None,
             },
         },
         TenantSpec {
@@ -326,6 +329,7 @@ fn loadstep_specs(requests: usize, with_step: bool) -> Vec<TenantSpec> {
                 p99_ms: 5000.0,
                 priority: 0,
                 weight: 1.0,
+                overload: None,
             },
         },
     ]

@@ -290,6 +290,62 @@ class ChaosRows(CheckPairBase):
         self.assertTrue(self.check(base, doc({"chaos_items_requeued": metric(1.0, "lower")})))
 
 
+class ShedRows(CheckPairBase):
+    """The graceful-degradation rows (PR 8): the cluster bench's overload
+    act floods a best-effort tenant through a brownout and emits the
+    shed-aware goodput, the abandon rate, and the recovery-time objective
+    of the chaos scene. Same untracked -> exempt -> armed lifecycle as the
+    mt_*, telemetry, and chaos rows; once armed, collapsing goodput or a
+    blown RTO gates like any tracked metric."""
+
+    SHED = {
+        "shed_goodput_rps": metric(5200.0, "higher", gate=False),
+        "shed_abandon_rate": metric(0.18, "lower", gate=False),
+        "chaos_rto_ms": metric(42.0, "lower", gate=False),
+    }
+
+    def test_new_rows_in_current_only_are_untracked_and_pass(self):
+        # First CI run after the overload act lands: the committed baseline
+        # predates the rows, so they report as untracked.
+        base = doc({"replicated_fused_ideal_rps_b1": metric(37.07)})
+        cur_metrics = {"replicated_fused_ideal_rps_b1": metric(37.07)}
+        cur_metrics.update(self.SHED)
+        self.assertTrue(self.check(base, doc(cur_metrics)))
+
+    def test_exempt_shed_rows_may_drift_without_failing(self):
+        # An admission-model change halving goodput or tripling the abandon
+        # rate must never fail the gate while the rows ride exempt.
+        base = doc(dict(self.SHED))
+        drifted = {
+            "shed_goodput_rps": metric(2100.0, "higher"),
+            "shed_abandon_rate": metric(0.55, "lower"),
+            "chaos_rto_ms": metric(130.0, "lower"),
+        }
+        self.assertTrue(self.check(base, doc(drifted)))
+
+    def test_exempt_shed_rows_may_disappear(self):
+        # e.g. a bench invocation without the overload act.
+        base = doc(dict(self.SHED))
+        self.assertTrue(self.check(base, doc({"other": metric(1.0)})))
+
+    def test_armed_goodput_gates_in_the_higher_direction(self):
+        # Once armed, a collapse in shed-aware goodput fails the pair.
+        base = doc({"shed_goodput_rps": metric(5200.0, "higher")})
+        self.assertFalse(
+            self.check(base, doc({"shed_goodput_rps": metric(3000.0, "higher")}))
+        )
+        self.assertTrue(
+            self.check(base, doc({"shed_goodput_rps": metric(5400.0, "higher")}))
+        )
+
+    def test_armed_rto_gates_in_the_lower_direction(self):
+        # A fleet that takes materially longer to return within 1.25× of
+        # its pre-fault p99 fails the armed pair.
+        base = doc({"chaos_rto_ms": metric(42.0, "lower")})
+        self.assertFalse(self.check(base, doc({"chaos_rto_ms": metric(90.0, "lower")})))
+        self.assertTrue(self.check(base, doc({"chaos_rto_ms": metric(40.0, "lower")})))
+
+
 class MultiPairMain(CheckPairBase):
     def run_main(self, argv):
         old = sys.argv
