@@ -35,6 +35,11 @@
 //!    compute-degrade brownout — the shed-aware goodput and the abandon
 //!    rate ship as gate-exempt `shed_*` rows while the protected
 //!    interactive tenant's SLO holds.
+//! 9. **Interconnect fabric**: the same pipelined chain inside one rack
+//!    vs split across two racks of a thin-uplink leaf-spine fabric —
+//!    identical payload, different route; the makespan ratio ships as
+//!    the gate-exempt `fabric_locality_speedup` row beside the hot
+//!    uplink's `fabric_uplink_util`.
 //!
 //! Deterministic by construction (seeded arrivals, closed-form service
 //! times), so the emitted metrics are bit-reproducible across machines —
@@ -51,9 +56,9 @@ use decoilfnet::cluster::{
     TenantWorkload, TraceSink,
 };
 use decoilfnet::config::{
-    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, FaultEvent, FaultScript, LoadStep,
-    OverloadPolicy, Platform, PreemptMode, ReshardPolicy, RetryPolicy, ShardMode, SloPolicy,
-    TenantSpec,
+    tiny_vgg, vgg16_prefix, AccelConfig, ClusterConfig, FabricSpec, FaultEvent, FaultScript,
+    LoadStep, OverloadPolicy, Platform, PreemptMode, ReshardPolicy, RetryPolicy, ShardMode,
+    SloPolicy, TenantSpec,
 };
 use decoilfnet::coordinator::{best_plan, Objective};
 use decoilfnet::util::json::Json;
@@ -90,6 +95,7 @@ fn sweep_cfg(boards: usize, mode: ShardMode, aggregate: Option<f64>) -> ClusterC
         preempt_mode: PreemptMode::Restart,
         preempt_refill_cycles: 100,
         faults: None,
+        fabric: None,
     }
 }
 
@@ -864,6 +870,60 @@ fn main() {
     );
 
     // ------------------------------------------------------------------
+    // Act 9: interconnect fabric — one pipelined chain placed inside a
+    // rack vs split across two racks of a leaf-spine fabric with a thin
+    // uplink. Cross-rack boundary volumes cross four segments instead of
+    // one and serialize on both racks' uplinks, so locality is worth
+    // real makespan; the speedup and the hot uplink's busy fraction
+    // ship gate-exempt as `fabric_*` rows.
+    // ------------------------------------------------------------------
+    let fab_spec = FabricSpec {
+        uplink_bytes_per_cycle: 1.0,
+        ..FabricSpec::leaf_spine(2)
+    };
+    let fab_src = FusionPlan::unfused(7);
+    let mut fab_local = ShardPlan::pipelined(&cfg, &net, &weights, &fab_src, 2);
+    fab_local.boards = 4; // racks {0, 1} and {2, 3}
+    let mut fab_cross = fab_local.clone();
+    fab_cross.shards[1].board = 2; // second stage exiled to rack 1
+    let mut fab_ccfg = sweep_cfg(4, ShardMode::Pipelined, None);
+    fab_ccfg.requests = 96;
+    fab_ccfg.fabric = Some(fab_spec);
+    let r_fab_local = simulate_fleet(&cfg, &fab_local, &fab_ccfg);
+    let r_fab_cross = simulate_fleet(&cfg, &fab_cross, &fab_ccfg);
+    assert_eq!(
+        r_fab_local.link_bytes_total, r_fab_cross.link_bytes_total,
+        "placement moves the route, not the payload"
+    );
+    assert!(
+        r_fab_cross.makespan_cycles > r_fab_local.makespan_cycles,
+        "cross-rack boundaries must cost makespan ({} vs {})",
+        r_fab_cross.makespan_cycles,
+        r_fab_local.makespan_cycles
+    );
+    let fabric_locality_speedup =
+        r_fab_cross.makespan_cycles as f64 / r_fab_local.makespan_cycles as f64;
+    let fab_sum = r_fab_cross.fabric.as_ref().expect("fabric armed");
+    let fabric_uplink_util = fab_sum
+        .segments
+        .iter()
+        .filter(|s| s.kind == "uplink")
+        .map(|s| s.utilization)
+        .fold(0.0f64, f64::max);
+    assert!(
+        fabric_uplink_util > 0.0,
+        "the uplinks carried the boundary traffic"
+    );
+    println!(
+        "fabric locality (leaf-spine, 2 racks x 2 boards, uplink 1 B/cyc): in-rack makespan \
+         {} cycles vs cross-rack {} ({:.3}x); hot uplink busy {:.0}%",
+        r_fab_local.makespan_cycles,
+        r_fab_cross.makespan_cycles,
+        fabric_locality_speedup,
+        100.0 * fabric_uplink_util,
+    );
+
+    // ------------------------------------------------------------------
     // BENCH_cluster.json: the tracked trajectory point. Every value here is
     // a deterministic model output (cycles → seconds at a fixed clock), so
     // a >10% move is a real model change, not noise.
@@ -1009,6 +1069,14 @@ fn main() {
             )
             .set("shed_goodput_rps", exempt(shed_goodput, "higher"))
             .set("shed_abandon_rate", exempt(shed_abandon_rate, "lower"));
+        // Fabric locality headline rows (act 9) — gate-exempt on the
+        // same CI-artifact arming path as the other fleet trend rows.
+        m = m
+            .set(
+                "fabric_locality_speedup",
+                exempt(fabric_locality_speedup, "higher"),
+            )
+            .set("fabric_uplink_util", exempt(fabric_uplink_util, "lower"));
         let out = Json::obj()
             .set("schema", "decoilfnet-cluster-bench/v1")
             .set("seeded", true)

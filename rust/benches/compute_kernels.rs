@@ -173,6 +173,7 @@ fn main() {
         preempt_mode: PreemptMode::Restart,
         preempt_refill_cycles: 100,
         faults: None,
+        fabric: None,
     };
     // Determinism is the gated invariant now that the legacy differential
     // oracle retired: re-running a simulator must reproduce the report

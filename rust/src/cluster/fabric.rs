@@ -1,0 +1,496 @@
+//! Rack-scale routed interconnect fabric.
+//!
+//! The paper's core argument is that inter-layer fusion wins by keeping
+//! boundary traffic off the expensive shared channel (external DDR); at
+//! fleet scale the analogous shared channel is the rack interconnect. The
+//! point-to-point [`LinkChannel`]s the simulators grew up with give every
+//! pipelined chain a private wire per stage boundary, so co-tenant
+//! transfers, migration bills and fault drains can never contend with each
+//! other. A [`Fabric`] replaces those private wires with a routed topology:
+//!
+//! * boards map to racks in contiguous chunks
+//!   ([`FabricSpec::boards_per_rack`]), mirroring the rack order
+//!   `board_specs` already uses;
+//! * every rack owns one **intra-rack backplane segment**, and racks are
+//!   joined by **uplink segments** per the [`FabricTopology`] — one
+//!   rack-to-spine uplink each on a leaf-spine, one wire per adjacent rack
+//!   pair on a ring;
+//! * [`Fabric::route`] returns the segment path a `src → dst` transfer
+//!   crosses, and [`Fabric::transfer`] bills the bytes over *every* hop on
+//!   the **shared** serializing timeline of each segment (the same
+//!   occupancy model as [`LinkChannel`], which each segment wraps).
+//!
+//! Because segments are shared, a saturated uplink is a producible
+//! bottleneck: two pipelined chains placed across the same rack boundary
+//! queue behind each other on that rack's uplink, which is exactly the
+//! contention the topology-aware placement in [`crate::cluster::shard`]
+//! exists to avoid. The fabric is *physical* state — it persists across
+//! re-shards (plans change, wires do not), so its byte odometers conserve
+//! across mid-run plan switches by construction.
+//!
+//! Everything here is strictly opt-in: with [`ClusterConfig::fabric`]
+//! `None` the simulators never construct a `Fabric` and keep the original
+//! point-to-point arithmetic byte-for-byte.
+//!
+//! [`ClusterConfig::fabric`]: crate::config::ClusterConfig::fabric
+
+use crate::cluster::link::{InterBoardLink, LinkChannel};
+use crate::config::{FabricSpec, FabricTopology};
+use crate::util::json::Json;
+
+/// What a fabric segment physically is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// A rack's internal backplane: every transfer entering or leaving a
+    /// board of that rack crosses it.
+    Intra,
+    /// A leaf-spine rack uplink: all of one rack's cross-rack traffic, in
+    /// both directions, serializes here.
+    Uplink,
+    /// A ring wire joining two adjacent racks, shared by both directions.
+    Ring,
+}
+
+impl SegmentKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SegmentKind::Intra => "intra",
+            SegmentKind::Uplink => "uplink",
+            SegmentKind::Ring => "ring",
+        }
+    }
+}
+
+/// One shared serializing wire of the fabric: a [`LinkChannel`] occupancy
+/// timeline plus the contention counters the utilization report needs.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub kind: SegmentKind,
+    /// Owning rack (intra/uplink) or lower-numbered endpoint rack (ring).
+    pub rack: usize,
+    pub channel: LinkChannel,
+    /// Transfers billed over this segment (zero-byte transfers are free
+    /// and uncounted, matching [`LinkChannel::transfer`]).
+    pub transfers: u64,
+    /// Cycles the wire spent occupied (queueing excluded: a transfer's
+    /// wait behind an earlier one bills the earlier transfer's span, not
+    /// this one twice).
+    pub busy_cycles: u64,
+}
+
+impl Segment {
+    fn name(&self) -> String {
+        match self.kind {
+            SegmentKind::Intra => format!("rack{}", self.rack),
+            SegmentKind::Uplink => format!("uplink{}", self.rack),
+            SegmentKind::Ring => format!("ring{}", self.rack),
+        }
+    }
+}
+
+/// The routed rack fabric: segment timelines plus the topology's routing
+/// function. Construct once per simulation from the validated spec; bill
+/// every inter-board byte through [`Fabric::transfer`].
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    spec: FabricSpec,
+    n_racks: usize,
+    pub segments: Vec<Segment>,
+}
+
+impl Fabric {
+    pub fn new(spec: &FabricSpec, boards: usize) -> Fabric {
+        assert!(boards >= 1, "fabric needs at least one board");
+        let n_racks = spec.n_racks(boards);
+        let intra = InterBoardLink::new(spec.intra_bytes_per_cycle, spec.intra_latency_cycles);
+        let up = InterBoardLink::new(spec.uplink_bytes_per_cycle, spec.uplink_latency_cycles);
+        let mut segments: Vec<Segment> = (0..n_racks)
+            .map(|r| Segment {
+                kind: SegmentKind::Intra,
+                rack: r,
+                channel: LinkChannel::new(intra),
+                transfers: 0,
+                busy_cycles: 0,
+            })
+            .collect();
+        match spec.topology {
+            FabricTopology::LeafSpine => {
+                for r in 0..n_racks {
+                    segments.push(Segment {
+                        kind: SegmentKind::Uplink,
+                        rack: r,
+                        channel: LinkChannel::new(up),
+                        transfers: 0,
+                        busy_cycles: 0,
+                    });
+                }
+            }
+            FabricTopology::RackRing => {
+                // A 2-rack ring degenerates to a single shared wire; a
+                // 1-rack ring has none.
+                let wires = match n_racks {
+                    0 | 1 => 0,
+                    2 => 1,
+                    r => r,
+                };
+                for w in 0..wires {
+                    segments.push(Segment {
+                        kind: SegmentKind::Ring,
+                        rack: w,
+                        channel: LinkChannel::new(up),
+                        transfers: 0,
+                        busy_cycles: 0,
+                    });
+                }
+            }
+        }
+        Fabric {
+            spec: spec.clone(),
+            n_racks,
+            segments,
+        }
+    }
+
+    pub fn n_racks(&self) -> usize {
+        self.n_racks
+    }
+
+    pub fn rack_of(&self, board: usize) -> usize {
+        self.spec.rack_of(board)
+    }
+
+    pub fn spec(&self) -> &FabricSpec {
+        &self.spec
+    }
+
+    /// Segment id of rack `r`'s intra backplane.
+    fn intra(&self, r: usize) -> usize {
+        r
+    }
+
+    /// Segment id of cross-rack wire `w` (uplink `w` on a leaf-spine,
+    /// ring wire `w` on a ring).
+    fn cross(&self, w: usize) -> usize {
+        self.n_racks + w
+    }
+
+    /// The segment path a `src → dst` transfer crosses, in billing order.
+    /// Same board: empty (a board talking to itself never touches the
+    /// fabric). Same rack: the backplane. Cross-rack: source backplane,
+    /// then the topology's uplink hops, then the destination backplane.
+    pub fn route(&self, src: usize, dst: usize) -> Vec<usize> {
+        if src == dst {
+            return Vec::new();
+        }
+        let (sr, dr) = (self.rack_of(src), self.rack_of(dst));
+        if sr == dr {
+            return vec![self.intra(sr)];
+        }
+        let mut path = vec![self.intra(sr)];
+        match self.spec.topology {
+            FabricTopology::LeafSpine => {
+                path.push(self.cross(sr));
+                path.push(self.cross(dr));
+            }
+            FabricTopology::RackRing => {
+                let r = self.n_racks;
+                if r == 2 {
+                    path.push(self.cross(0));
+                } else {
+                    // Shorter arc, ties clockwise. Wire w joins racks w
+                    // and (w + 1) % r and is shared by both directions.
+                    let cw = (dr + r - sr) % r;
+                    let ccw = (sr + r - dr) % r;
+                    if cw <= ccw {
+                        for k in 0..cw {
+                            path.push(self.cross((sr + k) % r));
+                        }
+                    } else {
+                        for k in 0..ccw {
+                            path.push(self.cross((sr + r - 1 - k) % r));
+                        }
+                    }
+                }
+            }
+        }
+        path.push(self.intra(dr));
+        path
+    }
+
+    /// Bill `bytes` over the route from `src` to `dst` starting no earlier
+    /// than `earliest`; returns the completion cycle. Hops serialize: the
+    /// transfer occupies each segment in route order, queueing behind
+    /// whatever that segment is already carrying — which is how a shared
+    /// uplink becomes the bottleneck of two otherwise-independent chains.
+    /// Zero-byte transfers are free, same-board transfers cross nothing.
+    pub fn transfer(&mut self, src: usize, dst: usize, bytes: u64, earliest: u64) -> u64 {
+        let route = self.route(src, dst);
+        self.transfer_route(&route, bytes, earliest)
+    }
+
+    /// [`Fabric::transfer`] over a precomputed route.
+    pub fn transfer_route(&mut self, route: &[usize], bytes: u64, earliest: u64) -> u64 {
+        if bytes == 0 {
+            return earliest;
+        }
+        let mut t = earliest;
+        for &s in route {
+            let seg = &mut self.segments[s];
+            let start = t.max(seg.channel.busy_until());
+            let end = seg.channel.transfer(bytes, t);
+            seg.transfers += 1;
+            seg.busy_cycles += end - start;
+            t = end;
+        }
+        t
+    }
+
+    /// Total bytes billed over all segments (each transfer counts once per
+    /// hop — the conservation invariant the property suite checks is per
+    /// segment, not fleet-total).
+    pub fn bytes_moved(&self) -> u64 {
+        self.segments.iter().map(|s| s.channel.bytes_moved).sum()
+    }
+
+    /// Arm [`LinkChannel`] degrade windows on the backplane of `board`'s
+    /// rack — the fabric-mode reading of a
+    /// [`crate::config::FaultEvent::LinkDegrade`] on that board's egress:
+    /// the first hop of every route leaving the board runs slow (and,
+    /// being shared media, so does its rack-mates' traffic — a degraded
+    /// backplane is a rack-wide event).
+    pub fn set_board_degrades(&mut self, board: usize, windows: Vec<(u64, u64, f64)>) {
+        let r = self.rack_of(board);
+        let id = self.intra(r);
+        self.segments[id].channel.set_degrades(windows);
+    }
+
+    /// Per-segment utilization snapshot against a run's makespan.
+    pub fn summary(&self, makespan_cycles: u64) -> FabricSummary {
+        FabricSummary {
+            topology: self.spec.topology.as_str().to_string(),
+            racks: self.n_racks,
+            boards_per_rack: self.spec.boards_per_rack,
+            segments: self
+                .segments
+                .iter()
+                .map(|s| SegmentSummary {
+                    name: s.name(),
+                    kind: s.kind.as_str().to_string(),
+                    bytes_moved: s.channel.bytes_moved,
+                    transfers: s.transfers,
+                    busy_cycles: s.busy_cycles,
+                    utilization: if makespan_cycles == 0 {
+                        0.0
+                    } else {
+                        s.busy_cycles as f64 / makespan_cycles as f64
+                    },
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The per-segment report section a fabric-armed run attaches to
+/// [`crate::cluster::FleetReport`] (key absent with `fabric: None` — the
+/// byte-compat contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSummary {
+    pub topology: String,
+    pub racks: usize,
+    pub boards_per_rack: usize,
+    pub segments: Vec<SegmentSummary>,
+}
+
+/// One segment's lifetime counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentSummary {
+    pub name: String,
+    pub kind: String,
+    pub bytes_moved: u64,
+    pub transfers: u64,
+    pub busy_cycles: u64,
+    /// `busy_cycles / makespan` — the number the provisioning question
+    /// ("is the uplink the bottleneck?") reads directly.
+    pub utilization: f64,
+}
+
+impl FabricSummary {
+    pub fn to_json(&self) -> Json {
+        let mut segs = Json::Arr(vec![]);
+        for s in &self.segments {
+            segs = segs.push(
+                Json::obj()
+                    .set("name", s.name.as_str())
+                    .set("kind", s.kind.as_str())
+                    .set("bytes_moved", s.bytes_moved)
+                    .set("transfers", s.transfers)
+                    .set("busy_cycles", s.busy_cycles)
+                    .set("utilization", s.utilization),
+            );
+        }
+        Json::obj()
+            .set("topology", self.topology.as_str())
+            .set("racks", self.racks)
+            .set("boards_per_rack", self.boards_per_rack)
+            .set("segments", segs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FabricSummary, String> {
+        let segments = j
+            .get("segments")
+            .as_arr()
+            .ok_or("fabric summary: missing 'segments'")?
+            .iter()
+            .map(|s| {
+                Ok(SegmentSummary {
+                    name: s
+                        .get("name")
+                        .as_str()
+                        .ok_or("fabric segment: missing 'name'")?
+                        .to_string(),
+                    kind: s
+                        .get("kind")
+                        .as_str()
+                        .ok_or("fabric segment: missing 'kind'")?
+                        .to_string(),
+                    bytes_moved: s
+                        .get("bytes_moved")
+                        .as_u64()
+                        .ok_or("fabric segment: missing 'bytes_moved'")?,
+                    transfers: s
+                        .get("transfers")
+                        .as_u64()
+                        .ok_or("fabric segment: missing 'transfers'")?,
+                    busy_cycles: s
+                        .get("busy_cycles")
+                        .as_u64()
+                        .ok_or("fabric segment: missing 'busy_cycles'")?,
+                    utilization: s
+                        .get("utilization")
+                        .as_f64()
+                        .ok_or("fabric segment: missing 'utilization'")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(FabricSummary {
+            topology: j
+                .get("topology")
+                .as_str()
+                .ok_or("fabric summary: missing 'topology'")?
+                .to_string(),
+            racks: j
+                .get("racks")
+                .as_usize()
+                .ok_or("fabric summary: missing 'racks'")?,
+            boards_per_rack: j
+                .get("boards_per_rack")
+                .as_usize()
+                .ok_or("fabric summary: missing 'boards_per_rack'")?,
+            segments,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(topology: FabricTopology, bpr: usize) -> FabricSpec {
+        FabricSpec {
+            topology,
+            boards_per_rack: bpr,
+            intra_bytes_per_cycle: 16.0,
+            intra_latency_cycles: 10,
+            uplink_bytes_per_cycle: 4.0,
+            uplink_latency_cycles: 40,
+        }
+    }
+
+    #[test]
+    fn same_board_routes_nowhere_and_same_rack_crosses_the_backplane() {
+        let f = Fabric::new(&spec(FabricTopology::LeafSpine, 4), 8);
+        assert!(f.route(2, 2).is_empty());
+        assert_eq!(f.route(0, 3), vec![0], "rack 0's backplane");
+        assert_eq!(f.route(5, 4), vec![1], "rack 1's backplane");
+    }
+
+    #[test]
+    fn leaf_spine_cross_rack_route_is_four_hops() {
+        let f = Fabric::new(&spec(FabricTopology::LeafSpine, 4), 8);
+        // rack0 backplane, rack0 uplink, rack1 uplink, rack1 backplane.
+        assert_eq!(f.route(1, 6), vec![0, 2, 3, 1]);
+        // The reverse direction shares the same two uplinks.
+        assert_eq!(f.route(6, 1), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn ring_takes_the_shorter_arc_ties_clockwise() {
+        // 4 racks of 1 board: wires 0↔1 (id 4), 1↔2 (5), 2↔3 (6), 3↔0 (7).
+        let f = Fabric::new(&spec(FabricTopology::RackRing, 1), 4);
+        assert_eq!(f.route(0, 1), vec![0, 4, 1], "one hop clockwise");
+        assert_eq!(f.route(0, 3), vec![0, 7, 3], "one hop counter-clockwise");
+        // Distance 2 either way: the tie goes clockwise through rack 1.
+        assert_eq!(f.route(0, 2), vec![0, 4, 5, 2]);
+        // Two racks degenerate to a single shared wire.
+        let f2 = Fabric::new(&spec(FabricTopology::RackRing, 2), 4);
+        assert_eq!(f2.route(0, 2), vec![0, 2, 1]);
+        assert_eq!(f2.route(3, 1), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn shared_uplink_serializes_two_chains() {
+        // Two transfers from different boards of rack 0 to rack 1 at the
+        // same instant: both queue on rack 0's backplane and uplink. The
+        // second finishes no earlier than the serialized lower bound.
+        let mut f = Fabric::new(&spec(FabricTopology::LeafSpine, 2), 4);
+        let bytes = 4000u64;
+        let e1 = f.transfer(0, 2, bytes, 0);
+        let e2 = f.transfer(1, 3, bytes, 0);
+        // Uplink drain alone: 40 + 4000/4 = 1040 cycles per transfer; two
+        // transfers over the same uplink cannot beat 2× the drain.
+        assert!(e1 >= 1040);
+        assert!(
+            e2 >= e1 + 1000,
+            "second chain must queue behind the first on the shared uplink: {e2} vs {e1}"
+        );
+        // Per-segment conservation: every segment carried exactly what was
+        // routed over it.
+        let up0 = &f.segments[2];
+        assert_eq!(up0.kind, SegmentKind::Uplink);
+        assert_eq!(up0.channel.bytes_moved, 2 * bytes);
+        assert_eq!(up0.transfers, 2);
+    }
+
+    #[test]
+    fn zero_bytes_and_same_board_are_free() {
+        let mut f = Fabric::new(&spec(FabricTopology::LeafSpine, 2), 4);
+        assert_eq!(f.transfer(0, 3, 0, 99), 99);
+        assert_eq!(f.transfer(1, 1, 1 << 20, 7), 7);
+        assert_eq!(f.bytes_moved(), 0);
+        assert!(f.segments.iter().all(|s| s.transfers == 0));
+    }
+
+    #[test]
+    fn busy_cycles_exclude_queueing() {
+        let mut f = Fabric::new(&spec(FabricTopology::LeafSpine, 2), 2);
+        // Same-rack transfers: backplane only. 160 B at 16 B/c + 10 lat.
+        let e1 = f.transfer(0, 1, 160, 0);
+        assert_eq!(e1, 20);
+        let e2 = f.transfer(1, 0, 160, 0); // queues behind the first
+        assert_eq!(e2, 40);
+        let seg = &f.segments[0];
+        assert_eq!(seg.busy_cycles, 40, "wire time, not wire + wait");
+        let s = f.summary(80);
+        assert_eq!(s.segments[0].utilization, 0.5);
+    }
+
+    #[test]
+    fn summary_roundtrips_through_json() {
+        let mut f = Fabric::new(&spec(FabricTopology::RackRing, 2), 6);
+        f.transfer(0, 5, 1 << 16, 0);
+        f.transfer(4, 1, 1 << 12, 100);
+        let s = f.summary(1 << 20);
+        let back = FabricSummary::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+}

@@ -77,6 +77,18 @@ impl LinkChannel {
         self.degrades = windows;
     }
 
+    /// Restore accumulated wire state onto a freshly built channel: the
+    /// byte odometer and any in-flight occupancy. A re-shard replaces the
+    /// channel *objects* (the plan's stage boundaries moved) but the
+    /// physical wire between two boards neither forgets what it has
+    /// carried nor drains an in-flight transfer early — re-plans that
+    /// rebuild their channels thread the old state through here so
+    /// `FleetReport` link accounting conserves bytes across the switch.
+    pub fn restore_state(&mut self, bytes_moved: u64, busy_until: u64) {
+        self.bytes_moved = bytes_moved;
+        self.busy_until = busy_until;
+    }
+
     /// Move `bytes` starting no earlier than `earliest`; returns the
     /// completion cycle. Transfers serialize behind each other. An empty
     /// transfer is free and does not occupy the wire.

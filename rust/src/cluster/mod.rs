@@ -75,6 +75,22 @@
 //!   and count as abandoned once the budget is spent — conserved as
 //!   `offered == completed + abandoned` per tenant and rolled up in
 //!   [`FleetReport`].
+//! * an **interconnect fabric layer** ([`fabric`]): an optional routed
+//!   topology ([`crate::config::FabricSpec`]: rack ring or leaf-spine)
+//!   maps boards to racks and models the physical wires as *shared
+//!   serializing segments* — [`Fabric::route`] returns the segment path
+//!   between two boards and every transfer (pipeline boundary volumes,
+//!   re-shard migration bills, fault drain-to-peers) is billed hop by hop
+//!   on the segments' occupancy timelines, so a saturated uplink becomes
+//!   a producible bottleneck. Placement turns topology-aware
+//!   ([`place_tenants_capacity_fabric`]): pipelined chains stay inside one
+//!   rack when feasible, replicated tenants spread across racks as failure
+//!   domains, and [`crate::config::FaultEvent::RackDown`] scripts
+//!   correlated whole-rack outages. Route traffic surfaces as
+//!   `route_transfer` [`TraceEvent`]s, `route_*` telemetry counters and
+//!   the per-segment [`FleetReport::fabric`] utilization section; with no
+//!   fabric configured every path short-circuits to the point-to-point
+//!   [`LinkChannel`] arithmetic and reports stay byte-identical.
 //!
 //! `benches/cluster_scaling.rs` sweeps 1→16 boards in both modes, adds a
 //! heterogeneous two-generation fleet sweep, a load-step re-sharding
@@ -83,15 +99,17 @@
 //! `sim_events_per_sec` self-instrumentation rows).
 
 pub mod events;
+pub mod fabric;
 pub mod link;
 pub mod shard;
 pub mod sim;
 pub mod telemetry;
 
+pub use fabric::{Fabric, FabricSummary, Segment, SegmentKind, SegmentSummary};
 pub use link::{InterBoardLink, LinkChannel};
 pub use shard::{
     balance_min_max, place_tenants, place_tenants_alive, place_tenants_biased,
-    place_tenants_capacity, BoardShard, ShardPlan, TenantWorkload,
+    place_tenants_capacity, place_tenants_capacity_fabric, BoardShard, ShardPlan, TenantWorkload,
 };
 pub use sim::{
     arrivals_with_steps, poisson_arrivals, simulate_fleet, simulate_fleet_dynamic,
@@ -234,7 +252,20 @@ pub fn plan_tenants(
             replicas: t.replicas,
         })
         .collect();
-    let shard_plans = place_tenants(&fleet, &workloads)?;
+    // Static placement goes through the fabric-aware root so an armed
+    // topology shapes the initial plan too (in-rack chains, replicas
+    // spread across racks); with `fabric: None` this is exactly
+    // `place_tenants` — the byte-compat contract the committed
+    // multi-tenant fixtures rely on.
+    let nb = fleet.len();
+    let shard_plans = place_tenants_capacity_fabric(
+        &fleet,
+        &workloads,
+        &vec![0u64; nb],
+        &vec![true; nb],
+        &vec![1.0; nb],
+        ccfg.fabric.as_ref(),
+    )?;
     Ok((weights, shard_plans))
 }
 

@@ -27,7 +27,7 @@ use std::ops::Range;
 use crate::accel::engine::Weights;
 use crate::accel::fusion::FusionPlan;
 use crate::accel::latency::{group_cost_estimate, GroupCost};
-use crate::config::{AccelConfig, Network, ShardMode, VolShape};
+use crate::config::{AccelConfig, FabricSpec, Network, ShardMode, VolShape};
 use crate::fpga::ddr::SharedDdr;
 use crate::resources::{group_resources, Resources};
 
@@ -468,6 +468,37 @@ pub fn place_tenants_capacity(
     alive: &[bool],
     cap: &[f64],
 ) -> Result<Vec<ShardPlan>, String> {
+    place_tenants_capacity_fabric(fleet, tenants, bias, alive, cap, None)
+}
+
+/// [`place_tenants_capacity`] made topology-aware: when an interconnect
+/// [`FabricSpec`] is armed, placement optimizes for *where boards sit*,
+/// not just how full they are.
+///
+/// * **Pipelined** tenants try each rack's alive boards *alone* first
+///   (racks ordered by their coolest member under the usual degradation /
+///   bias / residency key) — a chain that fits inside one rack never pays
+///   uplink or ring hops on its boundary traffic. Only when no single rack
+///   can host the whole chain does the planner fall back to the global
+///   cross-rack permutation.
+/// * **Replicated** tenants spread replicas across racks as failure
+///   domains: candidates are picked greedily by
+///   `(degradation, replicas-already-in-rack, bias, residents, index)`, so
+///   a correlated [`crate::config::FaultEvent::RackDown`] takes out at most
+///   `ceil(replicas / racks)` of them instead of the whole set.
+///
+/// With `fabric: None` both arms run the exact pre-fabric code path —
+/// same candidate order, same plans — which is the byte-compat contract
+/// [`place_tenants`] / [`place_tenants_biased`] / [`place_tenants_alive`]
+/// inherit by delegation.
+pub fn place_tenants_capacity_fabric(
+    fleet: &[AccelConfig],
+    tenants: &[TenantWorkload],
+    bias: &[u64],
+    alive: &[bool],
+    cap: &[f64],
+    fabric: Option<&FabricSpec>,
+) -> Result<Vec<ShardPlan>, String> {
     assert!(!fleet.is_empty());
     let nb = fleet.len();
     assert_eq!(bias.len(), nb, "one bias entry per board");
@@ -509,17 +540,43 @@ pub fn place_tenants_capacity(
                 let mut fitting: Vec<usize> = (0..nb)
                     .filter(|&b| alive[b] && joint_fits(&used, ctx.range_resources(b, 0..n), b))
                     .collect();
-                fitting.sort_by_key(|&b| (degr(b), bias[b], residents[b], b));
                 let target = t.replicas.unwrap_or(nb).max(1);
-                fitting.truncate(target);
-                fitting.sort_unstable();
-                if fitting.is_empty() {
+                let mut chosen = match fabric {
+                    None => {
+                        fitting.sort_by_key(|&b| (degr(b), bias[b], residents[b], b));
+                        fitting.truncate(target);
+                        fitting
+                    }
+                    Some(fb) => {
+                        // Failure-domain spreading: each pick charges its
+                        // rack, so the next equally-cool candidate in a
+                        // *different* rack wins — replicas land round-robin
+                        // across racks before stacking within one.
+                        let mut rack_load = vec![0usize; fb.n_racks(nb)];
+                        let mut chosen = Vec::with_capacity(target.min(fitting.len()));
+                        while chosen.len() < target && !fitting.is_empty() {
+                            let (i, _) = fitting
+                                .iter()
+                                .enumerate()
+                                .min_by_key(|&(_, &b)| {
+                                    (degr(b), rack_load[fb.rack_of(b)], bias[b], residents[b], b)
+                                })
+                                .expect("non-empty");
+                            let b = fitting.swap_remove(i);
+                            rack_load[fb.rack_of(b)] += 1;
+                            chosen.push(b);
+                        }
+                        chosen
+                    }
+                };
+                chosen.sort_unstable();
+                if chosen.is_empty() {
                     return Err(format!(
                         "tenant '{}': no board has room left for a replica",
                         t.name
                     ));
                 }
-                fitting.into_iter().map(|b| ctx.cost_range(0..n, b)).collect()
+                chosen.into_iter().map(|b| ctx.cost_range(0..n, b)).collect()
             }
             ShardMode::Pipelined => {
                 // Free placement: the DP sees boards emptiest-first (bias,
@@ -529,30 +586,60 @@ pub fn place_tenants_capacity(
                 // re-plan restores the chain on surviving fabric only.
                 let mut perm: Vec<usize> = (0..nb).filter(|&b| alive[b]).collect();
                 perm.sort_by_key(|&b| (degr(b), bias[b], residents[b], b));
-                let k = perm.len().min(n);
-                let totals: Vec<Vec<u64>> = perm
-                    .iter()
-                    .map(|&b| ctx.costs[b].iter().map(|c| c.total()).collect())
-                    .collect();
-                // A brownout board looks proportionally slower to the
-                // time-balancing DP (× 1.0 is bit-exact for healthy boards).
-                let freqs: Vec<f64> = perm
-                    .iter()
-                    .map(|&b| fleet[b].platform.freq_mhz * cap[b])
-                    .collect();
-                let feasible = |s: usize, r: Range<usize>| {
-                    joint_fits(&used, ctx.range_resources(perm[s], r), perm[s])
-                };
-                let cuts = balance_fleet(&totals, &freqs, &feasible, k).ok_or_else(|| {
-                    format!(
-                        "tenant '{}': no pipelined partition fits the remaining fabric",
-                        t.name
+                let solve = |perm: &[usize]| -> Option<Vec<BoardShard>> {
+                    let k = perm.len().min(n);
+                    let totals: Vec<Vec<u64>> = perm
+                        .iter()
+                        .map(|&b| ctx.costs[b].iter().map(|c| c.total()).collect())
+                        .collect();
+                    // A brownout board looks proportionally slower to the
+                    // time-balancing DP (× 1.0 is bit-exact for healthy
+                    // boards).
+                    let freqs: Vec<f64> = perm
+                        .iter()
+                        .map(|&b| fleet[b].platform.freq_mhz * cap[b])
+                        .collect();
+                    let feasible = |s: usize, r: Range<usize>| {
+                        joint_fits(&used, ctx.range_resources(perm[s], r), perm[s])
+                    };
+                    let cuts = balance_fleet(&totals, &freqs, &feasible, k)?;
+                    Some(
+                        cuts.windows(2)
+                            .enumerate()
+                            .map(|(s, w)| ctx.cost_range(w[0]..w[1], perm[s]))
+                            .collect(),
                     )
-                })?;
-                cuts.windows(2)
-                    .enumerate()
-                    .map(|(s, w)| ctx.cost_range(w[0]..w[1], perm[s]))
-                    .collect()
+                };
+                // Locality first: a chain whose stages share a rack pays
+                // only that rack's intra segment per boundary. Each rack's
+                // alive boards are offered alone (coolest rack first);
+                // only when no rack can host the whole chain does the
+                // cross-rack permutation run.
+                let rack_local = fabric.and_then(|fb| {
+                    let mut racks: Vec<Vec<usize>> = vec![Vec::new(); fb.n_racks(nb)];
+                    for &b in &perm {
+                        racks[fb.rack_of(b)].push(b);
+                    }
+                    let mut order: Vec<usize> =
+                        (0..racks.len()).filter(|&r| !racks[r].is_empty()).collect();
+                    order.sort_by_key(|&r| {
+                        racks[r]
+                            .iter()
+                            .map(|&b| (degr(b), bias[b], residents[b], b))
+                            .min()
+                            .expect("non-empty rack")
+                    });
+                    order.into_iter().find_map(|r| solve(&racks[r]))
+                });
+                match rack_local {
+                    Some(shards) => shards,
+                    None => solve(&perm).ok_or_else(|| {
+                        format!(
+                            "tenant '{}': no pipelined partition fits the remaining fabric",
+                            t.name
+                        )
+                    })?,
+                }
             }
         };
         for s in &shards {
@@ -1510,6 +1597,132 @@ mod tests {
             a[0].shards.iter().map(|s| s.board).collect::<Vec<_>>(),
             b[0].shards.iter().map(|s| s.board).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn fabric_placement_spreads_replicas_across_racks() {
+        // 4 boards in 2 racks of 2, two replicas. Without a fabric the
+        // emptiest-first order stacks both replicas into rack 0 (boards 0
+        // and 1); with the topology armed the second pick charges rack 0
+        // and jumps to rack 1 — a RackDown now takes out one replica, not
+        // both.
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 1);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone(), cfg.clone()];
+        let fused = FusionPlan::fully_fused(7);
+        let t = [TenantWorkload {
+            name: "r",
+            net: &net,
+            weights: &w,
+            plan: &fused,
+            mode: ShardMode::Replicated,
+            priority: 1,
+            replicas: Some(2),
+        }];
+        let zeros = [0u64; 4];
+        let alive = [true; 4];
+        let ones = [1.0f64; 4];
+        let flat = place_tenants_capacity_fabric(&fleet, &t, &zeros, &alive, &ones, None).unwrap();
+        let boards = |p: &ShardPlan| p.shards.iter().map(|s| s.board).collect::<Vec<_>>();
+        assert_eq!(boards(&flat[0]), vec![0, 1], "no fabric: emptiest-first");
+        let spec = FabricSpec::leaf_spine(2);
+        let spread =
+            place_tenants_capacity_fabric(&fleet, &t, &zeros, &alive, &ones, Some(&spec)).unwrap();
+        assert_eq!(boards(&spread[0]), vec![0, 2], "fabric: one replica per rack");
+    }
+
+    #[test]
+    fn fabric_placement_keeps_a_chain_in_one_rack() {
+        // 4 boards in 2 racks of 2, a 2-stage chain, board 0 running hot
+        // (bias). The flat permutation is [1, 2, 3, 0], so the chain lands
+        // on boards 1 and 2 — a cross-rack cut whose boundary traffic
+        // would ride the uplinks. The topology-aware planner offers rack
+        // 0's boards alone first and keeps both stages inside it.
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 1);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone(), cfg.clone()];
+        let split = FusionPlan::from_group_sizes(7, &[4, 3]).unwrap();
+        let t = [TenantWorkload {
+            name: "p",
+            net: &net,
+            weights: &w,
+            plan: &split,
+            mode: ShardMode::Pipelined,
+            priority: 1,
+            replicas: None,
+        }];
+        let bias = [5u64, 0, 1, 2];
+        let alive = [true; 4];
+        let ones = [1.0f64; 4];
+        let spec = FabricSpec::leaf_spine(2);
+        let flat = place_tenants_capacity_fabric(&fleet, &t, &bias, &alive, &ones, None).unwrap();
+        let fb: Vec<usize> = flat[0].shards.iter().map(|s| s.board).collect();
+        assert_eq!(fb, vec![1, 2], "flat order splits the chain across racks");
+        let local =
+            place_tenants_capacity_fabric(&fleet, &t, &bias, &alive, &ones, Some(&spec)).unwrap();
+        let racks: Vec<usize> = local[0].shards.iter().map(|s| spec.rack_of(s.board)).collect();
+        assert!(
+            racks.windows(2).all(|w| w[0] == w[1]),
+            "fabric keeps the chain in one rack, got boards {:?}",
+            local[0].shards.iter().map(|s| s.board).collect::<Vec<_>>()
+        );
+        // Every layer still covered exactly once on the rack-local plan.
+        let mut covered: Vec<usize> =
+            local[0].shards.iter().flat_map(|s| s.layers.clone()).collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_rack_fabric_matches_flat_placement() {
+        // A fabric whose one rack holds the whole fleet adds no topology
+        // information: the greedy replica pick sees a constant rack load
+        // and the chain's rack-local permutation IS the flat permutation —
+        // plans must come out identical to `fabric: None`.
+        let cfg = AccelConfig::paper_default();
+        let net = tiny_vgg();
+        let w = Weights::random(&net, 1);
+        let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let split = FusionPlan::from_group_sizes(7, &[4, 3]).unwrap();
+        let fused = FusionPlan::fully_fused(7);
+        let tenants = [
+            TenantWorkload {
+                name: "p",
+                net: &net,
+                weights: &w,
+                plan: &split,
+                mode: ShardMode::Pipelined,
+                priority: 2,
+                replicas: None,
+            },
+            TenantWorkload {
+                name: "r",
+                net: &net,
+                weights: &w,
+                plan: &fused,
+                mode: ShardMode::Replicated,
+                priority: 1,
+                replicas: Some(2),
+            },
+        ];
+        let bias = [3u64, 0, 1];
+        let alive = [true; 3];
+        let ones = [1.0f64; 3];
+        let spec = FabricSpec::leaf_spine(3);
+        let flat =
+            place_tenants_capacity_fabric(&fleet, &tenants, &bias, &alive, &ones, None).unwrap();
+        let armed =
+            place_tenants_capacity_fabric(&fleet, &tenants, &bias, &alive, &ones, Some(&spec))
+                .unwrap();
+        for (a, b) in flat.iter().zip(&armed) {
+            assert_eq!(a.label(), b.label());
+            assert_eq!(
+                a.shards.iter().map(|s| s.board).collect::<Vec<_>>(),
+                b.shards.iter().map(|s| s.board).collect::<Vec<_>>()
+            );
+        }
     }
 
     #[test]

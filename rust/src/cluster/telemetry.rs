@@ -263,6 +263,12 @@ pub enum TraceEvent {
     /// with `fraction` × nominal compute throughput until cycle `until`
     /// (`None` = permanent).
     ComputeDegrade { at: u64, board: usize, fraction: f64, until: Option<u64> },
+    /// Traffic billed over a routed fabric (fabric-armed runs only): a
+    /// pipeline boundary hand-off, a re-shard migration, or a dead board's
+    /// drain to a surviving peer, serialized hop-by-hop over `hops` shared
+    /// segments. `at` is the completion instant of the last hop; `class` is
+    /// `"boundary"`, `"migration"`, or `"drain"`.
+    RouteTransfer { at: u64, src: usize, dst: usize, bytes: u64, hops: usize, class: &'static str },
 }
 
 impl TraceEvent {
@@ -284,6 +290,7 @@ impl TraceEvent {
             TraceEvent::Retry { .. } => "retry",
             TraceEvent::Abandon { .. } => "abandon",
             TraceEvent::ComputeDegrade { .. } => "compute_degrade",
+            TraceEvent::RouteTransfer { .. } => "route_transfer",
         }
     }
 
@@ -304,7 +311,8 @@ impl TraceEvent {
             | TraceEvent::Shed { at, .. }
             | TraceEvent::Retry { at, .. }
             | TraceEvent::Abandon { at, .. }
-            | TraceEvent::ComputeDegrade { at, .. } => at,
+            | TraceEvent::ComputeDegrade { at, .. }
+            | TraceEvent::RouteTransfer { at, .. } => at,
         }
     }
 
@@ -371,6 +379,12 @@ impl TraceEvent {
                     None => j,
                 }
             }
+            TraceEvent::RouteTransfer { src, dst, bytes, hops, class, .. } => j
+                .set("src", *src as u64)
+                .set("dst", *dst as u64)
+                .set("bytes", *bytes)
+                .set("hops", *hops as u64)
+                .set("class", *class),
         }
     }
 }
@@ -436,6 +450,12 @@ pub struct TelemetrySummary {
     pub sheds: u64,
     pub retries: u64,
     pub abandons: u64,
+    /// Fabric route-billing counters. `None` (keys absent in JSON) when no
+    /// traffic ever crossed a routed fabric — which is every run with
+    /// `fabric: None`, so existing telemetry consumers see no new keys.
+    pub route_transfers: Option<u64>,
+    pub route_bytes: Option<u64>,
+    pub route_hops_max: Option<u64>,
     /// Simulator heap events processed (drives `sim_events_per_sec`).
     pub sim_events: u64,
     pub heap_depth_max: u64,
@@ -451,7 +471,7 @@ impl TelemetrySummary {
         for &p in &self.tenant_p99_ms {
             p99 = p99.push(Json::from(p));
         }
-        Json::obj()
+        let mut j = Json::obj()
             .set("events_total", self.events_total)
             .set("admits", self.admits)
             .set("dispatches", self.dispatches)
@@ -468,8 +488,17 @@ impl TelemetrySummary {
             .set("compute_degrades", self.compute_degrades)
             .set("sheds", self.sheds)
             .set("retries", self.retries)
-            .set("abandons", self.abandons)
-            .set("sim_events", self.sim_events)
+            .set("abandons", self.abandons);
+        if let Some(rt) = self.route_transfers {
+            j = j.set("route_transfers", rt);
+        }
+        if let Some(rb) = self.route_bytes {
+            j = j.set("route_bytes", rb);
+        }
+        if let Some(rh) = self.route_hops_max {
+            j = j.set("route_hops_max", rh);
+        }
+        j.set("sim_events", self.sim_events)
             .set("heap_depth_max", self.heap_depth_max)
             .set("heap_depth_mean", self.heap_depth_mean)
             .set("tenant_p99_ms", p99)
@@ -587,6 +616,9 @@ impl TraceSink {
             sheds: 0,
             retries: 0,
             abandons: 0,
+            route_transfers: None,
+            route_bytes: None,
+            route_hops_max: None,
             sim_events: self.sim_events,
             heap_depth_max: self.heap_depth_max,
             heap_depth_mean: self.heap_depth_mean(),
@@ -615,6 +647,12 @@ impl TraceSink {
                 TraceEvent::Retry { .. } => s.retries += 1,
                 TraceEvent::Abandon { .. } => s.abandons += 1,
                 TraceEvent::ComputeDegrade { .. } => s.compute_degrades += 1,
+                TraceEvent::RouteTransfer { bytes, hops, .. } => {
+                    s.route_transfers = Some(s.route_transfers.unwrap_or(0) + 1);
+                    s.route_bytes = Some(s.route_bytes.unwrap_or(0) + *bytes);
+                    s.route_hops_max =
+                        Some(s.route_hops_max.unwrap_or(0).max(*hops as u64));
+                }
             }
         }
         Some(s)
@@ -898,11 +936,27 @@ mod tests {
             fraction: 0.5,
             until: Some(99),
         });
+        sink.record(|| TraceEvent::RouteTransfer {
+            at: 70,
+            src: 0,
+            dst: 3,
+            bytes: 4096,
+            hops: 4,
+            class: "boundary",
+        });
+        sink.record(|| TraceEvent::RouteTransfer {
+            at: 80,
+            src: 3,
+            dst: 0,
+            bytes: 1024,
+            hops: 2,
+            class: "migration",
+        });
         sink.observe_latency_ms(0, 0.5);
         sink.note_sim_event(4);
         sink.note_sim_event(2);
         let s = sink.summary().unwrap();
-        assert_eq!(s.events_total, 16);
+        assert_eq!(s.events_total, 18);
         assert_eq!(s.admits, 1);
         assert_eq!(s.dispatches, 1);
         assert_eq!(s.flushes, 1);
@@ -918,6 +972,9 @@ mod tests {
         assert_eq!(s.retries, 1);
         assert_eq!(s.abandons, 1);
         assert_eq!(s.compute_degrades, 1);
+        assert_eq!(s.route_transfers, Some(2));
+        assert_eq!(s.route_bytes, Some(5120));
+        assert_eq!(s.route_hops_max, Some(4));
         assert_eq!(s.sim_events, 2);
         assert_eq!(s.heap_depth_max, 4);
         assert_eq!(s.heap_depth_mean, 3.0);
@@ -969,6 +1026,33 @@ mod tests {
         let shed = TraceEvent::Shed { at: 2, tenant: 0, attempt: 1, queue_depth: 4 };
         assert_eq!(shed.kind(), "shed");
         assert_eq!(shed.at(), 2);
+        let rt = TraceEvent::RouteTransfer {
+            at: 9,
+            src: 1,
+            dst: 6,
+            bytes: 256,
+            hops: 4,
+            class: "drain",
+        };
+        assert_eq!(rt.kind(), "route_transfer");
+        assert_eq!(rt.at(), 9);
+        let jr = rt.to_json().to_string_compact();
+        assert!(jr.contains("\"class\":\"drain\"") && jr.contains("\"hops\":4"));
+    }
+
+    #[test]
+    fn summary_without_route_traffic_has_no_route_keys() {
+        // The fabric counters are strictly opt-in: a trace that never saw a
+        // RouteTransfer must not grow new summary keys (the fabric: None
+        // no-residue contract, extended to telemetry).
+        let mut sink = TraceSink::enabled();
+        sink.record(|| TraceEvent::Flush { at: 1, tenant: 0, board: 0, items: 1 });
+        let s = sink.summary().unwrap();
+        assert_eq!(s.route_transfers, None);
+        let j = s.to_json().to_string_compact();
+        assert!(!j.contains("route_transfers"));
+        assert!(!j.contains("route_bytes"));
+        assert!(!j.contains("route_hops_max"));
     }
 
     #[test]

@@ -204,6 +204,18 @@ pub enum FaultEvent {
         at_ms: f64,
         recover_ms: Option<f64>,
     },
+    /// Rack-scoped correlated failure: every board of rack `rack` (as
+    /// mapped by [`FabricSpec`] — requires `fabric` to be configured) dies
+    /// at `at_ms` and recovers together at `recover_ms` (`None` =
+    /// permanent). Semantically identical to one [`FaultEvent::BoardDown`]
+    /// per member board — a shared-PDU or top-of-rack-switch outage — and
+    /// the reason replica placement spreads across racks as failure
+    /// domains.
+    RackDown {
+        rack: usize,
+        at_ms: f64,
+        recover_ms: Option<f64>,
+    },
 }
 
 impl FaultEvent {
@@ -213,7 +225,8 @@ impl FaultEvent {
             FaultEvent::BoardDown { at_ms, .. }
             | FaultEvent::LinkDegrade { at_ms, .. }
             | FaultEvent::ClockDerate { at_ms, .. }
-            | FaultEvent::ComputeDegrade { at_ms, .. } => *at_ms,
+            | FaultEvent::ComputeDegrade { at_ms, .. }
+            | FaultEvent::RackDown { at_ms, .. } => *at_ms,
         }
     }
 
@@ -263,6 +276,20 @@ impl FaultEvent {
                     .set("kind", "compute_degrade")
                     .set("board", *board)
                     .set("capacity_fraction", *capacity_fraction)
+                    .set("at_ms", *at_ms);
+                if let Some(r) = recover_ms {
+                    j = j.set("recover_ms", *r);
+                }
+                j
+            }
+            FaultEvent::RackDown {
+                rack,
+                at_ms,
+                recover_ms,
+            } => {
+                let mut j = Json::obj()
+                    .set("kind", "rack_down")
+                    .set("rack", *rack)
                     .set("at_ms", *at_ms);
                 if let Some(r) = recover_ms {
                     j = j.set("recover_ms", *r);
@@ -336,9 +363,20 @@ impl FaultEvent {
                     ),
                 },
             }),
+            "rack_down" => Ok(FaultEvent::RackDown {
+                rack: j
+                    .get("rack")
+                    .as_usize()
+                    .ok_or("fault rack_down: missing/invalid 'rack'")?,
+                at_ms,
+                recover_ms: match j.get("recover_ms") {
+                    Json::Null => None,
+                    v => Some(v.as_f64().ok_or("fault rack_down: invalid 'recover_ms'")?),
+                },
+            }),
             other => Err(format!(
                 "fault: unknown kind '{other}' (expected 'board_down', \
-                 'link_degrade', 'clock_derate' or 'compute_degrade')"
+                 'link_degrade', 'clock_derate', 'compute_degrade' or 'rack_down')"
             )),
         }
     }
@@ -433,6 +471,15 @@ impl FaultScript {
                             "faults: events[{i}].capacity_fraction must be in (0, 1]"
                         ));
                     }
+                    if let Some(r) = recover_ms {
+                        if !(r > &at) || !r.is_finite() {
+                            return Err(format!(
+                                "faults: events[{i}].recover_ms must be finite and > at_ms"
+                            ));
+                        }
+                    }
+                }
+                FaultEvent::RackDown { recover_ms, .. } => {
                     if let Some(r) = recover_ms {
                         if !(r > &at) || !r.is_finite() {
                             return Err(format!(
@@ -887,6 +934,165 @@ fn parse_load_steps(j: &Json, ctx: &str) -> Result<Vec<LoadStep>, String> {
     }
 }
 
+/// How the racks of a [`FabricSpec`] are wired together.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricTopology {
+    /// Racks on a ring: cross-rack traffic hops rack-to-rack along the
+    /// shorter arc (ties resolved clockwise), crossing one inter-rack
+    /// segment per hop. Cheap to build, hop count grows with distance.
+    RackRing,
+    /// Two-tier leaf-spine: every rack's uplink reaches a non-blocking
+    /// spine, so any cross-rack route is exactly source-uplink →
+    /// destination-uplink regardless of rack distance — but all of a
+    /// rack's cross-rack traffic (in either direction) serializes on its
+    /// one uplink.
+    LeafSpine,
+}
+
+impl FabricTopology {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FabricTopology::RackRing => "rack_ring",
+            FabricTopology::LeafSpine => "leaf_spine",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<FabricTopology, String> {
+        match s {
+            "rack_ring" => Ok(FabricTopology::RackRing),
+            "leaf_spine" => Ok(FabricTopology::LeafSpine),
+            other => Err(format!(
+                "unknown fabric topology '{other}' (expected 'rack_ring' or 'leaf_spine')"
+            )),
+        }
+    }
+}
+
+/// Rack-scale interconnect description: boards map to racks in contiguous
+/// chunks of `boards_per_rack` (board `b` lives in rack
+/// `b / boards_per_rack`, mirroring the rack order `board_specs` already
+/// uses), intra-rack traffic crosses that rack's backplane segment, and
+/// cross-rack traffic additionally crosses inter-rack uplink segments per
+/// the [`FabricTopology`]. Every segment is a *shared serializing
+/// timeline* (the [`crate::cluster::LinkChannel`] occupancy model), so
+/// co-tenant transfers, migration bills and fault drains genuinely
+/// contend. `None` on [`ClusterConfig::fabric`] (the default, JSON key
+/// absent) keeps the original private point-to-point link arithmetic
+/// byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    pub topology: FabricTopology,
+    /// Boards per rack (the last rack may be partially filled).
+    pub boards_per_rack: usize,
+    /// Intra-rack backplane segment bandwidth, bytes per reference cycle.
+    pub intra_bytes_per_cycle: f64,
+    /// Per-transfer intra-rack hop latency (serialization + switch).
+    pub intra_latency_cycles: u64,
+    /// Inter-rack uplink segment bandwidth, bytes per reference cycle.
+    /// Typically thinner than the backplane — the whole point: a saturated
+    /// uplink is the fleet-scale shared channel.
+    pub uplink_bytes_per_cycle: f64,
+    /// Per-transfer uplink hop latency.
+    pub uplink_latency_cycles: u64,
+}
+
+impl FabricSpec {
+    /// Default leaf-spine fabric: backplane as fat as the classic
+    /// point-to-point link (16 B/cycle, 64-cycle hop), uplinks a quarter
+    /// as wide with a switch-traversal latency — cross-rack costs are
+    /// real but not pathological.
+    pub fn leaf_spine(boards_per_rack: usize) -> FabricSpec {
+        FabricSpec {
+            topology: FabricTopology::LeafSpine,
+            boards_per_rack,
+            intra_bytes_per_cycle: 16.0,
+            intra_latency_cycles: 64,
+            uplink_bytes_per_cycle: 4.0,
+            uplink_latency_cycles: 256,
+        }
+    }
+
+    /// Same segment parameters on a rack ring.
+    pub fn rack_ring(boards_per_rack: usize) -> FabricSpec {
+        FabricSpec {
+            topology: FabricTopology::RackRing,
+            ..FabricSpec::leaf_spine(boards_per_rack)
+        }
+    }
+
+    /// Rack housing board `b`.
+    pub fn rack_of(&self, board: usize) -> usize {
+        board / self.boards_per_rack
+    }
+
+    /// Number of racks a `boards`-board fleet occupies.
+    pub fn n_racks(&self, boards: usize) -> usize {
+        boards.div_ceil(self.boards_per_rack)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.boards_per_rack == 0 {
+            return Err("fabric: boards_per_rack must be >= 1".into());
+        }
+        if !(self.intra_bytes_per_cycle > 0.0) || !self.intra_bytes_per_cycle.is_finite() {
+            return Err("fabric: intra_bytes_per_cycle must be finite and > 0".into());
+        }
+        if !(self.uplink_bytes_per_cycle > 0.0) || !self.uplink_bytes_per_cycle.is_finite() {
+            return Err("fabric: uplink_bytes_per_cycle must be finite and > 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("topology", self.topology.as_str())
+            .set("boards_per_rack", self.boards_per_rack)
+            .set("intra_bytes_per_cycle", self.intra_bytes_per_cycle)
+            .set("intra_latency_cycles", self.intra_latency_cycles)
+            .set("uplink_bytes_per_cycle", self.uplink_bytes_per_cycle)
+            .set("uplink_latency_cycles", self.uplink_latency_cycles)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FabricSpec, String> {
+        let base = FabricSpec::leaf_spine(
+            j.get("boards_per_rack")
+                .as_usize()
+                .ok_or("fabric: missing/invalid 'boards_per_rack'")?,
+        );
+        let spec = FabricSpec {
+            topology: FabricTopology::from_name(
+                j.get("topology")
+                    .as_str()
+                    .ok_or("fabric: missing 'topology'")?,
+            )?,
+            boards_per_rack: base.boards_per_rack,
+            intra_bytes_per_cycle: j
+                .get("intra_bytes_per_cycle")
+                .as_f64()
+                .unwrap_or(base.intra_bytes_per_cycle),
+            intra_latency_cycles: j
+                .get("intra_latency_cycles")
+                .as_u64()
+                .unwrap_or(base.intra_latency_cycles),
+            uplink_bytes_per_cycle: j
+                .get("uplink_bytes_per_cycle")
+                .as_f64()
+                .unwrap_or(base.uplink_bytes_per_cycle),
+            uplink_latency_cycles: j
+                .get("uplink_latency_cycles")
+                .as_u64()
+                .unwrap_or(base.uplink_latency_cycles),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<FabricSpec, String> {
+        let j = parse(s).map_err(|e| format!("fabric json: {e}"))?;
+        FabricSpec::from_json(&j)
+    }
+}
+
 /// Configuration of a simulated multi-accelerator serving fleet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
@@ -950,6 +1156,12 @@ pub struct ClusterConfig {
     /// accept `board_down` and `clock_derate` only; `link_degrade` and
     /// `compute_degrade` require a non-empty `tenants` array.
     pub faults: Option<FaultScript>,
+    /// Rack-scale interconnect topology. `None` (the default, JSON key
+    /// absent) keeps every transfer on the original private
+    /// point-to-point links byte-for-byte; `Some` routes all traffic —
+    /// pipeline boundaries, migrations, fault drains — over shared
+    /// serializing fabric segments and makes placement topology-aware.
+    pub fabric: Option<FabricSpec>,
 }
 
 impl ClusterConfig {
@@ -975,6 +1187,7 @@ impl ClusterConfig {
             preempt_mode: PreemptMode::Restart,
             preempt_refill_cycles: 100,
             faults: None,
+            fabric: None,
         }
     }
 
@@ -1103,16 +1316,22 @@ impl ClusterConfig {
                 return Err(format!("cluster: duplicate tenant name '{}'", t.name));
             }
         }
+        if let Some(fb) = &self.fabric {
+            fb.validate()?;
+        }
         if let Some(f) = &self.faults {
             f.validate()?;
             for (i, ev) in f.events.iter().enumerate() {
                 // The single-network simulators understand board death and
-                // clock derating; link degradation and partial-capacity
-                // brownouts are multi-tenant-only semantics.
+                // clock derating; link degradation, partial-capacity
+                // brownouts and rack outages are multi-tenant-only
+                // semantics.
                 if self.tenants.is_empty()
                     && matches!(
                         ev,
-                        FaultEvent::LinkDegrade { .. } | FaultEvent::ComputeDegrade { .. }
+                        FaultEvent::LinkDegrade { .. }
+                            | FaultEvent::ComputeDegrade { .. }
+                            | FaultEvent::RackDown { .. }
                     )
                 {
                     return Err(format!(
@@ -1121,11 +1340,28 @@ impl ClusterConfig {
                          'board_down' and 'clock_derate')"
                     ));
                 }
+                if let FaultEvent::RackDown { rack, .. } = ev {
+                    let fb = self.fabric.as_ref().ok_or_else(|| {
+                        format!(
+                            "cluster: faults events[{i}] is 'rack_down' but no 'fabric' \
+                             is configured — racks only exist on a fabric"
+                        )
+                    })?;
+                    let n_racks = fb.n_racks(self.boards);
+                    if *rack >= n_racks {
+                        return Err(format!(
+                            "cluster: faults events[{i}].rack = {rack} out of range \
+                             (fabric has {n_racks} rack(s))"
+                        ));
+                    }
+                    continue;
+                }
                 let (label, b) = match ev {
                     FaultEvent::BoardDown { board, .. } => ("board", *board),
                     FaultEvent::LinkDegrade { link, .. } => ("link", *link),
                     FaultEvent::ClockDerate { board, .. } => ("board", *board),
                     FaultEvent::ComputeDegrade { board, .. } => ("board", *board),
+                    FaultEvent::RackDown { .. } => unreachable!("handled above"),
                 };
                 if b >= self.boards {
                     return Err(format!(
@@ -1190,6 +1426,9 @@ impl ClusterConfig {
         if let Some(f) = &self.faults {
             j = j.set("faults", f.to_json());
         }
+        if let Some(fb) = &self.fabric {
+            j = j.set("fabric", fb.to_json());
+        }
         j
     }
 
@@ -1221,6 +1460,10 @@ impl ClusterConfig {
         let faults = match j.get("faults") {
             Json::Null => None,
             v => Some(FaultScript::from_json(v)?),
+        };
+        let fabric = match j.get("fabric") {
+            Json::Null => None,
+            v => Some(FabricSpec::from_json(v)?),
         };
         let cfg = ClusterConfig {
             boards: j
@@ -1272,6 +1515,7 @@ impl ClusterConfig {
                 .as_u64()
                 .unwrap_or(base.preempt_refill_cycles),
             faults,
+            fabric,
         };
         cfg.validate()?;
         Ok(cfg)

@@ -6,7 +6,7 @@ pub mod network;
 
 pub use accel::{AccelConfig, Platform};
 pub use cluster::{
-    BoardSpec, ClusterConfig, FaultEvent, FaultScript, LoadStep, OverloadPolicy, PreemptMode,
-    ReshardPolicy, RetryPolicy, ShardMode, SloPolicy, TenantSpec,
+    BoardSpec, ClusterConfig, FabricSpec, FabricTopology, FaultEvent, FaultScript, LoadStep,
+    OverloadPolicy, PreemptMode, ReshardPolicy, RetryPolicy, ShardMode, SloPolicy, TenantSpec,
 };
 pub use network::{custom_4conv, paper_test_example, tiny_vgg, vgg16_full, vgg16_prefix, Layer, Network, VolShape};

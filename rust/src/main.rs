@@ -40,6 +40,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "cluster-config", takes_value: true, help: "cluster: path to a ClusterConfig JSON (overrides the flags above; supports heterogeneous board_specs, load_steps, reshard policy, tenants)", default: None },
         OptSpec { name: "tenants", takes_value: true, help: "cluster: path to a JSON array of TenantSpec objects — multi-tenant serving with per-tenant SLOs, priorities, DRR weights and preemption", default: None },
         OptSpec { name: "faults", takes_value: true, help: "cluster: path to a FaultScript JSON (board_down / link_degrade / clock_derate / compute_degrade events); board_down-with-recovery and clock_derate also work single-network, the rest require --tenants (or a config with tenants)", default: None },
+        OptSpec { name: "fabric", takes_value: true, help: "cluster: path to a FabricSpec JSON (rack_ring | leaf_spine topology, boards_per_rack, per-segment bandwidth/latency) — routes all inter-board traffic over shared rack/uplink segments and prints per-segment utilization", default: None },
         OptSpec { name: "shed", takes_value: false, help: "cluster: print the per-tenant overload-shedding summary (offered / shed / retried / abandoned / goodput) — meaningful when a tenant carries an overload policy", default: None },
         OptSpec { name: "sweep", takes_value: false, help: "cluster: sweep 1..=boards instead of a single run", default: None },
         OptSpec { name: "trace", takes_value: true, help: "cluster: arm the telemetry sink and write the full trace (events, window samples, latency sketches) plus the report to this JSON file", default: None },
@@ -368,6 +369,11 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("reading fault script '{path}': {e}"))?;
         ccfg.faults = Some(decoilfnet::config::FaultScript::from_json_str(&text)?);
     }
+    if let Some(path) = args.opt("fabric") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading fabric spec '{path}': {e}"))?;
+        ccfg.fabric = Some(decoilfnet::config::FabricSpec::from_json_str(&text)?);
+    }
     ccfg.validate()?;
 
     let board_counts: Vec<usize> = if args.has_flag("sweep") {
@@ -490,6 +496,24 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                          controller window back within 1.25x the pre-fault p99"
                     );
                 }
+            }
+            if let Some(fb) = &r.fabric {
+                let mut ft = Table::new(&["segment", "kind", "MB moved", "transfers", "busy util"])
+                    .title(&format!(
+                        "fabric segments ({} topology, {} rack(s) x {} board(s))",
+                        fb.topology, fb.racks, fb.boards_per_rack
+                    ))
+                    .label_col();
+                for s in &fb.segments {
+                    ft.row(&[
+                        s.name.clone(),
+                        s.kind.clone(),
+                        format!("{:.2}", s.bytes_moved as f64 / (1024.0 * 1024.0)),
+                        s.transfers.to_string(),
+                        format!("{:.0}%", 100.0 * s.utilization),
+                    ]);
+                }
+                println!("{}", ft.to_ascii());
             }
             if !r.tenants.is_empty() {
                 let mut tt = Table::new(&[

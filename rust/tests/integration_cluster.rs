@@ -51,6 +51,7 @@ fn ideal_cfg(boards: usize, mode: ShardMode, requests: usize) -> ClusterConfig {
         preempt_mode: PreemptMode::Restart,
         preempt_refill_cycles: 100,
         faults: None,
+        fabric: None,
     }
 }
 

@@ -1,0 +1,657 @@
+//! Interconnect-fabric battery: routed topologies, shared-segment
+//! contention, topology-aware placement, and the link-accounting
+//! conservation laws — seeded, deterministic, replayable per case.
+//!
+//! Properties held:
+//!
+//! * **Per-segment byte conservation** — across randomized topologies
+//!   (rack ring / leaf-spine, varying racks and uplink widths), replaying
+//!   every `route_transfer` trace event through `Fabric::route` reproduces
+//!   each segment's byte odometer exactly, and the telemetry `route_bytes`
+//!   counter equals the report's `link_bytes_total` (the static scheduler
+//!   bills only boundary traffic).
+//! * **Serialized lower bound** — two pipelined chains whose boundaries
+//!   share one rack uplink finish no earlier than the uplink can drain
+//!   their combined bytes; and the same chain placed cross-rack is
+//!   measurably slower than in-rack at identical payload.
+//! * **No-residue** — the report of a fabric-armed run differs from the
+//!   `fabric: None` run of the same scene by exactly the new keys (the
+//!   `fabric` section and the `route_*` telemetry counters); the flat
+//!   report loses nothing.
+//! * **Conservation across re-shard** — a board failure mid-transfer
+//!   forces an emergency re-shard; the fabric's segment odometers still
+//!   replay exactly from the route events (nothing is reset by the link
+//!   rebuild), and every request completes.
+//! * **Rack-scoped faults** — `rack_down` expands to correlated
+//!   board-down events over the rack's members; a replicated tenant whose
+//!   replicas the topology-aware planner spread across racks survives on
+//!   the other rack.
+//!
+//! The golden fixture (`fabric_uplink_contention.json`) pins the full
+//! `decoilfnet-fleet-trace/v1` document for the shared-uplink scene, with
+//! the same self-seeding allowlist discipline as the other fixture suites
+//! (never on CI).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{
+    place_tenants, place_tenants_capacity_fabric, simulate_fleet_multi_tenant_traced,
+    simulate_fleet_traced, Fabric, ShardPlan, TenantWorkload, TraceEvent, TraceSink,
+};
+use decoilfnet::config::{
+    tiny_vgg, AccelConfig, ClusterConfig, FabricSpec, FabricTopology, FaultEvent, FaultScript,
+    PreemptMode, ReshardPolicy, ShardMode, SloPolicy, TenantSpec,
+};
+use decoilfnet::util::json::{parse, Json};
+use decoilfnet::util::prop::{check, PropConfig};
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// Fixtures authored in a toolchain-less environment that may self-seed on
+/// their first run — same allowlist discipline as `integration_fixtures.rs`:
+/// only named files may seed, and never on CI.
+const SEEDABLE_FIXTURES: &[&str] = &["fabric_uplink_contention.json"];
+
+/// Structural fixture comparison (exact except floats at 1e-9 relative),
+/// with the same seed/update/CI semantics as `integration_fixtures.rs`.
+fn assert_matches_fixture(name: &str, actual: &Json) {
+    let path = fixture_path(name);
+    let update = std::env::var("DECOILFNET_UPDATE_FIXTURES").map(|v| v == "1") == Ok(true);
+    if !update && !path.exists() && std::env::var_os("GITHUB_ACTIONS").is_some() {
+        panic!(
+            "fixture {name} is not committed (self-seeding is disabled on CI): \
+             run `cargo test --test integration_fabric` locally and commit \
+             rust/tests/fixtures/{name}"
+        );
+    }
+    if update || (!path.exists() && SEEDABLE_FIXTURES.contains(&name)) {
+        std::fs::write(&path, actual.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+        eprintln!(
+            "{} fixture {name} — commit the generated file",
+            if update { "regenerated" } else { "seeded" }
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()));
+    let expected = parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()));
+    let mut diffs = Vec::new();
+    diff_json("$", &expected, actual, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "fabric run diverged from fixture {name} at:\n  {}\n\
+         (intentional model change? regenerate with \
+         DECOILFNET_UPDATE_FIXTURES=1 and commit the diff)",
+        diffs.join("\n  ")
+    );
+}
+
+/// Structural comparison: exact except floats at 1e-9 relative tolerance.
+fn diff_json(path: &str, want: &Json, got: &Json, out: &mut Vec<String>) {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if (a - b).abs() > tol {
+                out.push(format!("{path}: {a} vs {b}"));
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            for k in a.keys().chain(b.keys().filter(|k| !a.contains_key(*k))) {
+                match (a.get(k), b.get(k)) {
+                    (Some(x), Some(y)) => diff_json(&format!("{path}.{k}"), x, y, out),
+                    (Some(_), None) => out.push(format!("{path}.{k}: missing from report")),
+                    (None, Some(_)) => out.push(format!("{path}.{k}: not in fixture")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                out.push(format!("{path}: array len {} vs {}", a.len(), b.len()));
+            } else {
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    diff_json(&format!("{path}[{i}]"), x, y, out);
+                }
+            }
+        }
+        (a, b) => {
+            if a != b {
+                out.push(format!("{path}: {a:?} vs {b:?}"));
+            }
+        }
+    }
+}
+
+/// Every object key path of a JSON document (array elements share their
+/// parent's `[]` path — fixture-stable regardless of array lengths).
+fn key_paths(j: &Json, prefix: &str, out: &mut BTreeSet<String>) {
+    match j {
+        Json::Obj(m) => {
+            for k in m.keys() {
+                let p = format!("{prefix}.{k}");
+                key_paths(m.get(k).unwrap(), &p, out);
+                out.insert(p);
+            }
+        }
+        Json::Arr(a) => {
+            for x in a {
+                key_paths(x, &format!("{prefix}[]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Replay every `route_transfer` event through a freshly built router and
+/// return (per-segment expected bytes, total event bytes). The sim billed
+/// the real fabric; if its odometers differ from this replay, bytes were
+/// lost or invented somewhere — e.g. by a re-shard rebuilding state.
+fn replay_routes(
+    spec: &FabricSpec,
+    boards: usize,
+    events: &[TraceEvent],
+) -> Result<(Vec<u64>, u64), String> {
+    let fab = Fabric::new(spec, boards);
+    let mut per_seg = vec![0u64; fab.segments.len()];
+    let mut total = 0u64;
+    for ev in events {
+        if let TraceEvent::RouteTransfer {
+            src, dst, bytes, hops, ..
+        } = ev
+        {
+            let route = fab.route(*src, *dst);
+            if route.len() != *hops {
+                return Err(format!(
+                    "route_transfer {src}->{dst} recorded {hops} hops, router says {}",
+                    route.len()
+                ));
+            }
+            for &s in &route {
+                per_seg[s] += *bytes;
+            }
+            total += *bytes;
+        }
+    }
+    Ok((per_seg, total))
+}
+
+fn segments_match(
+    report: &decoilfnet::cluster::FleetReport,
+    per_seg: &[u64],
+) -> Result<(), String> {
+    let fs = report.fabric.as_ref().ok_or("report is missing the fabric section")?;
+    if fs.segments.len() != per_seg.len() {
+        return Err(format!(
+            "segment count {} != router's {}",
+            fs.segments.len(),
+            per_seg.len()
+        ));
+    }
+    for (i, s) in fs.segments.iter().enumerate() {
+        if s.bytes_moved != per_seg[i] {
+            return Err(format!(
+                "segment {i} ({}): odometer {} diverged from the route replay's {}",
+                s.name, s.bytes_moved, per_seg[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn pipelined_cfg(boards: usize, requests: usize, seed: u64) -> ClusterConfig {
+    let mut c = ClusterConfig::fleet_default();
+    c.boards = boards;
+    c.mode = ShardMode::Pipelined;
+    c.board_specs = vec![];
+    c.link_bytes_per_cycle = 16.0;
+    c.link_latency_cycles = 64;
+    c.aggregate_ddr_bytes_per_cycle = None;
+    c.arrival_rps = f64::INFINITY;
+    c.load_steps = vec![];
+    c.requests = requests;
+    c.seed = seed;
+    c.max_batch = 4;
+    c.max_wait_us = 0.0;
+    c.reshard = None;
+    c.tenants = vec![];
+    c
+}
+
+#[derive(Debug)]
+struct FabricCase {
+    boards: usize,
+    boards_per_rack: usize,
+    ring: bool,
+    uplink_bpc: f64,
+    requests: usize,
+    seed: u64,
+}
+
+/// ≥ 64 randomized topologies: the static pipelined scheduler's fabric
+/// odometers replay exactly from the trace, and the telemetry counters
+/// agree with the report's boundary-byte total.
+#[test]
+fn prop_per_segment_bytes_conserve_across_topologies() {
+    let cfg = AccelConfig::paper_default();
+    let net = tiny_vgg();
+    let weights = Weights::random(&net, 1);
+    let plan = FusionPlan::unfused(7);
+    check(
+        "fabric-conservation-battery",
+        PropConfig { cases: 64, seed: 0xFAB0C0DE },
+        |r| FabricCase {
+            boards: r.range_usize(2, 4),
+            boards_per_rack: r.range_usize(1, 4),
+            ring: r.below(2) == 1,
+            uplink_bpc: [1.0, 2.0, 4.0][r.below(3) as usize],
+            requests: r.range_usize(8, 32),
+            seed: r.range_u64(1, 1u64 << 40),
+        },
+        |case| {
+            let spec = FabricSpec {
+                topology: if case.ring {
+                    FabricTopology::RackRing
+                } else {
+                    FabricTopology::LeafSpine
+                },
+                uplink_bytes_per_cycle: case.uplink_bpc,
+                ..FabricSpec::leaf_spine(case.boards_per_rack)
+            };
+            let shard = ShardPlan::pipelined(&cfg, &net, &weights, &plan, case.boards);
+            let mut ccfg = pipelined_cfg(case.boards, case.requests, case.seed);
+            ccfg.fabric = Some(spec.clone());
+            let mut sink = TraceSink::enabled();
+            let r = simulate_fleet_traced(&cfg, &shard, &ccfg, &mut sink);
+            if r.completed != case.requests {
+                return Err(format!("{}/{} requests completed", r.completed, case.requests));
+            }
+
+            let (per_seg, total) = replay_routes(&spec, case.boards, &sink.events)?;
+            segments_match(&r, &per_seg)?;
+            // The static scheduler routes boundary traffic only, so the
+            // event total IS the link-byte ledger, and telemetry agrees.
+            if total != r.link_bytes_total {
+                return Err(format!(
+                    "route events carried {total} B but the boundary ledger says {}",
+                    r.link_bytes_total
+                ));
+            }
+            let tel = r.telemetry.as_ref().ok_or("armed sink missing from report")?;
+            if tel.route_bytes != Some(total) {
+                return Err(format!(
+                    "telemetry route_bytes {:?} != event total {total}",
+                    tel.route_bytes
+                ));
+            }
+            if tel.route_transfers.map(|n| n > 0) != Some(total > 0) {
+                return Err(format!(
+                    "route_transfers {:?} inconsistent with {total} B moved",
+                    tel.route_transfers
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance scene: the same 2-stage chain at identical payload is
+/// measurably slower split across two racks than inside one, and the
+/// cross-rack run's makespan respects the uplink's serialized drain bound.
+#[test]
+fn cross_rack_chain_is_slower_than_in_rack_at_equal_payload() {
+    let cfg = AccelConfig::paper_default();
+    let net = tiny_vgg();
+    let weights = Weights::random(&net, 1);
+    let plan = FusionPlan::unfused(7);
+    let shard = ShardPlan::pipelined(&cfg, &net, &weights, &plan, 2);
+    let mut ccfg = pipelined_cfg(2, 64, 9);
+
+    // Both boards in one rack: boundary traffic rides the backplane only.
+    ccfg.fabric = Some(FabricSpec::leaf_spine(2));
+    let r_in = simulate_fleet_traced(&cfg, &shard, &ccfg, &mut TraceSink::disabled());
+    let in_sum = r_in.fabric.as_ref().unwrap();
+    assert!(
+        in_sum.segments.iter().all(|s| s.kind != "uplink" || s.bytes_moved == 0),
+        "an in-rack chain must not touch an uplink"
+    );
+
+    // One board per rack, a thin uplink: every boundary crosses four
+    // segments and serializes on both racks' uplinks.
+    let thin = FabricSpec {
+        uplink_bytes_per_cycle: 1.0,
+        ..FabricSpec::leaf_spine(1)
+    };
+    ccfg.fabric = Some(thin.clone());
+    let r_x = simulate_fleet_traced(&cfg, &shard, &ccfg, &mut TraceSink::disabled());
+
+    assert_eq!(
+        r_in.link_bytes_total, r_x.link_bytes_total,
+        "the placement moves the route, not the payload"
+    );
+    assert!(
+        r_x.makespan_cycles > r_in.makespan_cycles,
+        "cross-rack ({}) must be slower than in-rack ({})",
+        r_x.makespan_cycles,
+        r_in.makespan_cycles
+    );
+    // Serialized lower bound: a segment cannot drain faster than its
+    // bandwidth, and it can only be busy while the run is live.
+    let xs = r_x.fabric.as_ref().unwrap();
+    for s in xs.segments.iter().filter(|s| s.kind == "uplink") {
+        assert_eq!(s.bytes_moved, r_x.link_bytes_total, "1 board/rack: all traffic crosses");
+        let drain = (s.bytes_moved as f64 / thin.uplink_bytes_per_cycle) as u64;
+        assert!(
+            r_x.makespan_cycles >= drain,
+            "makespan {} beats the uplink's serialized drain {}",
+            r_x.makespan_cycles,
+            drain
+        );
+        assert!(s.busy_cycles >= drain, "busy time under-counts serialization");
+        assert!(s.busy_cycles <= r_x.makespan_cycles, "busy time exceeds the run");
+    }
+}
+
+/// Two pipelined tenants co-resident on a 2-board, 2-rack fleet: both
+/// chains' boundary traffic shares the same uplinks, so the fleet cannot
+/// finish before the shared wire drains the combined bytes. Pins the
+/// golden shared-uplink contention fixture.
+#[test]
+fn two_chains_sharing_an_uplink_respect_the_serialized_bound() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone()];
+    let tenant = |name: &str, seed: u64| TenantSpec {
+        name: name.to_string(),
+        network: tiny_vgg(),
+        weights_seed: seed,
+        arrival_rps: f64::INFINITY,
+        requests: 48,
+        load_steps: vec![],
+        mode: ShardMode::Pipelined,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 5000.0,
+            priority: 1,
+            weight: 1.0,
+            overload: None,
+        },
+    };
+    let specs = vec![tenant("alpha", 1), tenant("bravo", 2)];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let unfused = FusionPlan::unfused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &unfused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads).expect("both chains fit");
+    let spec = FabricSpec {
+        uplink_bytes_per_cycle: 2.0,
+        ..FabricSpec::leaf_spine(1)
+    };
+    let mut ccfg = pipelined_cfg(2, 1, 11);
+    ccfg.tenants = specs.clone();
+    ccfg.preempt_mode = PreemptMode::Resume;
+    ccfg.fabric = Some(spec.clone());
+    let mut sink = TraceSink::enabled();
+    let r = simulate_fleet_multi_tenant_traced(
+        &cfg, &fleet, &specs, &weights, &plans, &ccfg, &mut sink,
+    );
+    assert_eq!(r.completed, 96, "both tenants complete in full");
+
+    let (per_seg, total) = replay_routes(&spec, 2, &sink.events).unwrap();
+    segments_match(&r, &per_seg).unwrap();
+    assert!(total > 0, "two chains must generate boundary traffic");
+    let fs = r.fabric.as_ref().unwrap();
+    for s in fs.segments.iter().filter(|s| s.kind == "uplink") {
+        // Both tenants' bytes cross this wire; the fleet cannot finish
+        // before it drains them back to back.
+        assert_eq!(s.bytes_moved, total, "shared uplink carries both chains");
+        let drain = (s.bytes_moved as f64 / spec.uplink_bytes_per_cycle) as u64;
+        assert!(
+            r.makespan_cycles >= drain,
+            "makespan {} beats the shared uplink's serialized drain {}",
+            r.makespan_cycles,
+            drain
+        );
+    }
+
+    let doc = Json::obj()
+        .set("schema", "decoilfnet-fleet-trace/v1")
+        .set("report", r.to_json())
+        .set("trace", sink.to_json());
+    assert_matches_fixture("fabric_uplink_contention.json", &doc);
+}
+
+/// The no-residue contract, stated as an exact key diff: arming a fabric
+/// adds the `fabric` section and the `route_*` telemetry counters and
+/// NOTHING else, and removes nothing.
+#[test]
+fn fabric_armed_report_diff_is_exactly_the_new_keys() {
+    let cfg = AccelConfig::paper_default();
+    let net = tiny_vgg();
+    let weights = Weights::random(&net, 1);
+    let plan = FusionPlan::unfused(7);
+    let shard = ShardPlan::pipelined(&cfg, &net, &weights, &plan, 2);
+    let mut ccfg = pipelined_cfg(2, 32, 5);
+
+    let mut flat_sink = TraceSink::enabled();
+    let flat = simulate_fleet_traced(&cfg, &shard, &ccfg, &mut flat_sink);
+    ccfg.fabric = Some(FabricSpec::leaf_spine(1));
+    let mut armed_sink = TraceSink::enabled();
+    let armed = simulate_fleet_traced(&cfg, &shard, &ccfg, &mut armed_sink);
+
+    let (mut fk, mut ak) = (BTreeSet::new(), BTreeSet::new());
+    key_paths(&flat.to_json(), "$", &mut fk);
+    key_paths(&armed.to_json(), "$", &mut ak);
+    let lost: Vec<&String> = fk.difference(&ak).collect();
+    assert!(lost.is_empty(), "arming the fabric must lose no keys: {lost:?}");
+    let new: Vec<&String> = ak.difference(&fk).collect();
+    assert!(!new.is_empty(), "an armed pipelined run must add keys");
+    for k in &new {
+        assert!(
+            k.starts_with("$.fabric") || k.starts_with("$.telemetry.route_"),
+            "unexpected new key {k}: the fabric must be additive-by-omission"
+        );
+    }
+    for must in ["$.fabric", "$.telemetry.route_bytes", "$.telemetry.route_transfers"] {
+        assert!(
+            new.iter().any(|k| k.as_str() == must),
+            "expected new key {must} missing"
+        );
+    }
+    // And the flat report has no trace of the feature at all.
+    let s = flat.to_json().to_string_compact();
+    for key in ["\"fabric\"", "route_transfers", "route_bytes", "route_hops_max"] {
+        assert!(!s.contains(key), "flat run must not grow {key}");
+    }
+}
+
+/// Satellite regression for the re-shard link-state reset: a board failure
+/// mid-transfer severs a pipelined chain, the emergency re-shard rebuilds
+/// the plan's links — and the fabric's odometers still replay exactly from
+/// the route events. Before the carry fix, rebuilt channels forgot their
+/// occupancy and byte counts whenever a re-plan SUCCEEDED.
+#[test]
+fn emergency_reshard_mid_transfer_conserves_fabric_bytes() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+    let specs = vec![TenantSpec {
+        name: "chain".to_string(),
+        network: tiny_vgg(),
+        weights_seed: 1,
+        arrival_rps: 400.0,
+        requests: 256,
+        load_steps: vec![],
+        mode: ShardMode::Pipelined,
+        replicas: None,
+        slo: SloPolicy {
+            p99_ms: 50.0,
+            priority: 1,
+            weight: 1.0,
+            overload: None,
+        },
+    }];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let unfused = FusionPlan::unfused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &unfused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads).expect("chain fits");
+    assert!(plans[0].shards.len() >= 2, "a chain with real boundaries");
+    let spec = FabricSpec::leaf_spine(3); // one rack: 1-hop routes
+    let mut ccfg = pipelined_cfg(3, 1, 13);
+    ccfg.tenants = specs.clone();
+    ccfg.preempt_mode = PreemptMode::Resume;
+    ccfg.reshard = Some(ReshardPolicy {
+        window: 32,
+        util_skew: 0.9,
+        p99_ms: 50.0,
+        cooldown_windows: 1,
+        migration_factor: 0.0,
+    });
+    ccfg.fabric = Some(spec.clone());
+    // Kill the chain's middle stage at ~35% of the ~640 ms run, recover
+    // at ~55% — transfers are in flight on both sides of the cut.
+    ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::BoardDown {
+            board: plans[0].shards[1].board,
+            at_ms: 224.0,
+            recover_ms: Some(352.0),
+        }],
+    });
+    let mut sink = TraceSink::enabled();
+    let r = simulate_fleet_multi_tenant_traced(
+        &cfg, &fleet, &specs, &weights, &plans, &ccfg, &mut sink,
+    );
+    assert_eq!(r.completed, 256, "the outage loses nothing");
+    let f = r.faults.as_ref().expect("script armed");
+    assert!(
+        f.emergency_reshards >= 1,
+        "severing the chain must force an emergency re-shard"
+    );
+    // The conservation law the carry fix protects: the fabric odometers
+    // replay exactly from the events even though the plan's link channels
+    // were rebuilt mid-run.
+    let (per_seg, total) = replay_routes(&spec, 3, &sink.events).unwrap();
+    segments_match(&r, &per_seg).unwrap();
+    assert!(total > 0);
+    assert_eq!(r.telemetry.as_ref().unwrap().route_bytes, Some(total));
+}
+
+/// `rack_down` is a correlated failure domain: both boards of the dead
+/// rack fail together, and the topology-aware placement's cross-rack
+/// replica spread is exactly what keeps the tenant serving.
+#[test]
+fn rack_down_fails_over_to_the_replica_in_the_other_rack() {
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(), cfg.clone(), cfg.clone(), cfg.clone()];
+    let spec = FabricSpec::leaf_spine(2);
+    let specs = vec![TenantSpec {
+        name: "svc".to_string(),
+        network: tiny_vgg(),
+        weights_seed: 1,
+        arrival_rps: 400.0,
+        requests: 256,
+        load_steps: vec![],
+        mode: ShardMode::Replicated,
+        replicas: Some(2),
+        slo: SloPolicy {
+            p99_ms: 50.0,
+            priority: 1,
+            weight: 1.0,
+            overload: None,
+        },
+    }];
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants_capacity_fabric(
+        &fleet,
+        &workloads,
+        &[0; 4],
+        &[true; 4],
+        &[1.0; 4],
+        Some(&spec),
+    )
+    .expect("replicas place");
+    let racks: BTreeSet<usize> = plans[0].shards.iter().map(|s| spec.rack_of(s.board)).collect();
+    assert_eq!(racks.len(), 2, "replicas must land in different racks");
+
+    let mut ccfg = pipelined_cfg(4, 1, 17);
+    ccfg.mode = ShardMode::Replicated;
+    ccfg.tenants = specs.clone();
+    ccfg.preempt_mode = PreemptMode::Resume;
+    ccfg.reshard = Some(ReshardPolicy {
+        window: 32,
+        util_skew: 0.9,
+        p99_ms: 50.0,
+        cooldown_windows: 1,
+        migration_factor: 0.0,
+    });
+    ccfg.fabric = Some(spec.clone());
+    ccfg.faults = Some(FaultScript {
+        events: vec![FaultEvent::RackDown {
+            rack: 0,
+            at_ms: 224.0,
+            recover_ms: Some(352.0),
+        }],
+    });
+    ccfg.validate().expect("rack_down validates against the fabric");
+    let mut sink = TraceSink::enabled();
+    let r = simulate_fleet_multi_tenant_traced(
+        &cfg, &fleet, &specs, &weights, &plans, &ccfg, &mut sink,
+    );
+    assert_eq!(r.completed, 256, "the surviving rack carries the tenant");
+    let f = r.faults.as_ref().expect("script armed");
+    assert_eq!(
+        f.board_failures, 2,
+        "rack_down fails every board of the rack together"
+    );
+    assert_eq!(f.board_recoveries, 2, "and recovery brings the rack back");
+}

@@ -346,6 +346,61 @@ class ShedRows(CheckPairBase):
         self.assertTrue(self.check(base, doc({"chaos_rto_ms": metric(40.0, "lower")})))
 
 
+class FabricRows(CheckPairBase):
+    """The interconnect-fabric rows (PR 9): the cluster bench's fabric act
+    runs the same pipelined chain in-rack and cross-rack over a thin-uplink
+    leaf-spine and emits the locality speedup (cross / in-rack makespan)
+    and the peak uplink utilization. Same untracked -> exempt -> armed
+    lifecycle as the mt_*, telemetry, chaos, and shed rows; once armed, a
+    collapsing locality speedup (the fabric no longer modeling cross-rack
+    cost) or a hotter uplink gates like any tracked metric."""
+
+    FABRIC = {
+        "fabric_locality_speedup": metric(1.8, "higher", gate=False),
+        "fabric_uplink_util": metric(0.62, "lower", gate=False),
+    }
+
+    def test_new_rows_in_current_only_are_untracked_and_pass(self):
+        # First CI run after the fabric act lands: the committed baseline
+        # predates the rows, so they report as untracked.
+        base = doc({"replicated_fused_ideal_rps_b1": metric(37.07)})
+        cur_metrics = {"replicated_fused_ideal_rps_b1": metric(37.07)}
+        cur_metrics.update(self.FABRIC)
+        self.assertTrue(self.check(base, doc(cur_metrics)))
+
+    def test_exempt_fabric_rows_may_drift_without_failing(self):
+        # A routing or topology-model change halving the locality gap or
+        # saturating the uplink must never fail the gate while the rows
+        # ride exempt.
+        base = doc(dict(self.FABRIC))
+        drifted = {
+            "fabric_locality_speedup": metric(1.1, "higher"),
+            "fabric_uplink_util": metric(0.97, "lower"),
+        }
+        self.assertTrue(self.check(base, doc(drifted)))
+
+    def test_exempt_fabric_rows_may_disappear(self):
+        # e.g. a bench invocation without the fabric act.
+        base = doc(dict(self.FABRIC))
+        self.assertTrue(self.check(base, doc({"other": metric(1.0)})))
+
+    def test_armed_locality_speedup_gates_in_the_higher_direction(self):
+        # Once armed, a fabric that stops charging for cross-rack hops
+        # (speedup collapsing toward 1.0) fails the pair.
+        base = doc({"fabric_locality_speedup": metric(1.8, "higher")})
+        self.assertFalse(
+            self.check(base, doc({"fabric_locality_speedup": metric(1.0, "higher")}))
+        )
+        self.assertTrue(
+            self.check(base, doc({"fabric_locality_speedup": metric(2.1, "higher")}))
+        )
+
+    def test_armed_uplink_util_gates_in_the_lower_direction(self):
+        base = doc({"fabric_uplink_util": metric(0.62, "lower")})
+        self.assertFalse(self.check(base, doc({"fabric_uplink_util": metric(0.95, "lower")})))
+        self.assertTrue(self.check(base, doc({"fabric_uplink_util": metric(0.55, "lower")})))
+
+
 class MultiPairMain(CheckPairBase):
     def run_main(self, argv):
         old = sys.argv
