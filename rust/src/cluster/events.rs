@@ -4,16 +4,26 @@
 //! static scheduler re-checked batcher deadlines queue by queue, and the
 //! dynamic dispatcher re-scanned every board to find the earliest start —
 //! O(n·boards) over a sweep. This module replaces both inner loops with
-//! `BinaryHeap`s, making a 16-board × 100k-arrival sweep O(n log boards):
+//! index-aware heaps, making a 16-board × 100k-arrival sweep O(n log boards):
 //!
 //! * [`DeadlineQueue`] — a min-heap of pending batch-flush deadlines
-//!   (arrival/flush events), drained in time order;
+//!   (arrival/flush events), drained in time order. Events are **coalesced
+//!   per id**: the heap holds one entry per id (keyed by that id's earliest
+//!   pending instant) and the full per-id schedule lives in a flat sorted
+//!   run, so heap depth scales with *boards + tenants*, not with in-flight
+//!   items. Drain order is provably identical to the plain
+//!   `BinaryHeap<(at, id)>` it replaced: the heap root is the minimum over
+//!   per-id heads, each head is its id's minimum, and equal-instant ties
+//!   still break on the lower id — the property suite below replays
+//!   randomized traces against a sorted-vector oracle to pin this.
 //! * [`BoardPool`] — a busy/idle heap pair answering "which board can start
 //!   soonest" with the *exact* tie-breaks of the linear scan it replaced
 //!   (earliest start, then faster clock, then lower index); the property
-//!   suite below replays randomized traces against a brute-force scan
-//!   oracle, and the golden fixtures under `tests/fixtures/` pin the
-//!   resulting reports.
+//!   suite replays randomized traces against a brute-force scan oracle,
+//!   and the golden fixtures under `tests/fixtures/` pin the resulting
+//!   reports. [`BoardPool::rebuild`] re-seeds the pool in place (plan
+//!   swaps happen mid-run; the old path allocated three fresh buffers per
+//!   swap).
 //!
 //! Link-free state needs no heap: a pipelined batch walks its stage chain in
 //! order and each cut's [`crate::cluster::LinkChannel`] already carries its
@@ -22,12 +32,25 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// Min-heap of `(cycle, queue)` flush deadlines. Entries may go stale (a
-/// size-bound flush emptied the queue first); consumers validate against
-/// the batcher's live deadline before firing.
+/// `pos` sentinel: the id currently has no pending events (no heap entry).
+const ABSENT: usize = usize::MAX;
+
+/// Min-heap of `(cycle, id)` flush deadlines with per-id coalescing.
+/// Entries may go stale (a size-bound flush emptied the queue first);
+/// consumers validate against the batcher's live deadline before firing.
+///
+/// Layout: `heap` is a manual binary min-heap holding **one** `(head, id)`
+/// entry per id with pending events, where `head` is that id's earliest
+/// instant; `pending[id]` is the id's full schedule sorted *descending*
+/// (pop the earliest from the back in O(1)); `pos[id]` tracks the id's
+/// heap slot so `schedule` can decrease-key instead of pushing duplicates.
 #[derive(Debug, Default)]
 pub struct DeadlineQueue {
-    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    heap: Vec<(u64, usize)>,
+    pos: Vec<usize>,
+    pending: Vec<Vec<u64>>,
+    /// Total scheduled-but-unpopped events (uncoalesced count).
+    events: usize,
 }
 
 impl DeadlineQueue {
@@ -35,30 +58,85 @@ impl DeadlineQueue {
         DeadlineQueue::default()
     }
 
+    /// Pre-size the id-indexed tables (ids may still grow past `ids` —
+    /// the multi-tenant retry table appends ids mid-run).
+    pub fn with_capacity(ids: usize) -> DeadlineQueue {
+        DeadlineQueue {
+            heap: Vec::with_capacity(ids),
+            pos: vec![ABSENT; ids],
+            pending: vec![Vec::new(); ids],
+            events: 0,
+        }
+    }
+
     pub fn schedule(&mut self, at: u64, queue: usize) {
-        self.heap.push(Reverse((at, queue)));
+        if queue >= self.pending.len() {
+            self.pending.resize_with(queue + 1, Vec::new);
+            self.pos.resize(queue + 1, ABSENT);
+        }
+        let run = &mut self.pending[queue];
+        // Descending run: everything > `at` stays in front, the earliest
+        // instant sits at the back.
+        let i = run.partition_point(|&x| x > at);
+        run.insert(i, at);
+        self.events += 1;
+        let head = *run.last().expect("just inserted");
+        let slot = self.pos[queue];
+        if slot == ABSENT {
+            self.pos[queue] = self.heap.len();
+            self.heap.push((head, queue));
+            self.sift_up(self.heap.len() - 1);
+        } else if self.heap[slot].0 != head {
+            // The new event became the id's head — a decrease-key.
+            self.heap[slot].0 = head;
+            self.sift_up(slot);
+        }
     }
 
     /// Pop the earliest event not after `t`, if any.
     pub fn next_at_or_before(&mut self, t: u64) -> Option<(u64, usize)> {
-        match self.heap.peek() {
-            Some(Reverse((at, _))) if *at <= t => self.heap.pop().map(|Reverse(e)| e),
+        match self.heap.first() {
+            Some(&(at, _)) if at <= t => self.pop(),
             _ => None,
         }
     }
 
-    /// Pop the earliest event unconditionally (drain phase).
+    /// Pop the earliest event unconditionally (drain phase). Coalescing
+    /// never drops duplicates: every scheduled instant comes back out as
+    /// its own pop, in the exact `(cycle, id)` order of the plain heap
+    /// this replaced.
     pub fn pop(&mut self) -> Option<(u64, usize)> {
-        self.heap.pop().map(|Reverse(e)| e)
+        let &(at, id) = self.heap.first()?;
+        let run = &mut self.pending[id];
+        let popped = run.pop().expect("heap entry with empty run");
+        debug_assert_eq!(popped, at);
+        self.events -= 1;
+        if let Some(&next) = run.last() {
+            // Re-key the root at the id's next instant and restore order.
+            self.heap[0].0 = next;
+        } else {
+            self.pos[id] = ABSENT;
+            let last = self.heap.len() - 1;
+            self.heap.swap(0, last);
+            self.heap.pop();
+            if self.heap.is_empty() {
+                return Some((at, id));
+            }
+            self.pos[self.heap[0].1] = 0;
+        }
+        self.sift_down(0);
+        Some((at, id))
     }
 
     /// Earliest pending `(cycle, queue)` without popping it.
     pub fn peek(&self) -> Option<(u64, usize)> {
-        self.heap.peek().map(|&Reverse(e)| e)
+        self.heap.first().copied()
     }
 
-    /// Pending event count (stale entries included — consumers validate at
-    /// fire time).
+    /// **Coalesced** entry count: the number of ids with pending events,
+    /// i.e. the live heap depth (this is what the telemetry heap-depth
+    /// rows sample — O(boards + tenants) regardless of in-flight items).
+    /// Stale entries are included; consumers validate at fire time.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -66,6 +144,47 @@ impl DeadlineQueue {
     /// True when no events are pending — the simulators' drain invariant.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Total scheduled-but-unpopped events, duplicates included (the
+    /// pre-coalescing `len`).
+    pub fn pending_events(&self) -> usize {
+        self.events
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i] >= self.heap[parent] {
+                break;
+            }
+            self.heap.swap(i, parent);
+            self.pos[self.heap[i].1] = i;
+            self.pos[self.heap[parent].1] = parent;
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = l + 1;
+            let mut m = i;
+            if l < n && self.heap[l] < self.heap[m] {
+                m = l;
+            }
+            if r < n && self.heap[r] < self.heap[m] {
+                m = r;
+            }
+            if m == i {
+                return;
+            }
+            self.heap.swap(i, m);
+            self.pos[self.heap[i].1] = i;
+            self.pos[self.heap[m].1] = m;
+            i = m;
+        }
     }
 }
 
@@ -96,13 +215,23 @@ impl BoardPool {
     /// Build from `(freq_mhz, free_at)` slots, one per dispatchable shard.
     pub fn from_slots(slots: impl Iterator<Item = (f64, u64)>) -> BoardPool {
         let mut pool = BoardPool::default();
+        pool.rebuild(slots);
+        pool
+    }
+
+    /// Re-seed the pool in place from fresh slots, reusing the heap and
+    /// clock-table allocations. Mid-run plan swaps call this once per
+    /// re-shard instead of building a new pool.
+    pub fn rebuild(&mut self, slots: impl Iterator<Item = (f64, u64)>) {
+        self.busy.clear();
+        self.idle.clear();
+        self.freq_bits.clear();
         for (slot, (freq_mhz, free_at)) in slots.enumerate() {
             assert!(freq_mhz > 0.0, "board clocks must be positive");
-            pool.freq_bits.push(freq_mhz.to_bits());
-            pool.busy.push(Reverse((free_at, Reverse(freq_mhz.to_bits()), slot)));
+            self.freq_bits.push(freq_mhz.to_bits());
+            self.busy.push(Reverse((free_at, Reverse(freq_mhz.to_bits()), slot)));
         }
-        assert!(!pool.freq_bits.is_empty(), "pool needs at least one slot");
-        pool
+        assert!(!self.freq_bits.is_empty(), "pool needs at least one slot");
     }
 
     /// Choose the slot that can start soonest at time `now`; returns
@@ -186,6 +315,41 @@ mod tests {
         assert_eq!(q.len(), 0);
     }
 
+    #[test]
+    fn deadline_queue_coalesces_per_id() {
+        // Five events on one id occupy one heap entry; every instant still
+        // pops individually, duplicates included, in nondecreasing order.
+        let mut q = DeadlineQueue::with_capacity(2);
+        for at in [40, 10, 25, 25, 5] {
+            q.schedule(at, 7);
+        }
+        assert_eq!(q.len(), 1, "one id → one coalesced entry");
+        assert_eq!(q.pending_events(), 5);
+        assert_eq!(q.peek(), Some((5, 7)));
+        // A later-id event at an equal instant still loses the tie.
+        q.schedule(5, 9);
+        assert_eq!(q.len(), 2);
+        let drained: Vec<(u64, usize)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![(5, 7), (5, 9), (10, 7), (25, 7), (25, 7), (40, 7)]);
+        assert_eq!(q.pending_events(), 0);
+    }
+
+    #[test]
+    fn deadline_queue_decrease_key_reorders_head() {
+        // Scheduling an earlier instant on an id whose head is already in
+        // the heap must re-rank that id (the decrease-key path).
+        let mut q = DeadlineQueue::new();
+        q.schedule(10, 0);
+        q.schedule(7, 1);
+        assert_eq!(q.peek(), Some((7, 1)));
+        q.schedule(5, 0);
+        assert_eq!(q.peek(), Some((5, 0)));
+        assert_eq!(q.pop(), Some((5, 0)));
+        assert_eq!(q.pop(), Some((7, 1)));
+        assert_eq!(q.pop(), Some((10, 0)));
+        assert_eq!(q.pop(), None);
+    }
+
     /// One randomized operation against the queue: schedule an event, pop
     /// bounded at a horizon, or drain one unconditionally.
     #[derive(Debug, Clone, Copy)]
@@ -202,6 +366,7 @@ mod tests {
         // nondecreasing (time, queue) order between intervening schedules,
         // (b) `next_at_or_before(t)` never yields an event after `t` and
         // never withholds one at or before `t`, and (c) nothing is lost.
+        // The tight id range (0..=4) makes per-id coalescing constant.
         prop::check(
             "deadline-queue-vs-sorted-oracle",
             heap_prop_cfg(),
@@ -280,6 +445,28 @@ mod tests {
                             }
                         }
                     }
+                    // Coalescing invariant: heap depth counts ids, never
+                    // in-flight events; events are conserved.
+                    let distinct = {
+                        let mut ids: Vec<usize> = oracle.iter().map(|&(_, id)| id).collect();
+                        ids.sort_unstable();
+                        ids.dedup();
+                        ids.len()
+                    };
+                    if q.len() != distinct {
+                        return Err(format!(
+                            "coalesced len {} vs {} distinct pending ids",
+                            q.len(),
+                            distinct
+                        ));
+                    }
+                    if q.pending_events() != oracle.len() {
+                        return Err(format!(
+                            "pending_events {} vs oracle {}",
+                            q.pending_events(),
+                            oracle.len()
+                        ));
+                    }
                 }
                 // Full drain at the end comes out exactly sorted.
                 while let Some(e) = q.pop() {
@@ -334,6 +521,9 @@ mod tests {
     fn pool_matches_scan_from_staggered_initial_state() {
         // Same oracle, but slots start with nonzero, distinct `free_at`
         // values — the state every plan swap rebuilds the pool from.
+        // `rebuild` (the in-place swap path) must behave exactly like a
+        // fresh `from_slots`, including after prior use left the heaps
+        // populated.
         prop::check(
             "board-pool-vs-scan-staggered",
             heap_prop_cfg(),
@@ -349,7 +539,11 @@ mod tests {
             |(slots, ops)| {
                 let freqs: Vec<f64> = slots.iter().map(|&(f, _)| f).collect();
                 let mut scan_free: Vec<u64> = slots.iter().map(|&(_, at)| at).collect();
-                let mut pool = BoardPool::from_slots(slots.iter().copied());
+                // Seed with garbage state, then rebuild — the mid-run swap
+                // path must fully supersede whatever came before.
+                let mut pool = BoardPool::from_slots([(1.0, 999)].into_iter());
+                pool.pick(0);
+                pool.rebuild(slots.iter().copied());
                 let mut now = 0u64;
                 for &(advance, svc) in ops {
                     now += advance;

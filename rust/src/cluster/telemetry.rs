@@ -82,6 +82,20 @@ impl QuantileSketch {
         self.total
     }
 
+    /// Reset to the empty state, keeping the bin allocation. Window-scoped
+    /// consumers (the controller's per-window recovery check) reuse one
+    /// sketch across thousands of windows instead of reallocating 4096
+    /// bins each time.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.underflow = 0;
+        self.overflow = 0;
+        self.total = 0;
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+        self.sum = 0.0;
+    }
+
     pub fn min(&self) -> f64 {
         self.min
     }
@@ -872,6 +886,21 @@ mod tests {
         }
         assert_eq!(whole, merged);
         assert_eq!(whole.quantile(99.0), merged.quantile(99.0));
+    }
+
+    #[test]
+    fn sketch_reset_restores_pristine_state() {
+        let mut s = QuantileSketch::new();
+        for &x in &log_uniform_samples(3, 500) {
+            s.record(x);
+        }
+        s.record(0.0); // underflow bin
+        assert!(s.total() > 0);
+        s.reset();
+        assert_eq!(s, QuantileSketch::new());
+        // A reset sketch records like a fresh one.
+        s.record(0.42);
+        assert_eq!(s.quantile(99.0), 0.42);
     }
 
     #[test]

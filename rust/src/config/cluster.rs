@@ -116,14 +116,17 @@ impl ReshardPolicy {
         if self.window == 0 {
             return Err("reshard: window must be >= 1".into());
         }
-        if !(self.util_skew > 0.0) {
-            return Err("reshard: util_skew must be > 0".into());
+        if !(self.util_skew > 0.0) || !self.util_skew.is_finite() {
+            return Err("reshard: util_skew must be finite and > 0".into());
         }
-        if !(self.p99_ms > 0.0) {
-            return Err("reshard: p99_ms must be > 0".into());
+        if !(self.p99_ms > 0.0) || !self.p99_ms.is_finite() {
+            return Err("reshard: p99_ms must be finite and > 0".into());
         }
-        if !(self.migration_factor >= 0.0) {
-            return Err("reshard: migration_factor must be >= 0".into());
+        // Finiteness matters: the controller bills `cycles * migration_factor`
+        // through a checked u64 cast, so an infinite factor must die here,
+        // not mid-simulation.
+        if !(self.migration_factor >= 0.0) || !self.migration_factor.is_finite() {
+            return Err("reshard: migration_factor must be finite and >= 0".into());
         }
         Ok(())
     }
@@ -646,8 +649,8 @@ pub struct OverloadPolicy {
 
 impl OverloadPolicy {
     pub fn validate(&self) -> Result<(), String> {
-        if !(self.deadline_ms > 0.0) {
-            return Err("overload: deadline_ms must be > 0".into());
+        if !(self.deadline_ms > 0.0) || !self.deadline_ms.is_finite() {
+            return Err("overload: deadline_ms must be finite and > 0".into());
         }
         if self.max_queue == 0 {
             return Err("overload: max_queue must be >= 1".into());
@@ -713,8 +716,8 @@ pub struct SloPolicy {
 
 impl SloPolicy {
     pub fn validate(&self) -> Result<(), String> {
-        if !(self.p99_ms > 0.0) {
-            return Err("slo: p99_ms must be > 0".into());
+        if !(self.p99_ms > 0.0) || !self.p99_ms.is_finite() {
+            return Err("slo: p99_ms must be finite and > 0".into());
         }
         if !(self.weight > 0.0) || !self.weight.is_finite() {
             return Err("slo: weight must be finite and > 0".into());
@@ -1263,8 +1266,11 @@ impl ClusterConfig {
         if !(self.arrival_rps > 0.0) {
             return Err("cluster: arrival_rps must be > 0 (or omitted for a burst)".into());
         }
-        if !(self.max_wait_us >= 0.0) {
-            return Err("cluster: max_wait_us must be >= 0".into());
+        // The batcher converts this straight to a nanosecond deadline through
+        // a checked u64 cast; an infinite wait must fail validation, not
+        // panic when the first queue turns non-empty.
+        if !(self.max_wait_us >= 0.0) || !self.max_wait_us.is_finite() {
+            return Err("cluster: max_wait_us must be finite and >= 0".into());
         }
         if !self.board_specs.is_empty() {
             let total: usize = self.board_specs.iter().map(|s| s.count).sum();
@@ -1779,6 +1785,47 @@ mod tests {
             };
             assert!(bad.validate().is_err(), "weight {w} must be rejected");
         }
+    }
+
+    #[test]
+    fn validators_reject_nonfinite_thresholds() {
+        // Regression: every f64 that feeds a `* factor → u64 cycle cast` or
+        // a latency comparison must be finite. Pre-hardening an INFINITY
+        // migration_factor validated fine and then saturated the migration
+        // bill mid-run; NaN thresholds disarmed triggers silently.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut r = ReshardPolicy::default_policy();
+            r.migration_factor = bad;
+            assert!(r.validate().is_err(), "migration_factor {bad}");
+            let mut r = ReshardPolicy::default_policy();
+            r.p99_ms = bad;
+            assert!(r.validate().is_err(), "reshard p99_ms {bad}");
+            let mut r = ReshardPolicy::default_policy();
+            r.util_skew = bad;
+            assert!(r.validate().is_err(), "util_skew {bad}");
+
+            let slo = SloPolicy {
+                p99_ms: bad,
+                priority: 1,
+                weight: 1.0,
+                overload: None,
+            };
+            assert!(slo.validate().is_err(), "slo p99_ms {bad}");
+
+            let o = OverloadPolicy {
+                deadline_ms: bad,
+                max_queue: 8,
+                retry: RetryPolicy::default_policy(),
+            };
+            assert!(o.validate().is_err(), "deadline_ms {bad}");
+
+            let mut c = ClusterConfig::fleet_default();
+            c.max_wait_us = bad;
+            assert!(c.validate().is_err(), "max_wait_us {bad}");
+        }
+        // The finite defaults all still pass.
+        ReshardPolicy::default_policy().validate().unwrap();
+        ClusterConfig::fleet_default().validate().unwrap();
     }
 
     #[test]

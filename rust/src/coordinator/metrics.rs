@@ -94,7 +94,9 @@ impl Metrics {
             .set("mean_batch_size", self.mean_batch_size());
         if !self.latencies.is_empty() {
             let mut xs = self.latencies.clone();
-            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // NaN-safe total order — a single bad latency sample must not
+            // panic metrics serialization (order identical on finite data).
+            xs.sort_by(f64::total_cmp);
             j = j
                 .set("latency_p50_ms", percentile_sorted(&xs, 50.0) * 1e3)
                 .set("latency_p95_ms", percentile_sorted(&xs, 95.0) * 1e3)

@@ -20,13 +20,16 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of(empty)");
         let mut xs: Vec<f64> = samples.to_vec();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Total order instead of `partial_cmp(..).unwrap()`: a NaN sample
+        // (degenerate timer math) sorts last instead of panicking the
+        // whole harness; order is identical on finite data.
+        xs.sort_by(f64::total_cmp);
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         let median = percentile_sorted(&xs, 50.0);
         let mut devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         Summary {
             n,
             min: xs[0],

@@ -1,0 +1,131 @@
+//! Million-request fast-path smoke test (`#[ignore]`-gated — run with
+//! `cargo test --release --test perf_smoke -- --ignored`).
+//!
+//! ROADMAP's "million-request scale" item targets whole-fleet traces of
+//! 1e6+ requests in CI-budget wall time. This test pins the two structural
+//! invariants the fast-path rewrite bought, independent of wall clock (the
+//! machine-dependent half rides as `sim_events_per_sec` in
+//! `BENCH_cluster.json`):
+//!
+//! * **Event budget** — the multi-tenant engine completes the trace in at
+//!   most ~2 events per request (one arrival-cursor pop + one flush pop;
+//!   batching only lowers it) plus a fixed controller/fault allowance.
+//! * **O(boards) heap depth** — with same-instant flushes coalesced per
+//!   event id, heap depth is bounded by the id universe (boards + tenant
+//!   arrival cursors + a small margin), never by in-flight requests. A
+//!   million queued requests may not grow the heap past ~10 entries.
+
+use decoilfnet::accel::{FusionPlan, Weights};
+use decoilfnet::cluster::{
+    place_tenants, simulate_fleet_multi_tenant_traced, TenantWorkload, TraceSink,
+};
+use decoilfnet::config::{tiny_vgg, AccelConfig, ClusterConfig, ShardMode, SloPolicy, TenantSpec};
+
+#[test]
+#[ignore = "1e6-request perf smoke; minutes of wall time in debug builds"]
+fn million_requests_stay_within_event_and_heap_budgets() {
+    const TENANTS: usize = 4;
+    const BOARDS: usize = 2; // one replicated pool of 2 boards per pair
+    const REQUESTS_PER_TENANT: usize = 250_000;
+    const TOTAL: usize = TENANTS * REQUESTS_PER_TENANT;
+
+    let cfg = AccelConfig::paper_default();
+    let fleet = vec![cfg.clone(); BOARDS];
+    let specs: Vec<TenantSpec> = (0..TENANTS)
+        .map(|t| TenantSpec {
+            name: format!("tenant{t}"),
+            network: tiny_vgg(),
+            weights_seed: t as u64 + 1,
+            // Two Poisson streams, two open-loop bursts: the bursts flood
+            // their queues immediately, which is exactly the regime where
+            // an uncoalesced heap would balloon with in-flight items.
+            arrival_rps: if t % 2 == 0 { 50_000.0 } else { f64::INFINITY },
+            requests: REQUESTS_PER_TENANT,
+            load_steps: vec![],
+            mode: ShardMode::Replicated,
+            replicas: None,
+            slo: SloPolicy {
+                p99_ms: 5_000.0,
+                priority: 1,
+                weight: 1.0,
+                overload: None,
+            },
+        })
+        .collect();
+
+    let weights: Vec<Weights> = specs
+        .iter()
+        .map(|s| Weights::random(&s.network, s.weights_seed))
+        .collect();
+    let fused = FusionPlan::fully_fused(7);
+    let workloads: Vec<TenantWorkload> = specs
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| TenantWorkload {
+            name: &s.name,
+            net: &s.network,
+            weights: w,
+            plan: &fused,
+            mode: s.mode,
+            priority: s.slo.priority,
+            replicas: s.replicas,
+        })
+        .collect();
+    let plans = place_tenants(&fleet, &workloads).expect("tenants place");
+
+    let mut c = ClusterConfig::fleet_default();
+    c.boards = BOARDS;
+    c.mode = ShardMode::Replicated;
+    c.board_specs = vec![];
+    c.link_bytes_per_cycle = f64::INFINITY;
+    c.link_latency_cycles = 0;
+    c.aggregate_ddr_bytes_per_cycle = None;
+    c.arrival_rps = f64::INFINITY;
+    c.requests = 1;
+    c.seed = 97;
+    c.max_batch = 32;
+    c.max_wait_us = 0.0;
+    c.tenants = vec![];
+
+    let mut sink = TraceSink::enabled();
+    let r = simulate_fleet_multi_tenant_traced(&cfg, &fleet, &specs, &weights, &plans, &c, &mut sink);
+    let tel = sink.summary().expect("armed sink yields a summary");
+
+    assert_eq!(r.completed, TOTAL, "every request completes exactly once");
+
+    // Event budget: ≤ 1 arrival pop + 1 flush pop per request, plus a fixed
+    // allowance for batching bookkeeping. Violations mean the engine has
+    // regressed into per-item event churn.
+    let budget = 2 * TOTAL as u64 + 10_000;
+    assert!(
+        tel.sim_events <= budget,
+        "event budget blown: {} sim events > {} for {} requests",
+        tel.sim_events,
+        budget,
+        TOTAL,
+    );
+
+    // Coalesced heap depth: bounded by the id universe (boards + tenant
+    // arrival cursors + margin), regardless of the million queued requests.
+    let id_bound = (BOARDS + TENANTS + 2) as u64;
+    assert!(
+        tel.heap_depth_max <= id_bound,
+        "heap depth must stay O(boards): max {} > {}",
+        tel.heap_depth_max,
+        id_bound,
+    );
+    assert!(
+        tel.heap_depth_mean <= id_bound as f64,
+        "mean heap depth must stay O(boards): {}",
+        tel.heap_depth_mean,
+    );
+
+    eprintln!(
+        "perf smoke: {} requests, {} sim events ({:.2}/request), heap depth max {} mean {:.2}",
+        TOTAL,
+        tel.sim_events,
+        tel.sim_events as f64 / TOTAL as f64,
+        tel.heap_depth_max,
+        tel.heap_depth_mean,
+    );
+}

@@ -240,6 +240,69 @@ class TelemetryRows(CheckPairBase):
         self.assertTrue(self.check(base, doc({"sim_heap_depth_max": metric(12.0, "lower")})))
 
 
+class FastPathRows(CheckPairBase):
+    """The fast-path rows as armed by PR 10: `sim_heap_depth_max` and
+    `sim_heap_depth_mean` carry the committed baseline (6.0 / 4.0 — head-
+    room above the coalesced-queue id bound for the traced act's scene)
+    with no "gate": false, so a regression back toward per-item heap
+    growth fails the pair; `sim_events_per_sec` stays the one wall-clock
+    exempt row and may drift or disappear freely."""
+
+    ARMED = {
+        "sim_events_per_sec": metric(2.0e6, "higher", gate=False),
+        "sim_heap_depth_max": metric(6.0, "lower"),
+        "sim_heap_depth_mean": metric(4.0, "lower"),
+    }
+
+    def test_coalesced_depths_within_baseline_pass(self):
+        # The traced act's actual post-coalescing depths (≤ 4 ids) sit
+        # under the armed headroom and pass as improvements.
+        base = doc(dict(self.ARMED))
+        cur = {
+            "sim_events_per_sec": metric(1.2e6, "higher"),
+            "sim_heap_depth_max": metric(4.0, "lower"),
+            "sim_heap_depth_mean": metric(2.8, "lower"),
+        }
+        self.assertTrue(self.check(base, doc(cur)))
+
+    def test_per_item_heap_growth_fails_the_armed_rows(self):
+        # An uncoalesced queue on the same scene balloons with in-flight
+        # items — depth in the tens — and must trip the gate.
+        base = doc(dict(self.ARMED))
+        cur = {
+            "sim_events_per_sec": metric(2.0e6, "higher"),
+            "sim_heap_depth_max": metric(14.0, "lower"),
+            "sim_heap_depth_mean": metric(3.7, "lower"),
+        }
+        self.assertFalse(self.check(base, doc(cur)))
+
+    def test_armed_depth_rows_may_not_disappear(self):
+        # A bench invocation that drops the traced act loses a tracked
+        # metric — hard failure, unlike the exempt events/s row.
+        base = doc(dict(self.ARMED))
+        cur = {"sim_events_per_sec": metric(2.0e6, "higher")}
+        self.assertFalse(self.check(base, doc(cur)))
+
+    def test_events_per_sec_stays_exempt(self):
+        # A slow runner halving events/s never fails while the depth rows
+        # hold; the row may also disappear entirely.
+        base = doc(dict(self.ARMED))
+        cur = {
+            "sim_heap_depth_max": metric(6.0, "lower"),
+            "sim_heap_depth_mean": metric(4.0, "lower"),
+        }
+        self.assertTrue(self.check(base, doc(cur)))
+        cur["sim_events_per_sec"] = metric(0.9e6, "higher")
+        self.assertTrue(self.check(base, doc(cur)))
+
+    def test_mean_depth_tolerance_band(self):
+        # One-sided 10% band on the armed mean: 4.4 is the edge, beyond
+        # fails, under passes.
+        base = doc({"sim_heap_depth_mean": metric(4.0, "lower")})
+        self.assertTrue(self.check(base, doc({"sim_heap_depth_mean": metric(4.39, "lower")})))
+        self.assertFalse(self.check(base, doc({"sim_heap_depth_mean": metric(4.5, "lower")})))
+
+
 class ChaosRows(CheckPairBase):
     """The chaos-recovery rows (PR 7): the cluster bench's scripted board
     outage emits the post-recovery p99 ratio, the re-queue volume, and the
